@@ -1,0 +1,109 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: runs the three chosen (arch x shape) pairs
+through ladders of optimizations, recording the roofline after each change.
+
+  H1 llama-3.2-vision-90b x train_4k   (worst memory term)
+  H2 arctic-480b          x decode_32k (most collective-bound)
+  H3 qwen3-14b            x train_4k   (most representative of the paper's
+                                        technique: the ADT wire-format ladder)
+
+Usage: PYTHONPATH=src python -m benchmarks.hillclimb [--out results/hillclimb.json]
+"""
+import argparse
+import json
+import traceback
+
+from repro.launch.dryrun import run_one
+
+LADDERS = {
+    "H3_qwen3-14b_train_4k_paper_ladder": [
+        # paper-faithful baseline: fp32 everything, uncompressed gathers
+        ("baseline_fp32_rt4", "qwen3-14b", "train_4k", 4, {}),
+        # the paper's technique at AWP steady states
+        ("adt_rt2_bf16wire", "qwen3-14b", "train_4k", 2, {}),
+        ("adt_rt1_8bitwire", "qwen3-14b", "train_4k", 1, {}),
+        # beyond-paper: compress the gradient path too (paper §VI notes
+        # gradient compression is orthogonal/combinable)
+        ("adt_rt2_gradrt2", "qwen3-14b", "train_4k", 2, {"grad_round_to": 2}),
+        # beyond-paper: bf16 activations (shrinks the dominant TP psum)
+        ("adt_rt2_bf16act", "qwen3-14b", "train_4k", 2, {"train_dtype": "bf16"}),
+        ("adt_rt2_bf16act_gradrt2", "qwen3-14b", "train_4k", 2,
+         {"train_dtype": "bf16", "grad_round_to": 2}),
+    ],
+    "H1_llama-vision-90b_train_4k_memory_ladder": [
+        ("baseline_fp32", "llama-3.2-vision-90b", "train_4k", 2, {}),
+        ("bf16_act", "llama-3.2-vision-90b", "train_4k", 2,
+         {"train_dtype": "bf16"}),
+        ("bf16_act_accum4", "llama-3.2-vision-90b", "train_4k", 2,
+         {"train_dtype": "bf16", "accum": 4}),
+        ("bf16_act_accum16", "llama-3.2-vision-90b", "train_4k", 2,
+         {"train_dtype": "bf16", "accum": 16}),
+    ],
+    "H2_arctic-480b_decode_32k_collective_ladder": [
+        ("baseline_rt2_gather_per_step", "arctic-480b", "decode_32k", 2, {}),
+        ("weight_stationary", "arctic-480b", "decode_32k", 2,
+         {"weight_stationary": True}),
+        ("weight_stationary_int8kv", "arctic-480b", "decode_32k", 2,
+         {"weight_stationary": True, "int8_kv": True}),
+        # H2 continuation: keep the resident copy in bf16 (ADT residency)
+        ("ws_int8kv_bf16resident", "arctic-480b", "decode_32k", 2,
+         {"weight_stationary": True, "int8_kv": True, "resident_bf16": True}),
+    ],
+    "H4_xlstm-1.3b_train_4k_chunkwise_ladder": [
+        # the worst memory term in the whole table: sequential mLSTM scan
+        ("baseline_sequential_scan", "xlstm-1.3b", "train_4k", 2, {}),
+        # chunkwise-parallel mLSTM: state materialized once per chunk
+        ("chunkwise_64", "xlstm-1.3b", "train_4k", 2, {"mlstm_chunk": 64}),
+        ("chunkwise_128", "xlstm-1.3b", "train_4k", 2, {"mlstm_chunk": 128}),
+    ],
+    # ablation: the masked-rectangle attention baseline (useful-flops story)
+    "A1_qwen3-14b_prefill_32k_causal_skip_ablation": [
+        ("masked_rectangle", "qwen3-14b", "prefill_32k", 2,
+         {"causal_skip": False}),
+        ("triangular_exact", "qwen3-14b", "prefill_32k", 2,
+         {"causal_skip": True}),
+    ],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/hillclimb.json")
+    ap.add_argument("--ladder", default=None, choices=[*LADDERS, None])
+    args = ap.parse_args()
+    ladders = {args.ladder: LADDERS[args.ladder]} if args.ladder else LADDERS
+
+    out = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            out = json.load(f)
+    for lname, steps in ladders.items():
+        out.setdefault(lname, {})
+        for tag, arch, shape, rt, opts in steps:
+            if tag in out[lname]:
+                continue
+            print(f"== {lname} :: {tag} ==", flush=True)
+            try:
+                r = run_one(arch, shape, False, rt, opts=opts, verbose=False)
+            except Exception as e:
+                traceback.print_exc()
+                r = {"error": repr(e)}
+            out[lname][tag] = r
+            with open(args.out, "w") as f:
+                json.dump(out, f, indent=2, default=str)
+            if "roofline" in r:
+                rf = r["roofline"]
+                print(
+                    f"   c={rf['compute_s']:.3f}s m={rf['memory_s']:.3f}s "
+                    f"x={rf['collective_s']:.3f}s dom={rf['dominant']} "
+                    f"useful={rf['useful_ratio']:.2f} "
+                    f"temp={r['memory']['temp_bytes']/1e9:.1f}GB",
+                    flush=True,
+                )
+    print("hillclimb done ->", args.out)
+
+
+if __name__ == "__main__":
+    main()

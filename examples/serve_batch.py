@@ -1,0 +1,101 @@
+"""Serve a small model with batched requests: prefill + decode loop.
+
+Demonstrates the serving path end-to-end on CPU: compressed weight
+placement (ADT), batched prefill building the KV caches, then a decode
+loop producing tokens for the whole batch, with greedy sampling over the
+(vocab-parallel in distributed mode) logits.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py --arch qwen3-1.7b \
+          --requests 8 --prompt-len 48 --gen 24
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, reduced
+from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
+from repro.models.init import init_params
+from repro.serve.step import make_decode_step, make_prefill_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=48)
+    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--round-to", type=int, default=2,
+                    help="ADT wire format for weight placement")
+    args = ap.parse_args()
+
+    cfg = reduced(get_config(args.arch))
+    if not cfg.causal:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode path")
+    mesh_cfg = MeshCfg(tp=1, dp=1, compress_min_size=4096)
+    B, S = args.requests, args.prompt_len
+    cap = S + args.gen
+
+    params, _metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec_tree = build_spec_tree(params, _metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    rts = (args.round_to,) * (cfg.num_groups + 1)
+
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32
+    )
+    batch = {"tokens": prompts}
+    if cfg.num_image_tokens:
+        batch["image_features"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.num_image_tokens, cfg.vision_dim)),
+            jnp.float32,
+        )
+    bshapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+
+    prefill = make_prefill_step(
+        cfg, mesh_cfg, None, spec_tree, rts, bshapes, cache_capacity=cap
+    )
+    dshapes = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    decode = make_decode_step(cfg, mesh_cfg, None, spec_tree, rts, dshapes)
+
+    t0 = time.time()
+    logits, caches = prefill(storage, batch)
+    tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)[:, None]
+    t_prefill = time.time() - t0
+
+    out_tokens = [tok]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        step_batch = {
+            "tokens": tok.astype(jnp.int32),
+            "pos": jnp.asarray(S + i, jnp.int32),
+        }
+        logits, caches = decode(storage, caches, step_batch)
+        tok = jnp.argmax(logits[:, 0, : cfg.vocab_size], axis=-1)[:, None]
+        out_tokens.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.concatenate([np.asarray(t) for t in out_tokens], axis=1)
+    total_new = gen.size
+    print(f"arch={cfg.name}  requests={B}  prompt={S}  generated={args.gen}")
+    print(f"prefill: {t_prefill:.2f}s   decode: {t_decode:.2f}s "
+          f"({total_new / max(t_decode, 1e-9):.1f} tok/s on CPU, "
+          f"first decode step includes compile)")
+    print(f"weight placement format: {args.round_to} bytes/weight "
+          f"({4 / args.round_to:.1f}x motion reduction vs fp32)")
+    print("sample generations (token ids):")
+    for b in range(min(B, 4)):
+        print(f"  req{b}: {gen[b][:16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

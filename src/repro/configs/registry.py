@@ -1,0 +1,91 @@
+"""--arch registry + reduced (smoke) variants of every assigned config."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.configs import (
+    arctic_480b,
+    chatglm3_6b,
+    hubert_xlarge,
+    llama_3_2_vision_90b,
+    mixtral_8x7b,
+    qwen2_5_14b,
+    qwen3_1_7b,
+    qwen3_14b,
+    recurrentgemma_9b,
+    xlstm_1_3b,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        qwen3_14b.CONFIG,
+        mixtral_8x7b.CONFIG,
+        llama_3_2_vision_90b.CONFIG,
+        chatglm3_6b.CONFIG,
+        qwen3_1_7b.CONFIG,
+        hubert_xlarge.CONFIG,
+        arctic_480b.CONFIG,
+        qwen2_5_14b.CONFIG,
+        xlstm_1_3b.CONFIG,
+        recurrentgemma_9b.CONFIG,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in INPUT_SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(INPUT_SHAPES)}")
+    return INPUT_SHAPES[name]
+
+
+def reduced(cfg: ModelConfig, *, layers: int | None = None) -> ModelConfig:
+    """Smoke-test variant of the same family: <=2 pattern repeats,
+    d_model<=512, <=4 experts, tiny vocab — runs a forward/train step on CPU.
+    """
+    pat = len(cfg.pattern)
+    num_layers = layers if layers is not None else max(pat, 2 if pat == 1 else pat)
+    # keep head structure but shrink widths
+    num_heads = min(cfg.num_heads, 4)
+    num_kv = max(1, min(cfg.num_kv_heads, num_heads))
+    while num_heads % num_kv:
+        num_kv -= 1
+    d_model = min(cfg.d_model, 256)
+    head_dim = max(8, d_model // num_heads)
+    changes = dict(
+        num_layers=num_layers,
+        d_model=d_model,
+        num_heads=num_heads,
+        num_kv_heads=num_kv,
+        head_dim=head_dim,
+        d_ff=0 if cfg.d_ff == 0 else min(cfg.d_ff, 512),
+        vocab_size=min(cfg.vocab_size, 512),
+        num_experts=min(cfg.num_experts, 4),
+        top_k=min(cfg.top_k, 2),
+        moe_dense_ff=0 if cfg.moe_dense_ff == 0 else 256,
+        num_image_tokens=0 if cfg.num_image_tokens == 0 else 16,
+        vision_dim=0 if cfg.vision_dim == 0 else 32,
+        lru_dim=0 if cfg.lru_dim == 0 else d_model,
+        sliding_window=None if cfg.sliding_window is None else 32,
+        num_precision_groups=min(cfg.num_precision_groups, 2),
+        scan_layers=False,
+        remat=False,
+    )
+    if cfg.block_pattern:
+        # shrink pattern to at most one repetition of a short cycle
+        if len(cfg.block_pattern) > 4:
+            base = tuple(dict.fromkeys(cfg.block_pattern))  # unique kinds
+            changes["block_pattern"] = base
+            changes["num_layers"] = len(base) * 2
+        else:
+            changes["num_layers"] = len(cfg.block_pattern) * 2
+    if cfg.embed_is_input_stub:
+        changes["vision_dim"] = 32
+    return dataclasses.replace(cfg, **changes)

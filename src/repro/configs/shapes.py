@@ -1,0 +1,53 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero allocation: what the multi-pod dry-run
+lowers against. The modality frontends are stubs per the assignment: audio
+supplies frame embeddings, VLM supplies patch embeddings.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {}
+        if cfg.embed_is_input_stub:
+            batch["features"] = sds((B, S, cfg.vision_dim), jnp.float32)
+        else:
+            batch["tokens"] = sds((B, S), jnp.int32)
+        batch["labels"] = sds((B, S), jnp.int32)
+        if cfg.num_image_tokens:
+            batch["image_features"] = sds(
+                (B, cfg.num_image_tokens, cfg.vision_dim), jnp.float32
+            )
+        return batch
+    if shape.kind == "prefill":
+        batch = {}
+        if cfg.embed_is_input_stub:
+            batch["features"] = sds((B, S, cfg.vision_dim), jnp.float32)
+        else:
+            batch["tokens"] = sds((B, S), jnp.int32)
+        if cfg.num_image_tokens:
+            batch["image_features"] = sds(
+                (B, cfg.num_image_tokens, cfg.vision_dim), jnp.float32
+            )
+        return batch
+    if shape.kind == "decode":
+        return {
+            "tokens": sds((B, 1), jnp.int32),
+            "pos": sds((), jnp.int32),
+        }
+    raise ValueError(shape.kind)
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether this (arch, shape) combo runs, with the recorded reason."""
+    if shape.kind == "decode" and not cfg.causal:
+        return False, "encoder-only: no decode step (DESIGN.md §5)"
+    return True, ""

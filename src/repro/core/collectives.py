@@ -1,0 +1,101 @@
+"""Explicit-transpose collective pairs for manual tensor parallelism.
+
+Megatron-style TP needs two conjugate operators around each block:
+
+  * :func:`tp_region_enter` ("f"): forward identity on the (model-axis
+    replicated) activations, backward ``psum`` of the cotangent over the
+    model axis — column-parallel weights each produce a partial ``dx``.
+  * :func:`tp_region_exit`  ("g"): forward ``psum`` of the partial block
+    output over the model axis, backward identity.
+
+We pin both directions down with ``custom_vjp`` instead of relying on the
+AD transpose of ``lax.psum``, whose semantics for replicated inputs are a
+classic source of silent double-counting.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Hashable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+AxisNames = Hashable | Sequence[Hashable]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_region_enter(x, axis_names: AxisNames):
+    return x
+
+
+def _enter_fwd(x, axis_names):
+    return x, jnp.zeros((0,), x.dtype)  # zero-size dtype carrier
+
+
+def _enter_bwd(axis_names, marker, g):
+    # cotangents are psum'd in the compute dtype: fp32-accumulated attention
+    # einsums would otherwise silently upcast every backward all-reduce
+    # (bf16 activation grads are standard practice; noted in DESIGN.md §7).
+    # The optimization barrier stops XLA's excess-precision pass from
+    # cancelling the down-cast against the CPU backend's f32 promotion —
+    # on TPU the collective runs natively in the compute dtype.
+    g = lax.optimization_barrier(g.astype(marker.dtype))
+    return (lax.psum(g, axis_names),)
+
+
+tp_region_enter.defvjp(_enter_fwd, _enter_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def tp_region_exit(x, axis_names: AxisNames):
+    return lax.psum(lax.optimization_barrier(x), axis_names)
+
+
+def _exit_fwd(x, axis_names):
+    x = lax.optimization_barrier(x)
+    return lax.psum(x, axis_names), jnp.zeros((0,), x.dtype)
+
+
+def _exit_bwd(axis_names, marker, g):
+    return (g.astype(marker.dtype),)
+
+
+tp_region_exit.defvjp(_exit_fwd, _exit_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def seq_gather(x, axis_names: AxisNames):
+    """Sequence-parallel enter: all-gather sequence shards over the model
+    axis (axis 1 == sequence), backward reduce-scatter.  Beyond-paper lever
+    for shrinking the model-axis collective term (DESIGN.md §7)."""
+    return lax.all_gather(x, axis_names, axis=1, tiled=True)
+
+
+def _sg_fwd(x, axis_names):
+    return lax.all_gather(x, axis_names, axis=1, tiled=True), None
+
+
+def _sg_bwd(axis_names, _, g):
+    return (lax.psum_scatter(g, axis_names, scatter_dimension=1, tiled=True),)
+
+
+seq_gather.defvjp(_sg_fwd, _sg_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def seq_scatter(x, axis_names: AxisNames):
+    """Sequence-parallel exit: reduce-scatter partial outputs over the model
+    axis along the sequence dim, backward all-gather."""
+    return lax.psum_scatter(x, axis_names, scatter_dimension=1, tiled=True)
+
+
+def _ss_fwd(x, axis_names):
+    return lax.psum_scatter(x, axis_names, scatter_dimension=1, tiled=True), None
+
+
+def _ss_bwd(axis_names, _, g):
+    return (lax.all_gather(g, axis_names, axis=1, tiled=True),)
+
+
+seq_scatter.defvjp(_ss_fwd, _ss_bwd)

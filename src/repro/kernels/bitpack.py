@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: ADT Bitpack — fp32 -> uint8 byte planes.
+
+TPU adaptation of the paper's AVX2 ``_mm256_shuffle_epi8`` pipeline
+(Fig. 2 / Algorithm 4).  Instead of packing kept bytes contiguously inside a
+SIMD register (a lane-local byte shuffle, which has no TPU analogue), we emit
+a struct-of-arrays byte-plane layout: plane ``k`` holds byte ``k`` (MSB first)
+of every weight.  Each plane is a dense uint8 array that tiles cleanly into
+VMEM and vectorizes on the VPU; transferring ``round_to`` planes moves exactly
+``round_to/4`` of the fp32 bytes — the same wire saving as the paper's packed
+stream.
+
+The kernel operates on weights reshaped to ``(rows, 128)`` (lane-aligned) and
+is gridded over row-blocks so the VMEM working set stays bounded:
+
+  in  block: (BLOCK_ROWS, 128) f32   = 128 KiB  at BLOCK_ROWS=256
+  out block: (round_to, BLOCK_ROWS, 128) u8 ≤ 128 KiB
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 256
+LANES = 128
+
+_SHIFTS = (24, 16, 8, 0)
+
+
+def _bitpack_kernel(w_ref, out_ref, *, round_to: int):
+    u = jax.lax.bitcast_convert_type(w_ref[...], jnp.uint32)
+    for k in range(round_to):
+        out_ref[k, :, :] = (
+            (u >> jnp.uint32(_SHIFTS[k])) & jnp.uint32(0xFF)
+        ).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("round_to", "interpret", "block_rows"))
+def bitpack_2d(
+    w: jnp.ndarray,
+    round_to: int,
+    *,
+    interpret: bool = True,
+    block_rows: int = BLOCK_ROWS,
+) -> jnp.ndarray:
+    """Pack a ``(rows, 128)`` fp32 array into ``(round_to, rows, 128)`` u8 planes.
+
+    ``rows`` must be a multiple of ``block_rows``; use :func:`ops.bitpack`
+    for arbitrary shapes (it pads / reshapes).
+    """
+    rows, lanes = w.shape
+    if lanes != LANES:
+        raise ValueError(f"last dim must be {LANES}, got {lanes}")
+    if rows % block_rows:
+        raise ValueError(f"rows ({rows}) must be a multiple of {block_rows}")
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_bitpack_kernel, round_to=round_to),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec(
+            (round_to, block_rows, LANES), lambda i: (0, i, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((round_to, rows, LANES), jnp.uint8),
+        interpret=interpret,
+    )(w)

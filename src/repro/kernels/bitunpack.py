@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: ADT Bitunpack — uint8 byte planes -> fp32.
+
+Mirror of :mod:`repro.kernels.bitpack` (paper Algorithm 5): merge the kept
+byte planes back into a uint32 word, zero-fill the discarded low bytes, and
+bitcast to IEEE-754 fp32.  Like the paper's CUDA Bitunpack this is
+embarrassingly parallel; on TPU each grid step processes one
+``(round_to, BLOCK_ROWS, 128)`` VMEM block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitpack import BLOCK_ROWS, LANES
+
+_SHIFTS = (24, 16, 8, 0)
+
+
+def _bitunpack_kernel(planes_ref, out_ref, *, round_to: int):
+    u = jnp.zeros(out_ref.shape, jnp.uint32)
+    for k in range(round_to):
+        u = u | (planes_ref[k, :, :].astype(jnp.uint32) << jnp.uint32(_SHIFTS[k]))
+    out_ref[...] = jax.lax.bitcast_convert_type(u, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def bitunpack_2d(
+    planes: jnp.ndarray,
+    *,
+    interpret: bool = True,
+    block_rows: int = BLOCK_ROWS,
+) -> jnp.ndarray:
+    """Unpack ``(round_to, rows, 128)`` u8 planes to ``(rows, 128)`` fp32."""
+    round_to, rows, lanes = planes.shape
+    if lanes != LANES:
+        raise ValueError(f"last dim must be {LANES}, got {lanes}")
+    if rows % block_rows:
+        raise ValueError(f"rows ({rows}) must be a multiple of {block_rows}")
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        functools.partial(_bitunpack_kernel, round_to=round_to),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((round_to, block_rows, LANES), lambda i: (0, i, 0))
+        ],
+        out_specs=pl.BlockSpec((block_rows, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.float32),
+        interpret=interpret,
+    )(planes)

@@ -1,0 +1,52 @@
+"""Pallas TPU kernel: fused Σw² grid reduction for the AWP monitor.
+
+The paper's profile (Tables II/III) shows the AWP l²-norm as the algorithm's
+only measurable cost, so it gets a fused kernel: one pass over the weights,
+accumulating a scalar across sequential grid steps (output block revisited
+every step; initialised on step 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.bitpack import LANES
+
+NORM_BLOCK_ROWS = 512
+
+
+def _l2norm_kernel(w_ref, acc_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[0, 0] = jnp.float32(0.0)
+
+    x = w_ref[...].astype(jnp.float32)
+    acc_ref[0, 0] += jnp.sum(x * x)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_rows"))
+def l2norm_sq_2d(
+    w: jnp.ndarray,
+    *,
+    interpret: bool = True,
+    block_rows: int = NORM_BLOCK_ROWS,
+) -> jnp.ndarray:
+    """Σw² of a ``(rows, 128)`` fp32 array -> f32 scalar."""
+    rows, lanes = w.shape
+    if lanes != LANES:
+        raise ValueError(f"last dim must be {LANES}, got {lanes}")
+    if rows % block_rows:
+        raise ValueError(f"rows ({rows}) must be a multiple of {block_rows}")
+    grid = (rows // block_rows,)
+    out = pl.pallas_call(
+        _l2norm_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        interpret=interpret,
+    )(w)
+    return out[0, 0]

@@ -1,0 +1,85 @@
+"""Shape-agnostic jit'd wrappers around the ADT Pallas kernels.
+
+These accept arbitrary-shaped fp32 arrays, handle the pad-to-tile plumbing,
+and dispatch to either the Pallas kernel (interpret mode on CPU, compiled on
+real TPU) or the pure-jnp oracle in :mod:`repro.kernels.ref`.
+
+The ``impl`` switch exists because the distributed step functions lower on
+the CPU dry-run path where we want pure-HLO collectives with no callbacks;
+kernel correctness is proven separately by the test suite.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bitpack import BLOCK_ROWS, LANES, bitpack_2d
+from repro.kernels.bitunpack import bitunpack_2d
+from repro.kernels.l2norm import NORM_BLOCK_ROWS, l2norm_sq_2d
+from repro.utils.trees import round_up
+
+
+def _to_tiles(w: jnp.ndarray, block_rows: int) -> tuple[jnp.ndarray, int]:
+    """Flatten + zero-pad to a (rows, 128) tile grid."""
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    tile = block_rows * LANES
+    padded = round_up(max(n, 1), tile)
+    flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, LANES), n
+
+
+@functools.partial(jax.jit, static_argnames=("round_to", "impl", "mode"))
+def bitpack(
+    w: jnp.ndarray,
+    round_to: int,
+    *,
+    impl: str = "pallas",
+    mode: str = "truncate",
+    key=None,
+) -> jnp.ndarray:
+    """Pack arbitrary-shaped fp32 -> ``(round_to, padded_rows, 128)`` u8 planes."""
+    if impl == "ref" or mode != "truncate":
+        # rounding modes live in the ref path (they need PRNG plumbing)
+        tiles, _ = _to_tiles(w, BLOCK_ROWS)
+        return ref.bitpack_ref(tiles, round_to, mode=mode, key=key)
+    tiles, _ = _to_tiles(w, BLOCK_ROWS)
+    return bitpack_2d(tiles, round_to, interpret=True)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def bitunpack(planes: jnp.ndarray, *, impl: str = "pallas") -> jnp.ndarray:
+    """Unpack planes -> flat fp32 of the padded size (caller unpads)."""
+    if impl == "ref":
+        return ref.bitunpack_ref(planes).reshape(-1)
+    return bitunpack_2d(planes, interpret=True).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("round_to", "impl", "mode"))
+def quantize(
+    w: jnp.ndarray,
+    round_to: int,
+    *,
+    impl: str = "pallas",
+    mode: str = "truncate",
+    key=None,
+) -> jnp.ndarray:
+    """pack∘unpack at the original shape — what the compute side sees."""
+    if round_to == 4 and mode == "truncate":
+        return w
+    planes = bitpack(w, round_to, impl=impl, mode=mode, key=key)
+    flat = bitunpack(planes, impl=impl)
+    return flat[: math.prod(w.shape)].reshape(w.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def l2norm_sq(w: jnp.ndarray, *, impl: str = "pallas") -> jnp.ndarray:
+    """Σw² over an arbitrary-shaped array -> f32 scalar."""
+    if impl == "ref":
+        return ref.l2norm_sq_ref(w)
+    tiles, _ = _to_tiles(w.astype(jnp.float32), NORM_BLOCK_ROWS)
+    return l2norm_sq_2d(tiles, interpret=True)

@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for the ADT transfer kernels.
+
+These implement the paper's Bitpack / Bitunpack (Algorithms 2-5) semantics:
+an IEEE-754 fp32 weight is viewed as a 32-bit word and only the most
+significant ``round_to`` bytes are kept.  The TPU-native layout is a
+struct-of-arrays *byte-plane* decomposition (see DESIGN.md §2): plane ``k``
+holds byte ``k`` (MSB first) of every weight.
+
+Rounding modes:
+  * ``truncate``   — the paper's mode: drop the low bytes.
+  * ``nearest``    — beyond-paper: add half-ULP of the kept format first.
+  * ``stochastic`` — beyond-paper: add uniform noise in [0, ULP) first.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+VALID_ROUND_TO = (1, 2, 3, 4)
+
+_SHIFTS = (24, 16, 8, 0)  # MSB-first byte shifts within a uint32
+
+
+def _as_u32(w: jnp.ndarray) -> jnp.ndarray:
+    if w.dtype != jnp.float32:
+        raise ValueError(f"bitpack expects float32, got {w.dtype}")
+    return jax.lax.bitcast_convert_type(w, jnp.uint32)
+
+
+def _round_bits(u: jnp.ndarray, round_to: int, mode: str, key=None) -> jnp.ndarray:
+    """Apply rounding to the uint32 view before truncation."""
+    drop = 8 * (4 - round_to)
+    if drop == 0 or mode == "truncate":
+        return u
+    if mode == "nearest":
+        # add half of the dropped range; saturate so the exponent never
+        # overflows into inf/nan territory.
+        half = jnp.uint32(1 << (drop - 1))
+        bumped = u + half
+        return jnp.where(bumped < u, jnp.uint32(0xFFFFFFFF), bumped)
+    if mode == "stochastic":
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        noise = jax.random.randint(
+            key, u.shape, 0, 1 << drop, dtype=jnp.uint32
+        )
+        bumped = u + noise
+        return jnp.where(bumped < u, jnp.uint32(0xFFFFFFFF), bumped)
+    raise ValueError(f"unknown rounding mode {mode!r}")
+
+
+def bitpack_ref(
+    w: jnp.ndarray, round_to: int, *, mode: str = "truncate", key=None
+) -> jnp.ndarray:
+    """fp32 array -> uint8 byte planes, shape ``(round_to, *w.shape)``.
+
+    Plane 0 is the most significant byte (sign + 7 exponent bits).
+    """
+    if round_to not in VALID_ROUND_TO:
+        raise ValueError(f"round_to must be in {VALID_ROUND_TO}")
+    u = _round_bits(_as_u32(w), round_to, mode, key)
+    planes = [
+        ((u >> jnp.uint32(_SHIFTS[k])) & jnp.uint32(0xFF)).astype(jnp.uint8)
+        for k in range(round_to)
+    ]
+    return jnp.stack(planes, axis=0)
+
+
+def bitunpack_ref(planes: jnp.ndarray) -> jnp.ndarray:
+    """uint8 byte planes ``(round_to, ...)`` -> fp32 (low bytes zero-filled)."""
+    round_to = planes.shape[0]
+    if round_to not in VALID_ROUND_TO:
+        raise ValueError(f"leading plane dim must be in {VALID_ROUND_TO}")
+    u = jnp.zeros(planes.shape[1:], jnp.uint32)
+    for k in range(round_to):
+        u = u | (planes[k].astype(jnp.uint32) << jnp.uint32(_SHIFTS[k]))
+    return jax.lax.bitcast_convert_type(u, jnp.float32)
+
+
+def quantize_ref(
+    w: jnp.ndarray, round_to: int, *, mode: str = "truncate", key=None
+) -> jnp.ndarray:
+    """pack∘unpack — the value actually seen by the compute devices."""
+    return bitunpack_ref(bitpack_ref(w, round_to, mode=mode, key=key))
+
+
+def l2norm_sq_ref(w: jnp.ndarray) -> jnp.ndarray:
+    """Σ w² as float32 scalar (AWP's per-layer monitor quantity)."""
+    wf = w.astype(jnp.float32)
+    return jnp.sum(wf * wf)

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) combo.
+
+This is the proof that the distribution config is coherent without real
+hardware: 512 host devices stand in for 2 pods × 256 chips. The first two
+lines above MUST run before any other import (jax locks the device count
+on first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b \
+      --shape train_4k [--multi-pod] [--round-to 2] [--json out.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES
+from repro.configs.registry import ARCHS, get_config, get_shape
+from repro.configs.shapes import applicable, input_specs
+from repro.dist.spec import build_spec_tree, tree_to_storage
+from repro.launch.mesh import make_production_mesh, mesh_cfg_for
+from repro.models.init import param_shapes
+from repro.optim.sgd import SGDConfig
+from repro.roofline.analysis import (
+    model_flops_estimate,
+    parse_collectives,
+    roofline_from_compiled,
+)
+from repro.serve.step import (
+    global_cache_shapes,
+    make_decode_step,
+    make_place_step,
+    make_prefill_step,
+)
+from repro.train.step import make_train_step
+
+
+def _sds_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def build_lowerable(cfg, shape, mesh_cfg, mesh, round_to, *, env_kw=None,
+                    opts=None):
+    """Returns (jitted step, abstract args) for the combo.
+
+    ``opts`` (all optional — §Perf levers):
+      train_dtype: "f32"|"bf16"; accum: int; grad_round_to: int;
+      weight_stationary: bool; int8_kv: bool; causal_skip: bool.
+    """
+    opts = dict(opts or {})
+    storage_abs, metas = param_shapes(cfg, tp=mesh_cfg.tp)
+    spec_tree = build_spec_tree(storage_abs, metas, mesh_cfg)
+    storage = tree_to_storage(storage_abs, spec_tree, mesh_cfg)
+    batch = input_specs(cfg, shape)
+    round_tos = (round_to,) * (cfg.num_groups + 1)
+    shard_batch = shape.global_batch >= mesh_cfg.dshards
+    env_kw = dict(env_kw or {})
+    if "causal_skip" in opts:
+        env_kw["causal_skip"] = opts["causal_skip"]
+    if "mlstm_chunk" in opts:
+        env_kw["mlstm_chunk"] = opts["mlstm_chunk"]
+
+    if shape.kind == "train":
+        dtype = jnp.bfloat16 if opts.get("train_dtype") == "bf16" else jnp.float32
+        step = make_train_step(
+            cfg, mesh_cfg, mesh, spec_tree, round_tos, SGDConfig(),
+            batch, dtype=dtype, env_kw=env_kw,
+            grad_round_to=opts.get("grad_round_to", 4),
+            accum_steps=opts.get("accum", 1),
+        )
+        mom = _sds_tree(storage)
+        lr = jax.ShapeDtypeStruct((), jnp.float32)
+        return step, (storage, mom, batch, lr)
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(
+            cfg, mesh_cfg, mesh, spec_tree, round_tos, batch,
+            cache_capacity=shape.seq_len, shard_batch=shard_batch,
+            dtype=jnp.bfloat16, env_kw=env_kw,
+        )
+        return step, (storage, batch)
+
+    # decode
+    window = shape.window if shape.name == "long_500k" else None
+    capacity = min(shape.seq_len, window or shape.seq_len)
+    if cfg.sliding_window:
+        capacity = min(capacity, cfg.sliding_window)
+    int8_kv = bool(opts.get("int8_kv"))
+    cache_dtype = jnp.int8 if int8_kv else jnp.bfloat16
+    if int8_kv:
+        env_kw["int8_kv"] = True
+    caches = global_cache_shapes(
+        cfg, mesh_cfg, shape.global_batch, capacity,
+        cache_dtype, shard_batch=shard_batch,
+    )
+    step = make_decode_step(
+        cfg, mesh_cfg, mesh, spec_tree, round_tos, batch,
+        shard_batch=shard_batch, window_override=window,
+        dtype=jnp.bfloat16, env_kw=env_kw,
+        weight_stationary=bool(opts.get("weight_stationary")),
+    )
+    if opts.get("weight_stationary"):
+        place, _ = make_place_step(
+            cfg, mesh_cfg, mesh, spec_tree, round_tos,
+            resident_dtype=(
+                jnp.bfloat16 if opts.get("resident_bf16") else None
+            ),
+        )
+        placed = jax.eval_shape(place, storage)
+        return step, (placed, caches, batch)
+    return step, (storage, caches, batch)
+
+
+def run_one(arch, shape_name, multi_pod, round_to, *, env_kw=None,
+            verbose=True, opts=None):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, reason = applicable(cfg, shape)
+    if not ok:
+        result = {"arch": arch, "shape": shape_name, "skipped": reason}
+        if verbose:
+            print(json.dumps(result, indent=2))
+        return result
+    mesh_cfg = mesh_cfg_for(multi_pod=multi_pod)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh_cfg.tp * mesh_cfg.dp * mesh_cfg.pods
+
+    t0 = time.time()
+    step, args = build_lowerable(cfg, shape, mesh_cfg, mesh, round_to,
+                                 env_kw=env_kw, opts=opts)
+    with mesh:
+        lowered = step.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        act_bytes = 2 if (
+            (opts or {}).get("train_dtype") == "bf16"
+            or get_shape(shape_name).kind != "train"
+        ) else 4
+        rf = roofline_from_compiled(
+            compiled, model_flops_estimate(cfg, shape, chips),
+            act_bytes=act_bytes,
+        )
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "round_to": round_to,
+        "opts": opts or {},
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        "roofline": rf.to_dict(),
+    }
+    if verbose:
+        print(json.dumps(result, indent=2, default=str))
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--round-to", type=int, default=2)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--bf16-train", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--grad-round-to", type=int, default=4)
+    ap.add_argument("--weight-stationary", action="store_true")
+    ap.add_argument("--int8-kv", action="store_true")
+    ap.add_argument("--no-causal-skip", action="store_true")
+    args = ap.parse_args()
+    opts = {}
+    if args.bf16_train:
+        opts["train_dtype"] = "bf16"
+    if args.accum > 1:
+        opts["accum"] = args.accum
+    if args.grad_round_to != 4:
+        opts["grad_round_to"] = args.grad_round_to
+    if args.weight_stationary:
+        opts["weight_stationary"] = True
+    if args.int8_kv:
+        opts["int8_kv"] = True
+    if args.no_causal_skip:
+        opts["causal_skip"] = False
+
+    combos = (
+        [(a, s) for a in sorted(ARCHS) for s in INPUT_SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    results = []
+    failures = 0
+    for arch, shape in combos:
+        try:
+            results.append(
+                run_one(arch, shape, args.multi_pod, args.round_to,
+                        opts=opts)
+            )
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            results.append(
+                {"arch": arch, "shape": shape, "error": repr(e)}
+            )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, default=str)
+    print(f"\n{len(results)} combos, {failures} failures")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""Production training launcher.
+
+Selects an assigned architecture (``--arch``), builds the FSDP×TP mesh,
+and runs the A²DTWP loop (AWP controller + ADT-compressed gathers) on the
+synthetic pipeline. On this CPU container use ``--reduced`` plus a small
+``--mesh``; on a real pod run the full config on 16x16 or 2x16x16.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+      --mesh 2x4 --steps 100 --policy awp
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 ... --mesh 2x4
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import save_checkpoint
+from repro.configs.registry import ARCHS, get_config, reduced
+from repro.core.awp import AWPConfig
+from repro.data.pipeline import synthetic_feature_batch, synthetic_lm_batch
+from repro.dist.spec import (
+    DIST, LeafSpec, MeshCfg, build_spec_tree, tree_to_storage,
+)
+from repro.launch.mesh import make_mesh_from_cfg
+from repro.models.init import init_params
+from repro.optim.sgd import SGDConfig, init_momentum
+from repro.train.loop import Trainer
+from repro.train.step import make_train_step
+
+
+def parse_mesh(spec: str) -> MeshCfg:
+    """"1x1" | "<dp>x<tp>" | "<pods>x<dp>x<tp>"."""
+    parts = [int(p) for p in spec.split("x")]
+    if len(parts) == 2:
+        return MeshCfg(tp=parts[1], dp=parts[0])
+    if len(parts) == 3:
+        return MeshCfg(tp=parts[2], dp=parts[1], pods=parts[0])
+    raise SystemExit(f"bad --mesh {spec!r}")
+
+
+def count_dist_elems(spec_tree, mesh_cfg, n_groups):
+    elems = [0] * n_groups
+
+    def visit(idx, subtree):
+        for s in jax.tree_util.tree_leaves(
+            subtree, is_leaf=lambda x: isinstance(x, LeafSpec)
+        ):
+            if isinstance(s, LeafSpec) and s.kind == DIST:
+                elems[idx] += s.s_loc * mesh_cfg.dshards
+
+    for g, gs in enumerate(spec_tree["groups"]):
+        visit(g, gs)
+    visit(n_groups - 1, {k: v for k, v in spec_tree.items() if k != "groups"})
+    return elems
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=sorted(ARCHS), required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--mesh", default="1x1")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--policy", default="awp")
+    ap.add_argument("--awp-threshold", type=float, default=1e-3)
+    ap.add_argument("--awp-interval", type=int, default=25)
+    ap.add_argument("--bf16", action="store_true")
+    ap.add_argument("--grad-round-to", type=int, default=4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    mesh_cfg = parse_mesh(args.mesh)
+    if mesh_cfg.tp * mesh_cfg.dshards > len(jax.devices()):
+        raise SystemExit(
+            f"mesh {args.mesh} needs {mesh_cfg.tp * mesh_cfg.dshards} devices, "
+            f"have {len(jax.devices())} (set XLA_FLAGS=--xla_force_host_"
+            f"platform_device_count=N)"
+        )
+    mesh = make_mesh_from_cfg(mesh_cfg)
+
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=mesh_cfg.tp)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+    print(f"{cfg.name}: {n/1e6:.1f}M params, mesh {mesh_cfg.shape}, "
+          f"policy {args.policy}")
+
+    B, S = args.batch, args.seq
+    audio = cfg.embed_is_input_stub
+    if audio:
+        batch_shapes = {
+            "features": jax.ShapeDtypeStruct((B, S, cfg.vision_dim), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    else:
+        batch_shapes = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if cfg.num_image_tokens:
+        batch_shapes["image_features"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, cfg.vision_dim), jnp.float32
+        )
+
+    opt = SGDConfig(lr=args.lr, momentum=0.9, weight_decay=1e-4)
+    nrt = cfg.num_groups + 1
+
+    def builder(round_tos):
+        return make_train_step(
+            cfg, mesh_cfg, mesh, spec_tree, round_tos, opt, batch_shapes,
+            dtype=jnp.bfloat16 if args.bf16 else jnp.float32,
+            grad_round_to=args.grad_round_to, accum_steps=args.accum,
+        )
+
+    trainer = Trainer(
+        builder, nrt, policy=args.policy,
+        awp_config=AWPConfig(
+            threshold=args.awp_threshold, interval=args.awp_interval
+        ),
+        dist_elems_per_group=count_dist_elems(spec_tree, mesh_cfg, nrt),
+        gather_axis_size=max(mesh_cfg.dshards, 1),
+    )
+    mom = init_momentum(storage)
+
+    rngi = np.random.default_rng(0)
+    ctx = mesh if mesh is not None else _null()
+    t0 = time.time()
+    with ctx:
+        for step in range(args.steps):
+            if audio:
+                f, l = synthetic_feature_batch(
+                    cfg.vision_dim, cfg.vocab_size, B, S, step
+                )
+                batch = {"features": f, "labels": l}
+            else:
+                t, l = synthetic_lm_batch(cfg.vocab_size, B, S, step)
+                batch = {"tokens": t, "labels": l}
+            if cfg.num_image_tokens:
+                batch["image_features"] = jnp.asarray(
+                    rngi.normal(0, 1, (B, cfg.num_image_tokens, cfg.vision_dim)),
+                    jnp.float32,
+                )
+            storage, mom, _ = trainer.run_step(storage, mom, batch, args.lr)
+            if step % 20 == 19:
+                r = trainer.records[-1]
+                print(f"step {step+1:4d}  loss {r.loss:.4f}  rts {r.round_tos}"
+                      f"  wire {r.wire_bytes/1e6:.1f}MB"
+                      f"  {(time.time()-t0)/(step+1):.2f}s/step", flush=True)
+    s = trainer.summary()
+    print(f"done: loss {s['final_loss']:.4f}  wire-reduction "
+          f"{s['wire_reduction']*100:.1f}%  recompiles {s['recompiles']}")
+    print(f"AWP: {s['bits_history']}")
+    if args.ckpt:
+        save_checkpoint(args.ckpt, storage, mom, trainer.controller, args.steps)
+        print(f"checkpoint -> {args.ckpt}")
+
+
+class _null:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+if __name__ == "__main__":
+    main()

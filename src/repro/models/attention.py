@@ -1,0 +1,381 @@
+"""GQA attention: flash-style tiled softmax, sliding windows, KV caches.
+
+One implementation covers every assigned flavour:
+
+  * causal / bidirectional (hubert) / cross (llama-vision),
+  * GQA with kv-head replication when kv < TP degree,
+  * qk-norm (qwen3), qkv-bias (qwen2.5), partial rotary (chatglm3),
+  * sliding-window (mixtral SWA, recurrentgemma local, long_500k variant),
+  * prefill (tiled, O(S·chunk) memory) and single-token decode with either a
+    linear or ring-buffer KV cache.
+
+The prefill path unrolls over q chunks with *exact* kv ranges (triangular /
+banded), so HLO_FLOPs ≈ useful FLOPs — the masked-full-rectangle variant is
+kept (``causal_skip=False``) as the §Perf baseline ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.env import Env
+from repro.models.layers import apply_rope, head_rms_norm
+
+NEG_INF = -1e30
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class KVCache:
+    """Uniform-length KV cache. ``pos`` = number of tokens already absorbed.
+
+    Capacity ``C = k.shape[1]``. When ``C < context`` the cache is used as a
+    ring buffer (sliding-window decode)."""
+
+    k: jnp.ndarray  # (B, C, Kv_local, head_dim)
+    v: jnp.ndarray
+    pos: jnp.ndarray  # () int32
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantKVCache:
+    """int8 KV cache with per-(slot, head) fp scales (beyond-paper §Perf:
+    decode shapes are HBM-bound on cache reads; int8 quarters the traffic
+    vs fp32, halves vs bf16)."""
+
+    k: jnp.ndarray        # (B, C, Kv_local, head_dim) int8
+    v: jnp.ndarray
+    k_scale: jnp.ndarray  # (B, C, Kv_local) f32
+    v_scale: jnp.ndarray
+    pos: jnp.ndarray      # () int32
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.k_scale, self.v_scale, self.pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return self.k.shape[1]
+
+
+def _quantize_kv(x):
+    """(B, S, Kv, hd) fp -> (int8 values, (B, S, Kv) scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(
+        jnp.round(x.astype(jnp.float32) / scale[..., None]), -127, 127
+    ).astype(jnp.int8)
+    return q, scale
+
+
+def init_cache(batch: int, capacity: int, kv_heads: int, head_dim: int, dtype):
+    if dtype == jnp.int8:
+        z = jnp.zeros((batch, capacity, kv_heads, head_dim), jnp.int8)
+        sc = jnp.zeros((batch, capacity, kv_heads), jnp.float32)
+        return QuantKVCache(z, z, sc, sc, jnp.zeros((), jnp.int32))
+    zeros = jnp.zeros((batch, capacity, kv_heads, head_dim), dtype)
+    return KVCache(zeros, zeros, jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# core softmax-attention tiles
+# ---------------------------------------------------------------------------
+
+
+def _attend_tile(q, k, v, mask):
+    """Dense tile: q (B,Kv,G,Sq,hd), k/v (B,Sk,Kv,hd), mask (Sq,Sk) or None.
+
+    Returns (scores_max, sumexp, acc) suitable for online combination.
+    Scores/softmax accumulate in fp32 regardless of compute dtype."""
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum(
+        "bkgqh,bskh->bkgqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if mask is not None:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum(
+        "bkgqs,bskh->bkgqh", p, v, preferred_element_type=jnp.float32
+    )
+    return m, l, acc
+
+
+def _combine(m1, l1, a1, m2, l2, a2):
+    m = jnp.maximum(m1, m2)
+    c1 = jnp.exp(m1 - m)
+    c2 = jnp.exp(m2 - m)
+    return m, l1 * c1 + l2 * c2, a1 * c1[..., None] + a2 * c2[..., None]
+
+
+def attend_tiled(
+    q: jnp.ndarray,  # (B, Sq, Kv, G, hd)
+    k: jnp.ndarray,  # (B, Sk, Kv, hd)
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: Optional[int],
+    q_offset: int = 0,
+    chunk: int = 1024,
+    causal_skip: bool = True,
+) -> jnp.ndarray:
+    """Flash-style tiled attention; returns (B, Sq, Kv, G, hd).
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (prefill
+    continuation). q chunks are unrolled with exact kv ranges so that masked
+    work is *not* lowered (unless causal_skip=False, the §Perf baseline)."""
+    B, Sq, Kv, G, hd = q.shape
+    Sk = k.shape[1]
+    cq = min(chunk, Sq)
+    if Sq % cq:
+        raise ValueError(f"Sq={Sq} not divisible by chunk={cq}")
+    nq = Sq // cq
+    outs = []
+    for i in range(nq):
+        q_i = q[:, i * cq : (i + 1) * cq].transpose(0, 2, 3, 1, 4)  # B,Kv,G,cq,hd
+        q_pos_lo = q_offset + i * cq
+        # exact kv range for this q chunk
+        k_hi = min(Sk, q_pos_lo + cq) if (causal and causal_skip) else Sk
+        k_lo = 0
+        if window is not None and causal_skip:
+            k_lo = max(0, q_pos_lo - window + 1)
+        # align to chunk for tidy inner tiling
+        k_lo = (k_lo // cq) * cq
+        k_hi = min(Sk, ((k_hi + cq - 1) // cq) * cq)
+        nk = (k_hi - k_lo) // cq if k_hi > k_lo else 0
+        if nk == 0:
+            outs.append(jnp.zeros((B, cq, Kv, G, hd), q.dtype))
+            continue
+
+        q_pos = q_pos_lo + jnp.arange(cq)
+
+        def kv_block(j):
+            lo = k_lo + j * cq
+            kc = lax.dynamic_slice_in_dim(k, lo, cq, axis=1)
+            vc = lax.dynamic_slice_in_dim(v, lo, cq, axis=1)
+            k_pos = lo + jnp.arange(cq)
+            mask = jnp.ones((cq, cq), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window is not None:
+                mask &= (q_pos[:, None] - k_pos[None, :]) < window
+            return kc, vc, mask
+
+        def body(carry, j):
+            m, l, acc = carry
+            kc, vc, mask = kv_block(j)
+            m2, l2, a2 = _attend_tile(q_i, kc, vc, mask)
+            return _combine(m, l, acc, m2, l2, a2), None
+
+        m0 = jnp.full((B, Kv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Kv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, Kv, G, cq, hd), jnp.float32)
+        (m, l, acc), _ = lax.scan(body, (m0, l0, a0), jnp.arange(nk))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        outs.append(out.transpose(0, 3, 1, 2, 4))  # B,cq,Kv,G,hd
+    return jnp.concatenate(outs, axis=1)
+
+
+def attend_decode(
+    q: jnp.ndarray,  # (B, 1, Kv, G, hd)
+    cache,
+    *,
+    ring: bool,
+    window: Optional[int],
+) -> jnp.ndarray:
+    """Single-token attention over the (already updated) cache; handles
+    both fp (KVCache) and int8 (QuantKVCache) layouts."""
+    B, _, Kv, G, hd = q.shape
+    C = cache.capacity
+    pos = cache.pos - 1  # absolute position of the current token
+    slots = jnp.arange(C)
+    if ring:
+        # slot j currently holds absolute position: pos - ((pos - j) mod C)
+        slot_pos = pos - jnp.mod(pos - slots, C)
+    else:
+        slot_pos = slots
+    valid = (slot_pos >= 0) & (slot_pos <= pos)
+    if window is not None:
+        valid &= (pos - slot_pos) < window
+    scale = hd**-0.5
+    qh = q[:, 0]  # B,Kv,G,hd
+    quant = isinstance(cache, QuantKVCache)
+    s = jnp.einsum(
+        "bkgh,bskh->bkgs", qh, cache.k, preferred_element_type=jnp.float32
+    ) * scale
+    if quant:
+        # scores were computed against int8 codes: apply per-slot scales
+        s = s * cache.k_scale.transpose(0, 2, 1)[:, :, None, :]
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if quant:
+        p = p * cache.v_scale.transpose(0, 2, 1)[:, :, None, :]
+    out = jnp.einsum(
+        "bkgs,bskh->bkgh", p, cache.v, preferred_element_type=jnp.float32
+    ).astype(q.dtype)
+    return out[:, None]
+
+
+# ---------------------------------------------------------------------------
+# full attention layer (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+
+def mha(
+    x: jnp.ndarray,  # (B, S, d) — model-axis replicated
+    w: dict,
+    cfg,
+    env: Env,
+    *,
+    mode: str = "train",  # train | prefill | decode
+    cache: Optional[KVCache] = None,
+    window: Optional[int] = None,
+    kv_ext: Optional[jnp.ndarray] = None,  # cross-attn source (B, N, d)
+    is_cross: bool = False,
+    pos_offset=0,
+) -> tuple[jnp.ndarray, Optional[KVCache]]:
+    """One attention layer. Returns (out (B,S,d), updated cache)."""
+    B, S, d = x.shape
+    hd = cfg.head_dim
+    # head counts from the (TP-local, possibly padded) weights themselves
+    Hq_l = w["wq"].shape[1] // hd
+    Kv_l = w["wk"].shape[1] // hd
+    G = Hq_l // Kv_l
+    is_cross = is_cross or (kv_ext is not None)
+
+    xin = env.enter(x)
+    q = xin @ w["wq"]
+    if cfg.qkv_bias:
+        q = q + w["bq"]
+    q = q.reshape(B, S, Hq_l, hd)
+
+    kv_src = env.enter(kv_ext) if is_cross else xin
+    if is_cross and mode == "decode":
+        k = v = None  # cross KV live in the cache, computed at prefill
+    else:
+        k = kv_src @ w["wk"]
+        v = kv_src @ w["wv"]
+        if cfg.qkv_bias:
+            k = k + w["bk"]
+            v = v + w["bv"]
+        Skv = kv_src.shape[1]
+        k = k.reshape(B, Skv, Kv_l, hd)
+        v = v.reshape(B, Skv, Kv_l, hd)
+
+    if cfg.qk_norm:
+        q = head_rms_norm(q, w["q_norm"], cfg.norm_eps)
+        if k is not None:
+            k = head_rms_norm(k, w["k_norm"], cfg.norm_eps)
+
+    if not is_cross:
+        q_pos = pos_offset + jnp.arange(S)
+        q = apply_rope(q, q_pos, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+        k_pos = pos_offset + jnp.arange(k.shape[1])
+        k = apply_rope(k, k_pos, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
+
+    qg = q.reshape(B, S, Kv_l, G, hd)
+    new_cache = cache
+
+    if mode == "decode" and not is_cross:
+        assert cache is not None and S == 1
+        C = cache.capacity
+        ring = window is not None and C <= window
+        idx = jnp.mod(cache.pos, C) if ring else cache.pos
+        if isinstance(cache, QuantKVCache):
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            kc = lax.dynamic_update_slice(cache.k, kq, (0, idx, 0, 0))
+            vc = lax.dynamic_update_slice(cache.v, vq, (0, idx, 0, 0))
+            ksc = lax.dynamic_update_slice(cache.k_scale, ks, (0, idx, 0))
+            vsc = lax.dynamic_update_slice(cache.v_scale, vs, (0, idx, 0))
+            new_cache = QuantKVCache(kc, vc, ksc, vsc, cache.pos + 1)
+        else:
+            kc = lax.dynamic_update_slice(
+                cache.k, k.astype(cache.k.dtype), (0, idx, 0, 0)
+            )
+            vc = lax.dynamic_update_slice(
+                cache.v, v.astype(cache.v.dtype), (0, idx, 0, 0)
+            )
+            new_cache = KVCache(kc, vc, cache.pos + 1)
+        out = attend_decode(qg, new_cache, ring=ring, window=window)
+    elif mode == "decode" and is_cross:
+        # cross-attention during decode: attend to static image KV
+        out = _cross_decode(qg, cache)
+        new_cache = cache
+    else:
+        causal = cfg.causal and not is_cross
+        out = attend_tiled(
+            qg, k, v,
+            causal=causal,
+            window=window,
+            q_offset=int(pos_offset) if isinstance(pos_offset, int) else 0,
+            chunk=min(env.attn_chunk, S),
+            causal_skip=env.causal_skip,
+        )
+        if mode == "prefill":
+            if is_cross:
+                new_cache = KVCache(k, v, jnp.asarray(k.shape[1], jnp.int32))
+            else:
+                assert cache is not None
+                C = cache.capacity
+                pos = jnp.asarray(S, jnp.int32)
+                if isinstance(cache, QuantKVCache):
+                    ks, kv_sc = _quantize_kv(k if C >= S else k[:, S - C:])
+                    vs, vv_sc = _quantize_kv(v if C >= S else v[:, S - C:])
+                    if C >= S:
+                        kc = lax.dynamic_update_slice(cache.k, ks, (0, 0, 0, 0))
+                        vc = lax.dynamic_update_slice(cache.v, vs, (0, 0, 0, 0))
+                        ksc = lax.dynamic_update_slice(cache.k_scale, kv_sc, (0, 0, 0))
+                        vsc = lax.dynamic_update_slice(cache.v_scale, vv_sc, (0, 0, 0))
+                    else:
+                        kc, vc, ksc, vsc = ks, vs, kv_sc, vv_sc
+                    new_cache = QuantKVCache(kc, vc, ksc, vsc, pos)
+                else:
+                    kc, vc = cache.k, cache.v
+                    if C >= S:
+                        kc = lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, 0, 0, 0))
+                        vc = lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, 0, 0, 0))
+                    else:  # keep the trailing window
+                        kc = k[:, S - C :].astype(kc.dtype)
+                        vc = v[:, S - C :].astype(vc.dtype)
+                    new_cache = KVCache(kc, vc, pos)
+
+    out = out.reshape(B, S, Hq_l * hd)
+    y = out @ w["wo"]
+    if is_cross and "gate" in w:
+        y = jnp.tanh(w["gate"]) * y
+    return env.exit(y), new_cache
+
+
+def _cross_decode(qg, cache: KVCache):
+    """Decode-time gated cross attention over the static image KV."""
+    B, S, Kv, G, hd = qg.shape
+    scale = hd**-0.5
+    s = jnp.einsum(
+        "bqkgh,bskh->bkgqs", qg, cache.k, preferred_element_type=jnp.float32
+    ) * scale
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskh->bkgqh", p, cache.v, preferred_element_type=jnp.float32
+    ).astype(qg.dtype)
+    return out.transpose(0, 3, 1, 2, 4)

@@ -1,0 +1,299 @@
+"""The paper's own evaluation networks in pure JAX: AlexNet (modified, extra
+FC-4096 — §IV-B), VGG-A, and ResNet-34, plus reduced variants for the CPU
+reproduction runs.
+
+These are data-parallel only (the paper's setting: one model replica per
+GPU, master weights on the host) — the FSDP axis of our TPU mapping plays
+the host's role, and ADT compresses the per-batch weight gather exactly
+like the paper's CPU→GPU send. AWP here runs at *per-layer* granularity
+(the paper's main mode; ResNet uses block granularity, §IV-B).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.meta import ParamMeta
+
+# layer spec atoms:
+#   ("conv", out_ch, kernel, stride)        conv + ReLU
+#   ("pool",)                               2x2 max pool
+#   ("block", out_ch, stride, repeats)      resnet basic block group
+#   ("gap",)                                global average pool
+#   ("fc", width)                           fully-connected + ReLU (+dropout)
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    name: str
+    layers: tuple
+    num_classes: int = 200
+    in_hw: int = 224
+    in_ch: int = 3
+    dropout: float = 0.5
+    # paper §IV-B: ResNet adapts precision per *building block*
+    awp_granularity: str = "layer"  # "layer" | "block"
+    # paper §IV-B initialises every weight N(0, 1e-2); that assumes the
+    # full-scale topology/dataset — the reduced CPU runs use He init
+    # (orthogonal to AWP/ADT, noted in DESIGN.md §8)
+    paper_init: bool = True
+    # ResNet uses batch normalization (He et al. 2016); norm params are
+    # uncompressed, like the paper's biases
+    batch_norm: bool = False
+
+
+ALEXNET = CNNConfig(
+    "alexnet",
+    (
+        ("conv", 64, 11, 4), ("pool",),
+        ("conv", 192, 5, 1), ("pool",),
+        ("conv", 384, 3, 1), ("conv", 384, 3, 1), ("conv", 256, 3, 1),
+        ("pool",),
+        ("fc", 4096), ("fc", 4096), ("fc", 4096),  # extra FC-4096 (paper)
+    ),
+)
+
+VGG_A = CNNConfig(
+    "vgg-a",
+    (
+        ("conv", 64, 3, 1), ("pool",),
+        ("conv", 128, 3, 1), ("pool",),
+        ("conv", 256, 3, 1), ("conv", 256, 3, 1), ("pool",),
+        ("conv", 512, 3, 1), ("conv", 512, 3, 1), ("pool",),
+        ("conv", 512, 3, 1), ("conv", 512, 3, 1), ("pool",),
+        ("fc", 4096), ("fc", 4096),
+    ),
+)
+
+RESNET34 = CNNConfig(
+    "resnet-34",
+    (
+        ("conv", 64, 7, 2), ("pool",),
+        ("block", 64, 1, 3), ("block", 128, 2, 4),
+        ("block", 256, 2, 6), ("block", 512, 2, 3),
+        ("gap",),
+    ),
+    awp_granularity="block",
+    batch_norm=True,
+)
+
+
+def reduced_cnn(cfg: CNNConfig, num_classes: int = 10, in_hw: int = 32) -> CNNConfig:
+    """CPU-scale variant of the same family (channels /8, fc /32)."""
+    out = []
+    for spec in cfg.layers:
+        if spec[0] == "conv":
+            _, ch, k, s = spec
+            out.append(("conv", max(8, ch // 8), min(k, 5), min(s, 2)))
+        elif spec[0] == "block":
+            _, ch, s, n = spec
+            out.append(("block", max(8, ch // 8), s, min(n, 2)))
+        elif spec[0] == "fc":
+            out.append(("fc", max(32, spec[1] // 32)))
+        else:
+            out.append(spec)
+    # deep plain stacks (VGG/ResNet) need normalization to train at this
+    # reduced scale with plain SGD; full-scale VGG-A trains without BN in
+    # the paper — scale artifact, noted in DESIGN.md §8.
+    add_bn = cfg.batch_norm or cfg.name.startswith("vgg")
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-mini", layers=tuple(out),
+        num_classes=num_classes, in_hw=in_hw, dropout=0.1,
+        paper_init=False, batch_norm=add_bn,
+    )
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_cnn(cfg: CNNConfig, key):
+    """(params, metas, group_of_layer). params = {"layers": {name: {...}}}.
+
+    group_of_layer maps each compressed layer name -> AWP group index.
+    Weight init: zero-mean normal, var 1e-2 (paper §IV-B); biases 0.1 for
+    AlexNet, 0 otherwise (paper §IV-B)."""
+    params, metas = {}, {}
+    groups: dict[str, int] = {}
+    bias0 = 0.1 if cfg.name.startswith("alexnet") else 0.0
+    hw, ch = cfg.in_hw, cfg.in_ch
+    gidx = 0
+    n = 0
+
+    def _std(fan_in):
+        return 0.1 if cfg.paper_init else math.sqrt(2.0 / fan_in)
+
+    def conv_entry(name, cin, cout, k, group):
+        nonlocal key
+        key, sub = jax.random.split(key)
+        params[name] = {
+            "w": _std(k * k * cin)
+            * jax.random.normal(sub, (k, k, cin, cout), jnp.float32),
+            "b": jnp.full((cout,), bias0, jnp.float32),
+        }
+        metas[name] = {
+            "w": ParamMeta(tp_dim=None, compress=True),
+            "b": ParamMeta(tp_dim=None, compress=False),
+        }
+        if cfg.batch_norm:
+            params[name]["bn_scale"] = jnp.ones((cout,), jnp.float32)
+            params[name]["bn_bias"] = jnp.zeros((cout,), jnp.float32)
+            metas[name]["bn_scale"] = ParamMeta(tp_dim=None, compress=False)
+            metas[name]["bn_bias"] = ParamMeta(tp_dim=None, compress=False)
+        groups[name] = group
+
+    for spec in cfg.layers:
+        kind = spec[0]
+        if kind == "conv":
+            _, cout, k, s = spec
+            conv_entry(f"conv{n}", ch, cout, k, gidx)
+            ch = cout
+            hw = max(1, math.ceil(hw / s))
+            n += 1
+            if cfg.awp_granularity == "layer":
+                gidx += 1
+        elif kind == "pool":
+            hw = max(1, hw // 2)
+        elif kind == "block":
+            _, cout, s, reps = spec
+            for r in range(reps):
+                stride = s if r == 0 else 1
+                conv_entry(f"block{n}a", ch, cout, 3, gidx)
+                conv_entry(f"block{n}b", cout, cout, 3, gidx)
+                if stride != 1 or ch != cout:
+                    conv_entry(f"block{n}p", ch, cout, 1, gidx)
+                ch = cout
+                hw = max(1, math.ceil(hw / stride))
+                n += 1
+                gidx += 1  # per building block (paper: ResNet granularity)
+        elif kind == "gap":
+            hw = 1
+        elif kind == "fc":
+            width = spec[1]
+            cin = ch * hw * hw if hw > 1 else ch
+            key, sub = jax.random.split(key)
+            params[f"fc{n}"] = {
+                "w": _std(cin)
+                * jax.random.normal(sub, (cin, width), jnp.float32),
+                "b": jnp.full((width,), bias0, jnp.float32),
+            }
+            metas[f"fc{n}"] = {
+                "w": ParamMeta(tp_dim=None, compress=True),
+                "b": ParamMeta(tp_dim=None, compress=False),
+            }
+            groups[f"fc{n}"] = gidx
+            ch, hw = width, 1
+            n += 1
+            if cfg.awp_granularity == "layer":
+                gidx += 1
+        else:
+            raise ValueError(kind)
+    if cfg.awp_granularity == "block" and cfg.layers[-1][0] != "fc":
+        gidx += 0
+    # classifier head
+    key, sub = jax.random.split(key)
+    cin = ch * hw * hw if hw > 1 else ch
+    params["head"] = {
+        "w": _std(cin)
+        * jax.random.normal(sub, (cin, cfg.num_classes), jnp.float32),
+        "b": jnp.zeros((cfg.num_classes,), jnp.float32),
+    }
+    metas["head"] = {
+        "w": ParamMeta(tp_dim=None, compress=True),
+        "b": ParamMeta(tp_dim=None, compress=False),
+    }
+    groups["head"] = gidx
+    num_groups = gidx + 1
+    return {"layers": params}, {"layers": metas}, (groups, num_groups)
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _conv(x, w, b, stride):
+    y = lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + b[None, None, None, :]
+
+
+def _bn(x, layer):
+    """Batch-statistics normalization (batch stats in train AND eval — the
+    synthetic-data demo has i.i.d. batches, so this is equivalent up to
+    noise; running stats omitted, noted in DESIGN.md §8)."""
+    if "bn_scale" not in layer:
+        return x
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    xn = (x - mean) * jax.lax.rsqrt(var + 1e-5)
+    return xn * layer["bn_scale"] + layer["bn_bias"]
+
+
+def _conv_bn(x, layer, stride):
+    return _bn(_conv(x, layer["w"], layer["b"], stride), layer)
+
+
+def cnn_forward(layers, images, cfg: CNNConfig, *, train: bool, key=None):
+    """images (B, H, W, C) -> logits (B, num_classes). ``layers`` is the
+    materialized params dict {"convN": {w, b}, ...}."""
+    x = images
+    n = 0
+    for spec in cfg.layers:
+        kind = spec[0]
+        if kind == "conv":
+            _, cout, k, s = spec
+            x = jax.nn.relu(_conv_bn(x, layers[f"conv{n}"], s))
+            n += 1
+        elif kind == "pool":
+            x = lax.reduce_window(
+                x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "SAME"
+            )
+        elif kind == "block":
+            _, cout, s, reps = spec
+            for r in range(reps):
+                stride = s if r == 0 else 1
+                ident = x
+                y = jax.nn.relu(_conv_bn(x, layers[f"block{n}a"], stride))
+                y = _conv_bn(y, layers[f"block{n}b"], 1)
+                if f"block{n}p" in layers:
+                    ident = _conv_bn(x, layers[f"block{n}p"], stride)
+                x = jax.nn.relu(y + ident)
+                n += 1
+        elif kind == "gap":
+            x = jnp.mean(x, axis=(1, 2))
+        elif kind == "fc":
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            x = jax.nn.relu(x @ layers[f"fc{n}"]["w"] + layers[f"fc{n}"]["b"])
+            if train and cfg.dropout and key is not None:
+                key = jax.random.fold_in(key, n)
+                keep = jax.random.bernoulli(key, 1 - cfg.dropout, x.shape)
+                x = jnp.where(keep, x / (1 - cfg.dropout), 0)
+            n += 1
+    if x.ndim > 2:
+        x = x.reshape(x.shape[0], -1)
+    return x @ layers["head"]["w"] + layers["head"]["b"]
+
+
+def cnn_loss(layers, images, labels, cfg, *, train=True, key=None):
+    logits = cnn_forward(layers, images, cfg, train=train, key=key)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32))
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return jnp.mean(nll)
+
+
+def topk_error(layers, images, labels, cfg, k=5):
+    logits = cnn_forward(layers, images, cfg, train=False)
+    k = min(k, logits.shape[-1])
+    _, top = lax.top_k(logits, k)
+    hit = jnp.any(top == labels[:, None], axis=1)
+    return 1.0 - jnp.mean(hit.astype(jnp.float32))

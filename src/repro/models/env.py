@@ -1,0 +1,54 @@
+"""Execution environment threaded through every model function.
+
+Carries the mesh-axis names (None = single device: every collective helper
+degrades to identity), the TP degree, compute dtype, and the performance
+levers toggled during §Perf hillclimbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.collectives import tp_region_enter, tp_region_exit
+
+
+@dataclasses.dataclass(frozen=True)
+class Env:
+    model_axis: str | None = None           # TP axis name
+    fsdp_axes: tuple[str, ...] | None = None  # weight-gather axes
+    tp: int = 1
+    dtype: Any = jnp.float32                # compute dtype (bf16 = beyond-paper)
+    attn_chunk: int = 1024                  # flash-chunk size (q and kv)
+    causal_skip: bool = True                # skip fully-masked kv chunks
+    seq_parallel: bool = False              # sequence-parallel activations
+    int8_kv: bool = False                   # int8 KV cache (decode, §Perf)
+    mlstm_chunk: int = 0                    # chunkwise mLSTM (0 = sequential)
+
+    # ------------------------------------------------------------------
+    def enter(self, x):
+        """Megatron 'f': identity fwd / model-axis psum bwd."""
+        if self.model_axis is None:
+            return x
+        return tp_region_enter(x, self.model_axis)
+
+    def exit(self, x):
+        """Megatron 'g': model-axis psum fwd / identity bwd."""
+        if self.model_axis is None:
+            return x
+        return tp_region_exit(x, self.model_axis)
+
+    def model_rank(self):
+        if self.model_axis is None:
+            return 0
+        return lax.axis_index(self.model_axis)
+
+    def heads_local(self, heads: int) -> int:
+        """Local head count when sharding `heads` over the model axis
+        (replicated up when heads < tp, see DESIGN.md kv-replication note)."""
+        return max(1, heads // self.tp)
+
+    def ff_local(self, ff: int) -> int:
+        return max(1, ff // self.tp)

@@ -1,0 +1,364 @@
+"""Parameter initialization + metadata for every architecture family.
+
+``init_params(cfg, key, tp)`` returns ``(params, metas)`` — two pytrees of
+identical structure. Shapes are *global logical* (TP slicing happens in
+``repro.dist``); head counts and vocab are padded up to TP divisibility
+with zero-initialised padding (exactness argument in DESIGN.md §3).
+
+``param_shapes(cfg, tp)`` produces the same structure as
+``ShapeDtypeStruct``s with **zero allocation** — that is what the
+production-size dry-runs lower against.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.meta import ParamMeta, REPLICATED_BIG, REPLICATED_SMALL
+from repro.utils.trees import round_up
+
+
+def eff_heads(cfg: ModelConfig, tp: int) -> int:
+    return round_up(cfg.num_heads, tp) if tp > 1 else cfg.num_heads
+
+
+def eff_kv_heads(cfg: ModelConfig, tp: int) -> int:
+    kv = cfg.num_kv_heads
+    if tp > 1 and kv > tp and kv % tp:
+        return round_up(kv, tp)
+    return kv
+
+
+def eff_vocab(cfg: ModelConfig, tp: int) -> int:
+    return round_up(cfg.vocab_size, tp) if tp > 1 else cfg.vocab_size
+
+
+class Maker:
+    """Creates either concrete initialised arrays (key given) or
+    ShapeDtypeStructs (key None) with one code path."""
+
+    def __init__(self, key, num_layers: int):
+        self.key = key
+        self.num_layers = num_layers
+        self._n = 0
+
+    def fold(self, tag: int) -> "Maker":
+        if self.key is None:
+            return Maker(None, self.num_layers)
+        return Maker(jax.random.fold_in(self.key, tag), self.num_layers)
+
+    def _next_key(self):
+        self._n += 1
+        return jax.random.fold_in(self.key, self._n)
+
+    def normal(self, shape, scale=0.02):
+        if self.key is None:
+            return jax.ShapeDtypeStruct(shape, jnp.float32)
+        return scale * jax.random.normal(self._next_key(), shape, jnp.float32)
+
+    def out_proj(self, shape):
+        """Residual-branch output projection: 1/sqrt(2L)-scaled init."""
+        return self.normal(shape, 0.02 / math.sqrt(2 * max(self.num_layers, 1)))
+
+    def ones(self, shape):
+        if self.key is None:
+            return jax.ShapeDtypeStruct(shape, jnp.float32)
+        return jnp.ones(shape, jnp.float32)
+
+    def zeros(self, shape):
+        if self.key is None:
+            return jax.ShapeDtypeStruct(shape, jnp.float32)
+        return jnp.zeros(shape, jnp.float32)
+
+    def const(self, values: np.ndarray):
+        if self.key is None:
+            return jax.ShapeDtypeStruct(values.shape, jnp.float32)
+        return jnp.asarray(values, jnp.float32)
+
+    def masked_heads(self, w, real_heads, padded_heads, hd, dim):
+        """Zero the padded head rows/cols so padding is mathematically inert."""
+        if self.key is None or real_heads == padded_heads:
+            return w
+        n_real = real_heads * hd
+        idx = np.arange(w.shape[dim])
+        mask = jnp.asarray((idx < n_real).astype(np.float32))
+        return w * (mask[None, :] if dim == 1 else mask[:, None])
+
+
+def _attn_params(mk: Maker, cfg: ModelConfig, tp: int, is_cross: bool):
+    d, hd = cfg.d_model, cfg.head_dim
+    H, Kv = eff_heads(cfg, tp), eff_kv_heads(cfg, tp)
+    p = {
+        "wq": mk.masked_heads(mk.normal((d, H * hd)), cfg.num_heads, H, hd, 1),
+        "wk": mk.normal((d, Kv * hd)),
+        "wv": mk.normal((d, Kv * hd)),
+        "wo": mk.masked_heads(mk.out_proj((H * hd, d)), cfg.num_heads, H, hd, 0),
+        "ln": mk.ones((d,)),
+    }
+    m = {
+        "wq": ParamMeta(tp_dim=1, tp_units=H),
+        "wk": ParamMeta(tp_dim=1, tp_units=Kv),
+        "wv": ParamMeta(tp_dim=1, tp_units=Kv),
+        "wo": ParamMeta(tp_dim=0, tp_units=H),
+        "ln": REPLICATED_SMALL,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = mk.zeros((H * hd,))
+        p["bk"] = mk.zeros((Kv * hd,))
+        p["bv"] = mk.zeros((Kv * hd,))
+        m["bq"] = ParamMeta(tp_dim=0, tp_units=H, compress=False)
+        m["bk"] = ParamMeta(tp_dim=0, tp_units=Kv, compress=False)
+        m["bv"] = ParamMeta(tp_dim=0, tp_units=Kv, compress=False)
+    if cfg.qk_norm:
+        p["q_norm"] = mk.ones((hd,))
+        p["k_norm"] = mk.ones((hd,))
+        m["q_norm"] = ParamMeta(tp_dim=None, compress=False, grad_sync_model=True)
+        m["k_norm"] = ParamMeta(tp_dim=None, compress=False, grad_sync_model=True)
+    if is_cross:
+        p["gate"] = mk.zeros(())
+        m["gate"] = ParamMeta(tp_dim=None, compress=False, grad_sync_model=True)
+    return p, m
+
+
+def _mlp_params(mk: Maker, cfg: ModelConfig, audio: bool):
+    d, ff = cfg.d_model, cfg.d_ff
+    if audio:
+        p = {
+            "ln": mk.ones((d,)),
+            "w_up": mk.normal((d, ff)),
+            "w_down": mk.out_proj((ff, d)),
+        }
+        m = {
+            "ln": REPLICATED_SMALL,
+            "w_up": ParamMeta(tp_dim=1),
+            "w_down": ParamMeta(tp_dim=0),
+        }
+        return p, m
+    p = {
+        "ln": mk.ones((d,)),
+        "w_gate": mk.normal((d, ff)),
+        "w_up": mk.normal((d, ff)),
+        "w_down": mk.out_proj((ff, d)),
+    }
+    m = {
+        "ln": REPLICATED_SMALL,
+        "w_gate": ParamMeta(tp_dim=1),
+        "w_up": ParamMeta(tp_dim=1),
+        "w_down": ParamMeta(tp_dim=0),
+    }
+    return p, m
+
+
+def _moe_params(mk: Maker, cfg: ModelConfig):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    if cfg.moe_impl == "ep":
+        gate_meta = ParamMeta(tp_dim=0, tp_units=E)
+        down_meta = ParamMeta(tp_dim=0, tp_units=E)
+    else:
+        gate_meta = ParamMeta(tp_dim=2)
+        down_meta = ParamMeta(tp_dim=1)
+    p = {
+        "ln": mk.ones((d,)),
+        "router": mk.normal((d, E)),
+        "w_gate": mk.normal((E, d, ff)),
+        "w_up": mk.normal((E, d, ff)),
+        "w_down": mk.out_proj((E, ff, d)),
+    }
+    m = {
+        "ln": REPLICATED_SMALL,
+        "router": ParamMeta(
+            tp_dim=None, compress=d * E >= 65536, grad_sync_model=True
+        ),
+        "w_gate": gate_meta,
+        "w_up": gate_meta,
+        "w_down": down_meta,
+    }
+    if cfg.moe_dense_ff:
+        dff = cfg.moe_dense_ff
+        p["dense_gate"] = mk.normal((d, dff))
+        p["dense_up"] = mk.normal((d, dff))
+        p["dense_down"] = mk.out_proj((dff, d))
+        m["dense_gate"] = ParamMeta(tp_dim=1)
+        m["dense_up"] = ParamMeta(tp_dim=1)
+        m["dense_down"] = ParamMeta(tp_dim=0)
+    return p, m
+
+
+def _mlstm_params(mk: Maker, cfg: ModelConfig):
+    d = cfg.d_model
+    dv = int(cfg.mlstm_proj_factor * d)
+    H = cfg.num_heads
+    p = {
+        "ln": mk.ones((d,)),
+        "wq": mk.normal((d, dv)),
+        "wk": mk.normal((d, dv)),
+        "wv": mk.normal((d, dv)),
+        "wi": mk.normal((d, H)),
+        "wf": mk.normal((d, H)),
+        "wog": mk.normal((d, dv)),
+        "w_down": mk.out_proj((dv, d)),
+    }
+    m = {
+        "ln": REPLICATED_SMALL,
+        "wq": ParamMeta(tp_dim=None, grad_sync_model=True),  # full keys on every rank
+        "wk": ParamMeta(tp_dim=None, grad_sync_model=True),
+        "wv": ParamMeta(tp_dim=1),
+        "wi": ParamMeta(tp_dim=None, compress=False, grad_sync_model=True),
+        "wf": ParamMeta(tp_dim=None, compress=False, grad_sync_model=True),
+        "wog": ParamMeta(tp_dim=1),
+        "w_down": ParamMeta(tp_dim=0),
+    }
+    return p, m
+
+
+def _slstm_params(mk: Maker, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.num_heads
+    dh = d // H
+    p = {
+        "ln": mk.ones((d,)),
+        "w_in": mk.normal((d, 4 * d)),
+        "r": mk.normal((H, dh, 4 * dh)),
+        "b": mk.zeros((4 * d,)),
+        "w_out": mk.out_proj((d, d)),
+    }
+    m = {
+        "ln": REPLICATED_SMALL,
+        "w_in": REPLICATED_BIG,
+        "r": REPLICATED_BIG,
+        "b": REPLICATED_SMALL,
+        "w_out": REPLICATED_BIG,
+    }
+    return p, m
+
+
+def _rglru_params(mk: Maker, cfg: ModelConfig):
+    d = cfg.d_model
+    r = cfg.lru_dim or d
+    W = cfg.conv1d_width
+    # Λ init so that a ∈ (0.9, 0.999) at r_gate ≈ 0.5 (Griffin appendix)
+    lam0 = np.log(
+        np.expm1(-np.log(np.random.default_rng(0).uniform(0.9, 0.999, r)) / (0.5 * 8.0))
+    ).astype(np.float32)
+    p = {
+        "ln": mk.ones((d,)),
+        "w_x": mk.normal((d, r)),
+        "w_y": mk.normal((d, r)),
+        "conv_w": mk.normal((W, r)),
+        "conv_b": mk.zeros((r,)),
+        "w_a": mk.normal((d, r)),
+        "b_a": mk.zeros((r,)),
+        "w_i": mk.normal((d, r)),
+        "b_i": mk.zeros((r,)),
+        "lam": mk.const(lam0),
+        "w_down": mk.out_proj((r, d)),
+    }
+    m = {
+        "ln": REPLICATED_SMALL,
+        "w_x": ParamMeta(tp_dim=1),
+        "w_y": ParamMeta(tp_dim=1),
+        "conv_w": ParamMeta(tp_dim=1, compress=False),
+        "conv_b": ParamMeta(tp_dim=0, compress=False),
+        "w_a": ParamMeta(tp_dim=1),
+        "b_a": ParamMeta(tp_dim=0, compress=False),
+        "w_i": ParamMeta(tp_dim=1),
+        "b_i": ParamMeta(tp_dim=0, compress=False),
+        "lam": ParamMeta(tp_dim=0, compress=False),
+        "w_down": ParamMeta(tp_dim=0),
+    }
+    return p, m
+
+
+def _block_params(mk: Maker, kind: str, cfg: ModelConfig, tp: int):
+    """(params, metas) for one block of the given pattern kind."""
+    if kind in ("attn", "local", "cross"):
+        pa, ma = _attn_params(mk, cfg, tp, is_cross=(kind == "cross"))
+        if cfg.num_experts and kind != "cross":
+            pc, mc = _moe_params(mk.fold(1), cfg)
+        elif cfg.d_ff and kind != "cross":
+            pc, mc = _mlp_params(mk.fold(1), cfg, audio=cfg.arch_type == "audio")
+        else:
+            pc, mc = {}, {}
+        p, m = {"attn": pa}, {"attn": ma}
+        if pc:
+            p["mix"], m["mix"] = pc, mc
+        return p, m
+    if kind == "mlstm":
+        p, m = _mlstm_params(mk, cfg)
+    elif kind == "slstm":
+        p, m = _slstm_params(mk, cfg)
+    elif kind == "rglru":
+        pr, mr = _rglru_params(mk, cfg)
+        pc, mc = _mlp_params(mk.fold(1), cfg, audio=False)
+        return {"rglru": pr, "mix": pc}, {"rglru": mr, "mix": mc}
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return {kind: p}, {kind: m}
+
+
+def _is_sds(x):
+    return isinstance(x, jax.ShapeDtypeStruct)
+
+
+def _stack(xs):
+    """Stack leaves; works for both arrays and ShapeDtypeStructs."""
+    first = xs[0]
+    if _is_sds(first):
+        return jax.ShapeDtypeStruct((len(xs),) + tuple(first.shape), first.dtype)
+    return jnp.stack(xs, axis=0)
+
+
+def init_params(cfg: ModelConfig, key, tp: int = 1):
+    """Global-logical (params, metas). Layers stacked per precision group:
+    group g holds, per pattern position, arrays with leading dim R_g
+    (= pattern repetitions inside the group). key=None -> abstract shapes."""
+    pat = cfg.pattern
+    reps_per_group = cfg.layers_per_group // len(pat)
+    base = Maker(key, cfg.num_layers)
+    groups_p, groups_m = [], []
+    for g in range(cfg.num_groups):
+        layer_p, layer_m = {}, {}
+        for pi, kind in enumerate(pat):
+            stack_p, meta = [], None
+            for rrep in range(reps_per_group):
+                mk = base.fold(1 + g * 10000 + pi * 100 + rrep)
+                p, meta = _block_params(mk, kind, cfg, tp)
+                stack_p.append(p)
+            layer_p[f"p{pi}"] = jax.tree_util.tree_map(
+                lambda *xs: _stack(list(xs)), *stack_p,
+                is_leaf=lambda x: _is_sds(x),
+            )
+            layer_m[f"p{pi}"] = meta
+        groups_p.append(layer_p)
+        groups_m.append(layer_m)
+
+    d = cfg.d_model
+    V = eff_vocab(cfg, tp)
+    mk = base.fold(999_001)
+    top_p, top_m = {}, {}
+    if cfg.embed_is_input_stub:
+        top_p["embed_in"] = mk.normal((cfg.vision_dim, d))
+        top_m["embed_in"] = REPLICATED_BIG
+    else:
+        top_p["embed"] = mk.normal((V, d))
+        top_m["embed"] = ParamMeta(tp_dim=0, tp_units=V)
+    if not cfg.tie_embeddings:
+        top_p["head"] = mk.normal((d, V))
+        top_m["head"] = ParamMeta(tp_dim=1, tp_units=V)
+    if cfg.num_image_tokens:
+        top_p["img_proj"] = mk.normal((cfg.vision_dim, d))
+        top_m["img_proj"] = REPLICATED_BIG
+    top_p["final_norm"] = mk.ones((d,))
+    top_m["final_norm"] = REPLICATED_SMALL
+
+    params = {"groups": groups_p, **top_p}
+    metas = {"groups": groups_m, **top_m}
+    return params, metas
+
+
+def param_shapes(cfg: ModelConfig, tp: int = 1):
+    """Abstract (ShapeDtypeStruct) params + metas, zero allocation."""
+    return init_params(cfg, None, tp)

@@ -1,0 +1,72 @@
+"""Shared primitive layers: RMSNorm, rotary embeddings, embedding lookup."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return out.astype(dtype)
+
+
+def head_rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """qk-norm (qwen3): RMSNorm over the trailing head_dim."""
+    return rms_norm(x, scale, eps)
+
+
+def rope_frequencies(head_dim: int, rotary_pct: float, theta: float) -> jnp.ndarray:
+    """Inverse frequencies for the rotated fraction of head_dim."""
+    rot = int(head_dim * rotary_pct)
+    rot -= rot % 2
+    return 1.0 / (theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    *,
+    rotary_pct: float = 1.0,
+    theta: float = 1e4,
+) -> jnp.ndarray:
+    """Rotary embedding on ``x: (..., S, H, head_dim)`` at ``positions: (S,)``.
+
+    ``rotary_pct < 1`` rotates only the leading fraction of head dims
+    (chatglm-style partial / "2d" RoPE); the tail passes through.
+    """
+    head_dim = x.shape[-1]
+    inv_freq = rope_frequencies(head_dim, rotary_pct, theta)
+    rot = 2 * inv_freq.shape[0]
+    if rot == 0:
+        return x
+    dtype = x.dtype
+    ang = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]  # (S, rot/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[None, :, None, :]
+    sin = sin[None, :, None, :]
+    x_rot, x_pass = x[..., :rot].astype(jnp.float32), x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape).astype(dtype)
+    return jnp.concatenate([y, x_pass], axis=-1) if x_pass.shape[-1] else y
+
+
+def embed_lookup_vp(
+    tokens: jnp.ndarray,
+    table_local: jnp.ndarray,
+    vocab_start: jnp.ndarray,
+    env,
+) -> jnp.ndarray:
+    """Vocab-parallel embedding: each model rank holds a vocab slice;
+    out-of-slice tokens contribute zero, a model-axis psum restores rows."""
+    vloc = table_local.shape[0]
+    local_ids = tokens - vocab_start
+    in_range = (local_ids >= 0) & (local_ids < vloc)
+    safe = jnp.clip(local_ids, 0, vloc - 1)
+    out = jnp.take(table_local, safe, axis=0)
+    out = jnp.where(in_range[..., None], out, 0)
+    return env.exit(out)

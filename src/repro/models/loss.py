@@ -1,0 +1,44 @@
+"""Vocab-parallel cross-entropy (megatron-style, stable, mask-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.env import Env
+
+
+def lm_loss(
+    logits_local: jnp.ndarray,  # (B, S, V_local) — vocab sharded over model
+    labels: jnp.ndarray,        # (B, S) int32; negative = ignore
+    env: Env,
+    vocab_start,                # global index of this rank's first vocab row
+    real_vocab: int,            # unpadded vocab size
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean token NLL + token count. Works sharded (model axis) or local."""
+    vloc = logits_local.shape[-1]
+    gidx = vocab_start + jnp.arange(vloc)
+    logits_local = jnp.where(
+        (gidx < real_vocab)[None, None, :], logits_local.astype(jnp.float32), -1e30
+    )
+
+    m_loc = lax.stop_gradient(jnp.max(logits_local, axis=-1))
+    if env.model_axis is not None:
+        m = lax.pmax(m_loc, env.model_axis)
+    else:
+        m = m_loc
+    s_loc = jnp.sum(jnp.exp(logits_local - m[..., None]), axis=-1)
+    s = env.exit(s_loc)  # psum fwd / identity bwd
+    lse = jnp.log(s) + m
+
+    local_ids = labels - vocab_start
+    in_range = (local_ids >= 0) & (local_ids < vloc)
+    safe = jnp.clip(local_ids, 0, vloc - 1)
+    tgt_partial = jnp.take_along_axis(logits_local, safe[..., None], axis=-1)[..., 0]
+    tgt_partial = jnp.where(in_range, tgt_partial, 0.0)
+    tgt = env.exit(tgt_partial)
+
+    valid = (labels >= 0).astype(jnp.float32)
+    nll = (lse - tgt) * valid
+    count = jnp.sum(valid)
+    return jnp.sum(nll), count

@@ -1,0 +1,21 @@
+"""Dense channel mixers: SwiGLU (llama-family) and GeLU MLP (hubert)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.env import Env
+
+
+def swiglu(x: jnp.ndarray, w: dict, env: Env) -> jnp.ndarray:
+    """Column-parallel gate/up, row-parallel down (one model-axis psum)."""
+    xin = env.enter(x)
+    g = jax.nn.silu(xin @ w["w_gate"])
+    u = xin @ w["w_up"]
+    return env.exit((g * u) @ w["w_down"])
+
+
+def gelu_mlp(x: jnp.ndarray, w: dict, env: Env) -> jnp.ndarray:
+    xin = env.enter(x)
+    h = jax.nn.gelu(xin @ w["w_up"], approximate=True)
+    return env.exit(h @ w["w_down"])

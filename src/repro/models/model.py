@@ -1,0 +1,317 @@
+"""Model assembly: embedding → scanned layer groups → head / loss.
+
+Every architecture family routes through ``run_group`` — the per-group
+layer scan whose body materializes that layer's weights (via the caller's
+``mat_fn``: identity single-device, compressed FSDP gather distributed) and
+applies the pattern's blocks. The same code path serves train, prefill and
+decode; caches/states are stacked per group and scanned alongside params.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm
+from repro.models.attention import KVCache, QuantKVCache, init_cache, mha
+from repro.models.env import Env
+from repro.models.layers import embed_lookup_vp, rms_norm
+from repro.models.loss import lm_loss
+from repro.models.mlp import gelu_mlp, swiglu
+from repro.models.moe import moe_block
+from repro.models.rglru import rglru_block
+from repro.models.init import eff_vocab
+
+
+def _channel_mix(x, w, cfg: ModelConfig, env: Env):
+    """Post-attention channel mixer -> (delta, aux_loss)."""
+    if "mix" not in w:
+        return jnp.zeros_like(x), 0.0
+    wm = w["mix"]
+    xn = rms_norm(x, wm["ln"], cfg.norm_eps)
+    if cfg.num_experts:
+        y, aux = moe_block(xn, wm, cfg, env)
+        return y, aux
+    if cfg.arch_type == "audio":
+        return gelu_mlp(xn, wm, env), 0.0
+    return swiglu(xn, wm, env), 0.0
+
+
+def apply_block(
+    kind: str,
+    x: jnp.ndarray,
+    w: dict,
+    cfg: ModelConfig,
+    env: Env,
+    *,
+    mode: str,
+    cache: Any = None,
+    img_kv: Optional[jnp.ndarray] = None,
+    window_override: Optional[int] = None,
+    pos_offset=0,
+):
+    """One block of the pattern. Returns (x', cache', aux)."""
+    aux = 0.0
+    if kind in ("attn", "local", "cross"):
+        wa = w["attn"]
+        window = cfg.sliding_window if kind == "local" else (
+            cfg.sliding_window if cfg.sliding_window else None
+        )
+        if window_override is not None and kind != "cross":
+            window = window_override if window is None else min(window, window_override)
+        xn = rms_norm(x, wa["ln"], cfg.norm_eps)
+        if kind == "cross":
+            y, cache = mha(
+                xn, wa, cfg, env, mode=mode, cache=cache,
+                kv_ext=img_kv, is_cross=True, pos_offset=pos_offset,
+            )
+        else:
+            y, cache = mha(
+                xn, wa, cfg, env, mode=mode, cache=cache,
+                window=window, pos_offset=pos_offset,
+            )
+        x = x + y
+        dy, aux = _channel_mix(x, w, cfg, env)
+        x = x + dy
+    elif kind == "mlstm":
+        y, cache = ssm.mlstm_block(x, w["mlstm"], cfg, env, mode=mode, state=cache)
+        x = x + y
+    elif kind == "slstm":
+        y, cache = ssm.slstm_block(x, w["slstm"], cfg, env, mode=mode, state=cache)
+        x = x + y
+    elif kind == "rglru":
+        y, cache = rglru_block(x, w["rglru"], cfg, env, mode=mode, state=cache)
+        x = x + y
+        dy, _ = _channel_mix(x, w, cfg, env)
+        x = x + dy
+    else:
+        raise ValueError(kind)
+    return x, cache, aux
+
+
+def run_group(
+    x: jnp.ndarray,
+    group_params: dict,      # {p<i>: stacked (R, ...) param trees}
+    cfg: ModelConfig,
+    env: Env,
+    *,
+    mode: str,
+    mat_fn: Callable[[str, dict], dict],  # (pattern key, rep storage) -> weights
+    caches: Any = None,      # {p<i>: stacked cache trees} or None
+    img_kv: Optional[jnp.ndarray] = None,
+    window_override: Optional[int] = None,
+    pos_offset=0,
+):
+    """Scan the group's pattern repetitions. Returns (x, caches', aux)."""
+    pat = cfg.pattern
+
+    def body(carry, per_rep):
+        xc, aux_acc = carry
+        p_rep, c_rep = per_rep
+        new_caches = {}
+        for pi, kind in enumerate(pat):
+            w = mat_fn(f"p{pi}", p_rep[f"p{pi}"])
+            c_in = c_rep[f"p{pi}"] if c_rep is not None else None
+            xc, c_out, aux = apply_block(
+                kind, xc, w, cfg, env, mode=mode, cache=c_in,
+                img_kv=img_kv, window_override=window_override,
+                pos_offset=pos_offset,
+            )
+            new_caches[f"p{pi}"] = c_out
+            aux_acc = aux_acc + aux
+        return (xc, aux_acc), new_caches
+
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(body)
+
+    xs = (group_params, caches)
+    if cfg.scan_layers:
+        # scan needs a uniform xs tree; when caches is None build a None-free
+        # placeholder by scanning params only
+        if caches is None:
+            def body_nc(carry, p_rep):
+                return body(carry, (p_rep, None))[0], None
+
+            if cfg.remat and mode == "train":
+                body_nc = jax.checkpoint(body_nc)
+            (x, aux), _ = lax.scan(body_nc, (x, 0.0), group_params)
+            return x, None, aux
+        (x, aux), new_caches = lax.scan(body, (x, 0.0), xs)
+        return x, new_caches, aux
+
+    # unrolled path (smoke tests / tiny models)
+    reps = jax.tree_util.tree_leaves(group_params)[0].shape[0]
+    aux_total = 0.0
+    out_caches = []
+    for rep in range(reps):
+        p_rep = jax.tree_util.tree_map(lambda a: a[rep], group_params)
+        c_rep = (
+            jax.tree_util.tree_map(lambda a: a[rep], caches)
+            if caches is not None
+            else None
+        )
+        (x, aux_total), c_out = body((x, aux_total), (p_rep, c_rep))
+        out_caches.append(c_out)
+    if caches is not None:
+        out_caches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs, 0), *out_caches
+        )
+    else:
+        out_caches = None
+    return x, out_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# end-to-end forwards
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, batch, cfg: ModelConfig, env: Env, mat_top):
+    if cfg.embed_is_input_stub:
+        w = mat_top("embed_in")
+        return batch["features"] @ w
+    table = mat_top("embed")  # (V_local, d)
+    V = eff_vocab(cfg, env.tp)
+    vloc = V // env.tp if env.tp > 1 else V
+    vocab_start = env.model_rank() * vloc
+    return embed_lookup_vp(batch["tokens"], table, vocab_start, env)
+
+
+def _img_kv(params, batch, cfg: ModelConfig, env: Env, mat_top):
+    if not cfg.num_image_tokens:
+        return None
+    proj = mat_top("img_proj")
+    return batch["image_features"] @ proj  # (B, N, d)
+
+
+def _logits(x, params, cfg: ModelConfig, env: Env, mat_top):
+    x = rms_norm(x, mat_top("final_norm"), cfg.norm_eps)
+    if cfg.tie_embeddings:
+        table = mat_top("embed")
+        logits = env.enter(x) @ table.T
+    else:
+        head = mat_top("head")
+        logits = env.enter(x) @ head
+    return logits  # (B, S, V_local) — vocab-sharded when tp > 1
+
+
+def forward_loss(
+    params,
+    batch: dict,
+    cfg: ModelConfig,
+    env: Env,
+    *,
+    mat_group: Callable[[int, dict], dict],  # (group_idx, rep storage) -> weights
+    mat_top: Callable[[str], Any],
+):
+    """Training forward: mean LM/frame NLL + MoE aux. Returns (loss, metrics)."""
+    x = _embed(params, batch, cfg, env, mat_top).astype(env.dtype)
+    img_kv = _img_kv(params, batch, cfg, env, mat_top)
+    aux_total = 0.0
+    for g, gp in enumerate(params["groups"]):
+        x, _, aux = run_group(
+            x, gp, cfg, env, mode="train",
+            mat_fn=functools.partial(mat_group, g), img_kv=img_kv,
+        )
+        aux_total = aux_total + aux
+    logits = _logits(x, params, cfg, env, mat_top)
+    V = eff_vocab(cfg, env.tp)
+    vloc = logits.shape[-1]
+    vocab_start = env.model_rank() * vloc if env.tp > 1 else 0
+    nll_sum, count = lm_loss(
+        logits, batch["labels"], env, vocab_start, cfg.vocab_size
+    )
+    # mean over *global* tokens happens in the train step (psum of both)
+    loss_local = nll_sum
+    metrics = {"nll_sum": nll_sum, "token_count": count, "aux": aux_total}
+    return loss_local, metrics
+
+
+def forward_prefill(params, batch, cfg, env, *, mat_group, mat_top, cache_capacity):
+    """Prefill: returns (last-token logits, caches per group)."""
+    x = _embed(params, batch, cfg, env, mat_top).astype(env.dtype)
+    img_kv = _img_kv(params, batch, cfg, env, mat_top)
+    B, S = x.shape[:2]
+    caches = init_caches(cfg, env, B, cache_capacity, env.dtype)
+    new_caches = []
+    for g, gp in enumerate(params["groups"]):
+        x, c, _ = run_group(
+            x, gp, cfg, env, mode="prefill",
+            mat_fn=functools.partial(mat_group, g),
+            caches=caches[g], img_kv=img_kv,
+        )
+        new_caches.append(c)
+    logits = _logits(x[:, -1:], params, cfg, env, mat_top)
+    return logits, new_caches
+
+
+def forward_decode(params, batch, caches, cfg, env, *, mat_group, mat_top,
+                   window_override=None):
+    """One-token decode step. batch['tokens']: (B, 1). Returns (logits, caches')."""
+    x = _embed(params, batch, cfg, env, mat_top).astype(env.dtype)
+    pos = batch["pos"]  # () int32 — tokens absorbed so far
+    new_caches = []
+    for g, gp in enumerate(params["groups"]):
+        x, c, _ = run_group(
+            x, gp, cfg, env, mode="decode",
+            mat_fn=functools.partial(mat_group, g),
+            caches=caches[g], window_override=window_override,
+            pos_offset=pos,
+        )
+        new_caches.append(c)
+    logits = _logits(x, params, cfg, env, mat_top)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def _block_cache(kind, cfg: ModelConfig, env: Env, batch, capacity, dtype):
+    hd = cfg.head_dim
+    if kind in ("attn", "local"):
+        kv_l = env.heads_local(cfg.num_kv_heads)
+        cap = capacity
+        if kind == "local" and cfg.sliding_window:
+            cap = min(capacity, cfg.sliding_window)
+        kv_dtype = jnp.int8 if env.int8_kv else dtype
+        return init_cache(batch, cap, kv_l, hd, kv_dtype)
+    if kind == "cross":
+        kv_l = env.heads_local(cfg.num_kv_heads)
+        return init_cache(batch, max(cfg.num_image_tokens, 1), kv_l, hd, dtype)
+    if kind == "mlstm":
+        dv = int(cfg.mlstm_proj_factor * cfg.d_model)
+        dv_l = env.ff_local(dv)
+        dk = dv // cfg.num_heads
+        return ssm.init_mlstm_state(batch, cfg.num_heads, dk, dv_l // cfg.num_heads, dtype)
+    if kind == "slstm":
+        return ssm.init_slstm_state(batch, cfg.d_model, dtype)
+    if kind == "rglru":
+        r = cfg.lru_dim or cfg.d_model
+        r_l = env.ff_local(r)
+        h = jnp.zeros((batch, r_l), dtype)
+        conv = jnp.zeros((batch, cfg.conv1d_width - 1, r_l), dtype)
+        return (h, conv)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, env: Env, batch: int, capacity: int, dtype):
+    """Stacked caches per group: groups[g][p<i>] leading dim = repetitions."""
+    pat = cfg.pattern
+    reps = cfg.layers_per_group // len(pat)
+    groups = []
+    for g in range(cfg.num_groups):
+        entry = {}
+        for pi, kind in enumerate(pat):
+            one = _block_cache(kind, cfg, env, batch, capacity, dtype)
+            entry[f"p{pi}"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), one
+            )
+        groups.append(entry)
+    return groups

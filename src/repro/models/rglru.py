@@ -1,0 +1,90 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: RMSNorm → two branches:
+  y-branch: linear → GeLU
+  x-branch: linear → temporal conv1d(width 4) → RG-LRU
+merge: y ⊙ h → down projection.
+
+RG-LRU recurrence (elementwise over the recurrence width r):
+  r_t = σ(x_t W_a + b_a)          (recurrence gate)
+  i_t = σ(x_t W_i + b_i)          (input gate)
+  log a_t = −c · softplus(Λ) · r_t            (c = 8)
+  h_t = a_t · h_{t−1} + √(1 − a_t²) · (i_t ⊙ x̃_t)
+
+The recurrence is a linear scan → ``lax.associative_scan`` (log-depth) for
+train/prefill and an O(1) state update for decode. Elementwise over the
+channel dim ⇒ the recurrence TP-shards over the model axis cleanly; the
+gates read the *block input* (model-replicated) so their weights are
+column-parallel (deviation from Griffin's block-diagonal gates, noted in
+DESIGN.md).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.env import Env
+from repro.models.layers import rms_norm
+
+_C = 8.0
+
+
+def _conv1d(x: jnp.ndarray, conv_w: jnp.ndarray, conv_b: jnp.ndarray,
+            conv_state: jnp.ndarray | None, mode: str):
+    """Causal depthwise temporal conv. x: (B,S,r); conv_w: (W,r).
+
+    Returns (y, new_conv_state (B, W-1, r))."""
+    B, S, r = x.shape
+    W = conv_w.shape[0]
+    if conv_state is None:
+        conv_state = jnp.zeros((B, W - 1, r), x.dtype)
+    xp = jnp.concatenate([conv_state, x], axis=1)  # (B, S+W-1, r)
+    y = sum(xp[:, i : i + S] * conv_w[i][None, None, :] for i in range(W))
+    y = y + conv_b[None, None, :]
+    new_state = xp[:, -(W - 1):] if W > 1 else conv_state
+    return y, new_state
+
+
+def rglru_block(x, w, cfg, env: Env, *, mode="train", state=None):
+    """x: (B,S,d) -> (y, state'). state = (h (B,r_l), conv (B,W-1,r_l)).
+
+    w keys: ln, w_x (d,r_l), w_y (d,r_l), conv_w (W,r_l), conv_b (r_l,),
+    w_a (d,r_l), b_a, w_i (d,r_l), b_i, lam (r_l,), w_down (r_l, d)."""
+    B, S, d = x.shape
+    xn = rms_norm(x, w["ln"], cfg.norm_eps)
+    xin = env.enter(xn)
+
+    yb = jax.nn.gelu(xin @ w["w_y"], approximate=True)
+    xb = xin @ w["w_x"]
+    h_prev, conv_state = state if state is not None else (None, None)
+    xb, conv_state = _conv1d(xb, w["conv_w"], w["conv_b"], conv_state, mode)
+
+    r_gate = jax.nn.sigmoid(xin @ w["w_a"] + w["b_a"])
+    i_gate = jax.nn.sigmoid(xin @ w["w_i"] + w["b_i"])
+    log_a = -_C * jax.nn.softplus(w["lam"])[None, None, :] * r_gate  # (B,S,r)
+    a = jnp.exp(log_a)
+    gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_gate * xb)
+
+    if mode == "decode":
+        assert S == 1
+        if h_prev is None:
+            h_prev = jnp.zeros((B, a.shape[-1]), x.dtype)
+        h = a[:, 0] * h_prev + gated_x[:, 0]
+        hs = h[:, None]
+        new_state = (h, conv_state)
+    else:
+        if h_prev is not None:
+            # fold carried state into the first step
+            gated_x = gated_x.at[:, 0].add(a[:, 0] * h_prev)
+
+        def op(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, hs = lax.associative_scan(op, (a, gated_x), axis=1)
+        new_state = (hs[:, -1], conv_state)
+
+    y = env.exit((yb[:, : hs.shape[1]] * hs) @ w["w_down"])
+    return y, new_state

@@ -1,0 +1,285 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Follows arXiv:2405.04517 with the exponential-gating stabilizer ``m``:
+
+mLSTM (per head, d_k = d_v = head width):
+    m_t   = max(f̃_t + m_{t-1}, ĩ_t)
+    i'_t  = exp(ĩ_t − m_t);  f'_t = exp(f̃_t + m_{t-1} − m_t)
+    C_t   = f'_t C_{t-1} + i'_t k_t v_tᵀ
+    n_t   = f'_t n_{t-1} + i'_t k_t
+    h_t   = C_tᵀ q_t / max(|n_tᵀ q_t|, 1)
+
+sLSTM (per unit, heads mix via block-diagonal recurrent matrices):
+    c_t = f'_t c_{t-1} + i'_t z_t ;  n_t = f'_t n_{t-1} + i'_t
+    h_t = o_t · c_t / n_t
+
+Both expose a ``lax.scan`` training path and an O(1)-state single-step
+decode path (this is why xlstm-1.3b runs ``long_500k`` natively).
+
+TP mapping (DESIGN.md §5): mLSTM shards the value dimension (and the down
+projection) over the model axis; q/k/gate projections are replicated
+(4 heads < 16 shards — head sharding impossible). sLSTM compute is fully
+replicated over the model axis: its per-layer weights are ~8·(d/H)·d,
+negligible next to the mLSTM projections.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.env import Env
+from repro.models.layers import rms_norm
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class MLSTMState:
+    C: jnp.ndarray  # (B, H, dk, dv_local)
+    n: jnp.ndarray  # (B, H, dk)
+    m: jnp.ndarray  # (B, H)
+
+    def tree_flatten(self):
+        return (self.C, self.n, self.m), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SLSTMState:
+    c: jnp.ndarray  # (B, d)
+    n: jnp.ndarray  # (B, d)
+    h: jnp.ndarray  # (B, d)
+    m: jnp.ndarray  # (B, d)
+
+    def tree_flatten(self):
+        return (self.c, self.n, self.h, self.m), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, ch):
+        return cls(*ch)
+
+
+def init_mlstm_state(batch, heads, dk, dv_local, dtype):
+    return MLSTMState(
+        jnp.zeros((batch, heads, dk, dv_local), dtype),
+        jnp.zeros((batch, heads, dk), dtype),
+        jnp.full((batch, heads), -1e30, dtype),
+    )
+
+
+def init_slstm_state(batch, d, dtype):
+    z = jnp.zeros((batch, d), dtype)
+    return SLSTMState(z, z, z, jnp.full((batch, d), -1e30, dtype))
+
+
+def _mlstm_step(state: MLSTMState, qkvif):
+    q, k, v, i_t, f_t = qkvif  # q,k: (B,H,dk); v: (B,H,dvl); i,f: (B,H)
+    dk = q.shape[-1]
+    m_new = jnp.maximum(f_t + state.m, i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(f_t + state.m - m_new)
+    C = fp[..., None, None] * state.C + ip[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = fp[..., None] * state.n + ip[..., None] * k
+    qs = q * (dk**-0.5)
+    num = jnp.einsum("bhkv,bhk->bhv", C, qs)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qs))
+    h = num / jnp.maximum(den, 1.0)[..., None]
+    return MLSTMState(C, n, m_new), h
+
+
+def mlstm_chunkwise(q, k, v, i_t, f_t, state: MLSTMState, chunk: int):
+    """Chunkwise-parallel mLSTM (xLSTM appendix / GLA-style) — §Perf lever.
+
+    The sequential form reads+writes the (dk, dv) matrix state every
+    timestep (the dominant memory term of xlstm train, see EXPERIMENTS.md
+    §Roofline); the chunkwise form materializes state once per ``chunk``
+    steps and computes intra-chunk interactions as masked matmuls
+    (MXU-friendly). Exact up to fp reassociation (tested vs the scan).
+
+    Shapes: q,k (B,S,H,dk); v (B,S,H,dv); i_t,f_t (B,S,H) — f_t already in
+    log space (log_sigmoid). Returns (h (B,S,H,dv), final state).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    n_chunks = S // chunk
+    rs = lambda a: a.reshape(B, n_chunks, chunk, *a.shape[2:]).swapaxes(0, 1)
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    ic, fc = rs(i_t), rs(f_t)
+    scale = dk**-0.5
+
+    def body(carry, inp):
+        C_in, n_in, m_in = carry.C, carry.n, carry.m
+        qq, kk, vv, ii, ff = inp  # (B, chunk, H, ...)
+        b = jnp.cumsum(ff, axis=1)              # (B,chunk,H) log decay 1..t
+        btot = b[:, -1:]                        # (B,1,H)
+        # stabilizers
+        m_inter = b + m_in[:, None]             # (B,chunk,H)
+        w_intra_max = jnp.max(ii - b, axis=1, keepdims=True)  # rough bound
+        # per-position max over s<=t of (b_t - b_s + i_s): use running max
+        g = ii - b                              # (B,chunk,H): i_s - b_s
+        g_run = jax.lax.cummax(g, axis=1)       # max_{s<=t}
+        m_t = jnp.maximum(m_inter, b + g_run)   # (B,chunk,H)
+        # intra-chunk: D_ts = exp(b_t - b_s + i_s - m_t), s <= t
+        wmat = (
+            b[:, :, None] - b[:, None, :] + ii[:, None, :]
+            - m_t[:, :, None]
+        )  # (B, t, s, H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        d = jnp.where(mask[None, :, :, None], jnp.exp(wmat), 0.0)
+        s_qk = jnp.einsum(
+            "bthd,bshd->btsh", qq, kk, preferred_element_type=jnp.float32
+        ) * scale
+        h_intra = jnp.einsum(
+            "btsh,bshv->bthv", s_qk * d, vv,
+            preferred_element_type=jnp.float32,
+        )
+        n_intra = jnp.einsum("btsh,bshd->bthd", d, kk,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk
+        dec = jnp.exp(m_inter - m_t)            # (B,chunk,H)
+        h_inter = jnp.einsum(
+            "bthd,bhdv->bthv", qq * scale, C_in,
+            preferred_element_type=jnp.float32,
+        ) * dec[..., None]
+        n_tot = n_intra + n_in[:, None] * dec[..., None]
+        num = h_intra + h_inter
+        den = jnp.abs(
+            jnp.einsum("bthd,bthd->bth", qq * scale, n_tot)
+        )
+        h = (num / jnp.maximum(den, 1.0)[..., None]).astype(q.dtype)
+
+        # state to next chunk
+        m_out = jnp.maximum(btot[:, 0] + m_in, jnp.max(g, axis=1) + btot[:, 0])
+        wst = jnp.exp(btot - b + ii - m_out[:, None])  # (B,chunk,H)
+        C_out = (
+            jnp.exp(btot[:, 0] + m_in - m_out)[..., None, None] * C_in
+            + jnp.einsum("bshd,bshv->bhdv", kk * wst[..., None], vv,
+                         preferred_element_type=jnp.float32)
+        )
+        n_out = (
+            jnp.exp(btot[:, 0] + m_in - m_out)[..., None] * n_in
+            + jnp.einsum("bshd,bsh->bhd", kk, wst,
+                         preferred_element_type=jnp.float32)
+        )
+        return MLSTMState(C_out.astype(C_in.dtype), n_out.astype(n_in.dtype),
+                          m_out), h
+
+    state, hs = lax.scan(body, state, (qc, kc, vc, ic, fc))
+    return hs.swapaxes(0, 1).reshape(B, S, H, dv), state
+
+
+def mlstm_block(x, w, cfg, env: Env, *, mode="train", state=None):
+    """x: (B,S,d) -> (y, state'). w keys: ln, wq, wk, wv, wi, wf, wog, w_down."""
+    B, S, d = x.shape
+    H = cfg.num_heads
+    dv = int(cfg.mlstm_proj_factor * d)
+    dv_l = env.ff_local(dv)
+    dk = dv // H  # key width per head (= value width pre-sharding)
+    dkh = dk
+
+    xn = rms_norm(x, w["ln"], cfg.norm_eps)
+    xin = env.enter(xn)
+    # value columns use a (dvh, H) layout — outer dim = within-head value
+    # index, inner dim = head — so a contiguous TP slice of wv/wog/w_down
+    # shards the *within-head* value dim and every rank keeps all heads
+    # (4 heads never divide a 16-way model axis; DESIGN.md §5).
+    dvh_l = dv_l // H
+    q = (xin @ w["wq"]).reshape(B, S, H, dkh)
+    k = (xin @ w["wk"]).reshape(B, S, H, dkh)
+    v = (xin @ w["wv"]).reshape(B, S, dvh_l, H).transpose(0, 1, 3, 2)
+    i_t = (xin @ w["wi"]).reshape(B, S, H)
+    f_t = jax.nn.log_sigmoid((xin @ w["wf"]).reshape(B, S, H))
+    og = jax.nn.sigmoid(xin @ w["wog"])  # (B,S,dv_l) in (dvh, H) layout
+
+    if state is None:
+        state = init_mlstm_state(B, H, dkh, dv_l // H, x.dtype)
+
+    if mode == "decode":
+        assert S == 1
+        state, h = _mlstm_step(
+            state, (q[:, 0], k[:, 0], v[:, 0], i_t[:, 0], f_t[:, 0])
+        )
+        h = h[:, None]  # (B,1,H,dvl/H)
+    elif env.mlstm_chunk and S % env.mlstm_chunk == 0 and S > env.mlstm_chunk:
+        h, state = mlstm_chunkwise(
+            q, k, v, i_t, f_t, state, env.mlstm_chunk
+        )
+    else:
+        def body(st, inp):
+            st, h = _mlstm_step(st, inp)
+            return st, h
+
+        seq = (
+            q.transpose(1, 0, 2, 3),
+            k.transpose(1, 0, 2, 3),
+            v.transpose(1, 0, 2, 3),
+            i_t.transpose(1, 0, 2),
+            f_t.transpose(1, 0, 2),
+        )
+        state, hs = lax.scan(body, state, seq)
+        h = hs.transpose(1, 0, 2, 3)  # (B,S,H,dvl/H)
+
+    # back to the flat (dvh, H) column layout before gating/down-proj
+    h = h.transpose(0, 1, 3, 2).reshape(B, h.shape[1], dv_l)
+    h = h * og[:, : h.shape[1]]
+    y = env.exit(h @ w["w_down"])
+    return y, state
+
+
+def _slstm_step(state: SLSTMState, wx, r, b, num_heads):
+    """One sLSTM step. wx: (B, 4d) precomputed input contributions."""
+    B, d4 = wx.shape
+    d = d4 // 4
+    h_prev = state.h
+    # block-diagonal recurrent contribution: r is (H, dh, 4*dh)
+    H = num_heads
+    dh = d // H
+    hh = h_prev.reshape(B, H, dh)
+    rec = jnp.einsum("bhi,hio->bho", hh, r)  # (B, H, 4*dh)
+    # regroup per-head gate quarters into the (z|i|f|o) layout of wx
+    rec = rec.reshape(B, H, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    pre = wx + rec + b
+    z_t, i_t, f_t, o_t = jnp.split(pre, 4, axis=-1)
+    z_t = jnp.tanh(z_t)
+    o_t = jax.nn.sigmoid(o_t)
+    f_log = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(f_log + state.m, i_t)
+    ip = jnp.exp(i_t - m_new)
+    fp = jnp.exp(f_log + state.m - m_new)
+    c = fp * state.c + ip * z_t
+    n = fp * state.n + ip
+    h = o_t * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, h, m_new), h
+
+
+def slstm_block(x, w, cfg, env: Env, *, mode="train", state=None):
+    """x: (B,S,d) -> (y, state'). Replicated over the model axis.
+
+    w keys: ln, w_in (d, 4d), r (H, dh, 4dh), b (4d,), w_out (d, d)."""
+    B, S, d = x.shape
+    xn = rms_norm(x, w["ln"], cfg.norm_eps)
+    wx = xn @ w["w_in"]  # (B,S,4d)
+    if state is None:
+        state = init_slstm_state(B, d, x.dtype)
+
+    if mode == "decode":
+        assert S == 1
+        state, h = _slstm_step(state, wx[:, 0], w["r"], w["b"], cfg.num_heads)
+        hs = h[:, None]
+    else:
+        def body(st, wx_t):
+            return _slstm_step(st, wx_t, w["r"], w["b"], cfg.num_heads)
+
+        state, hs = lax.scan(body, state, wx.transpose(1, 0, 2))
+        hs = hs.transpose(1, 0, 2)
+    y = hs @ w["w_out"]
+    return y, state

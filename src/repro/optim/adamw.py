@@ -1,0 +1,43 @@
+"""AdamW — used by the LM example drivers (the paper's CNN recipe stays on
+momentum SGD). Elementwise on storage shards, like SGD."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+
+def init_adamw(params):
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"mu": z, "nu": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, wd_mask, cfg: AdamWConfig, lr):
+    t = state["t"] + 1
+    tf = t.astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** tf
+    c2 = 1.0 - cfg.b2 ** tf
+
+    def upd(p, g, mu, nu, wd):
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        step = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        p = p - lr * (step + cfg.weight_decay * wd * p)
+        return p, mu, nu
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["mu"], state["nu"], wd_mask)
+    pick = lambda i: jax.tree_util.tree_map(
+        lambda tup: tup[i], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    return pick(0), {"mu": pick(1), "nu": pick(2), "t": t}

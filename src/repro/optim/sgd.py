@@ -1,0 +1,45 @@
+"""Momentum SGD — the paper's optimizer (§IV-B: momentum 0.9, weight decay
+5e-4, exponential LR decay). Operates directly on the flat storage shards;
+the update is elementwise so layout is irrelevant."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 1e-2
+    momentum: float = 0.9
+    weight_decay: float = 5e-4
+    # paper §IV-B: LR decays by 0.16 every `decay_every` batches
+    lr_decay_rate: float = 0.16
+    lr_decay_every: int = 0  # 0 = no decay
+
+
+def lr_at(cfg: SGDConfig, step: int) -> float:
+    if not cfg.lr_decay_every:
+        return cfg.lr
+    return cfg.lr * (cfg.lr_decay_rate ** (step // cfg.lr_decay_every))
+
+
+def init_momentum(params):
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def sgd_update(params, grads, momentum, wd_mask, cfg: SGDConfig, lr):
+    """One momentum-SGD step. ``wd_mask``: pytree of {0,1} floats selecting
+    which leaves get weight decay (matrices yes, norms/biases no)."""
+
+    def upd(p, g, m, wd):
+        g = g + cfg.weight_decay * wd * p
+        m = cfg.momentum * m + g
+        return p - lr * m, m
+
+    out = jax.tree_util.tree_map(upd, params, grads, momentum, wd_mask)
+    new_p = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, new_m

@@ -1,0 +1,191 @@
+"""Three-term roofline model from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / peak_FLOP/s            (per chip)
+  memory term     = HLO_bytes_accessed / HBM_bw        (per chip)
+  collective term = wire_bytes / link_bw               (per chip)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device after SPMD
+partitioning). Wire bytes are parsed from the compiled HLO text: every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+is charged its ring-algorithm wire traffic.
+
+Hardware constants (TPU v5e class, per chip): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link (we charge one link direction)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COLL_KINDS = (
+    "all-gather-start", "all-gather",
+    "all-reduce-start", "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute-start", "collective-permute",
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return 0
+    dtype, dims = m.groups()
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    """Participant count per replica group from HLO text."""
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9, ]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # conservative default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    wire_bytes: dict
+    total_wire_bytes: int
+
+    def to_dict(self):
+        return {
+            "counts": self.counts,
+            "wire_bytes": self.wire_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Per-device wire bytes by collective kind (ring algorithm model)."""
+    counts: dict[str, int] = {}
+    wire: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result shape = first shape token; op kind after " = <shape> "
+        m = re.match(r"%?[\w.\-]+ = ([\w\[\],{}\/ ]*?)(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start)?\(", stripped)
+        if not m:
+            continue
+        kind = m.group(2)
+        out_match = _SHAPE_RE.search(stripped)
+        out_bytes = shape_bytes(out_match.group(0)) if out_match else 0
+        # operand shapes: inside the call parens
+        paren = stripped[stripped.index("(") + 1 :]
+        operand_bytes = sum(
+            shape_bytes(sm.group(0)) for sm in _SHAPE_RE.finditer(paren)
+        )
+        n = _group_size(stripped)
+        if kind == "all-gather":
+            bytes_on_wire = out_bytes * (n - 1) // max(n, 1)
+        elif kind == "all-reduce":
+            bytes_on_wire = 2 * operand_bytes * (n - 1) // max(n, 1)
+        elif kind == "reduce-scatter":
+            bytes_on_wire = operand_bytes * (n - 1) // max(n, 1)
+        elif kind == "all-to-all":
+            bytes_on_wire = operand_bytes * (n - 1) // max(n, 1)
+        else:  # collective-permute
+            bytes_on_wire = operand_bytes
+        counts[kind] = counts.get(kind, 0) + 1
+        wire[kind] = wire.get(kind, 0) + bytes_on_wire
+    return CollectiveStats(counts, wire, sum(wire.values()))
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    useful_ratio: float
+    collectives: dict
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_from_compiled(
+    compiled, model_flops_per_device: float, act_bytes: int = 4
+) -> Roofline:
+    """While-trip-aware roofline (see repro.roofline.hlo_cost for why raw
+    cost_analysis cannot be used with scanned layer stacks).
+
+    ``act_bytes``: wire width of activation all-reduces. The CPU emulation
+    backend promotes every sub-f32 collective to f32 and cancels the
+    down-casts (excess-precision pass), so a bf16 compute dtype cannot be
+    observed in the emulated HLO; on TPU these psums run natively in the
+    compute dtype. All all-reduces in this framework's step functions are
+    activation psums (weight grads go through reduce-scatter), so they are
+    charged at ``act_bytes`` analytically when < 4."""
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    raw_flops = float(cost.get("flops", 0.0))
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    c = analyze_hlo(compiled.as_text())
+    if act_bytes < 4 and "all-reduce" in c.wire:
+        c.wire["all-reduce"] *= act_bytes / 4.0
+    flops = max(c.flops, raw_flops)
+    hbm = max(c.bytes, raw_bytes)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    coll_s = c.wire_total / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops_per_device / flops if flops else 0.0
+    return Roofline(
+        flops=flops,
+        hbm_bytes=hbm,
+        wire_bytes=float(c.wire_total),
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=coll_s,
+        dominant=dominant,
+        model_flops=model_flops_per_device,
+        useful_ratio=useful,
+        collectives={
+            "counts": c.coll_counts,
+            "wire_bytes": c.wire,
+            "raw_cost_analysis": {"flops": raw_flops, "bytes": raw_bytes},
+        },
+    )
+
+
+def model_flops_estimate(cfg, shape, chips: int) -> float:
+    """6·N_active·D per device (decode: D = new tokens = batch)."""
+    n_active = cfg.active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / chips
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / chips
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch / chips

@@ -1,0 +1,342 @@
+"""While-aware HLO-text cost analyzer.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body **once**, which
+under-counts every ``lax.scan``-over-layers model by the trip count; the
+same applies to collectives inside scanned layer bodies. This module
+re-derives the three roofline inputs by walking the post-optimization HLO:
+
+  * flops            — dot / convolution / reduce flops, × while trips
+  * traffic bytes    — per-instruction operand+output bytes (fusions are
+                       charged only their boundary, approximating fused
+                       memory traffic), × while trips
+  * collective wire  — ring-model wire bytes per collective, × while trips
+
+Parsing rules target the CPU/SPMD backend's textual HLO (resolved via a
+per-computation symbol table; computations recurse through ``calls=``,
+``body=``, ``to_apply=``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from functools import lru_cache
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_COMP_HEAD_RE = re.compile(r"^(%?[\w.\-]+) \(.*\) -> .* \{")
+_INSTR_RE = re.compile(r"^\s*(%?[\w.\-]+) = (.*)$")
+_ROOT_RE = re.compile(r"^\s*ROOT (%?[\w.\-]+) = (.*)$")
+
+
+def _shape_dims(shape_str: str):
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire: dict = dataclasses.field(default_factory=dict)
+    coll_counts: dict = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        for k, v in other.wire.items():
+            self.wire[k] = self.wire.get(k, 0) + v * times
+        for k, v in other.coll_counts.items():
+            self.coll_counts[k] = self.coll_counts.get(k, 0) + v * times
+
+    @property
+    def wire_total(self) -> float:
+        return sum(self.wire.values())
+
+
+class Instr:
+    __slots__ = ("name", "rhs", "type_str", "op", "operands")
+
+    def __init__(self, name, rhs):
+        self.name = name
+        self.rhs = rhs
+        # rhs: "TYPE op(...)" — TYPE may be a tuple "(a, b)"
+        if rhs.startswith("("):
+            depth = 0
+            for i, ch in enumerate(rhs):
+                depth += ch == "("
+                depth -= ch == ")"
+                if depth == 0:
+                    break
+            self.type_str = rhs[: i + 1]
+            rest = rhs[i + 1 :].strip()
+        else:
+            sp = rhs.index(" ")
+            self.type_str = rhs[:sp]
+            rest = rhs[sp + 1 :]
+        m = re.match(r"([\w\-]+)\(", rest)
+        self.op = m.group(1) if m else rest.split("(")[0].strip()
+        # operand names: only inside the call's balanced paren group (attrs
+        # like to_apply=%region / condition=%cond come after and are NOT
+        # operands — resolved separately via _attr)
+        if "(" in rest:
+            pstart = rest.index("(")
+            depth = 0
+            pend = len(rest)
+            for i in range(pstart, len(rest)):
+                depth += rest[i] == "("
+                depth -= rest[i] == ")"
+                if depth == 0:
+                    pend = i
+                    break
+            args = rest[pstart + 1 : pend]
+        else:
+            args = ""
+        self.operands = re.findall(r"%[\w.\-]+", args)
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[Instr]] = {}
+        self.entry: str | None = None
+        cur = None
+        for line in text.splitlines():
+            h = _COMP_HEAD_RE.match(line.strip()) if "{" in line else None
+            if line.startswith("ENTRY"):
+                m = re.match(r"ENTRY (%?[\w.\-]+)", line)
+                cur = m.group(1)
+                self.computations[cur] = []
+                self.entry = cur
+                continue
+            if h and not line.startswith(" "):
+                cur = h.group(1)
+                self.computations[cur] = []
+                continue
+            if cur is None:
+                continue
+            s = line.strip()
+            if s == "}":
+                cur = None
+                continue
+            m = _ROOT_RE.match(line) or _INSTR_RE.match(line)
+            if m and " = " in s:
+                name, rhs = m.group(1), m.group(2)
+                if name.startswith("ROOT"):
+                    continue
+                try:
+                    self.computations[cur].append(Instr(name, rhs))
+                except Exception:
+                    pass
+        # symbol tables
+        self.types: dict[str, dict[str, str]] = {
+            c: {i.name.lstrip("%"): i.type_str for i in instrs}
+            for c, instrs in self.computations.items()
+        }
+
+    # ------------------------------------------------------------------
+    def _attr(self, rhs: str, key: str):
+        m = re.search(key + r"=(%?[\w.\-]+)", rhs)
+        return m.group(1) if m else None
+
+    def _group_size(self, rhs: str) -> int:
+        m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=", rhs)
+        if m:
+            return int(m.group(2))
+        m = re.search(r"replica_groups=\{\{([0-9,]+)\}", rhs)
+        if m:
+            return len(m.group(1).split(","))
+        return 2
+
+    def _trip_count(self, cond_comp: str) -> int:
+        """Largest integer constant in the while condition computation."""
+        best = 1
+        for i in self.computations.get(cond_comp, []):
+            m = re.search(r"constant\((\d+)\)", i.rhs)
+            if m:
+                best = max(best, int(m.group(1)))
+        return best
+
+    def _operand_type(self, comp: str, ref: str) -> str | None:
+        return self.types.get(comp, {}).get(ref.lstrip("%"))
+
+    def _dot_flops(self, comp: str, instr: Instr) -> float:
+        _, out_dims = _shape_dims(instr.type_str)
+        out_elems = math.prod(out_dims) if out_dims else 0
+        lhs_t = self._operand_type(comp, instr.operands[0]) if instr.operands else None
+        k = 1
+        if lhs_t:
+            _, lhs_dims = _shape_dims(lhs_t)
+            m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rhs)
+            if m and lhs_dims:
+                for d in m.group(1).split(","):
+                    if d:
+                        k *= lhs_dims[int(d)]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, comp: str, instr: Instr) -> float:
+        _, out_dims = _shape_dims(instr.type_str)
+        out_elems = math.prod(out_dims) if out_dims else 0
+        rhs_t = (
+            self._operand_type(comp, instr.operands[1])
+            if len(instr.operands) > 1
+            else None
+        )
+        if not rhs_t:
+            return 0.0
+        _, rdims = _shape_dims(rhs_t)
+        m = re.search(r"dim_labels=\w+_(\w+)->", instr.rhs)
+        kernel = math.prod(rdims) if rdims else 0
+        if m and rdims:
+            labels = m.group(1)
+            if "o" in labels:
+                kernel //= max(rdims[labels.index("o")], 1)
+        return 2.0 * out_elems * kernel
+
+    # ------------------------------------------------------------------
+    def comp_cost(self, comp: str, _memo=None) -> Cost:
+        if _memo is None:
+            _memo = {}
+        if comp in _memo:
+            return _memo[comp]
+        total = Cost()
+        _memo[comp] = total  # guards (benign) cycles
+        for instr in self.computations.get(comp, []):
+            op = instr.op
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "after-all", "partition-id", "replica-id"):
+                continue
+            out_b = _type_bytes(instr.type_str)
+            in_b = sum(
+                _type_bytes(self._operand_type(comp, o) or "")
+                for o in instr.operands
+            )
+            if op == "while":
+                body = self._attr(instr.rhs, "body")
+                cond = self._attr(instr.rhs, "condition")
+                trips = self._trip_count(cond) if cond else 1
+                if body:
+                    total.add(self.comp_cost(body, _memo), trips)
+                continue
+            if op in ("fusion", "call", "map", "custom-call"):
+                total.bytes += out_b + in_b
+                callee = self._attr(instr.rhs, "calls") or self._attr(
+                    instr.rhs, "to_apply"
+                )
+                if callee:
+                    inner = self.comp_cost(callee, _memo)
+                    # fusion internals contribute flops + collectives but
+                    # their memory traffic stays in registers/cache
+                    total.flops += inner.flops
+                    for k, v in inner.wire.items():
+                        total.wire[k] = total.wire.get(k, 0) + v
+                    for k, v in inner.coll_counts.items():
+                        total.coll_counts[k] = total.coll_counts.get(k, 0) + v
+                continue
+            if op == "conditional":
+                # charge the max branch
+                branches = re.findall(r"%[\w.\-]+_computation[\w.\-]*", instr.rhs)
+                costs = [self.comp_cost(b, _memo) for b in branches]
+                if costs:
+                    total.add(max(costs, key=lambda c: c.flops))
+                total.bytes += out_b + in_b
+                continue
+            total.bytes += out_b + in_b
+            if op == "dot":
+                total.flops += self._dot_flops(comp, instr)
+            elif op == "convolution":
+                total.flops += self._conv_flops(comp, instr)
+            elif op in ("reduce", "reduce-window"):
+                total.flops += in_b / 4.0  # ~1 flop per input element
+            elif op.startswith(("all-gather", "all-reduce", "reduce-scatter",
+                                "all-to-all", "collective-permute")):
+                kind = op.replace("-start", "")
+                n = self._group_size(instr.rhs)
+                # The CPU backend promotes narrow-dtype collectives to f32
+                # via wrapped-convert fusions; TPU runs them natively. Wire
+                # bytes are charged at the pre-convert width.
+                in_eff = self._deconverted_bytes(comp, instr, in_b)
+                ratio = in_eff / in_b if in_b else 1.0
+                out_eff = out_b * ratio
+                if kind == "all-gather":
+                    w = out_eff * (n - 1) / n
+                elif kind == "all-reduce":
+                    w = 2 * in_eff * (n - 1) / n
+                elif kind == "reduce-scatter":
+                    w = in_eff * (n - 1) / n
+                elif kind == "all-to-all":
+                    w = out_eff * (n - 1) / n
+                else:
+                    w = in_eff
+                total.wire[kind] = total.wire.get(kind, 0) + w
+                total.coll_counts[kind] = total.coll_counts.get(kind, 0) + 1
+        return total
+
+    def _deconverted_bytes(self, comp: str, instr: Instr, in_b: int) -> int:
+        """If every operand of a collective is a (fusion-wrapped) dtype
+        convert, charge the pre-convert width (CPU-backend promotion)."""
+        eff = 0
+        found = False
+        instr_by_name = getattr(self, "_instr_idx", None)
+        if instr_by_name is None:
+            instr_by_name = {
+                c: {i.name.lstrip("%"): i for i in instrs}
+                for c, instrs in self.computations.items()
+            }
+            self._instr_idx = instr_by_name
+        table = instr_by_name.get(comp, {})
+        for ref in instr.operands:
+            src = table.get(ref.lstrip("%"))
+            if src is None:
+                return in_b
+            is_conv = (
+                src.op == "convert"
+                or "convert" in src.name
+                or (src.op == "fusion" and "convert" in src.rhs)
+            )
+            if not is_conv or not src.operands:
+                return in_b
+            src_t = self._operand_type(comp, src.operands[0])
+            if src_t is None:
+                return in_b
+            b = _type_bytes(src_t)
+            out_t = _type_bytes(src.type_str)
+            if b >= out_t:
+                return in_b
+            eff += b
+            found = True
+        return eff if found else in_b
+
+    def entry_cost(self) -> Cost:
+        assert self.entry is not None
+        # memo shared so fusion computations are cached, but note: while
+        # bodies reached from different whiles are distinct computations in
+        # HLO, so memoization over names is safe.
+        return self.comp_cost(self.entry, {})
+
+
+def analyze_hlo(text: str) -> Cost:
+    return HloModule(text).entry_cost()

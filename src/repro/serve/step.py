@@ -1,0 +1,263 @@
+"""Distributed serving steps: prefill (build caches) and one-token decode.
+
+Weights flow through the same ADT-compressed gathers as training — serving
+models the paper's "send weights to accelerators" motion at inference
+load time / per step, and decode roofline shows where int8 KV (beyond-
+paper) pays off.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.shard import shard_map
+from repro.dist.spec import (
+    LeafSpec,
+    MeshCfg,
+    placed_leaf,
+    placed_leaf_pspec,
+    tree_partition_specs,
+)
+from repro.models import model as M
+from repro.train.step import batch_pspecs, make_env, make_mat_fns
+
+
+def cache_pspecs(cfg: ModelConfig, mesh_cfg: MeshCfg, shard_batch: bool,
+                 int8_kv: bool = False):
+    """PartitionSpec tree matching model.init_caches structure."""
+    if mesh_cfg.tp == 1 and mesh_cfg.dshards == 1:
+        none = lambda *a: P()
+        dp = mo = None
+    else:
+        dp = (
+            mesh_cfg.fsdp_axes
+            if len(mesh_cfg.fsdp_axes) > 1
+            else mesh_cfg.fsdp_axes[0]
+        ) if (mesh_cfg.dshards > 1 and shard_batch) else None
+        mo = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
+    pat = cfg.pattern
+    groups = []
+    for g in range(cfg.num_groups):
+        entry = {}
+        for pi, kind in enumerate(pat):
+            if kind in ("attn", "local", "cross"):
+                # KVCache(k, v, pos): (R,B,C,Kv_l,hd) — kv heads are rank-local
+                kv = P(None, dp, None, mo, None)
+                if int8_kv and kind != "cross":
+                    sc = P(None, dp, None, mo)
+                    entry[f"p{pi}"] = M.QuantKVCache(kv, kv, sc, sc, P(None))
+                else:
+                    entry[f"p{pi}"] = M.KVCache(kv, kv, P(None))
+            elif kind == "mlstm":
+                entry[f"p{pi}"] = jax.tree_util.tree_unflatten(
+                    jax.tree_util.tree_structure(
+                        M.ssm.MLSTMState(0, 0, 0)
+                    ),
+                    [P(None, dp, None, None, mo), P(None, dp, None, None), P(None, dp, None)],
+                )
+            elif kind == "slstm":
+                entry[f"p{pi}"] = jax.tree_util.tree_unflatten(
+                    jax.tree_util.tree_structure(
+                        M.ssm.SLSTMState(0, 0, 0, 0)
+                    ),
+                    [P(None, dp, None)] * 4,
+                )
+            elif kind == "rglru":
+                entry[f"p{pi}"] = (P(None, dp, mo), P(None, dp, None, mo))
+            else:
+                raise ValueError(kind)
+        groups.append(entry)
+    return groups
+
+
+def global_cache_shapes(
+    cfg: ModelConfig,
+    mesh_cfg: MeshCfg,
+    batch: int,
+    capacity: int,
+    dtype=jnp.float32,
+    *,
+    shard_batch: bool = True,
+):
+    """Global ShapeDtypeStruct tree for decode-step cache inputs (zero alloc).
+
+    Local cache shapes come from ``model.init_caches`` under eval_shape; any
+    dim mapped to the model axis in ``cache_pspecs`` is scaled by tp to get
+    the global (pre-shard_map) shape."""
+    from repro.models.env import Env
+
+    env = Env(tp=mesh_cfg.tp, int8_kv=(dtype == jnp.int8))
+    local = jax.eval_shape(
+        lambda: M.init_caches(cfg, env, batch, capacity, dtype)
+    )
+    cspecs = cache_pspecs(cfg, mesh_cfg, shard_batch, int8_kv=(dtype == jnp.int8))
+
+    def fix(sds, spec):
+        shape = list(sds.shape)
+        for i, ax in enumerate(tuple(spec)):
+            if ax == mesh_cfg.model_axis:
+                shape[i] *= mesh_cfg.tp
+        return jax.ShapeDtypeStruct(tuple(shape), sds.dtype)
+
+    return jax.tree_util.tree_map(
+        fix, local, cspecs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def _logits_dp(mesh_cfg: MeshCfg, shard_batch: bool):
+    if mesh_cfg.dshards <= 1 or not shard_batch:
+        return None
+    return (
+        mesh_cfg.fsdp_axes
+        if len(mesh_cfg.fsdp_axes) > 1
+        else mesh_cfg.fsdp_axes[0]
+    )
+
+
+def make_prefill_step(
+    cfg: ModelConfig,
+    mesh_cfg: MeshCfg,
+    mesh,
+    spec_tree,
+    round_tos,
+    batch_shapes: dict,
+    *,
+    cache_capacity: int,
+    shard_batch: bool = True,
+    dtype=jnp.float32,
+    env_kw: dict | None = None,
+):
+    env = make_env(cfg, mesh_cfg, dtype, **(env_kw or {}))
+    mat_group, mat_top_factory = make_mat_fns(spec_tree, mesh_cfg, round_tos, dtype)
+
+    def step(storage, batch):
+        return M.forward_prefill(
+            storage, batch, cfg, env,
+            mat_group=mat_group, mat_top=mat_top_factory(storage),
+            cache_capacity=cache_capacity,
+        )
+
+    if mesh is None:
+        return jax.jit(step)
+
+    pspecs = tree_partition_specs(spec_tree, mesh_cfg)
+    bspecs = batch_pspecs(batch_shapes, mesh_cfg, shard_batch)
+    cspecs = cache_pspecs(
+        cfg, mesh_cfg, shard_batch, int8_kv=bool((env_kw or {}).get("int8_kv"))
+    )
+    mo = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
+    dp = _logits_dp(mesh_cfg, shard_batch)
+    logits_spec = P(dp, None, mo)  # (B, 1, V_local): batch+vocab sharded
+    sharded = shard_map(
+        step, mesh=mesh, in_specs=(pspecs, bspecs),
+        out_specs=(logits_spec, cspecs),
+    )
+    return jax.jit(sharded)
+
+
+def make_place_step(
+    cfg: ModelConfig,
+    mesh_cfg: MeshCfg,
+    mesh,
+    spec_tree,
+    round_tos,
+    *,
+    dtype=jnp.float32,
+    resident_dtype=None,
+):
+    """Weight-stationary serving (§Perf): run every ADT-compressed gather
+    ONCE, emitting per-TP-rank resident weights. Decode steps built with
+    ``weight_stationary=True`` then contain no weight collectives at all.
+
+    Returns (place_fn, placed_pspecs): ``placed = place_fn(storage)``."""
+
+    def _walk(storage_sub, spec_sub, g):
+        rt = round_tos[g]
+        return jax.tree_util.tree_map(
+            lambda x, s: placed_leaf(x, s, mesh_cfg, rt, resident_dtype),
+            storage_sub, spec_sub,
+            is_leaf=lambda x: isinstance(x, LeafSpec),
+        )
+
+    def place(storage):
+        groups = [
+            _walk(gp, gs, g)
+            for g, (gp, gs) in enumerate(
+                zip(storage["groups"], spec_tree["groups"])
+            )
+        ]
+        top = {
+            k: placed_leaf(storage[k], spec_tree[k], mesh_cfg, round_tos[-1],
+                           resident_dtype)
+            for k in storage
+            if k != "groups"
+        }
+        return {"groups": groups, **top}
+
+    if mesh is None:
+        return jax.jit(place), None
+
+    pspecs = tree_partition_specs(spec_tree, mesh_cfg)
+    placed_specs = jax.tree_util.tree_map(
+        lambda s: placed_leaf_pspec(s, mesh_cfg),
+        spec_tree, is_leaf=lambda x: isinstance(x, LeafSpec),
+    )
+    sharded = shard_map(
+        place, mesh=mesh, in_specs=(pspecs,), out_specs=placed_specs
+    )
+    return jax.jit(sharded), placed_specs
+
+
+def make_decode_step(
+    cfg: ModelConfig,
+    mesh_cfg: MeshCfg,
+    mesh,
+    spec_tree,
+    round_tos,
+    batch_shapes: dict,
+    *,
+    shard_batch: bool = True,
+    window_override=None,
+    dtype=jnp.float32,
+    env_kw: dict | None = None,
+    weight_stationary: bool = False,
+):
+    env = make_env(cfg, mesh_cfg, dtype, **(env_kw or {}))
+    mat_group, mat_top_factory = make_mat_fns(
+        spec_tree, mesh_cfg, round_tos, dtype, placed=weight_stationary
+    )
+
+    def step(storage, caches, batch):
+        return M.forward_decode(
+            storage, batch, caches, cfg, env,
+            mat_group=mat_group, mat_top=mat_top_factory(storage),
+            window_override=window_override,
+        )
+
+    if mesh is None:
+        return jax.jit(step)
+
+    if weight_stationary:
+        pspecs = jax.tree_util.tree_map(
+            lambda s: placed_leaf_pspec(s, mesh_cfg),
+            spec_tree, is_leaf=lambda x: isinstance(x, LeafSpec),
+        )
+    else:
+        pspecs = tree_partition_specs(spec_tree, mesh_cfg)
+    bspecs = batch_pspecs(batch_shapes, mesh_cfg, shard_batch)
+    cspecs = cache_pspecs(
+        cfg, mesh_cfg, shard_batch, int8_kv=bool((env_kw or {}).get("int8_kv"))
+    )
+    mo = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
+    dp = _logits_dp(mesh_cfg, shard_batch)
+    logits_spec = P(dp, None, mo)
+    sharded = shard_map(
+        step, mesh=mesh, in_specs=(pspecs, cspecs, bspecs),
+        out_specs=(logits_spec, cspecs),
+    )
+    return jax.jit(sharded, donate_argnums=(1,))

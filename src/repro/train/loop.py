@@ -1,0 +1,124 @@
+"""The A²DTWP training loop: jitted steps per wire-format + host-side AWP.
+
+``Trainer`` owns the compiled-step cache: AWP only ever widens formats
+(8→16→24→32 bits), so at most ``3 × num_groups`` recompiles happen over a
+whole run — each logged, amortized to ~0 exactly as in the paper where
+AWP's reconfiguration also happens outside the accelerator graph.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.awp import AWPConfig, AWPController
+from repro.core.compressed import all_gather_wire_bytes
+
+
+@dataclasses.dataclass
+class StepRecord:
+    step: int
+    loss: float
+    round_tos: tuple[int, ...]
+    wire_bytes: int
+    recompiled: bool
+    wall_s: float
+
+
+class Trainer:
+    """Generic A²DTWP loop.
+
+    step_builder(round_tos) -> step_fn(storage, opt, batch, lr, *extra)
+        returning (storage, opt, metrics with 'loss' and 'group_norms_sq').
+    policy: "awp" (Algorithm 1), "oracle:<rt>" (fixed format), "baseline"
+        (fp32 — the paper's 32-bit FP baseline).
+    """
+
+    def __init__(
+        self,
+        step_builder: Callable,
+        num_groups: int,
+        *,
+        policy: str = "awp",
+        awp_config: AWPConfig | None = None,
+        dist_elems_per_group: list[int] | None = None,
+        gather_axis_size: int = 1,
+    ):
+        self.step_builder = step_builder
+        self.num_groups = num_groups
+        self.policy = policy
+        self.controller = AWPController(num_groups, awp_config)
+        self._cache: dict[tuple[int, ...], Callable] = {}
+        self.records: list[StepRecord] = []
+        self.dist_elems = dist_elems_per_group or [0] * num_groups
+        self.gather_n = gather_axis_size
+
+    # ------------------------------------------------------------------
+    def current_round_tos(self) -> tuple[int, ...]:
+        if self.policy == "baseline":
+            return (4,) * self.num_groups
+        if self.policy.startswith("oracle:"):
+            return (int(self.policy.split(":")[1]),) * self.num_groups
+        return self.controller.round_to
+
+    def _step_fn(self, round_tos):
+        if round_tos not in self._cache:
+            self._cache[round_tos] = self.step_builder(round_tos)
+        return self._cache[round_tos]
+
+    def wire_bytes(self, round_tos) -> int:
+        total = 0
+        for g, rt in enumerate(round_tos):
+            n = self.gather_n
+            if n <= 1:
+                # paper's host→device model: every weight moves once/batch
+                total += self.dist_elems[g] * rt
+            else:
+                s_loc = self.dist_elems[g] // n
+                total += all_gather_wire_bytes(s_loc, n, rt)
+        return total
+
+    # ------------------------------------------------------------------
+    def run_step(self, storage, opt_state, batch, lr, *extra):
+        rts = self.current_round_tos()
+        recompiled = rts not in self._cache
+        fn = self._step_fn(rts)
+        t0 = time.time()
+        storage, opt_state, metrics = fn(storage, opt_state, batch, lr, *extra)
+        loss = float(metrics["loss"])
+        if self.policy == "awp":
+            norms = np.asarray(metrics["group_norms_sq"])
+            self.controller.update(norms)
+        self.records.append(
+            StepRecord(
+                step=len(self.records),
+                loss=loss,
+                round_tos=rts,
+                wire_bytes=self.wire_bytes(rts),
+                recompiled=recompiled,
+                wall_s=time.time() - t0,
+            )
+        )
+        return storage, opt_state, metrics
+
+    # ------------------------------------------------------------------
+    @property
+    def bits_history(self):
+        return self.controller.history
+
+    def summary(self) -> dict:
+        total_wire = sum(r.wire_bytes for r in self.records)
+        base_wire = sum(
+            self.wire_bytes((4,) * self.num_groups) for _ in self.records
+        )
+        return {
+            "steps": len(self.records),
+            "final_loss": self.records[-1].loss if self.records else None,
+            "recompiles": sum(r.recompiled for r in self.records),
+            "wire_bytes": total_wire,
+            "wire_bytes_fp32": base_wire,
+            "wire_reduction": 1 - total_wire / base_wire if base_wire else 0.0,
+            "bits_history": self.bits_history,
+        }

@@ -1,0 +1,283 @@
+"""Distributed train step: shard_map(grad(forward)) with ADT weight gathers.
+
+The step is built *per precision configuration* (`round_tos`): the wire
+format of every weight gather is static inside the compiled program, and
+the AWP controller swaps compiled steps when formats change (DESIGN.md §2).
+
+round_tos has cfg.num_groups + 1 entries; the last entry covers the
+top-level weights (embedding / head / projectors).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.shard import shard_map
+from repro.dist.spec import (
+    DIST,
+    LeafSpec,
+    MeshCfg,
+    materialize_leaf,
+    materialize_placed_leaf,
+    tree_partition_specs,
+)
+from repro.models.env import Env
+from repro.models import model as M
+from repro.optim.sgd import SGDConfig, sgd_update
+
+
+def make_env(cfg: ModelConfig, mesh_cfg: MeshCfg, dtype=jnp.float32, **kw) -> Env:
+    return Env(
+        model_axis=mesh_cfg.model_axis if mesh_cfg.tp > 1 else None,
+        fsdp_axes=mesh_cfg.fsdp_axes if mesh_cfg.dshards > 1 else None,
+        tp=mesh_cfg.tp,
+        dtype=dtype,
+        **kw,
+    )
+
+
+def _dp_axes(mesh_cfg: MeshCfg):
+    return (
+        mesh_cfg.fsdp_axes
+        if len(mesh_cfg.fsdp_axes) > 1
+        else mesh_cfg.fsdp_axes[0]
+    )
+
+
+def make_mat_fns(
+    spec_tree, mesh_cfg: MeshCfg, round_tos, dtype=jnp.float32,
+    grad_round_to: int = 4, placed: bool = False,
+):
+    """(mat_group, mat_top_factory) shared by train and serve steps.
+
+    Materialized weights are cast to the compute dtype (fp32 faithful /
+    bf16 beyond-paper+serving); the fp32 master stays in storage.
+    ``grad_round_to < 4`` compresses the backward reduce-scatter too
+    (beyond-paper). ``placed=True`` consumes pre-gathered weights (see
+    serve.place: weight-stationary decode)."""
+
+    def _cast(x):
+        return x.astype(dtype) if x.dtype == jnp.float32 else x
+
+    def _mat(x, s, rt):
+        if placed:
+            return _cast(materialize_placed_leaf(x, s, mesh_cfg))
+        return _cast(
+            materialize_leaf(x, s, mesh_cfg, rt, grad_round_to=grad_round_to)
+        )
+
+    def mat_group(g, key, storage):
+        specs = spec_tree["groups"][g][key]
+        rt = round_tos[g]
+        return jax.tree_util.tree_map(
+            lambda x, s: _mat(x, s, rt),
+            storage,
+            specs,
+            is_leaf=lambda x: isinstance(x, LeafSpec),
+        )
+
+    def mat_top_factory(storage):
+        rt = round_tos[-1]
+
+        def mat_top(name):
+            return _mat(storage[name], spec_tree[name], rt)
+
+        return mat_top
+
+    return mat_group, mat_top_factory
+
+
+def _sync_grads(grads, spec_tree, mesh_cfg: MeshCfg):
+    """Explicit cross-shard grad reductions not already handled by the
+    compressed-gather VJP (DESIGN.md §3 / ParamMeta.grad_sync_model)."""
+    dp = _dp_axes(mesh_cfg) if mesh_cfg.dshards > 1 else None
+    tp = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
+
+    def fix(g, s: LeafSpec):
+        if s.kind != DIST and dp is not None:
+            g = lax.psum(g, dp)
+        if s.meta.grad_sync_model and tp is not None:
+            g = lax.psum(g, tp)
+        return g
+
+    def walk(gt, st):
+        return jax.tree_util.tree_map(
+            fix, gt, st, is_leaf=lambda x: isinstance(x, LeafSpec)
+        )
+
+    groups = [walk(g, s) for g, s in zip(grads["groups"], spec_tree["groups"])]
+    top = {k: fix(grads[k], spec_tree[k]) for k in grads if k != "groups"}
+    return {"groups": groups, **top}
+
+
+def awp_group_norms(storage, spec_tree, mesh_cfg: MeshCfg):
+    """Per-precision-group Σw² of the compressed (DIST) weights, exact up to
+    fp accumulation: replication factors divided out (DESIGN.md §3)."""
+    dp = _dp_axes(mesh_cfg) if mesh_cfg.dshards > 1 else None
+    tp = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
+
+    def leaf_sum(x, s: LeafSpec):
+        if s.kind != DIST:
+            return 0.0
+        xf = x.astype(jnp.float32)
+        return jnp.sum(xf * xf) / s.repl_factor
+
+    def subtree_sum(pt, st):
+        sums = jax.tree_util.tree_map(
+            leaf_sum, pt, st, is_leaf=lambda x: isinstance(x, LeafSpec)
+        )
+        return sum(jax.tree_util.tree_leaves(sums))
+
+    norms = [
+        subtree_sum(gp, gs)
+        for gp, gs in zip(storage["groups"], spec_tree["groups"])
+    ]
+    norms.append(
+        sum(
+            subtree_sum(storage[k], spec_tree[k])
+            for k in storage
+            if k != "groups"
+        )
+    )
+    out = jnp.stack([jnp.asarray(n, jnp.float32) for n in norms])
+    if dp is not None:
+        out = lax.psum(out, dp)
+    if tp is not None:
+        out = lax.psum(out, tp)
+    return out  # (num_groups + 1,)
+
+
+def build_wd_mask(spec_tree):
+    """1.0 for matrices (compressible), 0.0 for norms/biases/gates."""
+    return jax.tree_util.tree_map(
+        lambda s: 1.0 if s.meta.compress else 0.0,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, LeafSpec),
+    )
+
+
+def batch_pspecs(batch_shapes: dict, mesh_cfg: MeshCfg, shard_batch: bool):
+    dp = _dp_axes(mesh_cfg) if (mesh_cfg.dshards > 1 and shard_batch) else None
+    out = {}
+    for k, v in batch_shapes.items():
+        if v.ndim == 0:
+            out[k] = P()
+        else:
+            out[k] = P(dp, *([None] * (v.ndim - 1)))
+    return out
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    mesh_cfg: MeshCfg,
+    mesh,
+    spec_tree,
+    round_tos: tuple[int, ...],
+    opt_cfg: SGDConfig,
+    batch_shapes: dict,
+    *,
+    dtype=jnp.float32,
+    aux_coef: float = 1e-2,
+    env_kw: dict | None = None,
+    grad_round_to: int = 4,
+    accum_steps: int = 1,
+):
+    """Returns jit-able ``step(storage, momentum, batch, lr) -> (storage',
+    momentum', metrics)``. metrics: loss, token_count, group norms (for AWP).
+
+    §Perf levers: ``dtype=bf16`` (compute/activations), ``grad_round_to<4``
+    (compressed gradient reduce-scatter), ``accum_steps>1`` (gradient
+    accumulation over batch-dim microbatches — divides activation memory).
+    """
+    assert len(round_tos) == cfg.num_groups + 1
+    env = make_env(cfg, mesh_cfg, dtype, **(env_kw or {}))
+    dp = _dp_axes(mesh_cfg) if mesh_cfg.dshards > 1 else None
+    mat_group, mat_top_factory = make_mat_fns(
+        spec_tree, mesh_cfg, round_tos, dtype, grad_round_to=grad_round_to
+    )
+    wd_mask = build_wd_mask(spec_tree)
+
+    def grad_one(storage, batch, total):
+        def loss_fn(st):
+            loss_sum, metrics = M.forward_loss(
+                st, batch, cfg, env,
+                mat_group=mat_group, mat_top=mat_top_factory(st),
+            )
+            n_shards = mesh_cfg.dshards
+            loss = loss_sum / total + aux_coef * metrics["aux"] / (
+                cfg.num_layers * n_shards * accum_steps
+            )
+            return loss, metrics
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(storage)
+
+    def step(storage, momentum, batch, lr):
+        # one count pass is avoided by normalising with the static token
+        # count (all labels valid in our pipelines); per-microbatch valid
+        # counts still feed the reported loss.
+        b_any = next(iter(batch.values()))
+        local_tokens = b_any.shape[0] * (
+            batch["labels"].shape[1] if "labels" in batch else 1
+        )
+        total = jnp.asarray(local_tokens * max(mesh_cfg.dshards, 1), jnp.float32)
+
+        if accum_steps == 1:
+            (loss, metrics), grads = grad_one(storage, batch, total)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
+                                    + x.shape[1:]),
+                batch,
+            )
+
+            def body(carry, mb):
+                acc, loss_acc, cnt_acc = carry
+                (l, m), g = grad_one(storage, mb, total)
+                acc = jax.tree_util.tree_map(jnp.add, acc, g)
+                return (acc, loss_acc + l, cnt_acc + m["token_count"]), None
+
+            zeros = jax.tree_util.tree_map(jnp.zeros_like, storage)
+            (grads, loss, count), _ = lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32),
+                       jnp.zeros((), jnp.float32)), micro
+            )
+            metrics = {"token_count": count, "aux": 0.0}
+        grads = _sync_grads(grads, spec_tree, mesh_cfg)
+
+        new_storage, new_momentum = sgd_update(
+            storage, grads, momentum, wd_mask, opt_cfg, lr
+        )
+        norms = awp_group_norms(new_storage, spec_tree, mesh_cfg)
+
+        loss_global = lax.psum(loss, dp) if dp is not None else loss
+        count_global = (
+            lax.psum(metrics["token_count"], dp)
+            if dp is not None
+            else metrics["token_count"]
+        )
+        out_metrics = {
+            "loss": loss_global,
+            "token_count": count_global,
+            "group_norms_sq": norms,
+        }
+        return new_storage, new_momentum, out_metrics
+
+    if mesh is None:  # single-device path (tests, CNN repro)
+        return jax.jit(step, donate_argnums=(0, 1))
+
+    pspecs = tree_partition_specs(spec_tree, mesh_cfg)
+    bspecs = batch_pspecs(batch_shapes, mesh_cfg, shard_batch=True)
+    metrics_specs = {"loss": P(), "token_count": P(), "group_norms_sq": P(None)}
+    sharded = shard_map(
+        step,
+        mesh=mesh,
+        in_specs=(pspecs, pspecs, bspecs, P()),
+        out_specs=(pspecs, pspecs, metrics_specs),
+    )
+    return jax.jit(sharded, donate_argnums=(0, 1))

@@ -1,0 +1,61 @@
+"""Small pytree / padding helpers used across the framework."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size_bytes(tree: Any) -> int:
+    """Total byte size of all array leaves (works on ShapeDtypeStruct too)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    total = 0
+    for leaf in leaves:
+        total += math.prod(leaf.shape) * np.dtype(leaf.dtype).itemsize
+    return total
+
+
+def tree_count_params(tree: Any) -> int:
+    return sum(math.prod(l.shape) for l in jax.tree_util.tree_leaves(tree))
+
+
+def round_up(x: int, multiple: int) -> int:
+    return ((x + multiple - 1) // multiple) * multiple
+
+
+def pad_to(x: jnp.ndarray, size: int, axis: int = 0) -> jnp.ndarray:
+    """Zero-pad ``x`` along ``axis`` up to ``size``."""
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    if cur > size:
+        raise ValueError(f"cannot pad axis {axis} from {cur} down to {size}")
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, size - cur)
+    return jnp.pad(x, pads)
+
+
+def flatten_dict(d: dict, prefix: str = "") -> dict:
+    """{'a': {'b': x}} -> {'a/b': x}."""
+    out = {}
+    for k, v in d.items():
+        key = f"{prefix}/{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten_dict(v, key))
+        else:
+            out[key] = v
+    return out
+
+
+def unflatten_dict(d: dict) -> dict:
+    out: dict = {}
+    for k, v in d.items():
+        parts = k.split("/")
+        cur = out
+        for p in parts[:-1]:
+            cur = cur.setdefault(p, {})
+        cur[parts[-1]] = v
+    return out

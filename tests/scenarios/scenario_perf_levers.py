@@ -1,0 +1,149 @@
+"""Subprocess scenario: §Perf levers preserve correctness on an 8-dev mesh.
+
+  * accum_steps=2 matches accum_steps=1 gradients/updates (fp tolerance),
+  * grad_round_to=2 (compressed gradient reduce-scatter) still descends,
+  * weight-stationary decode == per-step-gather decode logits (rt=4 exact),
+  * int8 KV decode ≈ fp decode logits.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, reduced
+from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
+from repro.launch.mesh import make_mesh_from_cfg
+from repro.models.init import init_params
+from repro.optim.sgd import SGDConfig, init_momentum
+from repro.serve.step import (
+    make_decode_step, make_place_step, make_prefill_step,
+)
+from repro.train.step import make_train_step
+
+
+def main():
+    mesh_cfg = MeshCfg(tp=2, dp=4)
+    mesh = make_mesh_from_cfg(mesh_cfg)
+    cfg = reduced(get_config("qwen3-1.7b"))
+    B, S = 8, 32
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    bshapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+    nrt = cfg.num_groups + 1
+    opt = SGDConfig(lr=0.05, momentum=0.9, weight_decay=0.0)
+
+    with mesh:
+        params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=2)
+        spec = build_spec_tree(params, metas, mesh_cfg)
+
+        # ---- accumulation equivalence --------------------------------
+        losses = {}
+        for accum in (1, 2):
+            st = tree_to_storage(
+                init_params(cfg, jax.random.PRNGKey(0), tp=2)[0], spec, mesh_cfg
+            )
+            step = make_train_step(
+                cfg, mesh_cfg, mesh, spec, (4,) * nrt, opt, bshapes,
+                accum_steps=accum,
+            )
+            st, mom, m = step(st, init_momentum(st), batch, 0.05)
+            _, _, m2 = step(st, mom, batch, 0.05)
+            losses[accum] = (float(m["loss"]), float(m2["loss"]))
+        assert abs(losses[1][0] - losses[2][0]) < 2e-4, losses
+        assert abs(losses[1][1] - losses[2][1]) < 2e-3, losses
+        print(f"  accum equivalence: {losses[1]} vs {losses[2]} OK")
+
+        # ---- compressed gradients still train -------------------------
+        st = tree_to_storage(
+            init_params(cfg, jax.random.PRNGKey(0), tp=2)[0], spec, mesh_cfg
+        )
+        step_cg = make_train_step(
+            cfg, mesh_cfg, mesh, spec, (2,) * nrt, opt, bshapes,
+            grad_round_to=2,
+        )
+        mom = init_momentum(st)
+        ls = []
+        for i in range(4):
+            st, mom, m = step_cg(st, mom, batch, 0.05)
+            ls.append(float(m["loss"]))
+        assert ls[-1] < ls[0], ls
+        assert all(np.isfinite(ls)), ls
+        print(f"  compressed-grad training descends: {ls} OK")
+
+        # ---- weight-stationary + int8-kv decode ----------------------
+        params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=2)
+        st = tree_to_storage(params, spec, mesh_cfg)
+        pre = make_prefill_step(
+            cfg, mesh_cfg, mesh, spec, (4,) * nrt,
+            {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)},
+            cache_capacity=S + 2,
+        )
+        logits0, caches = pre(st, {"tokens": batch["tokens"]})
+        dshapes = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        tok = {"tokens": jnp.ones((B, 1), jnp.int32),
+               "pos": jnp.asarray(S, jnp.int32)}
+
+        dstep = make_decode_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, dshapes)
+        want, _ = dstep(st, caches, tok)
+
+        place, _ = make_place_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt)
+        placed = place(st)
+        dstep_ws = make_decode_step(
+            cfg, mesh_cfg, mesh, spec, (4,) * nrt, dshapes,
+            weight_stationary=True,
+        )
+        logits0b, caches_b = pre(st, {"tokens": batch["tokens"]})
+        got, _ = dstep_ws(placed, caches_b, tok)
+        np.testing.assert_allclose(
+            np.asarray(want[..., : cfg.vocab_size]),
+            np.asarray(got[..., : cfg.vocab_size]),
+            rtol=1e-5, atol=1e-5,
+        )
+        print("  weight-stationary decode matches OK")
+
+        # ---- int8 KV decode ≈ fp decode -------------------------------
+        from repro.serve.step import global_cache_shapes
+
+        def empty_caches(dtype):
+            shapes = global_cache_shapes(cfg, mesh_cfg, B, 16, dtype)
+            return jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), shapes
+            )
+
+        dstep_q = make_decode_step(
+            cfg, mesh_cfg, mesh, spec, (4,) * nrt, dshapes,
+            env_kw={"int8_kv": True},
+        )
+
+        def roll(step_fn, caches, n=6):
+            outs = []
+            t = jnp.ones((B, 1), jnp.int32)
+            for i in range(n):
+                lg, caches = step_fn(
+                    st, caches, {"tokens": t, "pos": jnp.asarray(i, jnp.int32)}
+                )
+                outs.append(np.asarray(lg[..., : cfg.vocab_size], np.float32))
+                t = jnp.argmax(lg[:, 0, : cfg.vocab_size], -1)[:, None].astype(
+                    jnp.int32
+                )
+            return np.stack(outs)
+
+        out_fp = roll(dstep, empty_caches(jnp.float32))
+        out_q = roll(dstep_q, empty_caches(jnp.int8))
+        err = np.max(np.abs(out_fp - out_q)) / (np.max(np.abs(out_fp)) + 1e-9)
+        assert err < 0.05, f"int8 kv relative error too large: {err}"
+        print(f"  int8 KV decode rel err {err:.4f} OK")
+        print("scenario_perf_levers OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""AWP controller (Algorithm 1) unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.awp import AWPConfig, AWPController, oracle_round_to
+from repro.core.formats import TransferFormat, bits_to_bytes
+
+
+def test_bits_to_bytes_paper_example():
+    # paper §III-A: "if AWP provides the value 14, RoundTo will be 2 bytes"
+    assert bits_to_bytes(14) == 2
+    assert bits_to_bytes(8) == 1
+    assert bits_to_bytes(9) == 2
+    assert bits_to_bytes(24) == 3
+    assert bits_to_bytes(25) == 4
+    assert bits_to_bytes(64) == 4
+
+
+def test_formats():
+    assert TransferFormat(2).name == "bf16"
+    assert TransferFormat(1).compression_ratio == 4.0
+    assert TransferFormat(4).is_identity
+    with pytest.raises(ValueError):
+        TransferFormat(5)
+
+
+def test_algorithm1_fires_after_interval():
+    c = AWPController(2, AWPConfig(threshold=-0.01, interval=3, initial_bits=8))
+    norms = np.array([100.0, 50.0])
+    c.update(norms**2)
+    for _ in range(2):
+        norms = norms * 0.97  # delta = -3% < T
+        c.update(norms**2)
+    assert c.round_to == (1, 1)  # 2 hits only: not fired yet
+    norms = norms * 0.97
+    c.update(norms**2)
+    assert c.round_to == (2, 2)  # third hit -> fire, 8->16 bits
+    # counters reset: immediately after firing nothing more happens
+    assert np.all(c.state.counters == 0)
+
+
+def test_algorithm1_no_fire_when_growing():
+    c = AWPController(1, AWPConfig(threshold=-0.01, interval=2))
+    n = 10.0
+    for _ in range(20):
+        n *= 1.05
+        c.update([n**2])
+    assert c.round_to == (1,)
+
+
+def test_per_group_independence():
+    c = AWPController(2, AWPConfig(threshold=-0.01, interval=2))
+    a, b = 100.0, 100.0
+    for _ in range(4):
+        a *= 0.9   # shrinking -> fires
+        b *= 1.1   # growing -> stays
+        c.update([a**2, b**2])
+    assert c.round_to[0] > 1
+    assert c.round_to[1] == 1
+
+
+def test_oracle_policy():
+    assert oracle_round_to(3, 2) == (2, 2, 2)
+
+
+@given(
+    st.lists(
+        st.floats(min_value=0.5, max_value=2.0), min_size=30, max_size=80
+    ),
+    st.integers(1, 5),
+)
+@settings(max_examples=40, deadline=None)
+def test_property_monotone_and_bounded(factors, interval):
+    """Bits per group only ever increase, never exceed 32, and the format
+    stays valid whatever the norm trajectory does."""
+    c = AWPController(1, AWPConfig(threshold=-0.005, interval=interval))
+    n = 100.0
+    seen = [c.round_to[0]]
+    for f in factors:
+        n = max(n * f, 1e-6)
+        c.update([n**2])
+        rt = c.round_to[0]
+        assert 1 <= rt <= 4
+        assert rt >= seen[-1]
+        seen.append(rt)
+    assert c.state.bits[0] <= 32
+
+
+@given(st.integers(1, 20))
+@settings(max_examples=20, deadline=None)
+def test_property_history_matches_transitions(k):
+    c = AWPController(1, AWPConfig(threshold=-0.001, interval=k))
+    n = 100.0
+    for _ in range(5 * k):
+        n *= 0.99
+        c.update([n**2])
+    # each history entry strictly increases the bit vector
+    for (s0, b0), (s1, b1) in zip(c.history, c.history[1:]):
+        assert s1 > s0
+        assert b1 > b0
+
+
+def test_bytes_saved_fraction():
+    c = AWPController(2, AWPConfig())
+    assert c.bytes_saved_fraction() == pytest.approx(0.75)  # both at 8-bit

@@ -1,0 +1,31 @@
+"""Runs the multi-device scenarios in subprocesses (the host device count
+must be set before jax initialises, so these cannot share this process)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCENARIOS = [
+    "scenario_compressed_collectives.py",
+    "scenario_dist_train.py",
+    "scenario_perf_levers.py",
+]
+
+
+@pytest.mark.parametrize("script", SCENARIOS)
+def test_scenario(script):
+    path = os.path.join(os.path.dirname(__file__), "scenarios", script)
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, path], env=env, capture_output=True, text=True,
+        timeout=900,
+    )
+    assert proc.returncode == 0, (
+        f"{script} failed:\nstdout:\n{proc.stdout[-3000:]}\n"
+        f"stderr:\n{proc.stderr[-3000:]}"
+    )

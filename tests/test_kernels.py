@@ -1,0 +1,160 @@
+"""Per-kernel allclose tests: Pallas (interpret) vs pure-jnp oracle.
+
+Sweeps shapes / round_to / value distributions, plus hypothesis property
+tests on the pack/unpack invariants.
+"""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.bitpack import bitpack_2d
+from repro.kernels.bitunpack import bitunpack_2d
+from repro.kernels.l2norm import l2norm_sq_2d
+
+SHAPES_2D = [(256, 128), (512, 128), (1024, 128)]
+ROUND_TOS = [1, 2, 3, 4]
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("round_to", ROUND_TOS)
+def test_bitpack_kernel_matches_ref(shape, round_to):
+    w = _rand(shape, seed=round_to)
+    got = bitpack_2d(w, round_to, interpret=True)
+    want = ref.bitpack_ref(w, round_to)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", SHAPES_2D)
+@pytest.mark.parametrize("round_to", ROUND_TOS)
+def test_bitunpack_kernel_matches_ref(shape, round_to):
+    w = _rand(shape, seed=17 + round_to, scale=3.0)
+    planes = ref.bitpack_ref(w, round_to)
+    got = bitunpack_2d(planes, interpret=True)
+    want = ref.bitunpack_ref(planes)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", [(512, 128), (2048, 128)])
+def test_l2norm_kernel_matches_ref(shape):
+    w = _rand(shape, seed=3, scale=0.1)
+    got = l2norm_sq_2d(w, interpret=True)
+    want = ref.l2norm_sq_ref(w)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "shape", [(7,), (130,), (64, 33), (3, 5, 7), (1,), (40000,)]
+)
+@pytest.mark.parametrize("round_to", ROUND_TOS)
+def test_ops_quantize_arbitrary_shapes(shape, round_to):
+    w = _rand(shape, seed=round_to * 11, scale=2.0)
+    got = ops.quantize(w, round_to)
+    want = ref.quantize_ref(w, round_to)
+    assert got.shape == w.shape
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_round_to_4_is_identity():
+    w = _rand((1000,), seed=5)
+    np.testing.assert_array_equal(np.asarray(ops.quantize(w, 4)), np.asarray(w))
+
+
+def test_round_to_2_is_bfloat16_truncation():
+    """Paper's 16-bit format (1s+8e+7m) is exactly bf16 round-toward-zero."""
+    w = _rand((4096,), seed=9, scale=10.0)
+    q = np.asarray(ops.quantize(w, 2))
+    # truncation: uint32 view with low 16 bits cleared
+    u = np.asarray(w).view(np.uint32) & np.uint32(0xFFFF0000)
+    np.testing.assert_array_equal(q.view(np.uint32), u)
+
+
+@given(
+    st.lists(
+        st.floats(
+            allow_nan=False, allow_infinity=False, width=32
+        ),
+        min_size=1,
+        max_size=64,
+    ),
+    st.sampled_from(ROUND_TOS),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_truncation_invariants(vals, round_to):
+    """Truncation: |q| <= |w|, sign preserved, idempotent, error < 2^(drop) ulp."""
+    w = jnp.asarray(np.asarray(vals, np.float32))
+    q = np.asarray(ref.quantize_ref(w, round_to))
+    wn = np.asarray(w)
+    # sign preserved (zero maps to +/-0)
+    assert np.all((q >= 0) == (wn >= 0) | (q == 0))
+    # magnitude never increases under truncation toward zero
+    assert np.all(np.abs(q) <= np.abs(wn))
+    # idempotent
+    q2 = np.asarray(ref.quantize_ref(jnp.asarray(q), round_to))
+    np.testing.assert_array_equal(q, q2)
+    # relative error bound: dropping d mantissa bits -> rel err < 2^-(kept mantissa)
+    kept_mantissa = max(0, 8 * round_to - 9)
+    finite = np.abs(wn) > 1e-30
+    if kept_mantissa > 0 and finite.any():
+        rel = np.abs(q[finite] - wn[finite]) / np.abs(wn[finite])
+        assert np.all(rel <= 2.0 ** (-kept_mantissa) + 1e-12)
+
+
+@given(st.integers(1, 4), st.integers(1, 5000))
+@settings(max_examples=30, deadline=None)
+def test_property_pack_unpack_roundtrip_on_packed_values(round_to, n):
+    """Values already representable in round_to bytes survive exactly."""
+    rng = np.random.default_rng(n)
+    w = rng.normal(0, 1, (n,)).astype(np.float32)
+    w = np.asarray(ref.quantize_ref(jnp.asarray(w), round_to))
+    q = np.asarray(ref.quantize_ref(jnp.asarray(w), round_to))
+    np.testing.assert_array_equal(w, q)
+
+
+def test_nearest_mode_reduces_bias():
+    # truncation is round-toward-zero: |q| <= |w| always, so the magnitude
+    # error is systematically negative; round-to-nearest should center it.
+    w = _rand((20000,), seed=21, scale=1.0)
+    mag_trunc = np.mean(
+        np.abs(np.asarray(ref.quantize_ref(w, 2))) - np.abs(np.asarray(w))
+    )
+    mag_near = np.mean(
+        np.abs(np.asarray(ref.quantize_ref(w, 2, mode="nearest")))
+        - np.abs(np.asarray(w))
+    )
+    assert mag_trunc < 0
+    assert abs(mag_near) < abs(mag_trunc)
+
+
+def test_stochastic_mode_unbiased():
+    key = jax.random.PRNGKey(0)
+    w = jnp.full((50000,), 1.0 + 1e-4, jnp.float32)
+    q = ref.quantize_ref(w, 2, mode="stochastic", key=key)
+    # expectation of stochastic rounding equals the input
+    assert abs(float(jnp.mean(q)) - float(jnp.mean(w))) < 1e-5
+
+
+def test_special_values_survive():
+    w = jnp.asarray([0.0, -0.0, 1.0, -1.0, np.inf, -np.inf], jnp.float32)
+    for rt in ROUND_TOS:
+        q = np.asarray(ref.quantize_ref(w, rt))
+        if rt > 1:
+            # 16+ bits keep sign + full exponent + some mantissa:
+            # zeros, +/-1 and infinities survive exactly.
+            np.testing.assert_array_equal(q[:4], np.asarray(w)[:4])
+            assert np.isinf(q[4]) and q[4] > 0
+            assert np.isinf(q[5]) and q[5] < 0
+        else:
+            # 8-bit (sign + 7 exponent bits) loses the exponent LSB: it can
+            # represent zero exactly but not 1.0 or inf — as in the paper,
+            # 8-bit is only useful very early in training.
+            np.testing.assert_array_equal(q[:2], np.asarray(w)[:2])

@@ -1,0 +1,106 @@
+"""HLO cost-analyzer tests: while-trip multiplication, dot flops,
+collective wire accounting — on tiny compiled programs with known costs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.roofline.hlo_cost import HloModule, analyze_hlo
+
+
+def _compiled_text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_dot_flops_exact():
+    a = jnp.zeros((64, 128), jnp.float32)
+    b = jnp.zeros((128, 32), jnp.float32)
+    txt = _compiled_text(lambda a, b: a @ b, a, b)
+    c = analyze_hlo(txt)
+    assert c.flops == pytest.approx(2 * 64 * 128 * 32, rel=0.01)
+
+
+def test_while_trip_multiplication():
+    a = jnp.zeros((32, 32), jnp.float32)
+
+    def scanned(a):
+        def body(x, _):
+            return x @ a, None
+        x, _ = jax.lax.scan(body, a, None, length=10)
+        return x
+
+    txt = _compiled_text(scanned, a)
+    c = analyze_hlo(txt)
+    # 10 trips x 2*32^3 flops
+    assert c.flops == pytest.approx(10 * 2 * 32**3, rel=0.05)
+
+
+def test_batch_dot_flops():
+    a = jnp.zeros((4, 16, 24), jnp.float32)
+    b = jnp.zeros((4, 24, 8), jnp.float32)
+    txt = _compiled_text(lambda a, b: jnp.einsum("bij,bjk->bik", a, b), a, b)
+    c = analyze_hlo(txt)
+    assert c.flops == pytest.approx(2 * 4 * 16 * 24 * 8, rel=0.01)
+
+
+def test_nested_while():
+    a = jnp.zeros((16, 16), jnp.float32)
+
+    def inner(x):
+        def body(y, _):
+            return y @ a, None
+        y, _ = jax.lax.scan(body, x, None, length=3)
+        return y
+
+    def outer(a):
+        def body(x, _):
+            return inner(x), None
+        x, _ = jax.lax.scan(body, a, None, length=5)
+        return x
+
+    c = analyze_hlo(_compiled_text(outer, a))
+    assert c.flops == pytest.approx(15 * 2 * 16**3, rel=0.05)
+
+
+def test_collective_wire_bytes():
+    import os
+    import subprocess
+    import sys
+
+    # needs >1 device: run in a subprocess with 4 host devices
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.roofline.hlo_cost import analyze_hlo
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("d",))
+def f(x):
+    return jax.lax.all_gather(x, "d", axis=0, tiled=True)
+sm = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(), check_vma=False)
+x = jnp.zeros((4096,), jnp.float32)
+txt = jax.jit(sm).lower(x).compile().as_text()
+c = analyze_hlo(txt)
+# out = 4096 f32 = 16384 bytes; ring wire = 16384 * 3/4 = 12288
+assert abs(c.wire.get("all-gather", 0) - 12288) < 1, c.wire
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=300,
+    )
+    assert proc.returncode == 0 and "OK" in proc.stdout, proc.stderr[-2000:]
+
+
+def test_shape_parsing():
+    from repro.roofline.hlo_cost import _type_bytes
+
+    assert _type_bytes("f32[16,4096,2048]{2,1,0}") == 16 * 4096 * 2048 * 4
+    assert _type_bytes("u8[2,262144]{0,1}") == 2 * 262144
+    assert _type_bytes("(f32[8], s32[2])") == 32 + 8
+    assert _type_bytes("pred[]") == 1

@@ -1,0 +1,112 @@
+"""Per-architecture smoke tests: reduced config (2-ish layers, d_model<=256,
+<=4 experts), one forward + one SGD train step on CPU; asserts shapes and
+finiteness. Also exercises prefill+decode for decoder archs."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS, get_config, reduced
+from repro.models.env import Env
+from repro.models.init import init_params
+from repro.models import model as M
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _identity_mat(g, key, storage):
+    return storage
+
+
+def _batch(cfg, B=2, S=32, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {}
+    if cfg.embed_is_input_stub:
+        batch["features"] = jnp.asarray(
+            rng.normal(0, 1, (B, S, cfg.vision_dim)).astype(np.float32)
+        )
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+        )
+    batch["labels"] = jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)).astype(np.int32)
+    )
+    if cfg.num_image_tokens:
+        batch["image_features"] = jnp.asarray(
+            rng.normal(0, 1, (B, cfg.num_image_tokens, cfg.vision_dim)).astype(
+                np.float32
+            )
+        )
+    return batch
+
+
+def _loss_fn(params, batch, cfg, env):
+    loss_sum, metrics = M.forward_loss(
+        params, batch, cfg, env,
+        mat_group=_identity_mat,
+        mat_top=lambda name: params[name],
+    )
+    return loss_sum / jnp.maximum(metrics["token_count"], 1.0) + 1e-2 * metrics["aux"]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = reduced(get_config(arch))
+    env = Env(attn_chunk=16)
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    batch = _batch(cfg)
+
+    loss, grads = jax.jit(
+        jax.value_and_grad(_loss_fn), static_argnums=(2, 3)
+    )(params, batch, cfg, env)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    # plausible initial loss: near log(vocab)
+    assert 0.1 < float(loss) < 3 * np.log(cfg.vocab_size) + 5
+
+    gnorms = [float(jnp.sum(g * g)) for g in jax.tree_util.tree_leaves(grads)]
+    assert all(np.isfinite(gn) for gn in gnorms), f"{arch}: non-finite grads"
+    assert sum(gnorms) > 0, f"{arch}: all-zero grads"
+
+    # one SGD step reduces nothing catastrophic (finite + changed)
+    params2 = jax.tree_util.tree_map(lambda p, g: p - 1e-3 * g, params, grads)
+    loss2 = jax.jit(_loss_fn, static_argnums=(2, 3))(params2, batch, cfg, env)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize(
+    "arch", [a for a in ARCH_IDS if ARCHS[a].causal]
+)
+def test_smoke_prefill_decode(arch):
+    cfg = reduced(get_config(arch))
+    env = Env(attn_chunk=8)
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    B, S = 2, 16
+    batch = _batch(cfg, B=B, S=S)
+    mat_top = lambda name: params[name]
+
+    logits, caches = jax.jit(
+        functools.partial(
+            M.forward_prefill, cfg=cfg, env=env,
+            mat_group=_identity_mat, mat_top=mat_top, cache_capacity=S + 4,
+        )
+    )(params, batch)
+    assert logits.shape[0] == B and logits.shape[1] == 1
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+    step = {
+        "tokens": jnp.zeros((B, 1), jnp.int32),
+        "pos": jnp.asarray(S, jnp.int32),
+    }
+    if cfg.num_image_tokens:
+        step["image_features"] = batch["image_features"]
+    logits2, caches2 = jax.jit(
+        functools.partial(
+            M.forward_decode, cfg=cfg, env=env,
+            mat_group=_identity_mat, mat_top=mat_top,
+        )
+    )(params, step, caches)
+    assert logits2.shape[:2] == (B, 1)
+    assert np.all(np.isfinite(np.asarray(logits2)))

@@ -1,0 +1,116 @@
+"""Substrate tests: data pipelines, checkpointing, optimizers, trainer."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import load_checkpoint, save_checkpoint
+from repro.core.awp import AWPConfig, AWPController
+from repro.data.pipeline import (
+    SyntheticImageNet, synthetic_feature_batch, synthetic_lm_batch,
+)
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+from repro.optim.sgd import SGDConfig, init_momentum, lr_at, sgd_update
+from repro.train.loop import Trainer
+
+
+def test_synthetic_imagenet_deterministic_and_learnable():
+    d = SyntheticImageNet(num_classes=5, hw=8)
+    a1, l1 = d.batch(16, 3)
+    a2, l2 = d.batch(16, 3)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+    # images of the same class correlate more than across classes
+    imgs, labels = d.batch(256, 0)
+    imgs, labels = np.asarray(imgs), np.asarray(labels)
+    protos = d.prototypes[labels]
+    corr_true = np.mean(imgs * protos)
+    corr_false = np.mean(imgs * d.prototypes[(labels + 1) % 5])
+    assert corr_true > corr_false + 0.02
+
+
+def test_synthetic_lm_has_structure():
+    t, l = synthetic_lm_batch(64, 8, 32, 0)
+    assert t.shape == (8, 32) and l.shape == (8, 32)
+    # labels shifted: next-token of the same stream
+    t2, l2 = synthetic_lm_batch(64, 8, 32, 0)
+    np.testing.assert_array_equal(np.asarray(t), np.asarray(t2))
+    np.testing.assert_array_equal(np.asarray(t)[:, 1:], np.asarray(l)[:, :-1])
+
+
+def test_feature_batch():
+    f, l = synthetic_feature_batch(32, 10, 4, 16, 0)
+    assert f.shape == (4, 16, 32)
+    assert l.shape == (4, 16)
+    assert int(l.max()) < 10
+
+
+def test_sgd_momentum_and_decay():
+    cfg = SGDConfig(lr=0.1, momentum=0.9, weight_decay=0.0,
+                    lr_decay_rate=0.16, lr_decay_every=30)
+    assert lr_at(cfg, 0) == 0.1
+    assert abs(lr_at(cfg, 30) - 0.016) < 1e-9
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 2.0)}
+    m = init_momentum(p)
+    wd = {"w": 0.0}
+    p2, m2 = sgd_update(p, g, m, wd, cfg, 0.1)
+    np.testing.assert_allclose(np.asarray(p2["w"]), 1 - 0.1 * 2.0)
+    p3, m3 = sgd_update(p2, g, m2, wd, cfg, 0.1)
+    # momentum: second step moves further
+    np.testing.assert_allclose(np.asarray(p3["w"]),
+                               np.asarray(p2["w"]) - 0.1 * (0.9 * 2 + 2))
+
+
+def test_adamw_update_moves_params():
+    cfg = AdamWConfig(lr=1e-2)
+    p = {"w": jnp.ones((4,))}
+    g = {"w": jnp.full((4,), 0.5)}
+    st = init_adamw(p)
+    p2, st2 = adamw_update(p, g, st, {"w": 1.0}, cfg, 1e-2)
+    assert float(jnp.max(jnp.abs(p2["w"] - p["w"]))) > 1e-4
+    assert int(st2["t"]) == 1
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    storage = {"a": jnp.arange(10, dtype=jnp.float32),
+               "b": {"c": jnp.ones((3, 3))}}
+    opt = {"m": jnp.zeros((10,))}
+    awp = AWPController(3, AWPConfig())
+    awp.update([1.0, 2.0, 3.0])
+    path = str(tmp_path / "ckpt.npz")
+    save_checkpoint(path, storage, opt, awp, step=7)
+
+    awp2 = AWPController(3, AWPConfig())
+    s2, o2, step = load_checkpoint(path, storage, opt, awp2)
+    assert step == 7
+    np.testing.assert_array_equal(np.asarray(s2["a"]), np.asarray(storage["a"]))
+    np.testing.assert_array_equal(awp2.state.bits, awp.state.bits)
+    np.testing.assert_allclose(awp2.state.prev_norms, awp.state.prev_norms)
+
+
+def test_trainer_policies_and_wire_accounting():
+    calls = []
+
+    def builder(rts):
+        calls.append(rts)
+
+        def step(storage, opt, batch, lr):
+            return storage, opt, {
+                "loss": jnp.asarray(1.0),
+                "group_norms_sq": jnp.asarray([4.0, 4.0]),
+            }
+
+        return step
+
+    tr = Trainer(
+        builder, 2, policy="oracle:2",
+        dist_elems_per_group=[1000, 2000], gather_axis_size=4,
+    )
+    tr.run_step({}, {}, {}, 0.1)
+    assert calls == [(2, 2)]
+    # ring all-gather wire: (n-1) * s_loc * rt per group
+    assert tr.records[0].wire_bytes == 3 * (1000 // 4) * 2 + 3 * (2000 // 4) * 2
+    s = tr.summary()
+    assert 0.49 < s["wire_reduction"] < 0.51
