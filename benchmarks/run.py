@@ -56,14 +56,14 @@ def _time(fn, *args, iters=20, warmup=3):
 def table2_3_profile():
     """Tables II/III: per-batch component profile for VGG-sized weights."""
     from repro.kernels import ops
+    from repro.transport import pack_planes, unpack_planes
 
     n = 20_000_000  # ~VGG-A conv+fc weight count (paper: ~133M at full fc)
     w = jnp.asarray(np.random.default_rng(0).normal(0, 1, n), jnp.float32)
-    us_pack = _time(lambda x: ops.bitpack(x, 2, impl="ref"), w, iters=5)
-    us_unpack = _time(
-        lambda p: ops.bitunpack(p, impl="ref"),
-        ops.bitpack(w, 2, impl="ref"), iters=5,
-    )
+    pack = jax.jit(lambda x: pack_planes(x, 2, impl="ref"))
+    unpack = jax.jit(lambda p: unpack_planes(p, impl="ref"))
+    us_pack = _time(pack, w, iters=5)
+    us_unpack = _time(unpack, pack(w), iters=5)
     us_norm = _time(lambda x: ops.l2norm_sq(x, impl="ref"), w, iters=5)
     row("table2.bitpack_20M_weights", us_pack, "paper_x86=19.71ms_on_133M")
     row("table2.bitunpack_20M_weights", us_unpack, "paper_x86=4.51ms")
@@ -80,16 +80,21 @@ def table2_3_profile():
 
 
 def fig2_bitpack_kernel():
-    """Pallas bitpack/bitunpack (interpret) vs jnp oracle, per round_to."""
-    from repro.kernels import ops
+    """Pallas bitpack/bitunpack vs jnp oracle through the transport
+    dispatch (kernels compiled on TPU, interpret on CPU)."""
+    from repro.kernels.bitpack import resolve_interpret
+    from repro.transport import pack_planes
 
+    mode = "pallas_interp" if resolve_interpret(None) else "pallas"
     w = jnp.asarray(
         np.random.default_rng(1).normal(0, 1, (4096, 128)), jnp.float32
     ).reshape(-1)
     for rt in (1, 2, 3):
-        us_p = _time(lambda x: ops.bitpack(x, rt, impl="pallas"), w, iters=5)
-        us_r = _time(lambda x: ops.bitpack(x, rt, impl="ref"), w, iters=5)
-        row(f"fig2.bitpack_rt{rt}_pallas_interp", us_p, f"ref_us={us_r:.1f}")
+        fp = jax.jit(lambda x, rt=rt: pack_planes(x, rt, impl="pallas"))
+        fr = jax.jit(lambda x, rt=rt: pack_planes(x, rt, impl="ref"))
+        us_p = _time(fp, w, iters=5)
+        us_r = _time(fr, w, iters=5)
+        row(f"fig2.bitpack_rt{rt}_{mode}", us_p, f"ref_us={us_r:.1f}")
 
 
 def fig3_convergence(steps=140):
@@ -147,12 +152,17 @@ def fig4_normalized_time():
 
 def compression_ratio():
     from repro.core.formats import TransferFormat
+    from repro.transport import CompressionPolicy
 
     for rt in (1, 2, 3, 4):
         f = TransferFormat(rt)
+        pol = CompressionPolicy(round_to=rt)
+        # the format table and the transport accounting must agree
+        assert f.compression_ratio == 1.0 / pol.wire_fraction
         row(
             f"compression.{f.name}", 0.0,
-            f"ratio={f.compression_ratio:.2f}x_bits={f.bits}",
+            f"ratio={f.compression_ratio:.2f}x_bits={f.bits}"
+            f"_wire_frac={pol.wire_fraction:.2f}",
         )
 
 

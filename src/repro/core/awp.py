@@ -96,7 +96,10 @@ class AWPController:
                 delta = (norms - st.prev_norms) / st.prev_norms
             delta = np.where(np.isfinite(delta), delta, 0.0)
             hit = delta < cfg.threshold
-            st.counters = np.where(hit, st.counters + 1, st.counters)
+            # Algorithm 1 requires INTERVAL *consecutive* observations:
+            # a miss resets the counter (a cumulative count would widen
+            # far too early on noisy norm trajectories).
+            st.counters = np.where(hit, st.counters + 1, 0)
             fire = st.counters >= cfg.interval
             if fire.any():
                 new_bits = np.minimum(

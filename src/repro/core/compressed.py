@@ -1,146 +1,71 @@
-"""Compressed collectives — the heart of ADT on a TPU mesh (DESIGN.md §2).
+"""Compressed collectives — thin compatibility shims over repro.transport.
 
-:func:`compressed_all_gather` is the TPU analogue of the paper's
-CPU→GPU weight send: the fp32 master shard is bitpacked to ``round_to``
-byte planes, the *planes* are all-gathered over the FSDP axes (moving
-``round_to/4`` of the fp32 bytes), and every device bitunpacks back to
-fp32.  Its custom VJP is an uncompressed ``psum_scatter`` — the paper
-deliberately leaves the gradient path (GPU→CPU) uncompressed, and so does
-our faithful mode.
-
-:func:`compressed_psum_scatter` is the beyond-paper counterpart for the
-gradient path (paper §VI notes gradient-compression work is "orthogonal
-and combinable"): every device packs the chunk destined for each peer,
-an ``all_to_all`` moves the packed planes, and the receiver unpacks and
-reduces locally.  Wire bytes shrink by the same ``round_to/4`` factor.
+The pack -> collective -> unpack pipelines, their custom VJPs, and the
+wire-byte accounting all moved to :mod:`repro.transport` (see
+docs/transport.md), which dispatches between the Pallas kernels (compiled
+on TPU, interpret off-TPU) and the pure-jnp oracle. These wrappers keep
+the original call signatures for existing code and scenarios; new code
+should use :class:`repro.transport.Transport` /
+:class:`repro.transport.CompressionPolicy` directly.
 """
 from __future__ import annotations
 
-import functools
 from typing import Hashable, Sequence
 
-import jax
 import jax.numpy as jnp
-from jax import lax
 
-from repro.kernels import ref
+from repro.transport import CompressionPolicy
+from repro.transport import transport as _T
 
 AxisNames = Hashable | Sequence[Hashable]
 
 
 def _axis_size(axis_names: AxisNames) -> int:
-    if isinstance(axis_names, (tuple, list)):
-        size = 1
-        for a in axis_names:
-            size *= lax.axis_size(a)
-        return size
-    return lax.axis_size(axis_names)
+    return _T.axis_size(axis_names)
 
 
-# ---------------------------------------------------------------------------
-# Weight path: compressed all-gather (paper-faithful)
-# ---------------------------------------------------------------------------
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
 def compressed_all_gather(
     w_local: jnp.ndarray,
     axis_names: AxisNames,
     round_to: int,
     grad_round_to: int = 4,
 ) -> jnp.ndarray:
-    """All-gather a flat fp32 shard ``(S_loc,)`` -> ``(S,)`` in ``round_to`` bytes.
-
-    ``grad_round_to=4`` keeps the backward reduce-scatter uncompressed
-    (paper-faithful). Values < 4 compress the gradient path too
-    (beyond-paper, via :func:`compressed_psum_scatter`).
-    """
-    return _cag_fwd(w_local, axis_names, round_to, grad_round_to)[0]
-
-
-def _cag_fwd(w_local, axis_names, round_to, grad_round_to):
-    if round_to == 4:
-        w_full = lax.all_gather(w_local, axis_names, axis=0, tiled=True)
-        return w_full, None
-    planes = ref.bitpack_ref(w_local, round_to)  # (round_to, S_loc)
-    planes_g = lax.all_gather(planes, axis_names, axis=1, tiled=True)
-    w_full = ref.bitunpack_ref(planes_g)  # (S,)
-    return w_full, None
-
-
-def _cag_bwd(axis_names, round_to, grad_round_to, _, g):
-    if grad_round_to == 4:
-        return (lax.psum_scatter(g, axis_names, scatter_dimension=0, tiled=True),)
-    return (compressed_psum_scatter(g, axis_names, grad_round_to),)
-
-
-compressed_all_gather.defvjp(_cag_fwd, _cag_bwd)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def quantize_ste(w: jnp.ndarray, round_to: int) -> jnp.ndarray:
-    """Single-device ADT format truncation with a straight-through VJP
-    (the master fp32 copy receives the full-precision gradient)."""
-    return ref.quantize_ref(w, round_to)
-
-
-def _q_fwd(w, round_to):
-    return ref.quantize_ref(w, round_to), None
-
-
-def _q_bwd(round_to, _, g):
-    return (g,)
-
-
-quantize_ste.defvjp(_q_fwd, _q_bwd)
-
-
-# ---------------------------------------------------------------------------
-# Gradient path: compressed reduce-scatter (beyond-paper)
-# ---------------------------------------------------------------------------
+    """All-gather a flat fp32 shard ``(S_loc,)`` -> ``(S,)`` in ``round_to``
+    bytes; VJP reduce-scatters at ``grad_round_to`` (4 = uncompressed,
+    paper-faithful). Deprecated alias for ``transport.all_gather``."""
+    policy = CompressionPolicy(round_to=round_to, grad_round_to=grad_round_to)
+    return _T.all_gather(w_local, axis_names, policy, 0)
 
 
 def compressed_psum_scatter(
     g: jnp.ndarray, axis_names: AxisNames, round_to: int
 ) -> jnp.ndarray:
-    """Reduce-scatter a flat fp32 ``(S,)`` -> ``(S_loc,)`` in ``round_to`` bytes.
+    """Reduce-scatter a flat fp32 ``(S,)`` -> ``(S_loc,)`` in ``round_to``
+    bytes. Deprecated alias for ``transport.reduce_scatter``."""
+    policy = CompressionPolicy(grad_round_to=round_to)
+    return _T.reduce_scatter(g, axis_names, policy)
 
-    Decomposed as pack → ``all_to_all`` of byte planes → unpack → local sum,
-    which keeps every wire transfer compressed while the reduction itself is
-    done in fp32 on-device. Rounding uses *nearest* (not the paper's
-    truncation) because gradient sums are bias-sensitive.
-    """
-    if round_to == 4:
-        return lax.psum_scatter(g, axis_names, scatter_dimension=0, tiled=True)
-    size = _axis_size(axis_names)
-    s = g.shape[0]
-    if s % size:
-        raise ValueError(f"flat size {s} not divisible by axis size {size}")
-    chunks = g.reshape(size, s // size)
-    planes = ref.bitpack_ref(chunks, round_to, mode="nearest")
-    # (round_to, size, S_loc): exchange the `size` dim
-    planes_x = lax.all_to_all(
-        planes, axis_names, split_axis=1, concat_axis=1, tiled=False
-    )
-    # after all_to_all over possibly-multiple axes the exchanged dim stays `size`
-    contribs = ref.bitunpack_ref(planes_x)  # (size, S_loc)
-    return jnp.sum(contribs, axis=0)
+
+def quantize_ste(w: jnp.ndarray, round_to: int) -> jnp.ndarray:
+    """Single-device ADT format truncation with a straight-through VJP.
+    Deprecated alias for ``transport.quantize``."""
+    return _T.quantize(w, CompressionPolicy(round_to=round_to))
 
 
 # ---------------------------------------------------------------------------
-# Collective byte accounting (used by benchmarks and the roofline model)
+# Collective byte accounting — canonical formulas live on CompressionPolicy
 # ---------------------------------------------------------------------------
 
 
 def all_gather_wire_bytes(s_local: int, axis_size: int, round_to: int) -> int:
-    """Bytes received per device for one compressed all-gather.
-
-    Ring/bidirectional all-gather delivers every remote shard once:
-    ``(axis_size - 1) * S_loc * round_to`` bytes in, vs ``* 4`` for fp32.
-    """
-    return (axis_size - 1) * s_local * round_to
+    """Bytes received per device for one compressed all-gather."""
+    return CompressionPolicy(round_to=round_to).all_gather_wire_bytes(
+        s_local, axis_size
+    )
 
 
 def psum_scatter_wire_bytes(s_local: int, axis_size: int, round_to: int) -> int:
     """Bytes received per device for one (compressed) reduce-scatter."""
-    return (axis_size - 1) * s_local * round_to
+    return CompressionPolicy(grad_round_to=round_to).reduce_scatter_wire_bytes(
+        s_local, axis_size
+    )

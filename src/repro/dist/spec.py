@@ -1,0 +1,398 @@
+"""Storage layout + sharding specs for the FSDP×TP mesh (DESIGN.md §3).
+
+Every parameter leaf is classified into one of three storage *kinds*:
+
+  * ``DIST`` — large / compressible: the fp32 master copy lives as flat
+    shards, TP-sliced first (leading ``tp`` dim when ``meta.tp_dim`` is
+    set), then flattened and zero-padded so the flat dim splits evenly
+    over the FSDP axes. Materialization is a compressed all-gather
+    through :mod:`repro.transport`; its VJP reduce-scatters the gradient
+    back onto the shards.
+  * ``TP_SMALL`` — small but TP-sheared (biases along a sliced dim):
+    stored as stacked per-rank slices, replicated over the FSDP axes.
+  * ``REPL`` — small replicated leaves (norm scales, gates): stored at
+    the logical shape on every device.
+
+Kind assignment depends only on the *logical* shape, the
+:class:`~repro.models.meta.ParamMeta`, and ``compress_min_size`` — never
+on the mesh geometry — so a single-device reference run and a
+distributed run classify (and therefore AWP-monitor) exactly the same
+set of weights.
+
+On the trivial mesh (``tp == 1 and dshards == 1``) storage *is* the
+logical array and materialization degenerates to the straight-through
+format truncation — the paper's single-accelerator setting.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.meta import COMPRESS_MIN_SIZE, ParamMeta
+from repro.transport import CompressionPolicy, policy_for
+from repro.transport import transport as _T
+from repro.utils.trees import round_up
+
+DIST = "dist"
+REPL = "repl"
+TP_SMALL = "tp_small"
+
+
+# ---------------------------------------------------------------------------
+# mesh geometry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshCfg:
+    """(pods ×) data × model mesh geometry + compression threshold.
+
+    ``dshards = dp * pods`` is the FSDP sharding degree: the weight
+    gather runs over ``("pod", "data")`` when pods > 1 so the multi-pod
+    hierarchy is one logical gather axis.
+    """
+
+    tp: int = 1
+    dp: int = 1
+    pods: int = 1
+    # leaves with fewer logical elements stay uncompressed (the paper's
+    # "biases" carve-out); element count, not bytes
+    compress_min_size: int = COMPRESS_MIN_SIZE
+
+    @property
+    def dshards(self) -> int:
+        return self.dp * self.pods
+
+    @property
+    def model_axis(self) -> str:
+        return "model"
+
+    @property
+    def fsdp_axes(self) -> tuple[str, ...]:
+        return ("pod", "data") if self.pods > 1 else ("data",)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        if self.pods > 1:
+            return (self.pods, self.dp, self.tp)
+        return (self.dp, self.tp)
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        if self.pods > 1:
+            return ("pod", "data", "model")
+        return ("data", "model")
+
+    @property
+    def trivial(self) -> bool:
+        return self.tp == 1 and self.dshards == 1
+
+
+SINGLE = MeshCfg(tp=1, dp=1)
+
+
+def _fsdp_spec_entry(mesh_cfg: MeshCfg):
+    """PartitionSpec entry for the flat FSDP-sharded dim."""
+    axes = mesh_cfg.fsdp_axes
+    return axes if len(axes) > 1 else axes[0]
+
+
+# ---------------------------------------------------------------------------
+# leaf specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Storage descriptor for one parameter leaf.
+
+    ``logical`` / ``local_logical`` are the *unstacked* global and
+    TP-local logical shapes (``stacked`` leaves carry a leading
+    layer-repetition dim ``reps`` in storage). ``s_loc`` is the flat
+    element count per FSDP shard summed over reps — the quantity the
+    wire-byte accounting multiplies by the policy's bytes/element.
+    ``repl_factor`` is how many model-axis ranks hold each element
+    (divided out by the AWP norm monitor).
+    """
+
+    kind: str
+    meta: ParamMeta
+    logical: tuple[int, ...]
+    local_logical: tuple[int, ...]
+    stacked: bool = False
+    reps: int = 1
+    pad_rep: int = 0          # per-rep padded flat length (DIST)
+    s_loc: int = 0            # per-FSDP-shard flat elems, all reps (DIST)
+    repl_factor: int = 1
+
+    @property
+    def n_local(self) -> int:
+        return math.prod(self.local_logical) if self.local_logical else 1
+
+
+def build_leaf_spec(
+    shape, meta: ParamMeta, mesh_cfg: MeshCfg, *, stacked: bool = False
+) -> LeafSpec:
+    """Classify one leaf and precompute its storage geometry."""
+    shape = tuple(int(s) for s in shape)
+    base = shape[1:] if stacked else shape
+    reps = shape[0] if stacked else 1
+    n = math.prod(base) if base else 1
+    local = tuple(meta.local_shape(base, mesh_cfg.tp))
+    n_local = math.prod(local) if local else 1
+
+    compressible = meta.compress and n >= mesh_cfg.compress_min_size
+    if compressible:
+        kind = DIST
+    elif meta.tp_dim is not None and mesh_cfg.tp > 1:
+        kind = TP_SMALL
+    else:
+        kind = REPL
+
+    repl_factor = 1
+    pad_rep = n_local
+    s_loc = 0
+    if kind == DIST:
+        tp = max(mesh_cfg.tp, 1)
+        if meta.tp_dim is None:
+            repl_factor = tp  # same FSDP shard on every model rank
+        else:
+            units = meta.tp_units or base[meta.tp_dim]
+            repl_factor = 1 if units % tp == 0 else tp // units
+        pad_rep = round_up(max(n_local, 1), mesh_cfg.dshards)
+        s_loc = reps * (pad_rep // mesh_cfg.dshards)
+
+    return LeafSpec(
+        kind=kind,
+        meta=meta,
+        logical=base,
+        local_logical=local,
+        stacked=stacked,
+        reps=reps,
+        pad_rep=pad_rep,
+        s_loc=s_loc,
+        repl_factor=repl_factor,
+    )
+
+
+def build_spec_tree(params, metas, mesh_cfg: MeshCfg):
+    """Spec tree matching the ``{"groups": [...], <top leaves>}`` layout.
+
+    Group subtrees are layer-stacked (leading repetition dim); top-level
+    leaves are not. Works on concrete arrays and ShapeDtypeStructs.
+    """
+
+    def walk(p, m, stacked):
+        return jax.tree_util.tree_map(
+            lambda x, mm: build_leaf_spec(
+                x.shape, mm, mesh_cfg, stacked=stacked
+            ),
+            p,
+            m,
+        )
+
+    groups = [
+        walk(gp, gm, True)
+        for gp, gm in zip(params["groups"], metas["groups"])
+    ]
+    top = {
+        k: walk(params[k], metas[k], False) for k in params if k != "groups"
+    }
+    return {"groups": groups, **top}
+
+
+# ---------------------------------------------------------------------------
+# logical -> storage
+# ---------------------------------------------------------------------------
+
+
+def storage_shape(spec: LeafSpec, mesh_cfg: MeshCfg) -> tuple[int, ...]:
+    lead = (spec.reps,) if spec.stacked else ()
+    if mesh_cfg.trivial or spec.kind == REPL:
+        return lead + spec.logical
+    if spec.kind == TP_SMALL:
+        return lead + (mesh_cfg.tp,) + spec.local_logical
+    if spec.meta.tp_dim is not None:
+        return lead + (mesh_cfg.tp, spec.pad_rep)
+    return lead + (spec.pad_rep,)
+
+
+def _tp_slice(x, spec: LeafSpec, rank: int, tp: int):
+    """Rank's TP-local logical slice of an unstacked logical array."""
+    meta = spec.meta
+    if meta.tp_dim is None or tp == 1:
+        return x
+    start = meta.tp_slice_index(rank, spec.logical, tp)
+    width = spec.local_logical[meta.tp_dim]
+    return lax.slice_in_dim(x, start, start + width, axis=meta.tp_dim)
+
+
+def leaf_to_storage(x, spec: LeafSpec, mesh_cfg: MeshCfg):
+    """Lay one logical leaf out in storage form (host-side, once)."""
+    if isinstance(x, jax.ShapeDtypeStruct):
+        return jax.ShapeDtypeStruct(storage_shape(spec, mesh_cfg), x.dtype)
+    x = jnp.asarray(x)
+    if mesh_cfg.trivial or spec.kind == REPL:
+        return x
+    tp = mesh_cfg.tp
+
+    if spec.kind == TP_SMALL:
+        def one(rep_x):
+            return jnp.stack(
+                [_tp_slice(rep_x, spec, r, tp) for r in range(tp)], axis=0
+            )
+    else:  # DIST
+        def one(rep_x):
+            def flat_pad(sl):
+                flat = sl.reshape(-1)
+                return jnp.pad(flat, (0, spec.pad_rep - flat.shape[0]))
+
+            if spec.meta.tp_dim is not None:
+                return jnp.stack(
+                    [
+                        flat_pad(_tp_slice(rep_x, spec, r, tp))
+                        for r in range(tp)
+                    ],
+                    axis=0,
+                )
+            return flat_pad(rep_x)
+
+    if spec.stacked:
+        return jnp.stack([one(x[i]) for i in range(spec.reps)], axis=0)
+    return one(x)
+
+
+def tree_to_storage(params, spec_tree, mesh_cfg: MeshCfg):
+    return jax.tree_util.tree_map(
+        lambda x, s: leaf_to_storage(x, s, mesh_cfg),
+        params,
+        spec_tree,
+    )
+
+
+# ---------------------------------------------------------------------------
+# partition specs
+# ---------------------------------------------------------------------------
+
+
+def leaf_partition_spec(spec: LeafSpec, mesh_cfg: MeshCfg):
+    """PartitionSpec of the *storage* array under the production mesh."""
+    lead = (None,) if spec.stacked else ()
+    if mesh_cfg.trivial or spec.kind == REPL:
+        return P(*(lead + (None,) * len(spec.logical)))
+    if spec.kind == TP_SMALL:
+        return P(
+            *(lead + (mesh_cfg.model_axis,) + (None,) * len(spec.local_logical))
+        )
+    flat = _fsdp_spec_entry(mesh_cfg)
+    if spec.meta.tp_dim is not None:
+        return P(*(lead + (mesh_cfg.model_axis, flat)))
+    return P(*(lead + (flat,)))
+
+
+def tree_partition_specs(spec_tree, mesh_cfg: MeshCfg):
+    return jax.tree_util.tree_map(
+        lambda s: leaf_partition_spec(s, mesh_cfg),
+        spec_tree,
+        is_leaf=lambda v: isinstance(v, LeafSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# materialization (inside the compiled step)
+# ---------------------------------------------------------------------------
+
+
+def materialize_leaf(
+    x,
+    spec: LeafSpec,
+    mesh_cfg: MeshCfg,
+    round_to,
+    grad_round_to: int | None = None,
+):
+    """Device-local storage shard -> TP-local logical weights.
+
+    ``round_to`` is an int (legacy call sites) or a
+    :class:`~repro.transport.CompressionPolicy`. Called per layer
+    repetition (the scan body slices the stacked leading dim away), so
+    ``x`` here never carries the reps dim.
+    """
+    policy = policy_for(round_to, grad_round_to)
+    if mesh_cfg.trivial:
+        if spec.kind == DIST:
+            return _T.quantize(x, policy)
+        return x
+    if spec.kind == REPL:
+        return x
+    if spec.kind == TP_SMALL:
+        return x[0]  # local block (1, *local_logical)
+    # DIST: (1, s_loc) or (s_loc,) local shard
+    flat = x.reshape(-1)
+    if mesh_cfg.dshards > 1:
+        full = _T.all_gather(flat, mesh_cfg.fsdp_axes, policy, 0)
+    else:
+        full = _T.quantize(flat, policy)
+    n = spec.n_local
+    if n != full.shape[0]:
+        full = lax.slice_in_dim(full, 0, n)
+    return full.reshape(spec.local_logical)
+
+
+# ---------------------------------------------------------------------------
+# weight-stationary placement (serving)
+# ---------------------------------------------------------------------------
+
+
+def placed_leaf(
+    x, spec: LeafSpec, mesh_cfg: MeshCfg, round_to, resident_dtype=None
+):
+    """Run the compressed gather ONCE, emitting per-TP-rank resident
+    logical weights (stacked leaves keep their reps dim). Decode steps
+    built with ``weight_stationary=True`` then contain no weight
+    collectives at all."""
+    policy = policy_for(round_to)
+
+    def cast(v):
+        return v.astype(resident_dtype) if resident_dtype is not None else v
+
+    if mesh_cfg.trivial:
+        if spec.kind == DIST:
+            return cast(_T.quantize(x, policy))
+        return cast(x)
+    if spec.kind == REPL:
+        return cast(x)
+    if spec.kind == TP_SMALL:
+        return cast(x[:, 0] if spec.stacked else x[0])
+    # DIST
+    axis = 1 if spec.stacked else 0
+    flat = x.reshape((spec.reps, -1) if spec.stacked else (-1,))
+    if mesh_cfg.dshards > 1:
+        full = _T.all_gather(flat, mesh_cfg.fsdp_axes, policy, axis)
+    else:
+        full = _T.quantize(flat, policy)
+    n = spec.n_local
+    if n != full.shape[axis]:
+        full = lax.slice_in_dim(full, 0, n, axis=axis)
+    lead = (spec.reps,) if spec.stacked else ()
+    return cast(full.reshape(lead + spec.local_logical))
+
+
+def placed_leaf_pspec(spec: LeafSpec, mesh_cfg: MeshCfg):
+    """PartitionSpec of a placed (resident) leaf: TP-sliced dims map to
+    the model axis, everything else replicated."""
+    lead = (None,) if spec.stacked else ()
+    dims: list[Any] = [None] * len(spec.local_logical)
+    if spec.meta.tp_dim is not None and spec.kind in (DIST, TP_SMALL):
+        dims[spec.meta.tp_dim] = mesh_cfg.model_axis
+    return P(*(lead + tuple(dims)))
+
+
+def materialize_placed_leaf(x, spec: LeafSpec, mesh_cfg: MeshCfg):
+    """Placed weights are already TP-local logical: identity consume."""
+    return x

@@ -29,6 +29,17 @@ LANES = 128
 _SHIFTS = (24, 16, 8, 0)
 
 
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Backend-aware dispatch: compiled on real TPU, interpret elsewhere.
+
+    ``None`` (the default everywhere) resolves at trace time; passing an
+    explicit bool pins the mode (tests force ``interpret=True``).
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
 def _bitpack_kernel(w_ref, out_ref, *, round_to: int):
     u = jax.lax.bitcast_convert_type(w_ref[...], jnp.uint32)
     for k in range(round_to):
@@ -42,7 +53,7 @@ def bitpack_2d(
     w: jnp.ndarray,
     round_to: int,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_rows: int = BLOCK_ROWS,
 ) -> jnp.ndarray:
     """Pack a ``(rows, 128)`` fp32 array into ``(round_to, rows, 128)`` u8 planes.
@@ -56,6 +67,7 @@ def bitpack_2d(
     if rows % block_rows:
         raise ValueError(f"rows ({rows}) must be a multiple of {block_rows}")
     grid = (rows // block_rows,)
+    interpret = resolve_interpret(interpret)
     return pl.pallas_call(
         functools.partial(_bitpack_kernel, round_to=round_to),
         grid=grid,

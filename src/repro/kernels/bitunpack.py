@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.bitpack import BLOCK_ROWS, LANES
+from repro.kernels.bitpack import BLOCK_ROWS, LANES, resolve_interpret
 
 _SHIFTS = (24, 16, 8, 0)
 
@@ -30,7 +30,7 @@ def _bitunpack_kernel(planes_ref, out_ref, *, round_to: int):
 def bitunpack_2d(
     planes: jnp.ndarray,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_rows: int = BLOCK_ROWS,
 ) -> jnp.ndarray:
     """Unpack ``(round_to, rows, 128)`` u8 planes to ``(rows, 128)`` fp32."""
@@ -40,6 +40,7 @@ def bitunpack_2d(
     if rows % block_rows:
         raise ValueError(f"rows ({rows}) must be a multiple of {block_rows}")
     grid = (rows // block_rows,)
+    interpret = resolve_interpret(interpret)
     return pl.pallas_call(
         functools.partial(_bitunpack_kernel, round_to=round_to),
         grid=grid,

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.bitpack import LANES
+from repro.kernels.bitpack import LANES, resolve_interpret
 
 NORM_BLOCK_ROWS = 512
 
@@ -31,7 +31,7 @@ def _l2norm_kernel(w_ref, acc_ref):
 def l2norm_sq_2d(
     w: jnp.ndarray,
     *,
-    interpret: bool = True,
+    interpret: bool | None = None,
     block_rows: int = NORM_BLOCK_ROWS,
 ) -> jnp.ndarray:
     """Σw² of a ``(rows, 128)`` fp32 array -> f32 scalar."""
@@ -41,6 +41,7 @@ def l2norm_sq_2d(
     if rows % block_rows:
         raise ValueError(f"rows ({rows}) must be a multiple of {block_rows}")
     grid = (rows // block_rows,)
+    interpret = resolve_interpret(interpret)
     out = pl.pallas_call(
         _l2norm_kernel,
         grid=grid,

@@ -1,11 +1,14 @@
 """Shape-agnostic jit'd wrappers around the ADT Pallas kernels.
 
 These accept arbitrary-shaped fp32 arrays, handle the pad-to-tile plumbing,
-and dispatch to either the Pallas kernel (interpret mode on CPU, compiled on
-real TPU) or the pure-jnp oracle in :mod:`repro.kernels.ref`.
+and dispatch to either the Pallas kernel or the pure-jnp oracle in
+:mod:`repro.kernels.ref`. The kernel path is backend-aware (compiled on
+real TPU, interpret elsewhere — see ``bitpack.resolve_interpret``); there
+is no hard-coded interpret mode.
 
 The ``impl`` switch exists because the distributed step functions lower on
 the CPU dry-run path where we want pure-HLO collectives with no callbacks;
+that dispatch now lives in :mod:`repro.transport` (``impl="auto"``), and
 kernel correctness is proven separately by the test suite.
 """
 from __future__ import annotations
@@ -48,7 +51,7 @@ def bitpack(
         tiles, _ = _to_tiles(w, BLOCK_ROWS)
         return ref.bitpack_ref(tiles, round_to, mode=mode, key=key)
     tiles, _ = _to_tiles(w, BLOCK_ROWS)
-    return bitpack_2d(tiles, round_to, interpret=True)
+    return bitpack_2d(tiles, round_to)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
@@ -56,7 +59,7 @@ def bitunpack(planes: jnp.ndarray, *, impl: str = "pallas") -> jnp.ndarray:
     """Unpack planes -> flat fp32 of the padded size (caller unpads)."""
     if impl == "ref":
         return ref.bitunpack_ref(planes).reshape(-1)
-    return bitunpack_2d(planes, interpret=True).reshape(-1)
+    return bitunpack_2d(planes).reshape(-1)
 
 
 @functools.partial(jax.jit, static_argnames=("round_to", "impl", "mode"))
@@ -82,4 +85,4 @@ def l2norm_sq(w: jnp.ndarray, *, impl: str = "pallas") -> jnp.ndarray:
     if impl == "ref":
         return ref.l2norm_sq_ref(w)
     tiles, _ = _to_tiles(w.astype(jnp.float32), NORM_BLOCK_ROWS)
-    return l2norm_sq_2d(tiles, interpret=True)
+    return l2norm_sq_2d(tiles)

@@ -75,7 +75,7 @@ def build_lowerable(cfg, shape, mesh_cfg, mesh, round_to, *, env_kw=None,
         step = make_train_step(
             cfg, mesh_cfg, mesh, spec_tree, round_tos, SGDConfig(),
             batch, dtype=dtype, env_kw=env_kw,
-            grad_round_to=opts.get("grad_round_to", 4),
+            grad_round_to=opts.get("grad_round_to"),
             accum_steps=opts.get("accum", 1),
         )
         mom = _sds_tree(storage)

@@ -19,6 +19,8 @@ import math
 import re
 from typing import Any
 
+from repro.transport import ring_wire_bytes
+
 PEAK_FLOPS = 197e12      # bf16 per chip
 HBM_BW = 819e9           # bytes/s per chip
 ICI_BW = 50e9            # bytes/s per link (we charge one link direction)
@@ -97,16 +99,14 @@ def parse_collectives(hlo_text: str) -> CollectiveStats:
             shape_bytes(sm.group(0)) for sm in _SHAPE_RE.finditer(paren)
         )
         n = _group_size(stripped)
-        if kind == "all-gather":
-            bytes_on_wire = out_bytes * (n - 1) // max(n, 1)
-        elif kind == "all-reduce":
-            bytes_on_wire = 2 * operand_bytes * (n - 1) // max(n, 1)
-        elif kind == "reduce-scatter":
-            bytes_on_wire = operand_bytes * (n - 1) // max(n, 1)
-        elif kind == "all-to-all":
-            bytes_on_wire = operand_bytes * (n - 1) // max(n, 1)
-        else:  # collective-permute
-            bytes_on_wire = operand_bytes
+        # ring model, shared with the transport policy accounting so the
+        # analytical and measured byte counts cannot drift; all-gather and
+        # all-to-all are charged on their output size per the formula's
+        # contract (matches hlo_cost.py)
+        payload = (
+            out_bytes if kind in ("all-gather", "all-to-all") else operand_bytes
+        )
+        bytes_on_wire = int(ring_wire_bytes(kind, payload, n))
         counts[kind] = counts.get(kind, 0) + 1
         wire[kind] = wire.get(kind, 0) + bytes_on_wire
     return CollectiveStats(counts, wire, sum(wire.values()))

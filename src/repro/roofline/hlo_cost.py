@@ -22,6 +22,8 @@ import math
 import re
 from functools import lru_cache
 
+from repro.transport import ring_wire_bytes
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
@@ -273,6 +275,10 @@ class HloModule:
                 total.flops += in_b / 4.0  # ~1 flop per input element
             elif op.startswith(("all-gather", "all-reduce", "reduce-scatter",
                                 "all-to-all", "collective-permute")):
+                if op.endswith("-done"):
+                    # async completion half: the wire traffic was charged
+                    # on the matching -start op
+                    continue
                 kind = op.replace("-start", "")
                 n = self._group_size(instr.rhs)
                 # The CPU backend promotes narrow-dtype collectives to f32
@@ -281,16 +287,11 @@ class HloModule:
                 in_eff = self._deconverted_bytes(comp, instr, in_b)
                 ratio = in_eff / in_b if in_b else 1.0
                 out_eff = out_b * ratio
-                if kind == "all-gather":
-                    w = out_eff * (n - 1) / n
-                elif kind == "all-reduce":
-                    w = 2 * in_eff * (n - 1) / n
-                elif kind == "reduce-scatter":
-                    w = in_eff * (n - 1) / n
-                elif kind == "all-to-all":
-                    w = out_eff * (n - 1) / n
-                else:
-                    w = in_eff
+                # ring model shared with the transport policy accounting
+                payload = (
+                    out_eff if kind in ("all-gather", "all-to-all") else in_eff
+                )
+                w = ring_wire_bytes(kind, payload, n)
                 total.wire[kind] = total.wire.get(kind, 0) + w
                 total.coll_counts[kind] = total.coll_counts.get(kind, 0) + 1
         return total

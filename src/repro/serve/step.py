@@ -24,6 +24,7 @@ from repro.dist.spec import (
 )
 from repro.models import model as M
 from repro.train.step import batch_pspecs, make_env, make_mat_fns
+from repro.transport import policy_for
 
 
 def cache_pspecs(cfg: ModelConfig, mesh_cfg: MeshCfg, shard_batch: bool,
@@ -175,11 +176,12 @@ def make_place_step(
     ``weight_stationary=True`` then contain no weight collectives at all.
 
     Returns (place_fn, placed_pspecs): ``placed = place_fn(storage)``."""
+    policies = tuple(policy_for(rt) for rt in round_tos)
 
     def _walk(storage_sub, spec_sub, g):
-        rt = round_tos[g]
+        pol = policies[g]
         return jax.tree_util.tree_map(
-            lambda x, s: placed_leaf(x, s, mesh_cfg, rt, resident_dtype),
+            lambda x, s: placed_leaf(x, s, mesh_cfg, pol, resident_dtype),
             storage_sub, spec_sub,
             is_leaf=lambda x: isinstance(x, LeafSpec),
         )
@@ -192,7 +194,7 @@ def make_place_step(
             )
         ]
         top = {
-            k: placed_leaf(storage[k], spec_tree[k], mesh_cfg, round_tos[-1],
+            k: placed_leaf(storage[k], spec_tree[k], mesh_cfg, policies[-1],
                            resident_dtype)
             for k in storage
             if k != "groups"

@@ -20,6 +20,7 @@ from repro.dist.spec import (
 )
 from repro.models.cnn import CNNConfig, cnn_loss, topk_error
 from repro.optim.sgd import SGDConfig, sgd_update
+from repro.transport import policy_for
 
 
 def build_cnn_spec_tree(params, metas, mesh_cfg: MeshCfg):
@@ -38,11 +39,12 @@ def cnn_to_storage(params, spec_tree, mesh_cfg: MeshCfg):
 
 def _mat(storage, spec_tree, mesh_cfg, groups, round_tos):
     """Materialize every layer with its own AWP format (per-layer mode)."""
+    policies = {name: policy_for(round_tos[g]) for name, g in groups.items()}
     out = {}
     for name, leafs in storage["layers"].items():
-        rt = round_tos[groups[name]]
+        pol = policies[name]
         out[name] = {
-            k: materialize_leaf(v, spec_tree["layers"][name][k], mesh_cfg, rt)
+            k: materialize_leaf(v, spec_tree["layers"][name][k], mesh_cfg, pol)
             for k, v in leafs.items()
         }
     return out

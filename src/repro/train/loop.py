@@ -14,7 +14,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.awp import AWPConfig, AWPController
-from repro.core.compressed import all_gather_wire_bytes
+from repro.transport import CompressionPolicy
 
 
 @dataclasses.dataclass
@@ -71,13 +71,13 @@ class Trainer:
     def wire_bytes(self, round_tos) -> int:
         total = 0
         for g, rt in enumerate(round_tos):
+            pol = CompressionPolicy(round_to=rt)
             n = self.gather_n
             if n <= 1:
                 # paper's host→device model: every weight moves once/batch
-                total += self.dist_elems[g] * rt
+                total += pol.host_device_bytes(self.dist_elems[g])
             else:
-                s_loc = self.dist_elems[g] // n
-                total += all_gather_wire_bytes(s_loc, n, rt)
+                total += pol.all_gather_wire_bytes(self.dist_elems[g] // n, n)
         return total
 
     # ------------------------------------------------------------------

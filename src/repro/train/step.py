@@ -30,6 +30,7 @@ from repro.dist.spec import (
 from repro.models.env import Env
 from repro.models import model as M
 from repro.optim.sgd import SGDConfig, sgd_update
+from repro.transport import policy_for
 
 
 def make_env(cfg: ModelConfig, mesh_cfg: MeshCfg, dtype=jnp.float32, **kw) -> Env:
@@ -52,41 +53,44 @@ def _dp_axes(mesh_cfg: MeshCfg):
 
 def make_mat_fns(
     spec_tree, mesh_cfg: MeshCfg, round_tos, dtype=jnp.float32,
-    grad_round_to: int = 4, placed: bool = False,
+    grad_round_to: int | None = None, placed: bool = False,
 ):
     """(mat_group, mat_top_factory) shared by train and serve steps.
 
     Materialized weights are cast to the compute dtype (fp32 faithful /
     bf16 beyond-paper+serving); the fp32 master stays in storage.
-    ``grad_round_to < 4`` compresses the backward reduce-scatter too
-    (beyond-paper). ``placed=True`` consumes pre-gathered weights (see
-    serve.place: weight-stationary decode)."""
+    Per-group wire behaviour is bundled into a
+    :class:`~repro.transport.CompressionPolicy` (``round_tos`` entries may
+    be ints or ready-made policies). ``grad_round_to < 4`` compresses the
+    backward reduce-scatter too (beyond-paper); the ``None`` default
+    keeps each ready-made policy's own grad format (ints get 4).
+    ``placed=True`` consumes pre-gathered weights (see serve.place:
+    weight-stationary decode)."""
+    policies = tuple(policy_for(rt, grad_round_to) for rt in round_tos)
 
     def _cast(x):
         return x.astype(dtype) if x.dtype == jnp.float32 else x
 
-    def _mat(x, s, rt):
+    def _mat(x, s, pol):
         if placed:
             return _cast(materialize_placed_leaf(x, s, mesh_cfg))
-        return _cast(
-            materialize_leaf(x, s, mesh_cfg, rt, grad_round_to=grad_round_to)
-        )
+        return _cast(materialize_leaf(x, s, mesh_cfg, pol))
 
     def mat_group(g, key, storage):
         specs = spec_tree["groups"][g][key]
-        rt = round_tos[g]
+        pol = policies[g]
         return jax.tree_util.tree_map(
-            lambda x, s: _mat(x, s, rt),
+            lambda x, s: _mat(x, s, pol),
             storage,
             specs,
             is_leaf=lambda x: isinstance(x, LeafSpec),
         )
 
     def mat_top_factory(storage):
-        rt = round_tos[-1]
+        pol = policies[-1]
 
         def mat_top(name):
-            return _mat(storage[name], spec_tree[name], rt)
+            return _mat(storage[name], spec_tree[name], pol)
 
         return mat_top
 
@@ -185,7 +189,7 @@ def make_train_step(
     dtype=jnp.float32,
     aux_coef: float = 1e-2,
     env_kw: dict | None = None,
-    grad_round_to: int = 4,
+    grad_round_to: int | None = None,
     accum_steps: int = 1,
 ):
     """Returns jit-able ``step(storage, momentum, batch, lr) -> (storage',

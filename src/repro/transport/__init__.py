@@ -1,0 +1,41 @@
+"""Unified compression transport layer (see docs/transport.md).
+
+Public surface:
+
+  * :class:`CompressionPolicy` / :func:`policy_for` — wire-format policy
+    and the single source of truth for wire-byte accounting.
+  * :class:`Transport` and the functional :func:`all_gather`,
+    :func:`reduce_scatter`, :func:`quantize` — the pack -> collective ->
+    unpack pipelines with ADT semantics and training-ready VJPs.
+  * :func:`pack_planes` / :func:`unpack_planes` — kernel dispatch
+    (Pallas compiled on TPU / interpret off-TPU, or the jnp oracle).
+"""
+from repro.transport.policy import (
+    CompressionPolicy,
+    policy_for,
+    ring_wire_bytes,
+)
+from repro.transport.transport import (
+    Transport,
+    all_gather,
+    axis_size,
+    pack_planes,
+    quantize,
+    reduce_scatter,
+    resolve_impl,
+    unpack_planes,
+)
+
+__all__ = [
+    "CompressionPolicy",
+    "Transport",
+    "all_gather",
+    "axis_size",
+    "pack_planes",
+    "policy_for",
+    "quantize",
+    "reduce_scatter",
+    "resolve_impl",
+    "ring_wire_bytes",
+    "unpack_planes",
+]

@@ -1,0 +1,131 @@
+"""CompressionPolicy — the single source of truth for ADT wire formats.
+
+Every component that either *moves* compressed bytes (the transport
+collectives) or *accounts* for them (the training loop's wire-byte log,
+the roofline model, the benchmark harness) derives its numbers from this
+module, so the analytical model and the implementation cannot drift —
+the failure mode that ``test_collective_wire_bytes`` exists to catch.
+
+A policy describes one precision group's transfer behaviour:
+
+  * ``round_to``      — bytes kept per fp32 weight on the gather path
+                        (paper §III: 1=fp8e7, 2=bf16, 3=bf24, 4=fp32),
+  * ``mode``          — rounding applied before truncation on that path,
+  * ``grad_round_to`` / ``grad_mode`` — the same for the backward
+                        reduce-scatter (4 = paper-faithful uncompressed),
+  * ``impl``          — kernel dispatch: ``auto`` picks the Pallas kernels
+                        on TPU (compiled) and the pure-jnp oracle on CPU;
+                        ``pallas`` forces the kernels (interpret off-TPU),
+                        ``ref`` forces the oracle,
+  * ``chunks``        — >1 splits the weight gather into that many plane
+                        blocks so pack / wire / unpack of successive
+                        blocks overlap (double buffering).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+VALID_ROUND_TO = (1, 2, 3, 4)
+VALID_MODES = ("truncate", "nearest", "stochastic")
+VALID_IMPLS = ("auto", "pallas", "ref")
+FP32_BYTES = 4
+
+
+def ring_wire_bytes(kind: str, payload_bytes: float, group_size: int) -> float:
+    """Per-device wire bytes of one ring-algorithm collective.
+
+    ``payload_bytes`` is the *output* size for all-gather / all-to-all,
+    the *input* size for all-reduce / reduce-scatter, and the transferred
+    size for collective-permute. This is the one formula shared by the
+    transport accounting and the HLO cost analyzer.
+    """
+    n = max(int(group_size), 1)
+    kind = kind.replace("-start", "")
+    if kind == "all-gather":
+        return payload_bytes * (n - 1) / n
+    if kind == "all-reduce":
+        return 2.0 * payload_bytes * (n - 1) / n
+    if kind in ("reduce-scatter", "all-to-all"):
+        return payload_bytes * (n - 1) / n
+    if kind == "collective-permute":
+        return float(payload_bytes)
+    raise ValueError(f"unknown collective kind {kind!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionPolicy:
+    """Wire format + dispatch choices for one precision group."""
+
+    round_to: int = 4
+    grad_round_to: int = 4
+    mode: str = "truncate"
+    grad_mode: str = "nearest"
+    impl: str = "auto"
+    chunks: int = 1
+
+    def __post_init__(self):
+        if self.round_to not in VALID_ROUND_TO:
+            raise ValueError(f"round_to must be in {VALID_ROUND_TO}")
+        if self.grad_round_to not in VALID_ROUND_TO:
+            raise ValueError(f"grad_round_to must be in {VALID_ROUND_TO}")
+        if self.mode not in VALID_MODES:
+            raise ValueError(f"mode must be in {VALID_MODES}")
+        if self.grad_mode not in VALID_MODES:
+            raise ValueError(f"grad_mode must be in {VALID_MODES}")
+        if self.impl not in VALID_IMPLS:
+            raise ValueError(f"impl must be in {VALID_IMPLS}")
+        if self.chunks < 1:
+            raise ValueError("chunks must be >= 1")
+
+    # -- format properties ------------------------------------------------
+    @property
+    def compresses(self) -> bool:
+        return self.round_to < FP32_BYTES
+
+    @property
+    def compresses_grads(self) -> bool:
+        return self.grad_round_to < FP32_BYTES
+
+    @property
+    def bytes_per_element(self) -> int:
+        """Wire bytes per fp32 element on the weight path."""
+        return self.round_to
+
+    @property
+    def wire_fraction(self) -> float:
+        """Fraction of fp32 bytes that actually hit the wire (weights)."""
+        return self.round_to / FP32_BYTES
+
+    # -- canonical byte accounting ---------------------------------------
+    def all_gather_wire_bytes(self, s_local: int, axis_size: int) -> int:
+        """Bytes received per device for one compressed all-gather of a
+        shard of ``s_local`` fp32 elements over ``axis_size`` devices."""
+        payload = axis_size * s_local * self.round_to
+        return round(ring_wire_bytes("all-gather", payload, axis_size))
+
+    def reduce_scatter_wire_bytes(self, s_local: int, axis_size: int) -> int:
+        """Bytes received per device for one (compressed) reduce-scatter
+        producing an ``s_local``-element shard."""
+        payload = axis_size * s_local * self.grad_round_to
+        return round(ring_wire_bytes("reduce-scatter", payload, axis_size))
+
+    def host_device_bytes(self, elems: int) -> int:
+        """Paper's host->device model: every weight moves once per batch."""
+        return elems * self.round_to
+
+
+def policy_for(
+    round_to, grad_round_to: int | None = None, **overrides
+) -> CompressionPolicy:
+    """Coerce an int ``round_to`` (legacy call sites) or an existing policy
+    into a CompressionPolicy, optionally overriding fields."""
+    if isinstance(round_to, CompressionPolicy):
+        pol = round_to
+        if grad_round_to is not None and grad_round_to != pol.grad_round_to:
+            overrides = {"grad_round_to": grad_round_to, **overrides}
+        return dataclasses.replace(pol, **overrides) if overrides else pol
+    return CompressionPolicy(
+        round_to=int(round_to),
+        grad_round_to=4 if grad_round_to is None else int(grad_round_to),
+        **overrides,
+    )

@@ -1,0 +1,302 @@
+"""The compression transport: pack -> collective -> unpack pipelines.
+
+This module owns every compressed byte that crosses a mesh link:
+
+  * :func:`all_gather` — weight path. fp32 shard -> byte planes (Pallas
+    bitpack on TPU, oracle on CPU) -> plane all-gather over the FSDP axes
+    -> bitunpack. Its custom VJP is a (optionally compressed)
+    reduce-scatter, so training steps just call it and get the paper's
+    weight/gradient motion for free.
+  * :func:`reduce_scatter` — gradient path (beyond-paper): pack the chunk
+    destined for each peer, ``all_to_all`` the planes, unpack and reduce
+    locally in fp32.
+  * :func:`quantize` — single-device format truncation (pack∘unpack) with
+    a straight-through VJP: what the compute side sees when there is no
+    collective to ride on.
+
+Kernel dispatch is backend-aware: ``CompressionPolicy.impl="auto"`` lowers
+the Pallas kernels compiled on TPU and falls back to the pure-jnp oracle on
+CPU (where the distributed steps want pure-HLO collectives); ``"pallas"``
+forces the kernels, running them in interpret mode off-TPU. Both impls are
+bit-exact by construction (same byte-plane semantics), which
+``tests/test_transport.py`` locks in.
+
+The chunked path (``policy.chunks > 1``) splits the gather into
+independent pack -> all-gather -> unpack block pipelines so XLA's async
+collectives can overlap block k's wire time with block k±1's pack/unpack
+(double buffering), then re-interleaves the blocks to the exact layout of
+the unchunked gather.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Hashable, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ref
+from repro.kernels.bitpack import BLOCK_ROWS, LANES, bitpack_2d
+from repro.kernels.bitunpack import bitunpack_2d
+from repro.transport.policy import CompressionPolicy, policy_for
+from repro.utils.trees import round_up
+
+AxisNames = Hashable | Sequence[Hashable]
+
+
+# ---------------------------------------------------------------------------
+# mesh-axis helpers
+# ---------------------------------------------------------------------------
+
+
+def _one_axis_size(name) -> int:
+    if hasattr(lax, "axis_size"):  # jax >= 0.5
+        return lax.axis_size(name)
+    import jax.core as jcore  # 0.4.x: axis_frame resolves to the bound size
+
+    frame = jcore.axis_frame(name)
+    return int(getattr(frame, "size", frame))
+
+
+def axis_size(axis_names: AxisNames) -> int:
+    """Static total size of one axis name or a tuple of axis names."""
+    if isinstance(axis_names, (tuple, list)):
+        total = 1
+        for a in axis_names:
+            total *= _one_axis_size(a)
+        return total
+    return _one_axis_size(axis_names)
+
+
+def resolve_impl(impl: str, mode: str = "truncate") -> str:
+    """auto -> pallas on TPU, ref on CPU. Rounding modes other than
+    truncation need PRNG/word-level arithmetic and live in the ref path."""
+    if mode != "truncate":
+        return "ref"
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+# ---------------------------------------------------------------------------
+# pack / unpack dispatch (exact-shape planes)
+# ---------------------------------------------------------------------------
+
+
+def pack_planes(
+    w: jnp.ndarray,
+    round_to: int,
+    *,
+    mode: str = "truncate",
+    impl: str = "auto",
+    key=None,
+) -> jnp.ndarray:
+    """fp32 array (any shape) -> uint8 byte planes ``(round_to, *w.shape)``.
+
+    Plane 0 is the most significant byte. The Pallas path pads to the
+    kernel's tile internally and slices back, so the planes returned are
+    always exact-shape — safe to feed straight into a collective.
+    """
+    if resolve_impl(impl, mode) == "ref":
+        return ref.bitpack_ref(w, round_to, mode=mode, key=key)
+    flat = w.reshape(-1)
+    n = flat.shape[0]
+    tile = BLOCK_ROWS * LANES
+    padded = round_up(max(n, 1), tile)
+    flat = jnp.pad(flat, (0, padded - n))
+    # interpret mode resolves inside the kernel wrapper (backend-aware)
+    planes = bitpack_2d(flat.reshape(-1, LANES), round_to)
+    return planes.reshape(round_to, padded)[:, :n].reshape(
+        (round_to,) + w.shape
+    )
+
+
+def unpack_planes(planes: jnp.ndarray, *, impl: str = "auto") -> jnp.ndarray:
+    """uint8 byte planes ``(round_to, *shape)`` -> fp32 ``shape``."""
+    if resolve_impl(impl) == "ref":
+        return ref.bitunpack_ref(planes)
+    round_to = planes.shape[0]
+    shape = planes.shape[1:]
+    flat = planes.reshape(round_to, -1)
+    n = flat.shape[1]
+    tile = BLOCK_ROWS * LANES
+    padded = round_up(max(n, 1), tile)
+    flat = jnp.pad(flat, ((0, 0), (0, padded - n)))
+    out = bitunpack_2d(flat.reshape(round_to, -1, LANES))
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# forward implementations
+# ---------------------------------------------------------------------------
+
+
+def _all_gather_impl(w, axis_names, policy: CompressionPolicy, axis: int):
+    if not policy.compresses:
+        return lax.all_gather(w, axis_names, axis=axis, tiled=True)
+    if (
+        policy.chunks > 1
+        and axis == 0
+        and w.ndim == 1
+        and w.shape[0] % policy.chunks == 0
+    ):
+        return _chunked_all_gather(w, axis_names, policy)
+    planes = pack_planes(
+        w, policy.round_to, mode=policy.mode, impl=policy.impl
+    )
+    planes_g = lax.all_gather(planes, axis_names, axis=axis + 1, tiled=True)
+    return unpack_planes(planes_g, impl=policy.impl)
+
+
+def _chunked_all_gather(w, axis_names, policy: CompressionPolicy):
+    """Double-buffered gather: independent per-block plane pipelines,
+    re-interleaved to match the unchunked layout exactly."""
+    n_chunks = policy.chunks
+    loc = w.shape[0] // n_chunks
+    gathered = []
+    for c in range(n_chunks):
+        piece = lax.slice_in_dim(w, c * loc, (c + 1) * loc)
+        planes = pack_planes(
+            piece, policy.round_to, mode=policy.mode, impl=policy.impl
+        )
+        planes_g = lax.all_gather(planes, axis_names, axis=1, tiled=True)
+        gathered.append(unpack_planes(planes_g, impl=policy.impl))
+    # gathered[c] = concat_d shard_d[block c]; the full gather is
+    # concat_d concat_c shard_d[block c] — transpose (chunk, device) out.
+    n_dev = axis_size(axis_names)
+    stacked = jnp.stack(gathered, 0).reshape(n_chunks, n_dev, loc)
+    return jnp.transpose(stacked, (1, 0, 2)).reshape(-1)
+
+
+def _reduce_scatter_impl(g, axis_names, policy: CompressionPolicy, axis: int):
+    if not policy.compresses_grads:
+        return lax.psum_scatter(
+            g, axis_names, scatter_dimension=axis, tiled=True
+        )
+    if axis != 0 or g.ndim != 1:
+        raise NotImplementedError(
+            "compressed reduce-scatter supports flat (S,) arrays only"
+        )
+    size = axis_size(axis_names)
+    s = g.shape[0]
+    if s % size:
+        raise ValueError(f"flat size {s} not divisible by axis size {size}")
+    chunks = g.reshape(size, s // size)
+    planes = pack_planes(
+        chunks, policy.grad_round_to, mode=policy.grad_mode, impl=policy.impl
+    )
+    # (grad_round_to, size, S_loc): exchange the `size` dim; after the
+    # all_to_all (single or multi axis) the exchanged dim stays `size`.
+    planes_x = lax.all_to_all(
+        planes, axis_names, split_axis=1, concat_axis=1, tiled=False
+    )
+    contribs = unpack_planes(planes_x, impl=policy.impl)
+    return jnp.sum(contribs, axis=0)
+
+
+def _quantize_impl(w, policy: CompressionPolicy, key=None):
+    if not policy.compresses and policy.mode == "truncate":
+        return w
+    planes = pack_planes(
+        w, policy.round_to, mode=policy.mode, impl=policy.impl, key=key
+    )
+    return unpack_planes(planes, impl=policy.impl)
+
+
+# ---------------------------------------------------------------------------
+# differentiable entry points
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def all_gather(
+    w_local: jnp.ndarray,
+    axis_names: AxisNames,
+    policy: CompressionPolicy,
+    axis: int = 0,
+) -> jnp.ndarray:
+    """Compressed all-gather with a reduce-scatter VJP.
+
+    Forward moves ``policy.round_to`` of every fp32 byte over
+    ``axis_names``; backward reduce-scatters the cotangent at
+    ``policy.grad_round_to`` (4 = uncompressed, paper-faithful). The
+    format itself is not differentiated — straight-through, like the
+    paper's fp32 master-weight update.
+    """
+    return _all_gather_impl(w_local, axis_names, policy, axis)
+
+
+def _ag_fwd(w_local, axis_names, policy, axis):
+    return _all_gather_impl(w_local, axis_names, policy, axis), None
+
+
+def _ag_bwd(axis_names, policy, axis, _, g):
+    return (_reduce_scatter_impl(g, axis_names, policy, axis),)
+
+
+all_gather.defvjp(_ag_fwd, _ag_bwd)
+
+
+def reduce_scatter(
+    g: jnp.ndarray, axis_names: AxisNames, policy: CompressionPolicy
+) -> jnp.ndarray:
+    """Compressed reduce-scatter of a flat fp32 ``(S,)`` -> ``(S_loc,)``.
+
+    Wire format is ``policy.grad_round_to`` bytes; rounding defaults to
+    *nearest* (not the paper's truncation) because gradient sums are
+    bias-sensitive.
+    """
+    return _reduce_scatter_impl(g, axis_names, policy, 0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def quantize(w: jnp.ndarray, policy: CompressionPolicy) -> jnp.ndarray:
+    """Format truncation (pack∘unpack) with a straight-through VJP."""
+    return _quantize_impl(w, policy)
+
+
+def _q_fwd(w, policy):
+    return _quantize_impl(w, policy), None
+
+
+def _q_bwd(policy, _, g):
+    return (g,)
+
+
+quantize.defvjp(_q_fwd, _q_bwd)
+
+
+# ---------------------------------------------------------------------------
+# object API
+# ---------------------------------------------------------------------------
+
+
+class Transport:
+    """Pack -> collective -> unpack pipeline bound to a set of mesh axes.
+
+    The functional forms above are what the custom-VJP machinery uses;
+    this object is the ergonomic entry point for code that talks to one
+    axis group repeatedly (steps, tests, benchmarks)::
+
+        t = Transport(mesh_cfg.fsdp_axes)
+        w_full = t.all_gather(w_shard, policy)       # differentiable
+        g_shard = t.reduce_scatter(g_full, policy)
+    """
+
+    def __init__(self, axis_names: AxisNames):
+        if isinstance(axis_names, list):
+            axis_names = tuple(axis_names)
+        self.axis_names = axis_names
+
+    def all_gather(self, w, policy, *, axis: int = 0):
+        return all_gather(w, self.axis_names, policy_for(policy), axis)
+
+    def reduce_scatter(self, g, policy):
+        return reduce_scatter(g, self.axis_names, policy_for(policy))
+
+    def quantize(self, w, policy):
+        return quantize(w, policy_for(policy))
+
+    def axis_size(self) -> int:
+        return axis_size(self.axis_names)

@@ -1,0 +1,117 @@
+"""Minimal, dependency-free fallback for the `hypothesis` API surface this
+suite uses (given / settings / a handful of strategies).
+
+Loaded by ``conftest.py`` ONLY when the real package is missing (e.g. an
+offline container). It is not a shrinker — just a deterministic seeded
+sampler so the property tests still execute their invariants with a few
+dozen examples. CI installs real hypothesis via ``pip install -e .[dev]``.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import struct
+import types
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(seq) -> _Strategy:
+    seq = list(seq)
+    return _Strategy(lambda rng: rng.choice(seq))
+
+
+def floats(
+    min_value=None,
+    max_value=None,
+    allow_nan: bool = True,
+    allow_infinity: bool = True,
+    width: int = 64,
+) -> _Strategy:
+    def draw(rng):
+        if min_value is not None or max_value is not None:
+            lo = (
+                float(min_value)
+                if min_value is not None
+                else float(max_value) - 1000.0
+            )
+            hi = (
+                float(max_value)
+                if max_value is not None
+                else float(min_value) + 1000.0
+            )
+            return rng.uniform(lo, hi)
+        # unbounded: mix exact specials with log-scale magnitudes, kept
+        # finite and representable at the requested width
+        roll = rng.random()
+        if roll < 0.1:
+            return rng.choice([0.0, -0.0, 1.0, -1.0])
+        sign = -1.0 if rng.random() < 0.5 else 1.0
+        exp_hi = 37 if width == 32 else 300
+        val = sign * 10.0 ** rng.uniform(-exp_hi, exp_hi)
+        if width == 32:  # round-trip through f32 so the value is exact
+            val = struct.unpack("f", struct.pack("f", val))[0]
+        return val
+
+    return _Strategy(draw)
+
+
+def lists(elements: _Strategy, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    def draw(rng):
+        size = rng.randint(min_size, max_size)
+        return [elements.draw(rng) for _ in range(size)]
+
+    return _Strategy(draw)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            max_examples = getattr(
+                wrapper, "_stub_max_examples",
+                getattr(fn, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES),
+            )
+            # stable digest, not hash(): str hashing is randomized per
+            # process and would make failing draws unreproducible
+            rng = random.Random(
+                zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            )
+            for _ in range(max_examples):
+                drawn = [s.draw(rng) for s in strategies]
+                fn(*args, *drawn, **kwargs)
+
+        # the drawn params are filled here, not by pytest: hide them so
+        # the test runner does not mistake them for fixtures
+        wrapper.__signature__ = inspect.Signature()
+        del wrapper.__wrapped__
+        return wrapper
+
+    return deco
+
+
+strategies = types.SimpleNamespace(
+    integers=integers,
+    floats=floats,
+    lists=lists,
+    sampled_from=sampled_from,
+)

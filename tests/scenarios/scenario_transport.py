@@ -1,0 +1,146 @@
+"""Subprocess scenario: the transport layer's collective paths on an
+8-device host mesh — Transport dispatch (both impls), chunked
+double-buffered gather, multi-axis reduce-scatter, and the compressed
+backward path (grad_round_to < 4)."""
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.shard import shard_map
+from repro.kernels import ref
+from repro.transport import CompressionPolicy, Transport
+
+
+def main():
+    devs = np.array(jax.devices())
+    mesh = Mesh(devs.reshape(4, 2), ("data", "model"))
+    mesh3 = Mesh(devs.reshape(2, 2, 2), ("pod", "data", "model"))
+    rng = np.random.default_rng(0)
+    S = 4 * 1024
+    w = jnp.asarray(rng.normal(0, 1, (S,)).astype(np.float32))
+
+    # ---- Transport.all_gather, both impls, all round_tos --------------
+    for impl in ("ref", "pallas"):
+        for rt in (1, 2, 3, 4):
+            pol = CompressionPolicy(round_to=rt, impl=impl)
+            t = Transport("data")
+
+            f = shard_map(
+                lambda x: t.all_gather(x, pol),
+                mesh=mesh, in_specs=P("data"), out_specs=P(None),
+            )
+            got = np.asarray(jax.jit(f)(w))
+            want = np.asarray(ref.quantize_ref(w, rt))
+            np.testing.assert_array_equal(
+                got, want, err_msg=f"impl={impl} rt={rt}"
+            )
+    print("  transport gather: ref/pallas x rt{1..4} exact OK")
+
+    # ---- chunked double-buffered gather matches unchunked -------------
+    for chunks in (2, 4, 8):
+        pol = CompressionPolicy(round_to=2, chunks=chunks)
+        t = Transport("data")
+        f = shard_map(
+            lambda x: t.all_gather(x, pol),
+            mesh=mesh, in_specs=P("data"), out_specs=P(None),
+        )
+        got = np.asarray(jax.jit(f)(w))
+        np.testing.assert_array_equal(
+            got, np.asarray(ref.quantize_ref(w, 2)),
+            err_msg=f"chunks={chunks}",
+        )
+    print("  chunked gather: interleave-exact for 2/4/8 blocks OK")
+
+    # ---- multi-axis gather + multi-axis compressed reduce-scatter -----
+    t3 = Transport(("pod", "data"))
+    f = shard_map(
+        lambda x: t3.all_gather(x, CompressionPolicy(round_to=2)),
+        mesh=mesh3, in_specs=P(("pod", "data")), out_specs=P(None),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(f)(w)), np.asarray(ref.quantize_ref(w, 2))
+    )
+
+    D = 4  # pod x data
+    gmat = jnp.asarray(rng.normal(0, 1, (D, S)).astype(np.float32))
+
+    def rs(g_all):
+        i = jax.lax.axis_index(("pod", "data"))
+        return t3.reduce_scatter(
+            g_all[i], CompressionPolicy(grad_round_to=2)
+        )
+
+    f = shard_map(
+        rs, mesh=mesh3, in_specs=P(None, None),
+        out_specs=P(("pod", "data")),
+    )
+    got = np.asarray(jax.jit(f)(gmat))
+    want = np.sum(np.asarray(gmat), axis=0)
+    tol = np.abs(want) * 2**-7 + 4 * 2**-7  # rt=2 nearest: ~2^-8 relative
+    assert np.all(np.abs(got - want) <= tol), np.max(np.abs(got - want) - tol)
+
+    # rt=4 multi-axis is exact
+    def rs4(g_all):
+        i = jax.lax.axis_index(("pod", "data"))
+        return t3.reduce_scatter(g_all[i], CompressionPolicy())
+
+    f4 = shard_map(
+        rs4, mesh=mesh3, in_specs=P(None, None),
+        out_specs=P(("pod", "data")),
+    )
+    np.testing.assert_allclose(np.asarray(jax.jit(f4)(gmat)), want, rtol=1e-6)
+    print("  multi-axis (pod,data) gather + reduce-scatter OK")
+
+    # ---- compressed backward path: grad_round_to < 4 ------------------
+    D = 4
+    coef = jnp.asarray(rng.normal(0, 1, (D, S)).astype(np.float32))
+    pol_cg = CompressionPolicy(round_to=2, grad_round_to=2)
+    t = Transport("data")
+
+    def loss_fn(w_local, coef_row):
+        w_full = t.all_gather(w_local, pol_cg)
+        return jnp.sum(w_full * coef_row) / D
+
+    def per_shard(w_local, coef_shard):
+        return jax.grad(loss_fn)(w_local, coef_shard[0])
+
+    f = shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P("data"), P("data", None)), out_specs=P("data"),
+    )
+    got = np.asarray(jax.jit(f)(w, coef)).reshape(-1)
+    want_full = np.sum(np.asarray(coef), axis=0) / D
+    # the cotangent rides a rt=2 nearest-rounded reduce-scatter: each of
+    # the D contributions carries ~2^-8 relative format error
+    tol = np.abs(want_full) * 2**-7 + D * 2**-7
+    assert np.all(np.abs(got - want_full) <= tol), np.max(
+        np.abs(got - want_full) - tol
+    )
+
+    # and grad_round_to=4 (paper-faithful) stays exact to fp tolerance
+    pol_ex = CompressionPolicy(round_to=2, grad_round_to=4)
+
+    def loss_ex(w_local, coef_row):
+        return jnp.sum(t.all_gather(w_local, pol_ex) * coef_row) / D
+
+    f = shard_map(
+        lambda wl, cs: jax.grad(loss_ex)(wl, cs[0]),
+        mesh=mesh, in_specs=(P("data"), P("data", None)),
+        out_specs=P("data"),
+    )
+    got = np.asarray(jax.jit(f)(w, coef)).reshape(-1)
+    np.testing.assert_allclose(got, want_full, rtol=1e-6)
+    print("  compressed VJP (grad_round_to=2) within format tolerance OK")
+
+    print("scenario_transport OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,6 +40,25 @@ def test_algorithm1_fires_after_interval():
     assert np.all(c.state.counters == 0)
 
 
+def test_algorithm1_consecutive_not_cumulative():
+    """Regression: a miss must reset the counter. With a cumulative count
+    an alternating hit/miss norm trajectory (noisy training) would fire
+    after 2*INTERVAL steps even though no INTERVAL *consecutive* hits ever
+    happen (Algorithm 1, paper §II)."""
+    c = AWPController(1, AWPConfig(threshold=-0.01, interval=3))
+    n = 100.0
+    for i in range(40):
+        n *= 0.97 if i % 2 == 0 else 1.03  # hit, miss, hit, miss, ...
+        c.update([n**2])
+    assert c.round_to == (1,)
+    assert c.state.counters[0] <= 1
+    # and a genuine consecutive run right after the noise still fires
+    for _ in range(3):
+        n *= 0.97
+        c.update([n**2])
+    assert c.round_to == (2,)
+
+
 def test_algorithm1_no_fire_when_growing():
     c = AWPController(1, AWPConfig(threshold=-0.01, interval=2))
     n = 10.0

@@ -74,16 +74,21 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
+from repro.dist.shard import shard_map
 from repro.roofline.hlo_cost import analyze_hlo
+from repro.transport import CompressionPolicy
 mesh = Mesh(np.array(jax.devices()).reshape(4), ("d",))
 def f(x):
     return jax.lax.all_gather(x, "d", axis=0, tiled=True)
-sm = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(), check_vma=False)
+sm = shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P(None))
 x = jnp.zeros((4096,), jnp.float32)
 txt = jax.jit(sm).lower(x).compile().as_text()
 c = analyze_hlo(txt)
-# out = 4096 f32 = 16384 bytes; ring wire = 16384 * 3/4 = 12288
-assert abs(c.wire.get("all-gather", 0) - 12288) < 1, c.wire
+# expected bytes come from the SAME policy accounting the trainer logs:
+# fp32 (round_to=4), 1024-element local shard, 4 devices -> 3*1024*4
+want = CompressionPolicy(round_to=4).all_gather_wire_bytes(1024, 4)
+assert want == 12288, want
+assert abs(c.wire.get("all-gather", 0) - want) < 1, (c.wire, want)
 print("OK")
 """
     env = dict(os.environ)

@@ -1,0 +1,137 @@
+"""Transport layer unit tests: policy accounting + kernel dispatch.
+
+The pallas-vs-ref equivalence here runs through the *Transport dispatch*
+(``impl="pallas"`` forces the kernels — interpret mode off-TPU — and
+``impl="ref"`` the jnp oracle); the multi-device collective paths are
+covered by ``tests/scenarios/scenario_transport.py``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compressed import (
+    all_gather_wire_bytes,
+    psum_scatter_wire_bytes,
+)
+from repro.kernels import ref
+from repro.transport import (
+    CompressionPolicy,
+    pack_planes,
+    policy_for,
+    quantize,
+    resolve_impl,
+    ring_wire_bytes,
+    unpack_planes,
+)
+
+ROUND_TOS = (1, 2, 3, 4)
+SHAPES = [(7,), (130,), (64, 33), (3, 5, 7), (1,), (40000,), (256, 128)]
+
+
+def _rand(shape, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(0, scale, shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# policy
+# ---------------------------------------------------------------------------
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        CompressionPolicy(round_to=5)
+    with pytest.raises(ValueError):
+        CompressionPolicy(grad_round_to=0)
+    with pytest.raises(ValueError):
+        CompressionPolicy(mode="floor")
+    with pytest.raises(ValueError):
+        CompressionPolicy(impl="cuda")
+    with pytest.raises(ValueError):
+        CompressionPolicy(chunks=0)
+
+
+def test_policy_for_coercion():
+    p = policy_for(2)
+    assert p.round_to == 2 and p.grad_round_to == 4
+    p2 = policy_for(p, grad_round_to=2)
+    assert p2.round_to == 2 and p2.grad_round_to == 2
+    assert policy_for(p) is p
+
+
+def test_policy_wire_accounting_matches_legacy_helpers():
+    """core.compressed wire helpers must be pure views of the policy."""
+    for rt in ROUND_TOS:
+        pol = CompressionPolicy(round_to=rt, grad_round_to=rt)
+        for s_loc, n in [(1024, 4), (333, 7), (65536, 256)]:
+            assert (
+                all_gather_wire_bytes(s_loc, n, rt)
+                == pol.all_gather_wire_bytes(s_loc, n)
+                == (n - 1) * s_loc * rt
+            )
+            assert (
+                psum_scatter_wire_bytes(s_loc, n, rt)
+                == pol.reduce_scatter_wire_bytes(s_loc, n)
+                == (n - 1) * s_loc * rt
+            )
+        assert pol.host_device_bytes(1000) == 1000 * rt
+        assert pol.wire_fraction == rt / 4.0
+
+
+def test_ring_formula_is_shared_source_of_truth():
+    # the HLO analyzers charge collectives with the same ring model the
+    # policy derives its byte counts from
+    assert ring_wire_bytes("all-gather", 16384, 4) == 12288
+    assert ring_wire_bytes("all-reduce", 100, 4) == 150
+    assert ring_wire_bytes("reduce-scatter", 100, 4) == 75
+    assert ring_wire_bytes("collective-permute", 42, 9) == 42
+    with pytest.raises(ValueError):
+        ring_wire_bytes("broadcast", 1, 2)
+
+
+def test_resolve_impl_backend_aware():
+    # no hard-coded interpret: "auto" picks by backend, rounding modes
+    # that need PRNG plumbing always take the ref path
+    expected = "pallas" if jax.default_backend() == "tpu" else "ref"
+    assert resolve_impl("auto") == expected
+    assert resolve_impl("pallas") == "pallas"
+    assert resolve_impl("ref") == "ref"
+    assert resolve_impl("pallas", mode="stochastic") == "ref"
+
+
+# ---------------------------------------------------------------------------
+# pallas-vs-ref equivalence through the dispatch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("round_to", ROUND_TOS)
+@pytest.mark.parametrize("shape", SHAPES)
+def test_pack_unpack_pallas_matches_ref(shape, round_to):
+    w = _rand(shape, seed=round_to, scale=2.0)
+    planes_p = pack_planes(w, round_to, impl="pallas")
+    planes_r = pack_planes(w, round_to, impl="ref")
+    assert planes_p.shape == (round_to,) + shape
+    np.testing.assert_array_equal(np.asarray(planes_p), np.asarray(planes_r))
+    out_p = unpack_planes(planes_p, impl="pallas")
+    out_r = unpack_planes(planes_r, impl="ref")
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_r))
+    np.testing.assert_array_equal(
+        np.asarray(out_r), np.asarray(ref.quantize_ref(w, round_to))
+    )
+
+
+@pytest.mark.parametrize("impl", ["pallas", "ref", "auto"])
+@pytest.mark.parametrize("round_to", ROUND_TOS)
+def test_quantize_dispatch_matches_oracle(round_to, impl):
+    w = _rand((4097,), seed=11 * round_to, scale=3.0)
+    got = quantize(w, CompressionPolicy(round_to=round_to, impl=impl))
+    want = ref.quantize_ref(w, round_to)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_quantize_straight_through_grad():
+    w = _rand((512,), seed=3)
+    pol = CompressionPolicy(round_to=2)
+    g = jax.grad(lambda x: jnp.sum(quantize(x, pol) * 3.0))(w)
+    np.testing.assert_allclose(np.asarray(g), 3.0)
