@@ -1,4 +1,5 @@
-"""Explicit-transpose collective pairs for manual tensor parallelism.
+"""Explicit-transpose collective pairs for manual tensor parallelism —
+thin shims over the unified :mod:`repro.transport`.
 
 Megatron-style TP needs two conjugate operators around each block:
 
@@ -10,7 +11,30 @@ Megatron-style TP needs two conjugate operators around each block:
 
 We pin both directions down with ``custom_vjp`` instead of relying on the
 AD transpose of ``lax.psum``, whose semantics for replicated inputs are a
-classic source of silent double-counting.
+classic source of silent double-counting. The data movers inside the VJPs
+are ``repro.transport``'s: an activation :class:`CompressionPolicy` routes
+every psum through the compressed reduce-scatter + all-gather
+decomposition (``transport.all_reduce``) and the sequence-parallel pair
+through ``transport.seq_gather`` / ``transport.seq_scatter``, so TP-axis
+activation traffic shrinks by the policy's packing ratio exactly like the
+DP-axis weight traffic (docs/collectives.md has the wire contract).
+
+Invariants (previously stated only in test comments):
+
+  * The TP axis is always named ``"model"`` (``MeshCfg.model_axis``);
+    ``axis_names`` may also be a tuple treated as one logical group.
+  * Activations entering :func:`tp_region_enter` are model-axis
+    *replicated*; partial outputs entering :func:`tp_region_exit` are
+    *unreduced partials*. Calling either on the wrong flavor
+    double-counts — that is what the pinned transposes prevent.
+  * Uncompressed cotangent psums accumulate in the COMPUTE dtype (the
+    cotangent is cast to the forward input's dtype before the psum —
+    bf16 activation grads stay bf16 on the wire; asserted by
+    ``scenario_compressed_collectives``). Compressed psums instead
+    unpack and accumulate in fp32, then cast back to the compute dtype.
+  * ``policy`` must be hashable (``CompressionPolicy`` is frozen) —
+    it rides ``custom_vjp`` nondiff argnums. ``None`` = uncompressed,
+    bit-identical to the historical ``lax.psum`` paths.
 """
 from __future__ import annotations
 
@@ -21,20 +45,45 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.transport import policy_for
+from repro.transport import transport as _T
+
 AxisNames = Hashable | Sequence[Hashable]
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def tp_region_enter(x, axis_names: AxisNames):
+def _act_policy(policy):
+    """None -> None (uncompressed legacy path); else a CompressionPolicy."""
+    return None if policy is None else policy_for(policy)
+
+
+def _compressed_psum(g, axis_names, policy, *, use_grad_format: bool):
+    return _T.all_reduce(
+        g, axis_names, policy, use_grad_format=use_grad_format
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def tp_region_enter(x, axis_names: AxisNames, policy=None):
     return x
 
 
-def _enter_fwd(x, axis_names):
+def _enter_fwd(x, axis_names, policy):
     return x, jnp.zeros((0,), x.dtype)  # zero-size dtype carrier
 
 
-def _enter_bwd(axis_names, marker, g):
-    # cotangents are psum'd in the compute dtype: fp32-accumulated attention
+def _enter_bwd(axis_names, policy, marker, g):
+    pol = _act_policy(policy)
+    if pol is not None and pol.compresses_grads:
+        # the cotangent all-reduce rides packed planes (reduce-scatter +
+        # all-gather at grad_round_to); unpacked contributions accumulate
+        # in fp32 inside the transport, result cast to the compute dtype.
+        return (
+            _compressed_psum(
+                g.astype(marker.dtype), axis_names, pol, use_grad_format=True
+            ),
+        )
+    # cotangents are psum'd in the COMPUTE dtype (asserted by
+    # scenario_compressed_collectives): fp32-accumulated attention
     # einsums would otherwise silently upcast every backward all-reduce
     # (bf16 activation grads are standard practice; noted in DESIGN.md §7).
     # The optimization barrier stops XLA's excess-precision pass from
@@ -47,55 +96,44 @@ def _enter_bwd(axis_names, marker, g):
 tp_region_enter.defvjp(_enter_fwd, _enter_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def tp_region_exit(x, axis_names: AxisNames):
+def _exit_impl(x, axis_names, policy):
+    pol = _act_policy(policy)
+    if pol is not None and pol.compresses:
+        return _compressed_psum(x, axis_names, pol, use_grad_format=False)
     return lax.psum(lax.optimization_barrier(x), axis_names)
 
 
-def _exit_fwd(x, axis_names):
-    x = lax.optimization_barrier(x)
-    return lax.psum(x, axis_names), jnp.zeros((0,), x.dtype)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def tp_region_exit(x, axis_names: AxisNames, policy=None):
+    return _exit_impl(x, axis_names, policy)
 
 
-def _exit_bwd(axis_names, marker, g):
+def _exit_fwd(x, axis_names, policy):
+    return _exit_impl(x, axis_names, policy), jnp.zeros((0,), x.dtype)
+
+
+def _exit_bwd(axis_names, policy, marker, g):
     return (g.astype(marker.dtype),)
 
 
 tp_region_exit.defvjp(_exit_fwd, _exit_bwd)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def seq_gather(x, axis_names: AxisNames):
+def seq_gather(x, axis_names: AxisNames, policy=None, axis: int = 1):
     """Sequence-parallel enter: all-gather sequence shards over the model
-    axis (axis 1 == sequence), backward reduce-scatter.  Beyond-paper lever
-    for shrinking the model-axis collective term (DESIGN.md §7)."""
-    return lax.all_gather(x, axis_names, axis=1, tiled=True)
+    axis (axis 1 == sequence), backward reduce-scatter. Dispatches through
+    ``transport.seq_gather``; an activation policy compresses both the
+    forward planes (``round_to``) and the cotangent (``grad_round_to``).
+    Beyond-paper lever for shrinking the model-axis collective term."""
+    pol = _act_policy(policy) or policy_for(4)
+    return _T.seq_gather(x, axis_names, pol, axis)
 
 
-def _sg_fwd(x, axis_names):
-    return lax.all_gather(x, axis_names, axis=1, tiled=True), None
-
-
-def _sg_bwd(axis_names, _, g):
-    return (lax.psum_scatter(g, axis_names, scatter_dimension=1, tiled=True),)
-
-
-seq_gather.defvjp(_sg_fwd, _sg_bwd)
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def seq_scatter(x, axis_names: AxisNames):
-    """Sequence-parallel exit: reduce-scatter partial outputs over the model
-    axis along the sequence dim, backward all-gather."""
-    return lax.psum_scatter(x, axis_names, scatter_dimension=1, tiled=True)
-
-
-def _ss_fwd(x, axis_names):
-    return lax.psum_scatter(x, axis_names, scatter_dimension=1, tiled=True), None
-
-
-def _ss_bwd(axis_names, _, g):
-    return (lax.all_gather(g, axis_names, axis=1, tiled=True),)
-
-
-seq_scatter.defvjp(_ss_fwd, _ss_bwd)
+def seq_scatter(x, axis_names: AxisNames, policy=None, axis: int = 1):
+    """Sequence-parallel exit: reduce-scatter partial outputs over the
+    model axis along the sequence dim, backward all-gather. Dispatches
+    through ``transport.seq_scatter`` with the same compression contract
+    as :func:`seq_gather` (planes are never summed — contributions unpack
+    to fp32 first)."""
+    pol = _act_policy(policy) or policy_for(4)
+    return _T.seq_scatter(x, axis_names, pol, axis)

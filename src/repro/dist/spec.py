@@ -22,6 +22,32 @@ set of weights.
 On the trivial mesh (``tp == 1 and dshards == 1``) storage *is* the
 logical array and materialization degenerates to the straight-through
 format truncation — the paper's single-accelerator setting.
+
+Invariants (previously stated only in test comments — property-tested by
+``tests/test_dist_layout.py``):
+
+  * Axis names are fixed by :class:`MeshCfg`: the TP axis is
+    ``"model"``, the FSDP gather axes ``("data",)`` or
+    ``("pod", "data")``; multi-axis tuples are one logical collective
+    group everywhere (gathers, reduce-scatters, axis_size).
+  * DIST storage order is **TP-slice first, then flatten, then
+    zero-pad** to a ``dshards`` multiple: rank ``r``'s flat shard
+    reconstructs exactly ``meta``'s TP-local logical slice, and the
+    padding tail is always at the end (``materialize_leaf`` slices it
+    off after the gather). Stacked leaves keep the layer-repetition dim
+    OUTSIDE the TP/flat dims: ``(reps, tp, pad_rep)``.
+  * When ``tp_units < tp`` (kv-head replication) consecutive rank
+    groups share unit content — ``repl_factor`` records the
+    multiplicity, and the AWP norm monitor divides it back out so
+    single-device and distributed runs see identical Σw².
+  * Storage shapes / kinds depend only on logical shape + meta +
+    ``compress_min_size``, never on values or mesh *placement*, so a
+    checkpoint written on one mesh reshapes onto another by pure
+    layout transforms.
+  * Materialization and placement route every wire byte through
+    :mod:`repro.transport` (``all_gather``/``quantize``); their
+    gradients reduce-scatter through the same transport, including the
+    stacked ``axis=1`` case (generalized packed reduce-scatter).
 """
 from __future__ import annotations
 

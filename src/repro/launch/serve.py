@@ -18,6 +18,7 @@ from repro.dist.spec import build_spec_tree, tree_to_storage
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.launch.train import _null, parse_mesh
 from repro.models.init import init_params
+from repro.transport import act_policy_for
 from repro.serve.step import (
     make_decode_step, make_place_step, make_prefill_step,
 )
@@ -32,6 +33,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--round-to", type=int, default=2)
+    ap.add_argument("--act-round-to", type=int, default=4,
+                    help="activation wire format on the TP axis (<4 routes "
+                         "TP psums through packed planes)")
     ap.add_argument("--weight-stationary", action="store_true")
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--window", type=int, default=0,
@@ -53,6 +57,7 @@ def main():
     storage = tree_to_storage(params, spec_tree, mesh_cfg)
     rts = (args.round_to,) * (cfg.num_groups + 1)
     env_kw = {"int8_kv": True} if args.int8_kv else {}
+    act_policy = act_policy_for(args.act_round_to)
 
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(
@@ -75,11 +80,12 @@ def main():
         prefill = make_prefill_step(
             cfg, mesh_cfg, mesh, spec_tree, rts, bshapes,
             cache_capacity=cap, shard_batch=shard_batch, env_kw=env_kw,
+            act_policy=act_policy,
         )
         decode = make_decode_step(
             cfg, mesh_cfg, mesh, spec_tree, rts, dshapes,
             shard_batch=shard_batch, window_override=window, env_kw=env_kw,
-            weight_stationary=args.weight_stationary,
+            weight_stationary=args.weight_stationary, act_policy=act_policy,
         )
         weights = storage
         if args.weight_stationary:

@@ -30,6 +30,7 @@ from repro.models.init import init_params
 from repro.optim.sgd import SGDConfig, init_momentum
 from repro.train.loop import Trainer
 from repro.train.step import make_train_step
+from repro.transport import act_policy_for
 
 
 def parse_mesh(spec: str) -> MeshCfg:
@@ -72,6 +73,9 @@ def main():
     ap.add_argument("--awp-interval", type=int, default=25)
     ap.add_argument("--bf16", action="store_true")
     ap.add_argument("--grad-round-to", type=int, default=4)
+    ap.add_argument("--act-round-to", type=int, default=4,
+                    help="activation wire format on the TP axis (<4 routes "
+                         "TP psums and seq collectives through packed planes)")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
@@ -115,11 +119,14 @@ def main():
     opt = SGDConfig(lr=args.lr, momentum=0.9, weight_decay=1e-4)
     nrt = cfg.num_groups + 1
 
+    act_policy = act_policy_for(args.act_round_to)
+
     def builder(round_tos):
         return make_train_step(
             cfg, mesh_cfg, mesh, spec_tree, round_tos, opt, batch_shapes,
             dtype=jnp.bfloat16 if args.bf16 else jnp.float32,
             grad_round_to=args.grad_round_to, accum_steps=args.accum,
+            act_policy=act_policy,
         )
 
     trainer = Trainer(

@@ -242,16 +242,22 @@ def _conv_bn(x, layer, stride):
     return _bn(_conv(x, layer["w"], layer["b"], stride), layer)
 
 
-def cnn_forward(layers, images, cfg: CNNConfig, *, train: bool, key=None):
+def cnn_forward(layers, images, cfg: CNNConfig, *, train: bool, key=None,
+                act_quant=None):
     """images (B, H, W, C) -> logits (B, num_classes). ``layers`` is the
-    materialized params dict {"convN": {w, b}, ...}."""
+    materialized params dict {"convN": {w, b}, ...}. ``act_quant`` is an
+    optional straight-through format truncation applied at stage
+    boundaries (the activation-policy analogue of the paper's weight
+    transfer: DP CNNs have no TP axis, so the activation group models
+    the HBM/host motion of the stage outputs instead of a collective)."""
+    aq = act_quant if act_quant is not None else (lambda v: v)
     x = images
     n = 0
     for spec in cfg.layers:
         kind = spec[0]
         if kind == "conv":
             _, cout, k, s = spec
-            x = jax.nn.relu(_conv_bn(x, layers[f"conv{n}"], s))
+            x = aq(jax.nn.relu(_conv_bn(x, layers[f"conv{n}"], s)))
             n += 1
         elif kind == "pool":
             x = lax.reduce_window(
@@ -266,14 +272,14 @@ def cnn_forward(layers, images, cfg: CNNConfig, *, train: bool, key=None):
                 y = _conv_bn(y, layers[f"block{n}b"], 1)
                 if f"block{n}p" in layers:
                     ident = _conv_bn(x, layers[f"block{n}p"], stride)
-                x = jax.nn.relu(y + ident)
+                x = aq(jax.nn.relu(y + ident))
                 n += 1
         elif kind == "gap":
             x = jnp.mean(x, axis=(1, 2))
         elif kind == "fc":
             if x.ndim > 2:
                 x = x.reshape(x.shape[0], -1)
-            x = jax.nn.relu(x @ layers[f"fc{n}"]["w"] + layers[f"fc{n}"]["b"])
+            x = aq(jax.nn.relu(x @ layers[f"fc{n}"]["w"] + layers[f"fc{n}"]["b"]))
             if train and cfg.dropout and key is not None:
                 key = jax.random.fold_in(key, n)
                 keep = jax.random.bernoulli(key, 1 - cfg.dropout, x.shape)
@@ -284,8 +290,11 @@ def cnn_forward(layers, images, cfg: CNNConfig, *, train: bool, key=None):
     return x @ layers["head"]["w"] + layers["head"]["b"]
 
 
-def cnn_loss(layers, images, labels, cfg, *, train=True, key=None):
-    logits = cnn_forward(layers, images, cfg, train=train, key=key)
+def cnn_loss(layers, images, labels, cfg, *, train=True, key=None,
+             act_quant=None):
+    logits = cnn_forward(
+        layers, images, cfg, train=train, key=key, act_quant=act_quant
+    )
     logp = jax.nn.log_softmax(logits.astype(jnp.float32))
     nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
     return jnp.mean(nll)

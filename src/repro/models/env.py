@@ -2,7 +2,11 @@
 
 Carries the mesh-axis names (None = single device: every collective helper
 degrades to identity), the TP degree, compute dtype, and the performance
-levers toggled during §Perf hillclimbing.
+levers toggled during §Perf hillclimbing. ``act_policy`` is the
+activation-group :class:`~repro.transport.CompressionPolicy`: when set,
+every TP-region psum and sequence-parallel collective issued through this
+env rides the compressed transport (packed byte planes) instead of
+fp32/compute-dtype collectives.
 """
 from __future__ import annotations
 
@@ -12,7 +16,12 @@ from typing import Any
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core.collectives import tp_region_enter, tp_region_exit
+from repro.core.collectives import (
+    seq_gather,
+    seq_scatter,
+    tp_region_enter,
+    tp_region_exit,
+)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,19 +35,34 @@ class Env:
     seq_parallel: bool = False              # sequence-parallel activations
     int8_kv: bool = False                   # int8 KV cache (decode, §Perf)
     mlstm_chunk: int = 0                    # chunkwise mLSTM (0 = sequential)
+    act_policy: Any = None                  # activation CompressionPolicy
 
     # ------------------------------------------------------------------
     def enter(self, x):
         """Megatron 'f': identity fwd / model-axis psum bwd."""
         if self.model_axis is None:
             return x
-        return tp_region_enter(x, self.model_axis)
+        return tp_region_enter(x, self.model_axis, self.act_policy)
 
     def exit(self, x):
         """Megatron 'g': model-axis psum fwd / identity bwd."""
         if self.model_axis is None:
             return x
-        return tp_region_exit(x, self.model_axis)
+        return tp_region_exit(x, self.model_axis, self.act_policy)
+
+    def seq_gather(self, x, axis: int = 1):
+        """Sequence-parallel enter: all-gather sequence shards (identity
+        when there is no model axis)."""
+        if self.model_axis is None:
+            return x
+        return seq_gather(x, self.model_axis, self.act_policy, axis)
+
+    def seq_scatter(self, x, axis: int = 1):
+        """Sequence-parallel exit: reduce-scatter along the sequence dim
+        (identity when there is no model axis)."""
+        if self.model_axis is None:
+            return x
+        return seq_scatter(x, self.model_axis, self.act_policy, axis)
 
     def model_rank(self):
         if self.model_axis is None:

@@ -7,7 +7,11 @@
 FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device after SPMD
 partitioning). Wire bytes are parsed from the compiled HLO text: every
 all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
-is charged its ring-algorithm wire traffic.
+is charged its ring-algorithm wire traffic. Compressed-transport
+collectives (uint8 byte planes — weight gathers, gradient reduce-scatters,
+TP-axis activation pipelines) are charged at their true packed width and
+reported separately as the plane-wire split (see
+:mod:`repro.roofline.hlo_cost`).
 
 Hardware constants (TPU v5e class, per chip): 197 TFLOP/s bf16,
 819 GB/s HBM, ~50 GB/s/link ICI.
@@ -135,13 +139,21 @@ def roofline_from_compiled(
     """While-trip-aware roofline (see repro.roofline.hlo_cost for why raw
     cost_analysis cannot be used with scanned layer stacks).
 
-    ``act_bytes``: wire width of activation all-reduces. The CPU emulation
-    backend promotes every sub-f32 collective to f32 and cancels the
-    down-casts (excess-precision pass), so a bf16 compute dtype cannot be
-    observed in the emulated HLO; on TPU these psums run natively in the
-    compute dtype. All all-reduces in this framework's step functions are
-    activation psums (weight grads go through reduce-scatter), so they are
-    charged at ``act_bytes`` analytically when < 4."""
+    ``act_bytes``: wire width of *uncompressed* activation all-reduces.
+    The CPU emulation backend promotes every sub-f32 collective to f32
+    and cancels the down-casts (excess-precision pass), so a bf16 compute
+    dtype cannot be observed in the emulated HLO; on TPU these psums run
+    natively in the compute dtype. All all-reduces in this framework's
+    step functions are activation psums (weight grads go through
+    reduce-scatter), so they are charged at ``act_bytes`` analytically
+    when < 4.
+
+    A compressing activation policy needs no parameter here: it replaces
+    TP psums with packed-plane reduce-scatter + all-gather pipelines
+    whose u8 wire bytes appear *exactly* in the HLO (the CPU backend
+    cannot promote u8). The plane-wire split is always reported in
+    ``collectives`` and can be checked against
+    ``CompressionPolicy.all_reduce_wire_bytes``."""
     from repro.roofline.hlo_cost import analyze_hlo
 
     cost = compiled.cost_analysis()
@@ -151,6 +163,11 @@ def roofline_from_compiled(
     raw_bytes = float(cost.get("bytes accessed", 0.0))
     c = analyze_hlo(compiled.as_text())
     if act_bytes < 4 and "all-reduce" in c.wire:
+        # scales only the raw-dtype psums: a compressing act_policy turns
+        # TP psums into u8 all_to_all + all-gather plane pipelines (never
+        # a u8 all-reduce), which are already exact in the HLO — the
+        # all-reduce entries remaining here are the uncompressed
+        # residue (no divisible split axis, grad syncs, loss scalars)
         c.wire["all-reduce"] *= act_bytes / 4.0
     flops = max(c.flops, raw_flops)
     hbm = max(c.bytes, raw_bytes)
@@ -173,6 +190,10 @@ def roofline_from_compiled(
         collectives={
             "counts": c.coll_counts,
             "wire_bytes": c.wire,
+            # packed-plane (compressed transport) share of wire_bytes:
+            # weight gathers, grad reduce-scatters, TP activation planes
+            "plane_wire_bytes": c.plane_wire,
+            "plane_wire_total": c.plane_wire_total,
             "raw_cost_analysis": {"flops": raw_flops, "bytes": raw_bytes},
         },
     )

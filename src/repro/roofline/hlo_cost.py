@@ -11,6 +11,15 @@ re-derives the three roofline inputs by walking the post-optimization HLO:
                        memory traffic), × while trips
   * collective wire  — ring-model wire bytes per collective, × while trips
 
+Compressed-collective accounting: the transport's pack -> collective ->
+unpack pipelines put ``uint8`` byte planes on the wire (weight gathers,
+gradient reduce-scatters, and — since the TP-axis compression — activation
+``seq_gather``/``seq_scatter``/all-reduce decompositions). Those
+collectives are charged at their true u8 width like any other, and
+*additionally* recorded in ``Cost.plane_wire`` so reports and tests can
+split packed-plane traffic from raw-dtype traffic (the quantity that
+shrinks by ``CompressionPolicy.wire_fraction``).
+
 Parsing rules target the CPU/SPMD backend's textual HLO (resolved via a
 per-computation symbol table; computations recurse through ``calls=``,
 ``body=``, ``to_apply=``).
@@ -66,6 +75,9 @@ class Cost:
     bytes: float = 0.0
     wire: dict = dataclasses.field(default_factory=dict)
     coll_counts: dict = dataclasses.field(default_factory=dict)
+    # subset of `wire` carried as packed u8 byte planes (compressed
+    # transport pipelines); same kind keys, always <= wire[kind]
+    plane_wire: dict = dataclasses.field(default_factory=dict)
 
     def add(self, other: "Cost", times: float = 1.0):
         self.flops += other.flops * times
@@ -74,10 +86,16 @@ class Cost:
             self.wire[k] = self.wire.get(k, 0) + v * times
         for k, v in other.coll_counts.items():
             self.coll_counts[k] = self.coll_counts.get(k, 0) + v * times
+        for k, v in other.plane_wire.items():
+            self.plane_wire[k] = self.plane_wire.get(k, 0) + v * times
 
     @property
     def wire_total(self) -> float:
         return sum(self.wire.values())
+
+    @property
+    def plane_wire_total(self) -> float:
+        return sum(self.plane_wire.values())
 
 
 class Instr:
@@ -257,6 +275,8 @@ class HloModule:
                         total.wire[k] = total.wire.get(k, 0) + v
                     for k, v in inner.coll_counts.items():
                         total.coll_counts[k] = total.coll_counts.get(k, 0) + v
+                    for k, v in inner.plane_wire.items():
+                        total.plane_wire[k] = total.plane_wire.get(k, 0) + v
                 continue
             if op == "conditional":
                 # charge the max branch
@@ -294,7 +314,23 @@ class HloModule:
                 w = ring_wire_bytes(kind, payload, n)
                 total.wire[kind] = total.wire.get(kind, 0) + w
                 total.coll_counts[kind] = total.coll_counts.get(kind, 0) + 1
+                if self._is_plane_collective(comp, instr):
+                    total.plane_wire[kind] = (
+                        total.plane_wire.get(kind, 0) + w
+                    )
         return total
+
+    def _is_plane_collective(self, comp: str, instr: Instr) -> bool:
+        """True when every operand is uint8 — the transport's packed
+        byte-plane pipelines are the only u8 wire traffic in this
+        framework (weights, grads, and TP-axis activations alike)."""
+        if not instr.operands:
+            return False
+        for ref in instr.operands:
+            t = self._operand_type(comp, ref)
+            if t is None or not t.lstrip("(").startswith("u8["):
+                return False
+        return True
 
     def _deconverted_bytes(self, comp: str, instr: Instr, in_b: int) -> int:
         """If every operand of a collective is a (fusion-wrapped) dtype

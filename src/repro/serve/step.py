@@ -3,7 +3,10 @@
 Weights flow through the same ADT-compressed gathers as training — serving
 models the paper's "send weights to accelerators" motion at inference
 load time / per step, and decode roofline shows where int8 KV (beyond-
-paper) pays off.
+paper) pays off. ``act_policy`` compresses the TP-axis activation
+collectives (the gathered-activation psums around every attention/MLP
+block) the same way; combined with ``env_kw={"int8_kv": True}`` both
+resident KV state and wire-crossing activations shrink.
 """
 from __future__ import annotations
 
@@ -23,7 +26,7 @@ from repro.dist.spec import (
     tree_partition_specs,
 )
 from repro.models import model as M
-from repro.train.step import batch_pspecs, make_env, make_mat_fns
+from repro.train.step import batch_pspecs, make_env, make_mat_fns, merge_env_kw
 from repro.transport import policy_for
 
 
@@ -132,8 +135,9 @@ def make_prefill_step(
     shard_batch: bool = True,
     dtype=jnp.float32,
     env_kw: dict | None = None,
+    act_policy=None,
 ):
-    env = make_env(cfg, mesh_cfg, dtype, **(env_kw or {}))
+    env = make_env(cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy))
     mat_group, mat_top_factory = make_mat_fns(spec_tree, mesh_cfg, round_tos, dtype)
 
     def step(storage, batch):
@@ -228,8 +232,9 @@ def make_decode_step(
     dtype=jnp.float32,
     env_kw: dict | None = None,
     weight_stationary: bool = False,
+    act_policy=None,
 ):
-    env = make_env(cfg, mesh_cfg, dtype, **(env_kw or {}))
+    env = make_env(cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy))
     mat_group, mat_top_factory = make_mat_fns(
         spec_tree, mesh_cfg, round_tos, dtype, placed=weight_stationary
     )

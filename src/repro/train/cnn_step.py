@@ -21,6 +21,22 @@ from repro.dist.spec import (
 from repro.models.cnn import CNNConfig, cnn_loss, topk_error
 from repro.optim.sgd import SGDConfig, sgd_update
 from repro.transport import policy_for
+from repro.transport import transport as _T
+
+
+def _act_quant_fn(act_policy):
+    """Activation policy -> straight-through stage-boundary truncation
+    (None when the policy keeps fp32: zero-cost identity)."""
+    if act_policy is None:
+        return None
+    pol = policy_for(act_policy)
+    if not pol.compresses:
+        return None
+
+    def aq(x):
+        return _T.quantize(x.astype(jnp.float32), pol).astype(x.dtype)
+
+    return aq
 
 
 def build_cnn_spec_tree(params, metas, mesh_cfg: MeshCfg):
@@ -59,17 +75,20 @@ def make_cnn_train_step(
     round_tos: tuple[int, ...],
     opt_cfg: SGDConfig,
     batch_shapes: dict,
+    *,
+    act_policy=None,
 ):
     groups, num_groups = groups_info
     assert len(round_tos) == num_groups
     dp = mesh_cfg.fsdp_axes[0] if mesh_cfg.dshards > 1 else None
+    aq = _act_quant_fn(act_policy)
 
     def step(storage, momentum, batch, lr, key):
         def loss_fn(st):
             layers = _mat(st, spec_tree, mesh_cfg, groups, round_tos)
             return cnn_loss(
                 layers, batch["images"], batch["labels"], cfg,
-                train=True, key=key,
+                train=True, key=key, act_quant=aq,
             ) / max(mesh_cfg.dshards, 1)
 
         loss, grads = jax.value_and_grad(loss_fn)(storage)

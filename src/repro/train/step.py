@@ -34,13 +34,23 @@ from repro.transport import policy_for
 
 
 def make_env(cfg: ModelConfig, mesh_cfg: MeshCfg, dtype=jnp.float32, **kw) -> Env:
+    act = kw.pop("act_policy", None)
     return Env(
         model_axis=mesh_cfg.model_axis if mesh_cfg.tp > 1 else None,
         fsdp_axes=mesh_cfg.fsdp_axes if mesh_cfg.dshards > 1 else None,
         tp=mesh_cfg.tp,
         dtype=dtype,
+        act_policy=None if act is None else policy_for(act),
         **kw,
     )
+
+
+def merge_env_kw(env_kw: dict | None, act_policy):
+    """Activation policy -> Env kwargs (explicit arg wins over env_kw)."""
+    kw = dict(env_kw or {})
+    if act_policy is not None:
+        kw["act_policy"] = act_policy
+    return kw
 
 
 def _dp_axes(mesh_cfg: MeshCfg):
@@ -191,16 +201,19 @@ def make_train_step(
     env_kw: dict | None = None,
     grad_round_to: int | None = None,
     accum_steps: int = 1,
+    act_policy=None,
 ):
     """Returns jit-able ``step(storage, momentum, batch, lr) -> (storage',
     momentum', metrics)``. metrics: loss, token_count, group norms (for AWP).
 
     §Perf levers: ``dtype=bf16`` (compute/activations), ``grad_round_to<4``
     (compressed gradient reduce-scatter), ``accum_steps>1`` (gradient
-    accumulation over batch-dim microbatches — divides activation memory).
+    accumulation over batch-dim microbatches — divides activation memory),
+    ``act_policy`` (activation CompressionPolicy: TP-axis psums and
+    sequence collectives ride packed planes fwd AND bwd).
     """
     assert len(round_tos) == cfg.num_groups + 1
-    env = make_env(cfg, mesh_cfg, dtype, **(env_kw or {}))
+    env = make_env(cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy))
     dp = _dp_axes(mesh_cfg) if mesh_cfg.dshards > 1 else None
     mat_group, mat_top_factory = make_mat_fns(
         spec_tree, mesh_cfg, round_tos, dtype, grad_round_to=grad_round_to

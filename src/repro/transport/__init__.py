@@ -7,35 +7,48 @@ Public surface:
   * :class:`Transport` and the functional :func:`all_gather`,
     :func:`reduce_scatter`, :func:`quantize` — the pack -> collective ->
     unpack pipelines with ADT semantics and training-ready VJPs.
+  * :func:`seq_gather` / :func:`seq_scatter` / :func:`all_reduce` — the
+    activation-path (TP axis) collectives: compressed fwd AND bwd
+    (docs/collectives.md documents the wire contract per entry point).
   * :func:`pack_planes` / :func:`unpack_planes` — kernel dispatch
     (Pallas compiled on TPU / interpret off-TPU, or the jnp oracle).
 """
 from repro.transport.policy import (
     CompressionPolicy,
+    act_policy_for,
     policy_for,
     ring_wire_bytes,
 )
 from repro.transport.transport import (
     Transport,
     all_gather,
+    all_reduce,
     axis_size,
     pack_planes,
+    pick_split_axis,
     quantize,
     reduce_scatter,
     resolve_impl,
+    seq_gather,
+    seq_scatter,
     unpack_planes,
 )
 
 __all__ = [
     "CompressionPolicy",
     "Transport",
+    "act_policy_for",
     "all_gather",
+    "all_reduce",
     "axis_size",
     "pack_planes",
+    "pick_split_axis",
     "policy_for",
     "quantize",
     "reduce_scatter",
     "resolve_impl",
     "ring_wire_bytes",
+    "seq_gather",
+    "seq_scatter",
     "unpack_planes",
 ]

@@ -20,6 +20,31 @@ A policy describes one precision group's transfer behaviour:
   * ``chunks``        — >1 splits the weight gather into that many plane
                         blocks so pack / wire / unpack of successive
                         blocks overlap (double buffering).
+
+One policy instance describes ONE precision group. The framework runs
+four groups (docs/transport.md has the full table): *weights* (per-layer
+AWP formats, the ``round_tos`` tuples every step factory takes),
+*gradients* (the same policies' ``grad_*`` fields), *activations* (a
+separate policy on ``Env.act_policy`` whose forward fields cover the TP
+forward collectives and whose grad fields cover activation cotangents),
+and *KV cache* (``Env.int8_kv`` — scale-quantized int8, not byte planes,
+because KV is resident state rather than wire traffic).
+
+Invariants the rest of the framework relies on (previously stated only
+in test comments):
+
+  * Axis names are fixed: the FSDP gather axes are ``("data",)`` or
+    ``("pod", "data")`` (one logical axis — multi-axis collectives treat
+    the tuple as a single group) and the TP axis is ``"model"``
+    (``MeshCfg.model_axis``). Policies never carry axis names; binding a
+    policy to axes is :class:`~repro.transport.Transport`'s job.
+  * A policy is frozen + hashable so it can sit in ``custom_vjp``
+    nondiff argnums and jit static closures; swapping any field means a
+    recompile (the AWP controller's compiled-step cache keys on it).
+  * Wire-byte math lives ONLY here, derived from :func:`ring_wire_bytes`
+    — the trainer log, benchmark harness, and both HLO analyzers consume
+    these methods so the analytical model cannot drift from the
+    implementation (``test_collective_wire_bytes`` locks this in).
 """
 from __future__ import annotations
 
@@ -112,6 +137,74 @@ class CompressionPolicy:
     def host_device_bytes(self, elems: int) -> int:
         """Paper's host->device model: every weight moves once per batch."""
         return elems * self.round_to
+
+    # -- activation-path accounting (TP axis; this policy = act group) ----
+    # Forward collectives move (round_to, mode) planes, cotangent
+    # collectives (grad_round_to, grad_mode) planes — exactly mirroring
+    # the transport's seq_gather/seq_scatter VJPs and
+    # all_reduce(use_grad_format=...). ``grad=True`` selects the
+    # cotangent direction so the accounting cannot drift from the
+    # implementation for policies with round_to != grad_round_to.
+    def _act_width(self, grad: bool) -> int:
+        return self.grad_round_to if grad else self.round_to
+
+    def seq_gather_wire_bytes(
+        self, elems_out: int, axis_size: int, *, grad: bool = False
+    ) -> int:
+        """Bytes received per device for one compressed ``seq_gather``
+        producing ``elems_out`` gathered activation elements
+        (``grad=True``: the ``seq_scatter`` VJP's cotangent gather)."""
+        payload = elems_out * self._act_width(grad)
+        return round(ring_wire_bytes("all-gather", payload, axis_size))
+
+    def seq_scatter_wire_bytes(
+        self, elems_in: int, axis_size: int, *, grad: bool = False
+    ) -> int:
+        """Bytes received per device for one compressed ``seq_scatter``
+        of ``elems_in`` input elements (``grad=True``: the ``seq_gather``
+        VJP's cotangent reduce-scatter). The packed pipeline is an
+        ``all_to_all`` of planes, whose ring wire cost equals the
+        reduce-scatter formula at the packed width."""
+        payload = elems_in * self._act_width(grad)
+        return round(ring_wire_bytes("reduce-scatter", payload, axis_size))
+
+    def all_reduce_wire_bytes(
+        self,
+        elems: int,
+        axis_size: int,
+        uncompressed_bytes: int = FP32_BYTES,
+        *,
+        grad: bool = False,
+    ) -> int:
+        """Bytes received per device for one TP-region all-reduce of
+        ``elems`` activation elements. ``grad=False`` is the forward
+        ``tp_region_exit`` psum, ``grad=True`` the ``tp_region_enter``
+        cotangent psum (``transport.all_reduce(use_grad_format=True)``).
+
+        Compressed: the reduce-scatter + all-gather decomposition, both
+        halves at the selected width — exactly ``width/4`` of the fp32
+        all-reduce. Uncompressed: the ring all-reduce at
+        ``uncompressed_bytes`` per element (the compute dtype's width on
+        TPU; the CPU emulation backend promotes to fp32, which the
+        roofline corrects analytically)."""
+        if self._act_width(grad) < FP32_BYTES:
+            return self.seq_scatter_wire_bytes(
+                elems, axis_size, grad=grad
+            ) + self.seq_gather_wire_bytes(elems, axis_size, grad=grad)
+        payload = elems * uncompressed_bytes
+        return round(ring_wire_bytes("all-reduce", payload, axis_size))
+
+
+def act_policy_for(round_to: int) -> CompressionPolicy | None:
+    """CLI shortcut (``--act-round-to N``) -> activation-group policy.
+
+    ``None`` at 4 = uncompressed, bit-identical to the historical paths.
+    Nearest rounding in both directions: activation psums and cotangent
+    sums are bias-sensitive, like gradients."""
+    rt = int(round_to)
+    if rt >= FP32_BYTES:
+        return None
+    return CompressionPolicy(round_to=rt, grad_round_to=rt, mode="nearest")
 
 
 def policy_for(

@@ -9,7 +9,19 @@ This module owns every compressed byte that crosses a mesh link:
     weight/gradient motion for free.
   * :func:`reduce_scatter` — gradient path (beyond-paper): pack the chunk
     destined for each peer, ``all_to_all`` the planes, unpack and reduce
-    locally in fp32.
+    locally in fp32. Handles arbitrary-rank leaves and any scatter axis
+    (placed / stacked storage included); the reshape to per-peer plane
+    blocks happens here, never at call sites.
+  * :func:`seq_gather` / :func:`seq_scatter` — activation path (TP axis).
+    The sequence-parallel conjugate pair: compressed all-gather along the
+    sequence dim with a compressed reduce-scatter VJP, and vice versa.
+    Dtype-preserving (bf16 activations round-trip through an exact fp32
+    cast before packing).
+  * :func:`all_reduce` — compressed all-reduce, decomposed into
+    reduce-scatter + all-gather of packed planes along a divisible split
+    axis. NOT differentiable by design: it is the forward/cotangent mover
+    inside the TP-region custom VJPs (``core.collectives``), whose
+    transposes must stay pinned to identity to avoid double-counting.
   * :func:`quantize` — single-device format truncation (pack∘unpack) with
     a straight-through VJP: what the compute side sees when there is no
     collective to ride on.
@@ -26,6 +38,13 @@ independent pack -> all-gather -> unpack block pipelines so XLA's async
 collectives can overlap block k's wire time with block k±1's pack/unpack
 (double buffering), then re-interleaves the blocks to the exact layout of
 the unchunked gather.
+
+Wire formats per entry point (see docs/collectives.md for the plane
+layout and a worked byte example): weight-path forwards move
+``policy.round_to`` bytes/element, gradient/cotangent paths
+``policy.grad_round_to``; ``seq_gather``/``seq_scatter`` forwards use the
+policy's forward fields and their VJPs the grad fields, so one activation
+policy describes both directions of the TP axis.
 """
 from __future__ import annotations
 
@@ -39,7 +58,7 @@ from jax import lax
 from repro.kernels import ref
 from repro.kernels.bitpack import BLOCK_ROWS, LANES, bitpack_2d
 from repro.kernels.bitunpack import bitunpack_2d
-from repro.transport.policy import CompressionPolicy, policy_for
+from repro.transport.policy import FP32_BYTES, CompressionPolicy, policy_for
 from repro.utils.trees import round_up
 
 AxisNames = Hashable | Sequence[Hashable]
@@ -132,6 +151,53 @@ def unpack_planes(planes: jnp.ndarray, *, impl: str = "auto") -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
+def _packed_all_gather(x, axis_names, round_to, mode, impl, axis: int):
+    """Compressed all-gather of an arbitrary-rank array along ``axis``.
+
+    Dtype-preserving: non-fp32 inputs (bf16 activations) are cast to fp32
+    — exactly — before packing and the unpacked result is cast back.
+    """
+    axis = axis % x.ndim  # planes prepend a dim: negatives must resolve first
+    out_dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    planes = pack_planes(xf, round_to, mode=mode, impl=impl)
+    # planes prepend the plane dim, so the data axis shifts by one
+    planes_g = lax.all_gather(planes, axis_names, axis=axis + 1, tiled=True)
+    return unpack_planes(planes_g, impl=impl).astype(out_dtype)
+
+
+def _packed_reduce_scatter(g, axis_names, round_to, mode, impl, axis: int):
+    """Compressed reduce-scatter of an arbitrary-rank array along ``axis``.
+
+    The scatter dim is split into per-peer plane blocks *here* — call
+    sites never reshape. Each peer's block is packed, the planes ride one
+    ``all_to_all`` (single- or multi-axis), and the unpacked
+    contributions are accumulated locally in fp32 before casting back to
+    the input dtype. Trailing dims are unconstrained; only the scatter
+    dim must divide by the axis size (inherent to reduce-scatter).
+    """
+    axis = axis % g.ndim  # moveaxis target 0 below: resolve negatives first
+    size = axis_size(axis_names)
+    length = g.shape[axis]
+    if length % size:
+        raise ValueError(
+            f"scatter dim {axis} of shape {g.shape} not divisible by "
+            f"axis size {size}"
+        )
+    out_dtype = g.dtype
+    gm = jnp.moveaxis(g.astype(jnp.float32), axis, 0)
+    gm = gm.reshape((size, length // size) + gm.shape[1:])
+    planes = pack_planes(gm, round_to, mode=mode, impl=impl)
+    # (round_to, size, loc, ...): exchange the `size` dim; after the
+    # all_to_all the exchanged dim stays `size` (= one block per peer).
+    planes_x = lax.all_to_all(
+        planes, axis_names, split_axis=1, concat_axis=1, tiled=False
+    )
+    contribs = unpack_planes(planes_x, impl=impl)
+    out = jnp.sum(contribs, axis=0)  # fp32 accumulation
+    return jnp.moveaxis(out, 0, axis).astype(out_dtype)
+
+
 def _all_gather_impl(w, axis_names, policy: CompressionPolicy, axis: int):
     if not policy.compresses:
         return lax.all_gather(w, axis_names, axis=axis, tiled=True)
@@ -142,11 +208,9 @@ def _all_gather_impl(w, axis_names, policy: CompressionPolicy, axis: int):
         and w.shape[0] % policy.chunks == 0
     ):
         return _chunked_all_gather(w, axis_names, policy)
-    planes = pack_planes(
-        w, policy.round_to, mode=policy.mode, impl=policy.impl
+    return _packed_all_gather(
+        w, axis_names, policy.round_to, policy.mode, policy.impl, axis
     )
-    planes_g = lax.all_gather(planes, axis_names, axis=axis + 1, tiled=True)
-    return unpack_planes(planes_g, impl=policy.impl)
 
 
 def _chunked_all_gather(w, axis_names, policy: CompressionPolicy):
@@ -174,25 +238,59 @@ def _reduce_scatter_impl(g, axis_names, policy: CompressionPolicy, axis: int):
         return lax.psum_scatter(
             g, axis_names, scatter_dimension=axis, tiled=True
         )
-    if axis != 0 or g.ndim != 1:
-        raise NotImplementedError(
-            "compressed reduce-scatter supports flat (S,) arrays only"
+    return _packed_reduce_scatter(
+        g, axis_names, policy.grad_round_to, policy.grad_mode, policy.impl,
+        axis,
+    )
+
+
+def _seq_gather_impl(x, axis_names, policy: CompressionPolicy, axis: int):
+    if not policy.compresses:
+        return lax.all_gather(x, axis_names, axis=axis, tiled=True)
+    return _packed_all_gather(
+        x, axis_names, policy.round_to, policy.mode, policy.impl, axis
+    )
+
+
+def _seq_scatter_impl(x, axis_names, policy: CompressionPolicy, axis: int):
+    # forward activation path: the policy's *forward* format fields
+    if not policy.compresses:
+        return lax.psum_scatter(
+            x, axis_names, scatter_dimension=axis, tiled=True
         )
+    return _packed_reduce_scatter(
+        x, axis_names, policy.round_to, policy.mode, policy.impl, axis
+    )
+
+
+def pick_split_axis(shape, size: int) -> int | None:
+    """Rightmost dim divisible by ``size`` — the axis the compressed
+    all-reduce decomposition splits along (rightmost so the per-peer
+    blocks stay contiguous in the activation layout (B, S, d): feature
+    dim first, then sequence, then batch). None = no divisible dim; the
+    caller falls back to an uncompressed ``lax.psum``."""
+    for a in reversed(range(len(shape))):
+        if shape[a] >= size and shape[a] % size == 0:
+            return a
+    return None
+
+
+def _all_reduce_impl(
+    x, axis_names, policy: CompressionPolicy, use_grad_format: bool
+):
+    rt = policy.grad_round_to if use_grad_format else policy.round_to
+    mode = policy.grad_mode if use_grad_format else policy.mode
+    if rt >= FP32_BYTES:
+        # same barrier as the uncompressed TP-region paths: keeps the
+        # psum in the compute dtype (stops the CPU backend's
+        # excess-precision pass from cancelling a bf16 down-cast)
+        return lax.psum(lax.optimization_barrier(x), axis_names)
     size = axis_size(axis_names)
-    s = g.shape[0]
-    if s % size:
-        raise ValueError(f"flat size {s} not divisible by axis size {size}")
-    chunks = g.reshape(size, s // size)
-    planes = pack_planes(
-        chunks, policy.grad_round_to, mode=policy.grad_mode, impl=policy.impl
-    )
-    # (grad_round_to, size, S_loc): exchange the `size` dim; after the
-    # all_to_all (single or multi axis) the exchanged dim stays `size`.
-    planes_x = lax.all_to_all(
-        planes, axis_names, split_axis=1, concat_axis=1, tiled=False
-    )
-    contribs = unpack_planes(planes_x, impl=policy.impl)
-    return jnp.sum(contribs, axis=0)
+    axis = pick_split_axis(x.shape, size)
+    if axis is None:
+        return lax.psum(lax.optimization_barrier(x), axis_names)
+    part = _packed_reduce_scatter(x, axis_names, rt, mode, policy.impl, axis)
+    return _packed_all_gather(part, axis_names, rt, mode, policy.impl, axis)
 
 
 def _quantize_impl(w, policy: CompressionPolicy, key=None):
@@ -239,15 +337,110 @@ all_gather.defvjp(_ag_fwd, _ag_bwd)
 
 
 def reduce_scatter(
-    g: jnp.ndarray, axis_names: AxisNames, policy: CompressionPolicy
+    g: jnp.ndarray,
+    axis_names: AxisNames,
+    policy: CompressionPolicy,
+    axis: int = 0,
 ) -> jnp.ndarray:
-    """Compressed reduce-scatter of a flat fp32 ``(S,)`` -> ``(S_loc,)``.
+    """Compressed reduce-scatter along ``axis`` (default 0: the flat
+    gradient path, ``(S,)`` -> ``(S_loc,)``).
 
-    Wire format is ``policy.grad_round_to`` bytes; rounding defaults to
-    *nearest* (not the paper's truncation) because gradient sums are
-    bias-sensitive.
+    Any rank is accepted — stacked leaves scatter their flat dim at
+    ``axis=1``, placed activations their sequence dim — with the reshape
+    to per-peer plane blocks handled inside the transport. Wire format is
+    ``policy.grad_round_to`` bytes; rounding defaults to *nearest* (not
+    the paper's truncation) because gradient sums are bias-sensitive.
     """
-    return _reduce_scatter_impl(g, axis_names, policy, 0)
+    return _reduce_scatter_impl(g, axis_names, policy, axis)
+
+
+# -- activation path (TP axis) ----------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def seq_gather(
+    x: jnp.ndarray,
+    axis_names: AxisNames,
+    policy: CompressionPolicy,
+    axis: int = 1,
+) -> jnp.ndarray:
+    """Sequence-parallel enter: compressed all-gather of activation
+    shards along ``axis`` (1 = sequence), with a compressed
+    reduce-scatter VJP.
+
+    Forward moves ``policy.round_to`` of every fp32 byte; the cotangent
+    rides the same packed-plane pipeline at ``policy.grad_round_to``.
+    Dtype-preserving (bf16 activations cast exactly through fp32).
+    """
+    return _seq_gather_impl(x, axis_names, policy, axis)
+
+
+def _sg_fwd(x, axis_names, policy, axis):
+    return _seq_gather_impl(x, axis_names, policy, axis), None
+
+
+def _sg_bwd(axis_names, policy, axis, _, g):
+    return (_reduce_scatter_impl(g, axis_names, policy, axis),)
+
+
+seq_gather.defvjp(_sg_fwd, _sg_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def seq_scatter(
+    x: jnp.ndarray,
+    axis_names: AxisNames,
+    policy: CompressionPolicy,
+    axis: int = 1,
+) -> jnp.ndarray:
+    """Sequence-parallel exit: compressed reduce-scatter of partial
+    activations along ``axis``, with a compressed all-gather VJP.
+
+    Forward packs each peer's block at ``policy.round_to`` bytes
+    (contributions are summed in fp32 *after* unpacking — planes are
+    never added); the cotangent all-gathers at ``policy.grad_round_to``.
+    """
+    return _seq_scatter_impl(x, axis_names, policy, axis)
+
+
+def _ss_fwd(x, axis_names, policy, axis):
+    return _seq_scatter_impl(x, axis_names, policy, axis), None
+
+
+def _ss_bwd(axis_names, policy, axis, _, g):
+    if not policy.compresses_grads:
+        return (lax.all_gather(g, axis_names, axis=axis, tiled=True),)
+    return (
+        _packed_all_gather(
+            g, axis_names, policy.grad_round_to, policy.grad_mode,
+            policy.impl, axis,
+        ),
+    )
+
+
+seq_scatter.defvjp(_ss_fwd, _ss_bwd)
+
+
+def all_reduce(
+    x: jnp.ndarray,
+    axis_names: AxisNames,
+    policy: CompressionPolicy,
+    *,
+    use_grad_format: bool = False,
+) -> jnp.ndarray:
+    """Compressed all-reduce: reduce-scatter + all-gather of packed
+    planes along the rightmost divisible dim (``pick_split_axis``);
+    uncompressed policies and shapes with no divisible dim fall back to
+    ``lax.psum``.
+
+    NOT differentiable on purpose: this is the data mover *inside* the
+    TP-region custom VJPs (``core.collectives.tp_region_enter/exit``),
+    whose transposes are pinned to identity — differentiating through
+    the decomposition would re-introduce the replicated-operand
+    double-count those VJPs exist to prevent. ``use_grad_format=True``
+    selects the policy's grad fields (cotangent psums).
+    """
+    return _all_reduce_impl(x, axis_names, policy, use_grad_format)
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
@@ -280,8 +473,13 @@ class Transport:
     axis group repeatedly (steps, tests, benchmarks)::
 
         t = Transport(mesh_cfg.fsdp_axes)
-        w_full = t.all_gather(w_shard, policy)       # differentiable
-        g_shard = t.reduce_scatter(g_full, policy)
+        w_full = t.all_gather(w_shard, policy)        # differentiable
+        g_shard = t.reduce_scatter(g_full, policy)    # any rank, axis=...
+
+        tp = Transport(mesh_cfg.model_axis)           # activation path
+        x_full = tp.seq_gather(x_shard, act_policy)   # compressed fwd+bwd
+        y_shard = tp.seq_scatter(y_partial, act_policy)
+        y = tp.all_reduce(y_partial, act_policy)      # inside TP VJPs only
     """
 
     def __init__(self, axis_names: AxisNames):
@@ -292,8 +490,20 @@ class Transport:
     def all_gather(self, w, policy, *, axis: int = 0):
         return all_gather(w, self.axis_names, policy_for(policy), axis)
 
-    def reduce_scatter(self, g, policy):
-        return reduce_scatter(g, self.axis_names, policy_for(policy))
+    def reduce_scatter(self, g, policy, *, axis: int = 0):
+        return reduce_scatter(g, self.axis_names, policy_for(policy), axis)
+
+    def seq_gather(self, x, policy, *, axis: int = 1):
+        return seq_gather(x, self.axis_names, policy_for(policy), axis)
+
+    def seq_scatter(self, x, policy, *, axis: int = 1):
+        return seq_scatter(x, self.axis_names, policy_for(policy), axis)
+
+    def all_reduce(self, x, policy, *, use_grad_format: bool = False):
+        return all_reduce(
+            x, self.axis_names, policy_for(policy),
+            use_grad_format=use_grad_format,
+        )
 
     def quantize(self, w, policy):
         return quantize(w, policy_for(policy))

@@ -170,6 +170,89 @@ def main():
     # gather then reduce-scatter of a replicated-free value = 2x (2 model shards sum)
     np.testing.assert_allclose(got, 2 * np.asarray(xs), rtol=1e-6)
 
+    # ---- same pair with an activation policy (compressed shim path) ----
+    from repro.transport import CompressionPolicy
+
+    act_pol = CompressionPolicy(round_to=2, grad_round_to=2, mode="nearest")
+
+    def sp_c(x_shard):
+        full = seq_gather(x_shard, "model", act_pol)
+        return seq_scatter(full, "model", act_pol)
+
+    fc = shard_map(
+        sp_c, mesh=mesh, in_specs=P(None, "model", None),
+        out_specs=P(None, "model", None),
+    )
+    gotc = np.asarray(jax.jit(fc)(xs))
+    want = 2 * np.asarray(xs)
+    tol = np.abs(want) * 2**-7 + 2**-6
+    assert np.all(np.abs(gotc - want) <= tol), np.max(np.abs(gotc - want) - tol)
+
+    # ---- compressed TP f/g pair still matches the reference MLP --------
+    def tp_mlp_c(x, w1_local, w2_local):
+        xin = tp_region_enter(x, "model", act_pol)
+        h = jax.nn.relu(xin @ w1_local)
+        return tp_region_exit(h @ w2_local, "model", act_pol)
+
+    def tp_loss_c(x, w1_local, w2_local):
+        return jnp.sum(tp_mlp_c(x, w1_local, w2_local) ** 2)
+
+    fc = shard_map(
+        lambda x, w1, w2: (
+            tp_loss_c(x, w1, w2),
+            *jax.grad(tp_loss_c, argnums=(1, 2))(x, w1, w2),
+        ),
+        mesh=mesh,
+        in_specs=(P(None, None), P(None, "model"), P("model", None)),
+        out_specs=(P(), P(None, "model"), P("model", None)),
+    )
+    lc, gw1c, gw2c = jax.jit(fc)(x, w1, w2)
+    # rt=2 nearest keeps ~8 mantissa bits on every wire crossing
+    np.testing.assert_allclose(float(lc), float(lr), rtol=2e-2)
+    np.testing.assert_allclose(np.asarray(gw1c), np.asarray(gw1r), rtol=0.1,
+                               atol=5e-2)
+    np.testing.assert_allclose(np.asarray(gw2c), np.asarray(gw2r), rtol=0.1,
+                               atol=5e-2)
+    print("  compressed TP f/g pair matches reference OK")
+
+    # ---- TP-region cotangent psum accumulates in the COMPUTE dtype -----
+    # (the claim in core/collectives.py's comments; asserted here so the
+    # comment and the code cannot drift). The uncompressed bwd psum must
+    # run on cotangents already cast to the fwd input dtype — bf16 in,
+    # bf16 on the wire.
+    def collect_eqns(jaxpr, out):
+        for eqn in jaxpr.eqns:
+            out.append(eqn)
+            for v in eqn.params.values():
+                if hasattr(v, "jaxpr"):  # ClosedJaxpr
+                    collect_eqns(v.jaxpr, out)
+                elif hasattr(v, "eqns"):  # Jaxpr
+                    collect_eqns(v, out)
+        return out
+
+    def enter_loss(xv):
+        y = tp_region_enter(xv, "model")
+        return jnp.sum((y * y).astype(jnp.float32))
+
+    xb = xs.astype(jnp.bfloat16)
+    fng = shard_map(
+        jax.grad(enter_loss), mesh=mesh,
+        in_specs=P(None, "model", None), out_specs=P(None, "model", None),
+    )
+    eqns = collect_eqns(jax.make_jaxpr(fng)(xb).jaxpr, [])
+    psums = [e for e in eqns if e.primitive.name == "psum"]
+    assert psums, "no psum found in tp_region_enter bwd"
+    for e in psums:
+        dt = e.invars[0].aval.dtype
+        assert dt == jnp.bfloat16, (
+            f"cotangent psum accumulates in {dt}, expected the compute "
+            f"dtype bfloat16"
+        )
+    # and the returned cotangent stays in the compute dtype end to end
+    gb = jax.jit(fng)(xb)
+    assert gb.dtype == jnp.bfloat16, gb.dtype
+    print("  tp_region bwd psum accumulation dtype == compute dtype OK")
+
     print("scenario_compressed_collectives OK")
 
 

@@ -7,6 +7,9 @@ match the single-device reference.
   * round_to=2: loss stays close (bf16-grade weight error), training still
     descends — the paper's "no deterioration" claim at small scale.
   * prefill+decode distributed == single-device logits.
+  * act_policy=rt2: TP-axis activation collectives ride packed planes
+    (fwd AND bwd) — loss still matches the single-device reference to
+    format tolerance and keeps descending; act rt=4 policy is exact.
 """
 import os
 
@@ -23,6 +26,7 @@ from repro.models.init import init_params
 from repro.optim.sgd import SGDConfig, init_momentum
 from repro.serve.step import global_cache_shapes, make_decode_step, make_prefill_step
 from repro.train.step import make_train_step
+from repro.transport import CompressionPolicy
 from repro.configs.base import InputShape
 from repro.configs.shapes import input_specs
 
@@ -142,6 +146,86 @@ def run_serve(arch, mesh_cfg, mesh):
     print(f"  {arch}: serve prefill+decode match OK")
 
 
+def run_act_compression(arch, mesh_cfg, mesh):
+    """Activation-compressed TP collectives: train + serve vs reference."""
+    cfg = reduced(get_config(arch))
+    B, S = 8, 32
+    batch = _batch(cfg, B, S)
+    batch_shapes = {
+        k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()
+    }
+    opt = SGDConfig(lr=0.05, momentum=0.9, weight_decay=0.0)
+    nrt = cfg.num_groups + 1
+    act2 = CompressionPolicy(round_to=2, grad_round_to=2, mode="nearest")
+
+    params1, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec1 = build_spec_tree(params1, metas, SINGLE)
+    st1 = tree_to_storage(params1, spec1, SINGLE)
+    step1 = make_train_step(cfg, SINGLE, None, spec1, (4,) * nrt, opt,
+                            batch_shapes)
+    _, _, met1 = step1(st1, init_momentum(st1), batch, 0.05)
+    l1 = float(met1["loss"])
+
+    params, _ = init_params(cfg, jax.random.PRNGKey(0), tp=mesh_cfg.tp)
+    spec = build_spec_tree(params, metas, mesh_cfg)
+    st = tree_to_storage(params, spec, mesh_cfg)
+    step = make_train_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, opt,
+                           batch_shapes, act_policy=act2)
+    st, mom, met = step(st, init_momentum(st), batch, 0.05)
+    la = float(met["loss"])
+    # every TP psum now carries rt=2 nearest-rounded planes: bf16-grade
+    # activation error, same envelope as the rt=2 weight check above
+    assert abs(la - l1) < 0.05 + 0.05 * abs(l1), (arch, l1, la)
+    _, _, met_b = step(st, mom, batch, 0.05)
+    assert float(met_b["loss"]) < la + 0.05, (arch, "act-compressed diverged")
+
+    # act rt=4 policy must be numerically exact vs the no-policy step
+    params_e, _ = init_params(cfg, jax.random.PRNGKey(0), tp=mesh_cfg.tp)
+    st_e = tree_to_storage(params_e, spec, mesh_cfg)
+    step4 = make_train_step(
+        cfg, mesh_cfg, mesh, spec, (4,) * nrt, opt, batch_shapes,
+        act_policy=CompressionPolicy(round_to=4, grad_round_to=4),
+    )
+    _, _, met4 = step4(st_e, init_momentum(st_e), batch, 0.05)
+    assert abs(float(met4["loss"]) - l1) < 2e-4, (l1, float(met4["loss"]))
+
+    # serve: act-compressed prefill+decode logits stay close to reference
+    # (the train step donated st1 — rebuild the single-device storage)
+    params1s, _ = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    st1 = tree_to_storage(params1s, spec1, SINGLE)
+    sbatch = {"tokens": batch["tokens"][:, :16]}
+    sshapes = {"tokens": jax.ShapeDtypeStruct((B, 16), jnp.int32)}
+    pre1 = make_prefill_step(cfg, SINGLE, None, spec1, (4,) * nrt, sshapes,
+                             cache_capacity=18)
+    logits1, caches1 = pre1(st1, sbatch)
+    params_s, _ = init_params(cfg, jax.random.PRNGKey(0), tp=mesh_cfg.tp)
+    st_s = tree_to_storage(params_s, spec, mesh_cfg)
+    pre = make_prefill_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, sshapes,
+                            cache_capacity=18, act_policy=act2)
+    logits, caches = pre(st_s, sbatch)
+    v = cfg.vocab_size
+    err = np.max(np.abs(np.asarray(logits1[..., :v]) - np.asarray(logits[..., :v])))
+    scale = np.max(np.abs(np.asarray(logits1[..., :v]))) + 1e-9
+    assert err / scale < 0.05, (arch, err / scale)
+
+    dshapes = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    dstep1 = make_decode_step(cfg, SINGLE, None, spec1, (4,) * nrt, dshapes)
+    dstep = make_decode_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, dshapes,
+                             act_policy=act2)
+    tok = {"tokens": jnp.ones((B, 1), jnp.int32),
+           "pos": jnp.asarray(16, jnp.int32)}
+    dl1, _ = dstep1(st1, caches1, tok)
+    dl, _ = dstep(st_s, caches, tok)
+    derr = np.max(np.abs(np.asarray(dl1[..., :v]) - np.asarray(dl[..., :v])))
+    dscale = np.max(np.abs(np.asarray(dl1[..., :v]))) + 1e-9
+    assert derr / dscale < 0.05, (arch, derr / dscale)
+    print(f"  {arch}: act-compressed train {l1:.4f}->{la:.4f}, "
+          f"serve rel-err {err/scale:.4f}/{derr/dscale:.4f} OK")
+
+
 def main():
     mesh_cfg = MeshCfg(tp=2, dp=4, pods=1)
     mesh = make_mesh_from_cfg(mesh_cfg)
@@ -153,6 +237,7 @@ def main():
             run_arch(arch, mesh_cfg, mesh, atol_loss=tol)
         for arch in ["qwen3-1.7b", "recurrentgemma-9b"]:
             run_serve(arch, mesh_cfg, mesh)
+        run_act_compression("qwen3-1.7b", mesh_cfg, mesh)
 
     # multi-pod mesh geometry (2 pods x 2 data x 2 model)
     mesh_cfg3 = MeshCfg(tp=2, dp=2, pods=2)

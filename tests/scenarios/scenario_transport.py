@@ -1,7 +1,9 @@
 """Subprocess scenario: the transport layer's collective paths on an
 8-device host mesh — Transport dispatch (both impls), chunked
-double-buffered gather, multi-axis reduce-scatter, and the compressed
-backward path (grad_round_to < 4)."""
+double-buffered gather, multi-axis reduce-scatter, the compressed
+backward path (grad_round_to < 4), the generalized (arbitrary-rank /
+placed / stacked) reduce-scatter, and the activation-path
+seq_gather / seq_scatter pair with compressed fwd AND bwd."""
 import os
 
 os.environ.setdefault(
@@ -138,6 +140,160 @@ def main():
     got = np.asarray(jax.jit(f)(w, coef)).reshape(-1)
     np.testing.assert_allclose(got, want_full, rtol=1e-6)
     print("  compressed VJP (grad_round_to=2) within format tolerance OK")
+
+    # ---- generalized reduce-scatter: placed / stacked / N-D leaves ----
+    # 2-D stacked (reps, S) scattering axis 1; 3-D placed (B, S, D) with
+    # non-divisible trailing dims (33, 3); 2-D with non-divisible lead.
+    t = Transport("data")
+    for shape, axis in [
+        ((3, 1024), 1),       # stacked leaf: (reps, flat) at axis=1
+        ((4, 64, 33), 1),     # placed 3-D, trailing dim not divisible
+        ((64, 5, 3), 0),      # 3-D, both trailing dims non-divisible
+    ]:
+        garr = jnp.asarray(rng.normal(0, 1, shape).astype(np.float32))
+
+        def rs_gen(g_all, axis=axis):
+            i = jax.lax.axis_index("data")
+            return t.reduce_scatter(
+                g_all * (i + 1.0), CompressionPolicy(grad_round_to=2),
+                axis=axis,
+            )
+
+        def rs_fp32(g_all, axis=axis):
+            i = jax.lax.axis_index("data")
+            return jax.lax.psum_scatter(
+                g_all * (i + 1.0), "data", scatter_dimension=axis, tiled=True
+            )
+
+        out_spec = P(*["data" if d == axis else None for d in range(len(shape))])
+        f = shard_map(rs_gen, mesh=mesh, in_specs=P(*[None] * len(shape)),
+                      out_specs=out_spec)
+        got = np.asarray(jax.jit(f)(garr))
+        want = np.asarray(garr) * 10.0  # sum_{i=1..4} i
+        assert got.shape == shape, (got.shape, shape)
+        tol = np.abs(want) * 2**-7 + 4 * 2**-7
+        assert np.all(np.abs(got - want) <= tol), (
+            shape, np.max(np.abs(got - want) - tol)
+        )
+
+        # uncompressed (grad_round_to=4) must be BIT-EXACT with the fp32
+        # path: the generalized transport dispatches to the identical
+        # lax.psum_scatter
+        f4 = shard_map(
+            lambda g_all: t.reduce_scatter(
+                g_all * (jax.lax.axis_index("data") + 1.0),
+                CompressionPolicy(), axis=axis,
+            ),
+            mesh=mesh, in_specs=P(*[None] * len(shape)), out_specs=out_spec,
+        )
+        fr = shard_map(rs_fp32, mesh=mesh, in_specs=P(*[None] * len(shape)),
+                       out_specs=out_spec)
+        np.testing.assert_array_equal(
+            np.asarray(jax.jit(f4)(garr)), np.asarray(jax.jit(fr)(garr)),
+            err_msg=f"shape={shape}",
+        )
+    print("  generalized rs: 2-D/3-D placed+stacked, rt4 bit-exact OK")
+
+    # non-divisible SCATTER dim is a trace-time error, not silent padding
+    try:
+        bad = shard_map(
+            lambda g_all: t.reduce_scatter(
+                g_all, CompressionPolicy(grad_round_to=2), axis=0
+            ),
+            mesh=mesh, in_specs=P(None, None), out_specs=P("data", None),
+        )
+        jax.jit(bad).lower(jnp.zeros((6, 3), jnp.float32))
+        raise AssertionError("non-divisible scatter dim did not raise")
+    except ValueError as e:
+        assert "not divisible" in str(e), e
+    print("  generalized rs: non-divisible scatter dim raises OK")
+
+    # ---- compressed bwd through a stacked placed gather (axis=1) ------
+    # placed_leaf-style: (reps, S_loc) gathered at axis 1; the cotangent
+    # now reduce-scatters through the generalized path at rt=2.
+    reps = 3
+    wst = jnp.asarray(rng.normal(0, 1, (reps, S)).astype(np.float32))
+    coef_st = jnp.asarray(rng.normal(0, 1, (D, reps, S)).astype(np.float32))
+    pol_st = CompressionPolicy(round_to=2, grad_round_to=2)
+
+    def loss_st(w_local, coef_row):
+        w_full = t.all_gather(w_local, pol_st, axis=1)
+        return jnp.sum(w_full * coef_row) / D
+
+    f = shard_map(
+        lambda wl, cs: jax.grad(loss_st)(wl, cs[0]),
+        mesh=mesh, in_specs=(P(None, "data"), P("data", None, None)),
+        out_specs=P(None, "data"),
+    )
+    got = np.asarray(jax.jit(f)(wst, coef_st))
+    want_st = np.sum(np.asarray(coef_st), axis=0) / D
+    # out_specs already concatenated the per-shard results along axis 1
+    got_full = got.reshape(reps, S)
+    tol = np.abs(want_st) * 2**-7 + D * 2**-7
+    assert np.all(np.abs(got_full - want_st) <= tol), np.max(
+        np.abs(got_full - want_st) - tol
+    )
+    print("  stacked placed gather: compressed bwd (axis=1) OK")
+
+    # ---- seq_gather / seq_scatter: compressed fwd + bwd ----------------
+    from repro.transport import seq_gather, seq_scatter
+
+    B, seq, dm = 4, 32, 16
+    xs = jnp.asarray(rng.normal(0, 1, (B, seq, dm)).astype(np.float32))
+    pol_act = CompressionPolicy(round_to=2, grad_round_to=2, mode="nearest")
+
+    def sp(x_shard, pol):
+        full = seq_gather(x_shard, "model", pol)
+        return seq_scatter(full, "model", pol)
+
+    f = shard_map(
+        lambda x: sp(x, pol_act), mesh=mesh,
+        in_specs=P(None, "model", None), out_specs=P(None, "model", None),
+    )
+    got = np.asarray(jax.jit(f)(xs))
+    want = 2 * np.asarray(xs)  # gather + reduce-scatter over 2 model ranks
+    tol = np.abs(want) * 2**-7 + 2**-6
+    assert np.all(np.abs(got - want) <= tol), np.max(np.abs(got - want) - tol)
+
+    # grads: compressed pipeline cotangents match the uncompressed pair
+    def gfn(x, pol):
+        return jax.grad(lambda v: jnp.sum(sp(v, pol)))(x)
+
+    fg = shard_map(
+        lambda x: gfn(x, pol_act), mesh=mesh,
+        in_specs=P(None, "model", None), out_specs=P(None, "model", None),
+    )
+    fg4 = shard_map(
+        lambda x: gfn(x, CompressionPolicy()), mesh=mesh,
+        in_specs=P(None, "model", None), out_specs=P(None, "model", None),
+    )
+    gc = np.asarray(jax.jit(fg)(xs))
+    g4 = np.asarray(jax.jit(fg4)(xs))
+    np.testing.assert_allclose(gc, g4, rtol=1e-2, atol=1e-2)
+
+    # negative axis resolves to the data dim, not the plane dim
+    fneg = shard_map(
+        lambda x: seq_gather(x, "model", pol_act, -2), mesh=mesh,
+        in_specs=P(None, "model", None), out_specs=P(None, None, None),
+    )
+    fpos = shard_map(
+        lambda x: seq_gather(x, "model", pol_act, 1), mesh=mesh,
+        in_specs=P(None, "model", None), out_specs=P(None, None, None),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(jax.jit(fneg)(xs)), np.asarray(jax.jit(fpos)(xs))
+    )
+
+    # bf16 activations keep their dtype through the compressed pipeline
+    outb = jax.jit(
+        shard_map(
+            lambda x: sp(x, pol_act), mesh=mesh,
+            in_specs=P(None, "model", None),
+            out_specs=P(None, "model", None),
+        )
+    )(xs.astype(jnp.bfloat16))
+    assert outb.dtype == jnp.bfloat16, outb.dtype
+    print("  seq_gather/seq_scatter: compressed fwd+bwd, bf16-safe OK")
 
     print("scenario_transport OK")
 

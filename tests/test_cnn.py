@@ -60,6 +60,47 @@ def test_train_step_descends(rt):
     assert (norms > 0).all()
 
 
+def test_train_step_with_act_policy_descends():
+    """Activation group in the DP CNN setting: stage-boundary
+    straight-through truncation — training still descends and stays
+    close to the uncompressed trajectory over a few steps."""
+    from repro.transport import CompressionPolicy
+
+    cfg = reduced_cnn(ALEXNET, num_classes=10, in_hw=32)
+    data = SyntheticImageNet(num_classes=10, hw=32, noise=0.1)
+    opt = SGDConfig(lr=0.05, momentum=0.9, weight_decay=5e-4)
+
+    def run(act_policy):
+        params, metas, gi = init_cnn(cfg, jax.random.PRNGKey(0))
+        spec = build_cnn_spec_tree(params, metas, MESH)
+        storage = cnn_to_storage(params, spec, MESH)
+        _, ng = gi
+        step = make_cnn_train_step(
+            cfg, MESH, None, spec, gi, (4,) * ng, opt, {},
+            act_policy=act_policy,
+        )
+        mom = init_momentum(storage)
+        losses = []
+        for i in range(8):
+            imgs, labels = data.batch(64, i)
+            storage, mom, m = step(
+                storage, mom, {"images": imgs, "labels": labels}, 0.05,
+                jax.random.PRNGKey(i),
+            )
+            losses.append(float(m["loss"]))
+        return losses
+
+    base = run(None)
+    act2 = run(CompressionPolicy(round_to=2, mode="nearest"))
+    assert np.isfinite(act2).all()
+    assert act2[-1] < act2[0], act2
+    # rt=2 nearest keeps ~8 mantissa bits: trajectories stay close early
+    assert abs(act2[0] - base[0]) < 0.05 + 0.05 * abs(base[0])
+    # act rt=4 policy is a no-op (quantize short-circuits): bit-identical
+    act4 = run(CompressionPolicy(round_to=4))
+    np.testing.assert_allclose(act4, base, rtol=1e-6)
+
+
 def test_eval_top5():
     cfg = reduced_cnn(VGG_A, num_classes=10, in_hw=32)
     data = SyntheticImageNet(num_classes=10, hw=32)

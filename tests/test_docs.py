@@ -1,0 +1,22 @@
+"""Docs stay truthful: every symbol/file a docs/*.md page references in
+backticks must still exist in the source tree (the same check CI runs as
+a dedicated step — see tools/check_docs_freshness.py)."""
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def test_docs_reference_live_symbols():
+    sys.path.insert(0, str(ROOT / "tools"))
+    try:
+        import check_docs_freshness as cdf
+    finally:
+        sys.path.pop(0)
+    stale = cdf.check()
+    assert not stale, "\n".join(stale)
+
+
+def test_docs_exist():
+    names = {p.name for p in (ROOT / "docs").glob("*.md")}
+    assert {"transport.md", "collectives.md", "architecture.md"} <= names

@@ -102,6 +102,56 @@ print("OK")
     assert proc.returncode == 0 and "OK" in proc.stdout, proc.stderr[-2000:]
 
 
+def test_compressed_tp_wire_shrinks_by_packing_ratio():
+    """The TP-axis all-reduce, routed through the compressed transport,
+    must shrink the HLO-derived wire bytes by exactly round_to/4, and the
+    plane-wire split must match the policy's all_reduce_wire_bytes."""
+    import os
+    import subprocess
+    import sys
+
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.dist.shard import shard_map
+from repro.roofline.hlo_cost import analyze_hlo
+from repro.core.collectives import tp_region_exit
+from repro.transport import CompressionPolicy
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("model",))
+S = 4096
+x = jnp.zeros((S,), jnp.float32)
+def wire(pol):
+    f = shard_map(lambda v: tp_region_exit(v, "model", pol), mesh=mesh,
+                  in_specs=P(None), out_specs=P(None))
+    return analyze_hlo(jax.jit(f).lower(x).compile().as_text())
+c4 = wire(None)
+pol = CompressionPolicy(round_to=2, grad_round_to=2, mode="nearest")
+c2 = wire(pol)
+# uncompressed: one f32 ring all-reduce, no planes
+want4 = CompressionPolicy(round_to=4).all_reduce_wire_bytes(S, 4)
+assert abs(c4.wire_total - want4) < 2, (c4.wire, want4)
+assert c4.plane_wire_total == 0, c4.plane_wire
+# compressed: rs+ag of u8 planes, all of it plane wire, exactly rt/4
+want2 = pol.all_reduce_wire_bytes(S, 4)
+assert abs(c2.wire_total - want2) < 2, (c2.wire, want2)
+assert abs(c2.plane_wire_total - c2.wire_total) < 2, c2.plane_wire
+assert abs(c2.wire_total / c4.wire_total - pol.wire_fraction) < 0.01
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=300,
+    )
+    assert proc.returncode == 0 and "OK" in proc.stdout, proc.stderr[-2000:]
+
+
 def test_shape_parsing():
     from repro.roofline.hlo_cost import _type_bytes
 

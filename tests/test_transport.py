@@ -90,6 +90,61 @@ def test_ring_formula_is_shared_source_of_truth():
         ring_wire_bytes("broadcast", 1, 2)
 
 
+def test_activation_wire_accounting():
+    """seq_gather / seq_scatter / all-reduce byte formulas derive from the
+    shared ring model; compressed all-reduce = rs + ag at round_to."""
+    pol = CompressionPolicy(round_to=2, grad_round_to=2)
+    n, elems = 4, 4096
+    assert pol.seq_gather_wire_bytes(elems, n) == (n - 1) * elems * 2 // n
+    assert pol.seq_scatter_wire_bytes(elems, n) == (n - 1) * elems * 2 // n
+    # compressed all-reduce: both halves at round_to bytes — exactly
+    # round_to/4 of the fp32 ring all-reduce
+    fp32 = CompressionPolicy(round_to=4)
+    assert (
+        pol.all_reduce_wire_bytes(elems, n)
+        == fp32.all_reduce_wire_bytes(elems, n) // 2
+    )
+    assert fp32.all_reduce_wire_bytes(elems, n) == round(
+        ring_wire_bytes("all-reduce", elems * 4, n)
+    )
+    # uncompressed bf16 psums are charged at the compute width
+    assert fp32.all_reduce_wire_bytes(elems, n, uncompressed_bytes=2) == round(
+        ring_wire_bytes("all-reduce", elems * 2, n)
+    )
+    # asymmetric policy: cotangent direction follows the GRAD fields
+    # (mirrors all_reduce(use_grad_format=True) / the seq VJPs)
+    asym = CompressionPolicy(round_to=4, grad_round_to=2)
+    assert asym.all_reduce_wire_bytes(elems, n) == round(
+        ring_wire_bytes("all-reduce", elems * 4, n)
+    )
+    assert (
+        asym.all_reduce_wire_bytes(elems, n, grad=True)
+        == pol.all_reduce_wire_bytes(elems, n)
+    )
+    assert (
+        asym.seq_gather_wire_bytes(elems, n, grad=True)
+        == pol.seq_gather_wire_bytes(elems, n)
+    )
+
+
+def test_act_policy_for_cli_helper():
+    from repro.transport import act_policy_for
+
+    assert act_policy_for(4) is None
+    p = act_policy_for(2)
+    assert p.round_to == 2 and p.grad_round_to == 2 and p.mode == "nearest"
+
+
+def test_pick_split_axis():
+    from repro.transport import pick_split_axis
+
+    assert pick_split_axis((8, 32, 48), 2) == 2   # rightmost divisible
+    assert pick_split_axis((8, 32, 33), 2) == 1   # odd feature dim: seq
+    assert pick_split_axis((8, 1, 48), 2) == 2    # decode (S=1) still ok
+    assert pick_split_axis((7, 3), 2) is None     # fallback to lax.psum
+    assert pick_split_axis((2,), 4) is None       # dim smaller than group
+
+
 def test_resolve_impl_backend_aware():
     # no hard-coded interpret: "auto" picks by backend, rounding modes
     # that need PRNG plumbing always take the ref path

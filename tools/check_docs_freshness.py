@@ -1,0 +1,128 @@
+#!/usr/bin/env python
+"""Docs-freshness check: fail if docs/*.md references a symbol or file
+that no longer exists under the repo's source tree.
+
+Grep-based and deliberately conservative (CI must not cry wolf):
+
+  * fenced code blocks are stripped; only inline `backtick` spans are
+    inspected;
+  * spans containing spaces, operators, colons, or newlines are skipped
+    (prose, shell lines, pseudo-code);
+  * file-path spans (``a/b.py``, ``x.md``) must resolve relative to the
+    repo root, ``src/repro/``, ``docs/``, or ``tests/``;
+  * dotted ``repro.*`` module paths must resolve to a module or package;
+  * identifier-looking spans (snake_case with an underscore, CamelCase,
+    or dotted names) must appear verbatim somewhere in the source corpus
+    (``src/``, ``tests/``, ``benchmarks/``, ``examples/`` contents +
+    file names). Plain lowercase words are ignored.
+
+Run from anywhere: paths are resolved against the repo root (parent of
+this file's directory). Exit code 1 lists every stale reference.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+# docs/ is deliberately NOT part of the corpus: a stale reference must
+# not satisfy itself (or another doc) — only real source keeps it alive
+SOURCE_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
+SEARCH_EXTS = {".py", ".md", ".toml", ".yml"}
+
+FENCE_RE = re.compile(r"```.*?```", re.S)
+SPAN_RE = re.compile(r"`([^`\n]+)`")
+IDENT_RE = re.compile(r"^[A-Za-z_][A-Za-z0-9_.]*$")
+CAMEL_RE = re.compile(r"[a-z][A-Z]")
+
+
+def _corpus() -> str:
+    parts = []
+    for d in SOURCE_DIRS:
+        base = ROOT / d
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*")):
+            if p.suffix in SEARCH_EXTS and p.is_file():
+                parts.append(str(p.relative_to(ROOT)))
+                try:
+                    parts.append(p.read_text(errors="ignore"))
+                except OSError:
+                    pass
+    return "\n".join(parts)
+
+
+def _path_exists(token: str) -> bool:
+    cands = [token, f"src/repro/{token}", f"docs/{token}", f"tests/{token}",
+             f"tests/scenarios/{token}", f"src/{token}"]
+    return any((ROOT / c).exists() for c in cands)
+
+
+def _module_exists(token: str) -> bool:
+    rel = token.replace(".", "/")
+    return (ROOT / "src" / f"{rel}.py").exists() or (
+        ROOT / "src" / rel
+    ).is_dir()
+
+
+def _looks_like_symbol(token: str) -> bool:
+    if not IDENT_RE.match(token):
+        return False
+    return "_" in token or "." in token or bool(CAMEL_RE.search(token))
+
+
+def check(doc_paths=None) -> list[str]:
+    corpus = _corpus()
+    stale = []
+    docs = doc_paths or sorted((ROOT / "docs").glob("*.md"))
+    for doc in docs:
+        text = FENCE_RE.sub("", doc.read_text())
+        for m in SPAN_RE.finditer(text):
+            token = m.group(1).strip().rstrip(",").rstrip("()")
+            if not token or any(c in token for c in " =<>:[]{}|*\"'-/+"):
+                # paths are the one slash-bearing form we do check
+                if "/" in token and re.match(r"^[\w./-]+\.(py|md)$", token):
+                    if not _path_exists(token):
+                        stale.append(f"{doc.name}: missing file `{token}`")
+                continue
+            if re.match(r"^[\w.]+\.(py|md)$", token):
+                if not _path_exists(token):
+                    stale.append(f"{doc.name}: missing file `{token}`")
+                continue
+            if token.startswith("repro."):
+                if _module_exists(token):
+                    continue
+                # repro.pkg.attr: module prefix + attr searched in corpus
+                head, _, attr = token.rpartition(".")
+                if _module_exists(head) and re.search(
+                    rf"\b{re.escape(attr)}\b", corpus
+                ):
+                    continue
+                stale.append(f"{doc.name}: unresolvable module `{token}`")
+                continue
+            if not _looks_like_symbol(token):
+                continue
+            # dotted attr chains: every component must appear somewhere
+            names = [n for n in token.split(".") if n]
+            if all(
+                re.search(rf"\b{re.escape(n)}\b", corpus) for n in names
+            ):
+                continue
+            stale.append(f"{doc.name}: unknown symbol `{token}`")
+    return stale
+
+
+def main() -> int:
+    stale = check()
+    if stale:
+        print("docs reference symbols/files that no longer exist:")
+        for s in stale:
+            print(f"  {s}")
+        return 1
+    print(f"docs freshness OK ({len(list((ROOT / 'docs').glob('*.md')))} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
