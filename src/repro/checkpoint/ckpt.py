@@ -21,8 +21,16 @@ def _flatten_pytree(tree):
     return flat, treedef
 
 
+def _npz_path(path: str) -> str:
+    """``np.savez`` appends ``.npz`` when the suffix is missing; normalize
+    so save and load always agree on the on-disk name (a bare ``"ckpt"``
+    used to save ``ckpt.npz`` and then fail to load ``"ckpt"``)."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
 def save_checkpoint(path: str, storage, opt_state, awp: AWPController | None,
                     step: int):
+    path = _npz_path(path)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat, _ = jax.tree_util.tree_flatten((storage, opt_state))
     arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(flat)}
@@ -44,7 +52,7 @@ def save_checkpoint(path: str, storage, opt_state, awp: AWPController | None,
 
 def load_checkpoint(path: str, storage_like, opt_like,
                     awp: AWPController | None = None):
-    data = np.load(path, allow_pickle=False)
+    data = np.load(_npz_path(path), allow_pickle=False)
     meta = json.loads(str(data["__meta__"]))
     flat_like, treedef = jax.tree_util.tree_flatten((storage_like, opt_like))
     assert meta["num_arrays"] == len(flat_like), "checkpoint structure mismatch"

@@ -137,3 +137,59 @@ def seq_scatter(x, axis_names: AxisNames, policy=None, axis: int = 1):
     to fp32 first)."""
     pol = _act_policy(policy) or policy_for(4)
     return _T.seq_scatter(x, axis_names, pol, axis)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def seq_split(x, axis_name: Hashable, axis: int = 1):
+    """Sequence-parallel entry for *replicated* activations: forward slices
+    this rank's sequence shard, backward all-gathers the shard cotangents.
+
+    This is the conjugate of :func:`seq_gather` for tensors that are
+    already identical on every model rank (e.g. the audio feature-stub
+    embedding) — no reduction is needed in either direction, so the
+    cotangent rides an uncompressed all-gather. ``x.shape[axis]`` must
+    divide the axis size."""
+    n = _T.axis_size(axis_name)
+    loc = x.shape[axis] // n
+    rank = lax.axis_index(axis_name)
+    return lax.dynamic_slice_in_dim(x, rank * loc, loc, axis=axis)
+
+
+def _split_fwd(x, axis_name, axis):
+    return seq_split(x, axis_name, axis), None
+
+
+def _split_bwd(axis_name, axis, _, g):
+    return (lax.all_gather(g, axis_name, axis=axis, tiled=True),)
+
+
+seq_split.defvjp(_split_fwd, _split_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def seq_merge(x, axis_name: Hashable, axis: int = 1):
+    """Sequence shards -> the full replicated sequence, for regions whose
+    compute is *replicated* over the model axis (sLSTM, the prefill
+    logits entry): forward all-gathers the shards, backward slices this
+    rank's shard of the cotangent.
+
+    This is :func:`seq_split`'s inverse, NOT :func:`seq_gather`'s twin:
+    ``seq_gather``'s reduce-scatter transpose assumes each rank's
+    cotangent is a *partial* sum (TP-sharded weights downstream); after
+    replicated compute every rank holds the identical full cotangent and
+    a reduce-scatter would double-count by the axis size."""
+    return lax.all_gather(x, axis_name, axis=axis, tiled=True)
+
+
+def _merge_fwd(x, axis_name, axis):
+    return seq_merge(x, axis_name, axis), None
+
+
+def _merge_bwd(axis_name, axis, _, g):
+    n = _T.axis_size(axis_name)
+    loc = g.shape[axis] // n
+    rank = lax.axis_index(axis_name)
+    return (lax.dynamic_slice_in_dim(g, rank * loc, loc, axis=axis),)
+
+
+seq_merge.defvjp(_merge_fwd, _merge_bwd)

@@ -19,6 +19,16 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _step_rng(seed: int, step: int) -> np.random.Generator:
+    """Collision-free per-(seed, step) stream: both ints map bijectively
+    to non-negative entropy words (the previous ``abs(seed·p + step) + 1``
+    mix folded pairs symmetric about zero onto the same stream, repeating
+    batches). SeedSequence mixes the words, so distinct pairs — including
+    the validation set's ``step=-1`` — get independent streams."""
+    ent = [int(np.uint64(np.int64(seed))), int(np.uint64(np.int64(step)))]
+    return np.random.default_rng(ent)
+
+
 @dataclasses.dataclass
 class SyntheticImageNet:
     num_classes: int = 200
@@ -28,13 +38,15 @@ class SyntheticImageNet:
     seed: int = 0
 
     def __post_init__(self):
-        rng = np.random.default_rng(self.seed)
+        # uint64 view: bijective and non-negative (negative seeds raise in
+        # default_rng); identical stream to before for seed >= 0
+        rng = np.random.default_rng(int(np.uint64(np.int64(self.seed))))
         self.prototypes = rng.normal(
             0, 1, (self.num_classes, self.hw, self.hw, self.channels)
         ).astype(np.float32)
 
     def batch(self, batch_size: int, step: int):
-        rng = np.random.default_rng(abs(self.seed * 1_000_003 + step) + 1)
+        rng = _step_rng(self.seed, step)
         labels = rng.integers(0, self.num_classes, batch_size)
         base = self.prototypes[labels]
         shift = rng.integers(-2, 3, (batch_size, 2))

@@ -129,6 +129,27 @@ def _fsdp_spec_entry(mesh_cfg: MeshCfg):
     return axes if len(axes) > 1 else axes[0]
 
 
+def seq_activation_pspec(
+    mesh_cfg: MeshCfg, ndim: int = 3, *, seq_axis: int = 1,
+    shard_batch: bool = True,
+):
+    """PartitionSpec of a sequence-parallel activation ``(B, S/tp, d, …)``.
+
+    This is the one layout contract for sequence-sharded activations
+    (``Env.seq_parallel``): batch over the FSDP axes, the sequence dim
+    over the model axis, everything else replicated. The train/serve
+    steps keep these internal to their shard_map bodies; tests and
+    future pipelined steps that expose sharded activations at a jit
+    boundary must use this spec so the layout cannot drift.
+    """
+    dims: list[Any] = [None] * ndim
+    if mesh_cfg.dshards > 1 and shard_batch:
+        dims[0] = _fsdp_spec_entry(mesh_cfg)
+    if mesh_cfg.tp > 1:
+        dims[seq_axis] = mesh_cfg.model_axis
+    return P(*dims)
+
+
 # ---------------------------------------------------------------------------
 # leaf specs
 # ---------------------------------------------------------------------------

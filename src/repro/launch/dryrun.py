@@ -55,7 +55,8 @@ def build_lowerable(cfg, shape, mesh_cfg, mesh, round_to, *, env_kw=None,
 
     ``opts`` (all optional — §Perf levers):
       train_dtype: "f32"|"bf16"; accum: int; grad_round_to: int;
-      weight_stationary: bool; int8_kv: bool; causal_skip: bool.
+      weight_stationary: bool; int8_kv: bool; causal_skip: bool;
+      seq_parallel: bool (train/prefill activation layout).
     """
     opts = dict(opts or {})
     storage_abs, metas = param_shapes(cfg, tp=mesh_cfg.tp)
@@ -70,6 +71,8 @@ def build_lowerable(cfg, shape, mesh_cfg, mesh, round_to, *, env_kw=None,
     if "mlstm_chunk" in opts:
         env_kw["mlstm_chunk"] = opts["mlstm_chunk"]
 
+    seq_parallel = bool(opts.get("seq_parallel"))
+
     if shape.kind == "train":
         dtype = jnp.bfloat16 if opts.get("train_dtype") == "bf16" else jnp.float32
         step = make_train_step(
@@ -77,6 +80,7 @@ def build_lowerable(cfg, shape, mesh_cfg, mesh, round_to, *, env_kw=None,
             batch, dtype=dtype, env_kw=env_kw,
             grad_round_to=opts.get("grad_round_to"),
             accum_steps=opts.get("accum", 1),
+            seq_parallel=seq_parallel,
         )
         mom = _sds_tree(storage)
         lr = jax.ShapeDtypeStruct((), jnp.float32)
@@ -86,7 +90,7 @@ def build_lowerable(cfg, shape, mesh_cfg, mesh, round_to, *, env_kw=None,
         step = make_prefill_step(
             cfg, mesh_cfg, mesh, spec_tree, round_tos, batch,
             cache_capacity=shape.seq_len, shard_batch=shard_batch,
-            dtype=jnp.bfloat16, env_kw=env_kw,
+            dtype=jnp.bfloat16, env_kw=env_kw, seq_parallel=seq_parallel,
         )
         return step, (storage, batch)
 
@@ -148,9 +152,19 @@ def run_one(arch, shape_name, multi_pod, round_to, *, env_kw=None,
             (opts or {}).get("train_dtype") == "bf16"
             or get_shape(shape_name).kind != "train"
         ) else 4
+        # the seq-parallel RS correction must not rescale raw-dtype
+        # *gradient* reduce-scatters (indistinguishable from activation
+        # RS in HLO text): only enable it when the shape has a seq layout
+        # and any grad RS rides compressed planes (prefill has no grads)
+        kind = get_shape(shape_name).kind
+        sp_opt = bool((opts or {}).get("seq_parallel"))
+        sp_corr = sp_opt and (
+            kind == "prefill"
+            or (kind == "train" and (opts or {}).get("grad_round_to", 4) < 4)
+        )
         rf = roofline_from_compiled(
             compiled, model_flops_estimate(cfg, shape, chips),
-            act_bytes=act_bytes,
+            act_bytes=act_bytes, seq_parallel=sp_corr,
         )
     result = {
         "arch": arch,
@@ -187,6 +201,7 @@ def main():
     ap.add_argument("--weight-stationary", action="store_true")
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--no-causal-skip", action="store_true")
+    ap.add_argument("--seq-parallel", action="store_true")
     args = ap.parse_args()
     opts = {}
     if args.bf16_train:
@@ -201,6 +216,8 @@ def main():
         opts["int8_kv"] = True
     if args.no_causal_skip:
         opts["causal_skip"] = False
+    if args.seq_parallel:
+        opts["seq_parallel"] = True
 
     combos = (
         [(a, s) for a in sorted(ARCHS) for s in INPUT_SHAPES]

@@ -36,6 +36,9 @@ def main():
     ap.add_argument("--act-round-to", type=int, default=4,
                     help="activation wire format on the TP axis (<4 routes "
                          "TP psums through packed planes)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-parallel prefill activations (decode is "
+                         "single-token and keeps the psum layout)")
     ap.add_argument("--weight-stationary", action="store_true")
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--window", type=int, default=0,
@@ -80,12 +83,13 @@ def main():
         prefill = make_prefill_step(
             cfg, mesh_cfg, mesh, spec_tree, rts, bshapes,
             cache_capacity=cap, shard_batch=shard_batch, env_kw=env_kw,
-            act_policy=act_policy,
+            act_policy=act_policy, seq_parallel=args.seq_parallel,
         )
         decode = make_decode_step(
             cfg, mesh_cfg, mesh, spec_tree, rts, dshapes,
             shard_batch=shard_batch, window_override=window, env_kw=env_kw,
             weight_stationary=args.weight_stationary, act_policy=act_policy,
+            seq_parallel=args.seq_parallel,
         )
         weights = storage
         if args.weight_stationary:

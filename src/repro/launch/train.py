@@ -76,6 +76,10 @@ def main():
     ap.add_argument("--act-round-to", type=int, default=4,
                     help="activation wire format on the TP axis (<4 routes "
                          "TP psums and seq collectives through packed planes)")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-parallel activations: norms/residuals on "
+                         "1/tp sequence shards, block boundaries become "
+                         "seq_gather/seq_scatter (requires seq %% tp == 0)")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
@@ -126,7 +130,7 @@ def main():
             cfg, mesh_cfg, mesh, spec_tree, round_tos, opt, batch_shapes,
             dtype=jnp.bfloat16 if args.bf16 else jnp.float32,
             grad_round_to=args.grad_round_to, accum_steps=args.accum,
-            act_policy=act_policy,
+            act_policy=act_policy, seq_parallel=args.seq_parallel,
         )
 
     trainer = Trainer(

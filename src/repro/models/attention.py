@@ -254,8 +254,12 @@ def mha(
     is_cross: bool = False,
     pos_offset=0,
 ) -> tuple[jnp.ndarray, Optional[KVCache]]:
-    """One attention layer. Returns (out (B,S,d), updated cache)."""
-    B, S, d = x.shape
+    """One attention layer. Returns (out (B,S,d), updated cache).
+
+    Under ``env.seq_parallel`` the incoming ``x`` is a sequence shard;
+    ``env.enter`` all-gathers it, so every shape below derives from the
+    gathered ``xin`` (full sequence), and ``env.exit`` reduce-scatters
+    the output back onto shards."""
     hd = cfg.head_dim
     # head counts from the (TP-local, possibly padded) weights themselves
     Hq_l = w["wq"].shape[1] // hd
@@ -264,12 +268,14 @@ def mha(
     is_cross = is_cross or (kv_ext is not None)
 
     xin = env.enter(x)
+    B, S, _ = xin.shape
     q = xin @ w["wq"]
     if cfg.qkv_bias:
         q = q + w["bq"]
     q = q.reshape(B, S, Hq_l, hd)
 
-    kv_src = env.enter(kv_ext) if is_cross else xin
+    # image KV are replicated (never sequence-sharded): always the psum pair
+    kv_src = env.psum_enter(kv_ext) if is_cross else xin
     if is_cross and mode == "decode":
         k = v = None  # cross KV live in the cache, computed at prefill
     else:

@@ -7,6 +7,23 @@ activation-group :class:`~repro.transport.CompressionPolicy`: when set,
 every TP-region psum and sequence-parallel collective issued through this
 env rides the compressed transport (packed byte planes) instead of
 fp32/compute-dtype collectives.
+
+``seq_parallel`` switches the activation layout contract between blocks
+(docs/collectives.md §"Sequence-parallel layout"):
+
+  * ``False`` (Megatron TP): activations between blocks are model-axis
+    *replicated*; :meth:`enter`/:meth:`exit` are the f/g psum pair.
+  * ``True``: activations between blocks are *sequence-sharded*
+    ``(B, S/tp, d)`` — norms and residual adds run on shards, and
+    :meth:`enter`/:meth:`exit` become the transport-backed
+    ``seq_gather``/``seq_scatter`` boundary pair (all-gather into the
+    TP-region matmuls, reduce-scatter of the partial outputs).
+
+Tensors that are *not* sequence-sharded under either layout (vocab-partial
+loss sums, cross-attention image KV) must use :meth:`psum_enter`/
+:meth:`psum_exit`, which stay the TP-region pair regardless of the flag.
+One-token decode has no sequence dim to shard: ``forward_decode`` runs
+under :meth:`without_seq_parallel`.
 """
 from __future__ import annotations
 
@@ -18,7 +35,9 @@ from jax import lax
 
 from repro.core.collectives import (
     seq_gather,
+    seq_merge,
     seq_scatter,
+    seq_split,
     tp_region_enter,
     tp_region_exit,
 )
@@ -38,14 +57,49 @@ class Env:
     act_policy: Any = None                  # activation CompressionPolicy
 
     # ------------------------------------------------------------------
-    def enter(self, x):
-        """Megatron 'f': identity fwd / model-axis psum bwd."""
+    @property
+    def seq_parallel_active(self) -> bool:
+        """True when activations between blocks are sequence-sharded."""
+        return self.seq_parallel and self.model_axis is not None
+
+    def without_seq_parallel(self) -> "Env":
+        """Same env in the replicated-activation layout (decode steps,
+        post-gather logits entries)."""
+        if not self.seq_parallel:
+            return self
+        return dataclasses.replace(self, seq_parallel=False)
+
+    # ------------------------------------------------------------------
+    def enter(self, x, axis: int = 1):
+        """TP-region enter. seq_parallel: all-gather sequence shards into
+        the region (compressed fwd, reduce-scatter bwd); else Megatron 'f'
+        (identity fwd / model-axis psum bwd)."""
+        if self.model_axis is None:
+            return x
+        if self.seq_parallel:
+            return seq_gather(x, self.model_axis, self.act_policy, axis)
+        return tp_region_enter(x, self.model_axis, self.act_policy)
+
+    def exit(self, x, axis: int = 1):
+        """TP-region exit. seq_parallel: reduce-scatter the partial
+        outputs back onto sequence shards (all-gather bwd); else Megatron
+        'g' (model-axis psum fwd / identity bwd)."""
+        if self.model_axis is None:
+            return x
+        if self.seq_parallel:
+            return seq_scatter(x, self.model_axis, self.act_policy, axis)
+        return tp_region_exit(x, self.model_axis, self.act_policy)
+
+    def psum_enter(self, x):
+        """Megatron 'f' regardless of ``seq_parallel`` — for tensors that
+        are never sequence-sharded (cross-attn image KV, vocab-partial
+        loss sums)."""
         if self.model_axis is None:
             return x
         return tp_region_enter(x, self.model_axis, self.act_policy)
 
-    def exit(self, x):
-        """Megatron 'g': model-axis psum fwd / identity bwd."""
+    def psum_exit(self, x):
+        """Megatron 'g' regardless of ``seq_parallel`` (see psum_enter)."""
         if self.model_axis is None:
             return x
         return tp_region_exit(x, self.model_axis, self.act_policy)
@@ -63,6 +117,24 @@ class Env:
         if self.model_axis is None:
             return x
         return seq_scatter(x, self.model_axis, self.act_policy, axis)
+
+    def seq_shard(self, x, axis: int = 1):
+        """Replicated activation -> this rank's sequence shard (identity
+        unless seq-parallel is active). Fwd slice / bwd all-gather."""
+        if not self.seq_parallel_active:
+            return x
+        return seq_split(x, self.model_axis, axis)
+
+    def seq_unshard(self, x, axis: int = 1):
+        """Sequence shard -> full *replicated* sequence (identity unless
+        seq-parallel is active): fwd all-gather / bwd slice. For regions
+        whose compute is replicated over the model axis — sLSTM
+        recurrences, the prefill gather before the last-token logits —
+        where ``seq_gather``'s reduce-scatter transpose would
+        double-count (see core.collectives.seq_merge)."""
+        if not self.seq_parallel_active:
+            return x
+        return seq_merge(x, self.model_axis, axis)
 
     def model_rank(self):
         if self.model_axis is None:

@@ -18,7 +18,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.meta import ParamMeta, REPLICATED_BIG, REPLICATED_SMALL
+from repro.models.meta import (
+    ParamMeta, REPLICATED_BIG, REPLICATED_SMALL, SEQ_NORM,
+)
 from repro.utils.trees import round_up
 
 
@@ -104,7 +106,7 @@ def _attn_params(mk: Maker, cfg: ModelConfig, tp: int, is_cross: bool):
         "wk": ParamMeta(tp_dim=1, tp_units=Kv),
         "wv": ParamMeta(tp_dim=1, tp_units=Kv),
         "wo": ParamMeta(tp_dim=0, tp_units=H),
-        "ln": REPLICATED_SMALL,
+        "ln": SEQ_NORM,
     }
     if cfg.qkv_bias:
         p["bq"] = mk.zeros((H * hd,))
@@ -133,7 +135,7 @@ def _mlp_params(mk: Maker, cfg: ModelConfig, audio: bool):
             "w_down": mk.out_proj((ff, d)),
         }
         m = {
-            "ln": REPLICATED_SMALL,
+            "ln": SEQ_NORM,
             "w_up": ParamMeta(tp_dim=1),
             "w_down": ParamMeta(tp_dim=0),
         }
@@ -145,7 +147,7 @@ def _mlp_params(mk: Maker, cfg: ModelConfig, audio: bool):
         "w_down": mk.out_proj((ff, d)),
     }
     m = {
-        "ln": REPLICATED_SMALL,
+        "ln": SEQ_NORM,
         "w_gate": ParamMeta(tp_dim=1),
         "w_up": ParamMeta(tp_dim=1),
         "w_down": ParamMeta(tp_dim=0),
@@ -169,7 +171,7 @@ def _moe_params(mk: Maker, cfg: ModelConfig):
         "w_down": mk.out_proj((E, ff, d)),
     }
     m = {
-        "ln": REPLICATED_SMALL,
+        "ln": SEQ_NORM,
         "router": ParamMeta(
             tp_dim=None, compress=d * E >= 65536, grad_sync_model=True
         ),
@@ -203,7 +205,7 @@ def _mlstm_params(mk: Maker, cfg: ModelConfig):
         "w_down": mk.out_proj((dv, d)),
     }
     m = {
-        "ln": REPLICATED_SMALL,
+        "ln": SEQ_NORM,
         "wq": ParamMeta(tp_dim=None, grad_sync_model=True),  # full keys on every rank
         "wk": ParamMeta(tp_dim=None, grad_sync_model=True),
         "wv": ParamMeta(tp_dim=1),
@@ -257,7 +259,7 @@ def _rglru_params(mk: Maker, cfg: ModelConfig):
         "w_down": mk.out_proj((r, d)),
     }
     m = {
-        "ln": REPLICATED_SMALL,
+        "ln": SEQ_NORM,
         "w_x": ParamMeta(tp_dim=1),
         "w_y": ParamMeta(tp_dim=1),
         "conv_w": ParamMeta(tp_dim=1, compress=False),
@@ -352,7 +354,7 @@ def init_params(cfg: ModelConfig, key, tp: int = 1):
         top_p["img_proj"] = mk.normal((cfg.vision_dim, d))
         top_m["img_proj"] = REPLICATED_BIG
     top_p["final_norm"] = mk.ones((d,))
-    top_m["final_norm"] = REPLICATED_SMALL
+    top_m["final_norm"] = SEQ_NORM
 
     params = {"groups": groups_p, **top_p}
     metas = {"groups": groups_m, **top_m}

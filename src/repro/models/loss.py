@@ -28,7 +28,9 @@ def lm_loss(
     else:
         m = m_loc
     s_loc = jnp.sum(jnp.exp(logits_local - m[..., None]), axis=-1)
-    s = env.exit(s_loc)  # psum fwd / identity bwd
+    # vocab-partial sums over full-sequence logits: always the psum pair
+    # (the logits entry already gathered any sequence shards)
+    s = env.psum_exit(s_loc)  # psum fwd / identity bwd
     lse = jnp.log(s) + m
 
     local_ids = labels - vocab_start
@@ -36,7 +38,7 @@ def lm_loss(
     safe = jnp.clip(local_ids, 0, vloc - 1)
     tgt_partial = jnp.take_along_axis(logits_local, safe[..., None], axis=-1)[..., 0]
     tgt_partial = jnp.where(in_range, tgt_partial, 0.0)
-    tgt = env.exit(tgt_partial)
+    tgt = env.psum_exit(tgt_partial)
 
     valid = (labels >= 0).astype(jnp.float32)
     nll = (lse - tgt) * valid

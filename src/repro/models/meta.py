@@ -26,6 +26,14 @@ class ParamMeta:
     # Params used on replicated activations already get full grads via the
     # f/g custom_vjp pairs and must NOT be re-summed (DESIGN.md §3).
     grad_sync_model: bool = False
+    # like grad_sync_model, but only when the step runs sequence-parallel
+    # (Env.seq_parallel): params consumed on *sequence shards* — the
+    # pre-boundary RMSNorm scales and the final norm — see each rank's
+    # tokens only, so their grads are token-partial and must be psum'd.
+    # In the replicated layout the same grads are full and identical per
+    # rank (no sync); params consumed on replicated activations (sLSTM)
+    # stay identical under both layouts and must never be re-summed.
+    grad_sync_seq: bool = False
 
     def local_shape(self, shape: tuple[int, ...], tp: int) -> tuple[int, ...]:
         if self.tp_dim is None or tp == 1:
@@ -56,6 +64,10 @@ class ParamMeta:
 
 REPLICATED_SMALL = ParamMeta(tp_dim=None, compress=False)
 REPLICATED_BIG = ParamMeta(tp_dim=None, compress=True)
+# RMSNorm scales applied *before* a TP-region enter: under the
+# sequence-parallel layout they run on this rank's sequence shard, so
+# their grads are token-partial (see grad_sync_seq above)
+SEQ_NORM = ParamMeta(tp_dim=None, compress=False, grad_sync_seq=True)
 
 # compression threshold: leaves smaller than this stay uncompressed and
 # replicated-gathered in fp32 (the paper's "biases" carve-out)

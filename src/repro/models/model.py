@@ -172,9 +172,14 @@ def run_group(
 
 
 def _embed(params, batch, cfg: ModelConfig, env: Env, mat_top):
+    """Token/feature embedding in the env's activation layout: under
+    ``env.seq_parallel`` the result is a sequence shard — the
+    vocab-parallel psum becomes a reduce-scatter (via ``env.exit`` inside
+    ``embed_lookup_vp``, halving its wire bytes) and the replicated
+    feature stub is sliced."""
     if cfg.embed_is_input_stub:
         w = mat_top("embed_in")
-        return batch["features"] @ w
+        return env.seq_shard(batch["features"] @ w)
     table = mat_top("embed")  # (V_local, d)
     V = eff_vocab(cfg, env.tp)
     vloc = V // env.tp if env.tp > 1 else V
@@ -190,6 +195,10 @@ def _img_kv(params, batch, cfg: ModelConfig, env: Env, mat_top):
 
 
 def _logits(x, params, cfg: ModelConfig, env: Env, mat_top):
+    """Final norm + vocab-parallel logits entry. Under ``env.seq_parallel``
+    the final norm runs on the sequence shard and ``env.enter`` gathers
+    the full sequence into the vocab-sharded matmul, so the output layout
+    matches the replicated path exactly."""
     x = rms_norm(x, mat_top("final_norm"), cfg.norm_eps)
     if cfg.tie_embeddings:
         table = mat_top("embed")
@@ -246,13 +255,24 @@ def forward_prefill(params, batch, cfg, env, *, mat_group, mat_top, cache_capaci
             caches=caches[g], img_kv=img_kv,
         )
         new_caches.append(c)
+    if env.seq_parallel_active:
+        # gather only each shard's LAST token (B, tp, d) — the global last
+        # token is the final rank's — instead of the full residual stream;
+        # the logits entry then runs replicated (a (B,1,d) slice can't shard)
+        x = env.seq_unshard(x[:, -1:])
+        env = env.without_seq_parallel()
     logits = _logits(x[:, -1:], params, cfg, env, mat_top)
     return logits, new_caches
 
 
 def forward_decode(params, batch, caches, cfg, env, *, mat_group, mat_top,
                    window_override=None):
-    """One-token decode step. batch['tokens']: (B, 1). Returns (logits, caches')."""
+    """One-token decode step. batch['tokens']: (B, 1). Returns (logits, caches').
+
+    Decode has no sequence dim to shard: ``seq_parallel`` envs fall back
+    to the replicated psum layout for this path (caches are full-sequence
+    either way, so prefill-under-seq-parallel hands off transparently)."""
+    env = env.without_seq_parallel()
     x = _embed(params, batch, cfg, env, mat_top).astype(env.dtype)
     pos = batch["pos"]  # () int32 — tokens absorbed so far
     new_caches = []

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.models.env import Env
+from repro.transport import axis_size
 from repro.utils.trees import round_up
 
 
@@ -29,7 +30,7 @@ from repro.utils.trees import round_up
 def _token_split(x, axis_name):
     """fwd: take this rank's token chunk; bwd: all-gather chunk cotangents."""
     m = lax.axis_index(axis_name)
-    tloc = x.shape[0] // lax.axis_size(axis_name)
+    tloc = x.shape[0] // axis_size(axis_name)  # version-compat helper
     return lax.dynamic_slice_in_dim(x, m * tloc, tloc, axis=0)
 
 
@@ -56,7 +57,7 @@ def _tmerge_fwd(x_loc, axis_name):
 
 def _tmerge_bwd(axis_name, _, g):
     m = lax.axis_index(axis_name)
-    tloc = g.shape[0] // lax.axis_size(axis_name)
+    tloc = g.shape[0] // axis_size(axis_name)  # version-compat helper
     return (lax.dynamic_slice_in_dim(g, m * tloc, tloc, axis=0),)
 
 
@@ -104,21 +105,32 @@ def _expert_ffn(buf, w_gate, w_up, w_down):
 
 
 def moe_block(x: jnp.ndarray, w: dict, cfg, env: Env) -> tuple[jnp.ndarray, jnp.ndarray]:
-    """MoE mixer on (B, S, d) -> (out, aux_loss). Dispatch per cfg.moe_impl."""
+    """MoE mixer on (B, S, d) -> (out, aux_loss). Dispatch per cfg.moe_impl.
+
+    Under ``env.seq_parallel`` the incoming ``x`` is a sequence shard.
+    The ``tp`` layout gathers it at the block boundary (``env.enter``,
+    fwd all-gather) and reduce-scatters the partial outputs back
+    (``env.exit``) — the same contract as the dense mixers. The ``ep``
+    layout needs no boundary collective at all: the sequence shards
+    *are* this rank's token split, so dispatch goes straight to the
+    expert all_to_alls and the combined output already is the shard."""
     B, S, d = x.shape
     E, k = cfg.num_experts, cfg.top_k
     impl = cfg.moe_impl if env.tp > 1 else "tp"
-    xf = x.reshape(B * S, d)
+    sp = env.seq_parallel_active
 
     dense_y = None
     if cfg.moe_dense_ff and impl == "ep":
         # arctic's parallel dense residual: computed TP-style on the
         # replicated tokens (EP token-splitting below must not see it —
         # its weights are model-axis sharded and need the exit psum).
-        xr = env.enter(xf)
+        # Boundary collectives run at (B, S, d) so the seq-parallel
+        # gather/scatter land on the sequence axis.
+        xr = env.enter(x).reshape(-1, d)
         g = jax.nn.silu(xr @ w["dense_gate"])
         u = xr @ w["dense_up"]
-        dense_y = env.exit((g * u) @ w["dense_down"])
+        dy = ((g * u) @ w["dense_down"]).reshape(B, -1, d)
+        dense_y = env.exit(dy)
 
     # EP needs the token count to split evenly over the model axis; decode
     # steps have a handful of tokens, so they run "replicated EP": every
@@ -126,10 +138,15 @@ def moe_block(x: jnp.ndarray, w: dict, cfg, env: Env) -> tuple[jnp.ndarray, jnp.
     # M redundant copies — negligible at decode token counts.
     ep_split = impl == "ep" and (B * S) % env.tp == 0 and (B * S) >= env.tp
 
-    if impl == "ep" and ep_split:
-        xf = _token_split(env.enter(xf), env.model_axis)
-    else:
-        xf = env.enter(xf)
+    if impl == "ep" and sp:
+        # sequence shards are already a disjoint per-rank token split
+        xf = x.reshape(B * S, d)
+    elif impl == "ep" and ep_split:
+        xf = _token_split(env.psum_enter(x.reshape(B * S, d)), env.model_axis)
+    elif impl == "ep":
+        xf = env.psum_enter(x.reshape(B * S, d))
+    else:  # tp layout: boundary collectives at (B, S, d)
+        xf = env.enter(x).reshape(-1, d)
     T = xf.shape[0]
 
     top_p, top_e, aux = _route(xf, w["router"], E, k)
@@ -168,13 +185,18 @@ def moe_block(x: jnp.ndarray, w: dict, cfg, env: Env) -> tuple[jnp.ndarray, jnp.
         u = xf @ w["dense_up"]
         y = y + (g * u) @ w["dense_down"]
 
-    if impl == "ep" and ep_split:
-        y = _token_merge(y, env.model_axis)
+    if impl == "ep" and sp:
+        # y is complete for this rank's tokens == the sequence shard
+        aux = lax.psum(aux, env.model_axis) / env.tp
+        y = y.reshape(B, S, d)
+    elif impl == "ep" and ep_split:
+        y = _token_merge(y, env.model_axis).reshape(B, S, d)
         aux = lax.psum(aux, env.model_axis) / env.tp
     elif impl == "ep":
-        pass  # replicated EP: y is already complete on every rank
+        y = y.reshape(B, S, d)  # replicated EP: complete on every rank
     else:
-        y = env.exit(y)
+        # (B, S_full, d) under seq_parallel: exit scatters back to shards
+        y = env.exit(y.reshape(B, -1, d))
     if dense_y is not None:
         y = y + dense_y
-    return y.reshape(B, S, d), aux
+    return y, aux

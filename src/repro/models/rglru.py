@@ -50,10 +50,14 @@ def rglru_block(x, w, cfg, env: Env, *, mode="train", state=None):
     """x: (B,S,d) -> (y, state'). state = (h (B,r_l), conv (B,W-1,r_l)).
 
     w keys: ln, w_x (d,r_l), w_y (d,r_l), conv_w (W,r_l), conv_b (r_l,),
-    w_a (d,r_l), b_a, w_i (d,r_l), b_i, lam (r_l,), w_down (r_l, d)."""
-    B, S, d = x.shape
+    w_a (d,r_l), b_a, w_i (d,r_l), b_i, lam (r_l,), w_down (r_l, d).
+
+    Under ``env.seq_parallel`` the incoming ``x`` is a sequence shard;
+    ``env.enter`` gathers the full sequence (the linear recurrence scans
+    over time) and ``env.exit`` reduce-scatters the partial outputs."""
     xn = rms_norm(x, w["ln"], cfg.norm_eps)
     xin = env.enter(xn)
+    B, S = xin.shape[:2]
 
     yb = jax.nn.gelu(xin @ w["w_y"], approximate=True)
     xb = xin @ w["w_x"]

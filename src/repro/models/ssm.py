@@ -178,8 +178,12 @@ def mlstm_chunkwise(q, k, v, i_t, f_t, state: MLSTMState, chunk: int):
 
 
 def mlstm_block(x, w, cfg, env: Env, *, mode="train", state=None):
-    """x: (B,S,d) -> (y, state'). w keys: ln, wq, wk, wv, wi, wf, wog, w_down."""
-    B, S, d = x.shape
+    """x: (B,S,d) -> (y, state'). w keys: ln, wq, wk, wv, wi, wf, wog, w_down.
+
+    Under ``env.seq_parallel`` the incoming ``x`` is a sequence shard;
+    ``env.enter`` gathers the full sequence (the recurrence is sequential
+    in time) and ``env.exit`` reduce-scatters the partial outputs."""
+    d = x.shape[-1]
     H = cfg.num_heads
     dv = int(cfg.mlstm_proj_factor * d)
     dv_l = env.ff_local(dv)
@@ -188,6 +192,7 @@ def mlstm_block(x, w, cfg, env: Env, *, mode="train", state=None):
 
     xn = rms_norm(x, w["ln"], cfg.norm_eps)
     xin = env.enter(xn)
+    B, S = xin.shape[:2]
     # value columns use a (dvh, H) layout — outer dim = within-head value
     # index, inner dim = head — so a contiguous TP slice of wv/wog/w_down
     # shards the *within-head* value dim and every rank keeps all heads
@@ -264,7 +269,12 @@ def _slstm_step(state: SLSTMState, wx, r, b, num_heads):
 def slstm_block(x, w, cfg, env: Env, *, mode="train", state=None):
     """x: (B,S,d) -> (y, state'). Replicated over the model axis.
 
-    w keys: ln, w_in (d, 4d), r (H, dh, 4dh), b (4d,), w_out (d, d)."""
+    w keys: ln, w_in (d, 4d), r (H, dh, 4dh), b (4d,), w_out (d, d).
+
+    sLSTM compute is fully replicated over the model axis, so under
+    ``env.seq_parallel`` the shard is re-replicated (fwd all-gather / bwd
+    slice) for the recurrence and the output sliced back onto shards."""
+    x = env.seq_unshard(x)
     B, S, d = x.shape
     xn = rms_norm(x, w["ln"], cfg.norm_eps)
     wx = xn @ w["w_in"]  # (B,S,4d)
@@ -282,4 +292,4 @@ def slstm_block(x, w, cfg, env: Env, *, mode="train", state=None):
         state, hs = lax.scan(body, state, wx.transpose(1, 0, 2))
         hs = hs.transpose(1, 0, 2)
     y = hs @ w["w_out"]
-    return y, state
+    return env.seq_shard(y), state

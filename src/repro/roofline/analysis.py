@@ -13,6 +13,13 @@ TP-axis activation pipelines) are charged at their true packed width and
 reported separately as the plane-wire split (see
 :mod:`repro.roofline.hlo_cost`).
 
+Sequence-parallel steps (``Env.seq_parallel``) trade each block's
+enter/exit psum pair for an ag + rs boundary pair
+(``CompressionPolicy.seq_pair_wire_bytes`` — same ring volume at equal
+width, docs/collectives.md): the activation all-reduce entries disappear
+from these reports and reappear under all-gather / reduce-scatter /
+all-to-all, packed-plane when an activation policy compresses.
+
 Hardware constants (TPU v5e class, per chip): 197 TFLOP/s bf16,
 819 GB/s HBM, ~50 GB/s/link ICI.
 """
@@ -134,7 +141,8 @@ class Roofline:
 
 
 def roofline_from_compiled(
-    compiled, model_flops_per_device: float, act_bytes: int = 4
+    compiled, model_flops_per_device: float, act_bytes: int = 4,
+    *, seq_parallel: bool = False,
 ) -> Roofline:
     """While-trip-aware roofline (see repro.roofline.hlo_cost for why raw
     cost_analysis cannot be used with scanned layer stacks).
@@ -153,7 +161,20 @@ def roofline_from_compiled(
     whose u8 wire bytes appear *exactly* in the HLO (the CPU backend
     cannot promote u8). The plane-wire split is always reported in
     ``collectives`` and can be checked against
-    ``CompressionPolicy.all_reduce_wire_bytes``."""
+    ``CompressionPolicy.all_reduce_wire_bytes``.
+
+    ``seq_parallel``: the step was built with ``Env.seq_parallel`` — the
+    block-boundary wire is then an ag + rs pair per TP region instead of
+    the 2× all-reduce decomposition
+    (``CompressionPolicy.seq_pair_wire_bytes``). Compressed boundaries
+    are u8 planes and need no correction; *uncompressed* boundaries put
+    raw-dtype all-gather / reduce-scatter legs on the wire, and the CPU
+    backend promotes the reducing half to f32 exactly like psums, so the
+    same analytical ``act_bytes`` correction is applied to the non-plane
+    reduce-scatter residue. (Caveat: only pass ``seq_parallel=True`` for
+    steps whose weight-gradient reduce-scatters are compressed — an
+    uncompressed f32 grad reduce-scatter is indistinguishable from an
+    activation one in HLO text and would be wrongly scaled.)"""
     from repro.roofline.hlo_cost import analyze_hlo
 
     cost = compiled.cost_analysis()
@@ -169,6 +190,13 @@ def roofline_from_compiled(
         # all-reduce entries remaining here are the uncompressed
         # residue (no divisible split axis, grad syncs, loss scalars)
         c.wire["all-reduce"] *= act_bytes / 4.0
+    if seq_parallel and act_bytes < 4 and "reduce-scatter" in c.wire:
+        # seq-parallel exits are psum_scatters: promoted to f32 on the
+        # CPU backend like psums; plane (u8) scatters stay exact
+        raw_rs = c.wire["reduce-scatter"] - c.plane_wire.get(
+            "reduce-scatter", 0
+        )
+        c.wire["reduce-scatter"] -= raw_rs * (1.0 - act_bytes / 4.0)
     flops = max(c.flops, raw_flops)
     hbm = max(c.bytes, raw_bytes)
     compute_s = flops / PEAK_FLOPS

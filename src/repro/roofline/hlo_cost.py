@@ -20,6 +20,13 @@ collectives are charged at their true u8 width like any other, and
 split packed-plane traffic from raw-dtype traffic (the quantity that
 shrinks by ``CompressionPolicy.wire_fraction``).
 
+Sequence-parallel steps (``Env.seq_parallel``) need no special casing
+here: their block boundaries lower to the same ag + rs plane pipelines
+(``CompressionPolicy.seq_pair_wire_bytes`` is the per-region model), the
+activation all-reduce entries disappear from the report, and the psums
+the layout *removes* (the embedding exit, EP-MoE boundaries) show up as
+genuinely fewer wire bytes.
+
 Parsing rules target the CPU/SPMD backend's textual HLO (resolved via a
 per-computation symbol table; computations recurse through ``calls=``,
 ``body=``, ``to_apply=``).

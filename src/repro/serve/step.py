@@ -26,7 +26,13 @@ from repro.dist.spec import (
     tree_partition_specs,
 )
 from repro.models import model as M
-from repro.train.step import batch_pspecs, make_env, make_mat_fns, merge_env_kw
+from repro.train.step import (
+    batch_pspecs,
+    check_seq_parallel,
+    make_env,
+    make_mat_fns,
+    merge_env_kw,
+)
 from repro.transport import policy_for
 
 
@@ -136,8 +142,13 @@ def make_prefill_step(
     dtype=jnp.float32,
     env_kw: dict | None = None,
     act_policy=None,
+    seq_parallel: bool = False,
 ):
-    env = make_env(cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy))
+    env = make_env(
+        cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy, seq_parallel)
+    )
+    if env.seq_parallel and mesh_cfg.tp > 1:
+        check_seq_parallel(batch_shapes, mesh_cfg)
     mat_group, mat_top_factory = make_mat_fns(spec_tree, mesh_cfg, round_tos, dtype)
 
     def step(storage, batch):
@@ -233,8 +244,13 @@ def make_decode_step(
     env_kw: dict | None = None,
     weight_stationary: bool = False,
     act_policy=None,
+    seq_parallel: bool = False,
 ):
-    env = make_env(cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy))
+    # seq_parallel is accepted for launcher symmetry but decode has no
+    # sequence dim to shard: forward_decode drops the flag (model.py)
+    env = make_env(
+        cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy, seq_parallel)
+    )
     mat_group, mat_top_factory = make_mat_fns(
         spec_tree, mesh_cfg, round_tos, dtype, placed=weight_stationary
     )

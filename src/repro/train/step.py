@@ -45,12 +45,27 @@ def make_env(cfg: ModelConfig, mesh_cfg: MeshCfg, dtype=jnp.float32, **kw) -> En
     )
 
 
-def merge_env_kw(env_kw: dict | None, act_policy):
-    """Activation policy -> Env kwargs (explicit arg wins over env_kw)."""
+def merge_env_kw(env_kw: dict | None, act_policy, seq_parallel: bool = False):
+    """Activation policy / seq-parallel flag -> Env kwargs (explicit args
+    win over env_kw)."""
     kw = dict(env_kw or {})
     if act_policy is not None:
         kw["act_policy"] = act_policy
+    if seq_parallel:
+        kw["seq_parallel"] = True
     return kw
+
+
+def check_seq_parallel(batch_shapes: dict, mesh_cfg: MeshCfg):
+    """Sequence-parallel layout precondition: every sequence dim must
+    split evenly over the model axis (reduce-scatter semantics)."""
+    for key in ("tokens", "labels", "features"):
+        v = batch_shapes.get(key)
+        if v is not None and v.ndim >= 2 and v.shape[1] % mesh_cfg.tp:
+            raise ValueError(
+                f"seq_parallel needs batch[{key!r}] seq dim {v.shape[1]} "
+                f"divisible by tp={mesh_cfg.tp}"
+            )
 
 
 def _dp_axes(mesh_cfg: MeshCfg):
@@ -107,16 +122,22 @@ def make_mat_fns(
     return mat_group, mat_top_factory
 
 
-def _sync_grads(grads, spec_tree, mesh_cfg: MeshCfg):
+def _sync_grads(grads, spec_tree, mesh_cfg: MeshCfg, seq_parallel: bool = False):
     """Explicit cross-shard grad reductions not already handled by the
-    compressed-gather VJP (DESIGN.md §3 / ParamMeta.grad_sync_model)."""
+    compressed-gather VJP (DESIGN.md §3 / ParamMeta.grad_sync_model).
+
+    ``seq_parallel``: the step ran with sequence-sharded activations, so
+    leaves marked ``grad_sync_seq`` (pre-boundary norm scales) carry
+    token-partial grads and get the model-axis psum too."""
     dp = _dp_axes(mesh_cfg) if mesh_cfg.dshards > 1 else None
     tp = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
 
     def fix(g, s: LeafSpec):
         if s.kind != DIST and dp is not None:
             g = lax.psum(g, dp)
-        if s.meta.grad_sync_model and tp is not None:
+        if tp is not None and (
+            s.meta.grad_sync_model or (seq_parallel and s.meta.grad_sync_seq)
+        ):
             g = lax.psum(g, tp)
         return g
 
@@ -202,6 +223,7 @@ def make_train_step(
     grad_round_to: int | None = None,
     accum_steps: int = 1,
     act_policy=None,
+    seq_parallel: bool = False,
 ):
     """Returns jit-able ``step(storage, momentum, batch, lr) -> (storage',
     momentum', metrics)``. metrics: loss, token_count, group norms (for AWP).
@@ -210,10 +232,17 @@ def make_train_step(
     (compressed gradient reduce-scatter), ``accum_steps>1`` (gradient
     accumulation over batch-dim microbatches — divides activation memory),
     ``act_policy`` (activation CompressionPolicy: TP-axis psums and
-    sequence collectives ride packed planes fwd AND bwd).
+    sequence collectives ride packed planes fwd AND bwd),
+    ``seq_parallel`` (norms/residuals on 1/tp sequence shards; every block
+    boundary becomes the transport's seq_gather/seq_scatter pair instead
+    of the enter/exit psums — requires seq % tp == 0).
     """
     assert len(round_tos) == cfg.num_groups + 1
-    env = make_env(cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy))
+    env = make_env(
+        cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy, seq_parallel)
+    )
+    if env.seq_parallel and mesh_cfg.tp > 1:
+        check_seq_parallel(batch_shapes, mesh_cfg)
     dp = _dp_axes(mesh_cfg) if mesh_cfg.dshards > 1 else None
     mat_group, mat_top_factory = make_mat_fns(
         spec_tree, mesh_cfg, round_tos, dtype, grad_round_to=grad_round_to
@@ -265,7 +294,9 @@ def make_train_step(
                        jnp.zeros((), jnp.float32)), micro
             )
             metrics = {"token_count": count, "aux": 0.0}
-        grads = _sync_grads(grads, spec_tree, mesh_cfg)
+        grads = _sync_grads(
+            grads, spec_tree, mesh_cfg, seq_parallel=env.seq_parallel_active
+        )
 
         new_storage, new_momentum = sgd_update(
             storage, grads, momentum, wd_mask, opt_cfg, lr

@@ -168,6 +168,29 @@ class CompressionPolicy:
         payload = elems_in * self._act_width(grad)
         return round(ring_wire_bytes("reduce-scatter", payload, axis_size))
 
+    def seq_pair_wire_bytes(
+        self, elems: int, axis_size: int, *, grad: bool = False
+    ) -> int:
+        """Bytes received per device for one sequence-parallel TP-region
+        boundary pair — ``seq_gather`` into the region + ``seq_scatter``
+        out of it — in a single direction (``grad=True``: the pair's
+        cotangent legs, an rs + ag at ``grad_round_to``). ``elems`` is
+        the *full* (gathered) activation element count.
+
+        This equals ``all_reduce_wire_bytes(elems, n)`` at the same
+        width: sequence parallelism moves the all-reduce's rs+ag halves
+        to the region boundaries rather than adding traffic (HyPar /
+        Megatron-SP invariant — the win is sharded norm/residual compute
+        and activation memory, plus the psum entries it *removes*: the
+        embedding exit becomes a lone reduce-scatter at half the
+        all-reduce's wire, and EP-MoE boundary collectives vanish).
+        Versus the fp32 psum pair, a compressing policy still cuts the
+        wire by ``round_to / 4`` — the quantity the roofline's
+        plane-wire split tracks."""
+        return self.seq_gather_wire_bytes(
+            elems, axis_size, grad=grad
+        ) + self.seq_scatter_wire_bytes(elems, axis_size, grad=grad)
+
     def all_reduce_wire_bytes(
         self,
         elems: int,

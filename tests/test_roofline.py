@@ -152,6 +152,104 @@ print("OK")
     assert proc.returncode == 0 and "OK" in proc.stdout, proc.stderr[-2000:]
 
 
+def test_seq_parallel_block_wire():
+    """The seq-parallel boundary pair (ag + rs of packed planes) per TP
+    region: strictly fewer wire bytes than the uncompressed 2x-all-reduce
+    psum pair (by the packing ratio), exactly the policy's
+    seq_pair_wire_bytes model, volume-identical to the compressed psum
+    decomposition at equal width (Megatron-SP invariant), and it removes
+    the activation all-reduce entries from the report entirely."""
+    import os
+    import subprocess
+    import sys
+
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from repro.dist.shard import shard_map
+from repro.roofline.hlo_cost import analyze_hlo
+from repro.core.collectives import (
+    tp_region_enter, tp_region_exit, seq_gather, seq_scatter,
+)
+from repro.transport import CompressionPolicy
+
+mesh = Mesh(np.array(jax.devices()).reshape(4), ("model",))
+B, S, d, ff, n = 2, 64, 16, 32, 4
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.normal(0, 1, (B, S, d)), jnp.float32)
+w1 = jnp.asarray(rng.normal(0, .1, (d, ff)), jnp.float32)
+w2 = jnp.asarray(rng.normal(0, .1, (ff, d)), jnp.float32)
+
+def wire(fn, in_specs, out_specs):
+    f = shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    return analyze_hlo(jax.jit(f).lower(x, w1, w2).compile().as_text())
+
+def psum_block(pol):
+    def lossfn(x, w1, w2):
+        xin = tp_region_enter(x, "model", pol)
+        y = tp_region_exit(jax.nn.relu(xin @ w1) @ w2, "model", pol)
+        return jnp.sum(y ** 2) / n
+    def g(x, w1, w2):
+        l, gx = jax.value_and_grad(lossfn)(x, w1, w2)
+        return jax.lax.psum(l, "model"), gx
+    return wire(g, (P(None, None, None), P(None, "model"), P("model", None)),
+                (P(), P(None, None, None)))
+
+def sp_block(pol):
+    def lossfn(x_shard, w1, w2):
+        xin = seq_gather(x_shard, "model", pol)
+        return jnp.sum(seq_scatter(jax.nn.relu(xin @ w1) @ w2, "model", pol) ** 2)
+    def g(x, w1, w2):
+        l, gx = jax.value_and_grad(lossfn)(x, w1, w2)
+        return jax.lax.psum(l, "model"), gx
+    return wire(g, (P(None, "model", None), P(None, "model"), P("model", None)),
+                (P(), P(None, "model", None)))
+
+pol2 = CompressionPolicy(round_to=2, grad_round_to=2, mode="nearest")
+c_psum_f32, c_psum_rt2 = psum_block(None), psum_block(pol2)
+c_sp_rt2, c_sp_f32 = sp_block(pol2), sp_block(None)
+P_elems = B * S * d
+scalar_slack = 16  # the loss-scalar psum per program
+
+# 1) policy model is exact: fwd pair + cotangent pair of packed planes
+want = pol2.seq_pair_wire_bytes(P_elems, n) + pol2.seq_pair_wire_bytes(
+    P_elems, n, grad=True)
+assert abs(c_sp_rt2.plane_wire_total - want) < 1, (c_sp_rt2.plane_wire, want)
+assert abs(c_sp_rt2.wire_total - want) < scalar_slack
+
+# 2) strictly fewer than the uncompressed psum pair, by the packing ratio
+assert c_sp_rt2.wire_total < c_psum_f32.wire_total
+ratio = c_sp_rt2.wire_total / c_psum_f32.wire_total
+assert abs(ratio - pol2.wire_fraction) < 0.01, ratio
+
+# 3) volume conservation at equal width (Megatron-SP / HyPar):
+#    seq pair == all-reduce decomposition, compressed and uncompressed
+assert abs(c_sp_rt2.wire_total - c_psum_rt2.wire_total) < scalar_slack
+assert abs(c_sp_f32.wire_total - c_psum_f32.wire_total) < scalar_slack
+
+# 4) activation all-reduces vanish under the seq layout (scalar residue
+#    only); the psum layout keeps the full 2x-AR pair
+assert c_sp_f32.wire.get("all-reduce", 0) < scalar_slack, c_sp_f32.wire
+want_ar = CompressionPolicy(round_to=4).all_reduce_wire_bytes(P_elems, n) * 2
+assert abs(c_psum_f32.wire.get("all-reduce", 0) - want_ar) < scalar_slack
+print("OK")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(
+        os.path.dirname(__file__), "..", "src"
+    ) + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True,
+        text=True, timeout=300,
+    )
+    assert proc.returncode == 0 and "OK" in proc.stdout, (
+        proc.stdout[-2000:], proc.stderr[-2000:]
+    )
+
+
 def test_shape_parsing():
     from repro.roofline.hlo_cost import _type_bytes
 
