@@ -23,9 +23,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.awp import AWPConfig
 from repro.data.pipeline import SyntheticImageNet
 from repro.dist.spec import DIST, LeafSpec, MeshCfg
+from repro.plan import PrecisionPlan
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.models.cnn import ALEXNET, RESNET34, VGG_A, init_cnn, reduced_cnn
 from repro.optim.sgd import SGDConfig, init_momentum, lr_at
@@ -45,7 +45,8 @@ NETS = {"alexnet": ALEXNET, "vgg": VGG_A, "resnet": RESNET34}
 LINK_BW = 7.9e9
 
 
-def run_policy(policy, cfg, data, mesh_cfg, mesh, steps, batch, lr0, seed=0):
+def run_policy(policy, cfg, data, mesh_cfg, mesh, steps, batch, lr0, seed=0,
+               grad_round_to=None, grad_mode="nearest"):
     params, metas, groups_info = init_cnn(cfg, jax.random.PRNGKey(seed))
     spec_tree = build_cnn_spec_tree(params, metas, mesh_cfg)
     storage = cnn_to_storage(params, spec_tree, mesh_cfg)
@@ -63,19 +64,30 @@ def run_policy(policy, cfg, data, mesh_cfg, mesh, steps, batch, lr0, seed=0):
     opt = SGDConfig(lr=lr0, momentum=0.9, weight_decay=5e-4,
                     lr_decay_every=0)
 
-    def builder(round_tos):
-        return make_cnn_train_step(
-            cfg, mesh_cfg, mesh, spec_tree, groups_info, round_tos, opt,
-            {},
-        )
-
     # T is tuned by the paper's own procedure (§V-A): monitor a short run,
     # observe the mean per-batch l2-norm change rate around the first
     # val-error drop, and use that as the threshold.
     t_thresh = tune_threshold(cfg, data, mesh_cfg, mesh, batch, lr0)
-    awp_cfg = AWPConfig(threshold=t_thresh, interval=10, initial_bits=8)
+    # one plan per policy: the schedule source + formats are plan fields,
+    # the grad reduce-scatter entry (incl. stochastic rounding) rides along
+    rt0 = 4
+    if policy.startswith("oracle:"):
+        rt0 = int(policy.split(":")[1])
+    plan = PrecisionPlan.build(
+        num_groups, round_to=rt0,
+        grad_round_to=grad_round_to, grad_mode=grad_mode,
+        schedule="awp" if policy == "awp" else "static",
+        awp_threshold=t_thresh, awp_interval=10,
+    )
+
+    def builder(round_tos):
+        return make_cnn_train_step(
+            cfg, mesh_cfg, mesh, spec_tree, groups_info, opt, {},
+            plan=plan.with_round_tos(round_tos),
+        )
+
     trainer = Trainer(
-        builder, num_groups, policy=policy, awp_config=awp_cfg,
+        builder, num_groups, plan=plan,
         dist_elems_per_group=elems, gather_axis_size=mesh_cfg.dshards,
     )
     evaluator_cache = {}
@@ -83,7 +95,8 @@ def run_policy(policy, cfg, data, mesh_cfg, mesh, steps, batch, lr0, seed=0):
     def evaluate(storage, rts):
         if rts not in evaluator_cache:
             evaluator_cache[rts] = make_cnn_eval(
-                cfg, mesh_cfg, mesh, spec_tree, groups_info, rts
+                cfg, mesh_cfg, mesh, spec_tree, groups_info,
+                plan=plan.with_round_tos(rts),
             )
         imgs, labels = data.validation(256)
         return float(evaluator_cache[rts](storage, imgs, labels))
@@ -127,8 +140,8 @@ def tune_threshold(cfg, data, mesh_cfg, mesh, batch, lr0, monitor_steps=25):
     _, num_groups = groups_info
     opt = SGDConfig(lr=lr0, momentum=0.9, weight_decay=5e-4)
     step = make_cnn_train_step(
-        cfg, mesh_cfg, mesh, spec_tree, groups_info, (4,) * num_groups,
-        opt, {},
+        cfg, mesh_cfg, mesh, spec_tree, groups_info, opt, {},
+        plan=PrecisionPlan.build(num_groups, round_to=4),
     )
     mom = init_momentum(storage)
     deltas = []
@@ -158,6 +171,12 @@ def main():
     ap.add_argument("--lr", type=float, default=0.02)
     ap.add_argument("--devices", type=int, default=0,
                     help="data-parallel fake devices (0 = single)")
+    ap.add_argument("--grad-round-to", type=int, default=None,
+                    help="compress the gradient reduce-scatter (dp>1)")
+    ap.add_argument("--grad-mode", default="nearest",
+                    choices=["truncate", "nearest", "stochastic"],
+                    help="gradient rounding; 'stochastic' exercises the "
+                         "plumbed PRNG key (paper beyond-§III)")
     ap.add_argument("--json", default=None)
     args = ap.parse_args()
 
@@ -179,6 +198,7 @@ def main():
             r = run_policy(
                 policy, cfg, data, mesh_cfg, mesh,
                 args.steps, args.batch, args.lr,
+                grad_round_to=args.grad_round_to, grad_mode=args.grad_mode,
             )
             results[policy] = r
             print(

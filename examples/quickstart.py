@@ -12,13 +12,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config, reduced
-from repro.core.awp import AWPConfig
 from repro.data.pipeline import synthetic_lm_batch
 from repro.dist.spec import (
-    DIST, LeafSpec, MeshCfg, build_spec_tree, tree_to_storage,
+    MeshCfg, build_spec_tree, dist_elems_per_group, tree_to_storage,
 )
 from repro.models.init import init_params
 from repro.optim.sgd import SGDConfig, init_momentum
+from repro.plan import PrecisionPlan
 from repro.train.loop import Trainer
 from repro.train.step import make_train_step
 
@@ -38,29 +38,21 @@ def main():
     opt = SGDConfig(lr=0.05, momentum=0.9, weight_decay=1e-4)
     nrt = cfg.num_groups + 1
 
+    # one declarative plan owns schedule + formats + layout (docs/plan.md)
+    plan = PrecisionPlan.build(
+        nrt, schedule="awp", awp_threshold=1e-3, awp_interval=10,
+    )
+
     def builder(round_tos):
         return make_train_step(
-            cfg, mesh_cfg, None, spec_tree, round_tos, opt, batch_shapes
+            cfg, mesh_cfg, None, spec_tree, opt, batch_shapes,
+            plan=plan.with_round_tos(round_tos),
         )
-
-    # wire accounting: compressed elements per group
-    elems = [0] * nrt
-    def visit(idx, subtree):
-        leaves = jax.tree_util.tree_leaves(
-            subtree, is_leaf=lambda x: isinstance(x, LeafSpec)
-        )
-        for s in leaves:
-            if isinstance(s, LeafSpec) and s.kind == DIST:
-                reps = 1
-                elems[idx] += s.s_loc * mesh_cfg.dshards
-    for g, gs in enumerate(spec_tree["groups"]):
-        visit(g, gs)
-    visit(nrt - 1, {k: v for k, v in spec_tree.items() if k != "groups"})
 
     trainer = Trainer(
-        builder, nrt, policy="awp",
-        awp_config=AWPConfig(threshold=1e-3, interval=10, initial_bits=8),
-        dist_elems_per_group=elems, gather_axis_size=1,
+        builder, nrt, plan=plan,
+        dist_elems_per_group=dist_elems_per_group(spec_tree, mesh_cfg, nrt),
+        gather_axis_size=1,
     )
     mom = init_momentum(storage)
     for step in range(120):

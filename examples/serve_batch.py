@@ -20,6 +20,7 @@ import numpy as np
 from repro.configs.registry import get_config, reduced
 from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
 from repro.models.init import init_params
+from repro.plan import PrecisionPlan
 from repro.serve.step import make_decode_step, make_prefill_step
 
 
@@ -43,7 +44,7 @@ def main():
     params, _metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
     spec_tree = build_spec_tree(params, _metas, mesh_cfg)
     storage = tree_to_storage(params, spec_tree, mesh_cfg)
-    rts = (args.round_to,) * (cfg.num_groups + 1)
+    plan = PrecisionPlan.build(cfg.num_groups + 1, round_to=args.round_to)
 
     rng = np.random.default_rng(0)
     prompts = jnp.asarray(
@@ -58,13 +59,15 @@ def main():
     bshapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
 
     prefill = make_prefill_step(
-        cfg, mesh_cfg, None, spec_tree, rts, bshapes, cache_capacity=cap
+        cfg, mesh_cfg, None, spec_tree, bshapes, plan=plan,
+        cache_capacity=cap,
     )
     dshapes = {
         "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
         "pos": jax.ShapeDtypeStruct((), jnp.int32),
     }
-    decode = make_decode_step(cfg, mesh_cfg, None, spec_tree, rts, dshapes)
+    decode = make_decode_step(cfg, mesh_cfg, None, spec_tree, dshapes,
+                              plan=plan)
 
     t0 = time.time()
     logits, caches = prefill(storage, batch)

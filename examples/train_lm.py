@@ -23,14 +23,14 @@ import numpy as np
 
 from repro.checkpoint.ckpt import save_checkpoint
 from repro.configs.registry import get_config, reduced
-from repro.core.awp import AWPConfig
 from repro.data.pipeline import synthetic_lm_batch
 from repro.dist.spec import (
-    DIST, LeafSpec, MeshCfg, build_spec_tree, tree_to_storage,
+    MeshCfg, build_spec_tree, dist_elems_per_group, tree_to_storage,
 )
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.models.init import init_params
 from repro.optim.sgd import SGDConfig, init_momentum
+from repro.plan import PrecisionPlan
 from repro.train.loop import Trainer
 from repro.train.step import make_train_step
 
@@ -86,26 +86,26 @@ def main():
     opt = SGDConfig(lr=args.lr, momentum=0.9, weight_decay=1e-4)
     nrt = cfg.num_groups + 1
 
+    if args.policy == "awp":
+        plan = PrecisionPlan.build(
+            nrt, schedule="awp", awp_threshold=1e-3, awp_interval=25,
+        )
+    elif args.policy == "baseline":
+        plan = PrecisionPlan.build(nrt, round_to=4)
+    elif args.policy.startswith("oracle:"):
+        plan = PrecisionPlan.build(nrt, round_to=int(args.policy.split(":")[1]))
+    else:
+        raise SystemExit(f"unknown --policy {args.policy}")
+
     def builder(round_tos):
         return make_train_step(
-            cfg, mesh_cfg, mesh, spec_tree, round_tos, opt, batch_shapes
+            cfg, mesh_cfg, mesh, spec_tree, opt, batch_shapes,
+            plan=plan.with_round_tos(round_tos),
         )
 
-    elems = [0] * nrt
-    def visit(idx, subtree):
-        for s in jax.tree_util.tree_leaves(
-            subtree, is_leaf=lambda x: isinstance(x, LeafSpec)
-        ):
-            if isinstance(s, LeafSpec) and s.kind == DIST:
-                elems[idx] += s.s_loc * mesh_cfg.dshards
-    for g, gs in enumerate(spec_tree["groups"]):
-        visit(g, gs)
-    visit(nrt - 1, {k: v for k, v in spec_tree.items() if k != "groups"})
-
     trainer = Trainer(
-        builder, nrt, policy=args.policy,
-        awp_config=AWPConfig(threshold=1e-3, interval=25, initial_bits=8),
-        dist_elems_per_group=elems,
+        builder, nrt, plan=plan,
+        dist_elems_per_group=dist_elems_per_group(spec_tree, mesh_cfg, nrt),
         gather_axis_size=max(mesh_cfg.dshards, 1),
     )
     mom = init_momentum(storage)
@@ -129,7 +129,8 @@ def main():
           f"wire reduction {s['wire_reduction']*100:.1f}%  "
           f"recompiles {s['recompiles']}")
     print(f"AWP history: {s['bits_history']}")
-    save_checkpoint(args.ckpt, storage, mom, trainer.controller, steps)
+    save_checkpoint(args.ckpt, storage, mom, trainer.controller, steps,
+                    plan=plan)
     print(f"checkpoint -> {args.ckpt}")
 
 

@@ -1,8 +1,11 @@
-"""npz-based checkpointing for storage pytrees + AWP controller state.
+"""npz-based checkpointing for storage pytrees + AWP controller state +
+the :class:`~repro.plan.PrecisionPlan` that produced the run.
 
 Works on sharded arrays (gathers to host) — adequate for the scales this
 container trains; the format records the flattened key paths so restore is
-structure-checked.
+structure-checked. The plan is persisted next to the AWP state so a
+resumed run reconstructs the exact schedule + wire formats from the
+checkpoint alone (``load_plan``).
 """
 from __future__ import annotations
 
@@ -13,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.core.awp import AWPController
+from repro.plan import PrecisionPlan
 from repro.utils.trees import flatten_dict, unflatten_dict
 
 
@@ -29,12 +33,14 @@ def _npz_path(path: str) -> str:
 
 
 def save_checkpoint(path: str, storage, opt_state, awp: AWPController | None,
-                    step: int):
+                    step: int, plan: PrecisionPlan | None = None):
     path = _npz_path(path)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat, _ = jax.tree_util.tree_flatten((storage, opt_state))
     arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(flat)}
     meta = {"step": step, "num_arrays": len(flat)}
+    if plan is not None:
+        meta["plan"] = plan.to_json_dict()
     if awp is not None:
         meta["awp"] = {
             "bits": awp.state.bits.tolist(),
@@ -68,3 +74,13 @@ def load_checkpoint(path: str, storage_like, opt_like,
         awp.state.step = a["step"]
         awp.history = [(s, tuple(b)) for s, b in a["history"]]
     return storage, opt_state, meta["step"]
+
+
+def load_plan(path: str) -> PrecisionPlan | None:
+    """The PrecisionPlan persisted with the checkpoint (None for
+    checkpoints written without one)."""
+    data = np.load(_npz_path(path), allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    if "plan" not in meta:
+        return None
+    return PrecisionPlan.from_json_dict(meta["plan"])

@@ -362,18 +362,22 @@ def materialize_leaf(
     mesh_cfg: MeshCfg,
     round_to,
     grad_round_to: int | None = None,
+    *,
+    key=None,
 ):
     """Device-local storage shard -> TP-local logical weights.
 
     ``round_to`` is an int (legacy call sites) or a
     :class:`~repro.transport.CompressionPolicy`. Called per layer
     repetition (the scan body slices the stacked leading dim away), so
-    ``x`` here never carries the reps dim.
+    ``x`` here never carries the reps dim. ``key`` is the
+    stochastic-rounding PRNG key threaded from the step functions
+    (required iff a used direction of the policy is stochastic).
     """
     policy = policy_for(round_to, grad_round_to)
     if mesh_cfg.trivial:
         if spec.kind == DIST:
-            return _T.quantize(x, policy)
+            return _T.quantize(x, policy, key)
         return x
     if spec.kind == REPL:
         return x
@@ -382,9 +386,9 @@ def materialize_leaf(
     # DIST: (1, s_loc) or (s_loc,) local shard
     flat = x.reshape(-1)
     if mesh_cfg.dshards > 1:
-        full = _T.all_gather(flat, mesh_cfg.fsdp_axes, policy, 0)
+        full = _T.all_gather(flat, mesh_cfg.fsdp_axes, policy, 0, key)
     else:
-        full = _T.quantize(flat, policy)
+        full = _T.quantize(flat, policy, key)
     n = spec.n_local
     if n != full.shape[0]:
         full = lax.slice_in_dim(full, 0, n)
@@ -443,3 +447,28 @@ def placed_leaf_pspec(spec: LeafSpec, mesh_cfg: MeshCfg):
 def materialize_placed_leaf(x, spec: LeafSpec, mesh_cfg: MeshCfg):
     """Placed weights are already TP-local logical: identity consume."""
     return x
+
+
+# ---------------------------------------------------------------------------
+# wire-accounting geometry
+# ---------------------------------------------------------------------------
+
+
+def dist_elems_per_group(spec_tree, mesh_cfg: MeshCfg, num_groups: int):
+    """Global compressed (DIST) element count per precision group — the
+    geometry :meth:`repro.plan.PrecisionPlan.wire_table` multiplies by a
+    policy's bytes/element. The last group covers the top-level leaves
+    (embedding / head / projectors), matching the ``round_tos`` layout."""
+    elems = [0] * num_groups
+
+    def visit(idx, subtree):
+        for s in jax.tree_util.tree_leaves(
+            subtree, is_leaf=lambda x: isinstance(x, LeafSpec)
+        ):
+            if isinstance(s, LeafSpec) and s.kind == DIST:
+                elems[idx] += s.s_loc * mesh_cfg.dshards
+
+    for g, gs in enumerate(spec_tree["groups"]):
+        visit(g, gs)
+    visit(num_groups - 1, {k: v for k, v in spec_tree.items() if k != "groups"})
+    return elems

@@ -25,10 +25,13 @@ import jax.numpy as jnp
 from repro.configs.base import INPUT_SHAPES
 from repro.configs.registry import ARCHS, get_config, get_shape
 from repro.configs.shapes import applicable, input_specs
-from repro.dist.spec import build_spec_tree, tree_to_storage
+from repro.dist.spec import (
+    build_spec_tree, dist_elems_per_group, tree_to_storage,
+)
 from repro.launch.mesh import make_production_mesh, mesh_cfg_for
 from repro.models.init import param_shapes
 from repro.optim.sgd import SGDConfig
+from repro.plan import PrecisionPlan
 from repro.roofline.analysis import (
     model_flops_estimate,
     parse_collectives,
@@ -49,48 +52,70 @@ def _sds_tree(tree):
     )
 
 
-def build_lowerable(cfg, shape, mesh_cfg, mesh, round_to, *, env_kw=None,
-                    opts=None):
+def plan_for_combo(cfg, shape, round_to, opts=None, plan=None):
+    """(round_to, opts) -> PrecisionPlan (``plan`` wins outright).
+
+    The legacy ``opts`` dict (§Perf levers: train_dtype, accum,
+    grad_round_to, int8_kv, causal_skip, mlstm_chunk, seq_parallel) is
+    plan-builder sugar; ``weight_stationary`` / ``resident_bf16`` stay
+    execution options of the decode factories."""
+    if plan is not None:
+        return plan.broadcast(cfg.num_groups + 1)
+    opts = dict(opts or {})
+    env_overrides = {}
+    if "causal_skip" in opts:
+        env_overrides["causal_skip"] = opts["causal_skip"]
+    if "mlstm_chunk" in opts:
+        env_overrides["mlstm_chunk"] = opts["mlstm_chunk"]
+    dtype = "bf16" if (
+        shape.kind != "train" or opts.get("train_dtype") == "bf16"
+    ) else "f32"
+    return PrecisionPlan.build(
+        cfg.num_groups + 1,
+        round_to=round_to,
+        grad_round_to=opts.get("grad_round_to"),
+        seq_parallel=bool(opts.get("seq_parallel")),
+        chunks=int(opts.get("chunks", 1)),
+        dtype=dtype,
+        int8_kv=bool(opts.get("int8_kv")),
+        accum_steps=int(opts.get("accum", 1)),
+        env_overrides=env_overrides,
+    )
+
+
+def build_lowerable(cfg, shape, mesh_cfg, mesh, round_to, *, opts=None,
+                    plan=None, spec_tree=None):
     """Returns (jitted step, abstract args) for the combo.
 
-    ``opts`` (all optional — §Perf levers):
-      train_dtype: "f32"|"bf16"; accum: int; grad_round_to: int;
-      weight_stationary: bool; int8_kv: bool; causal_skip: bool;
-      seq_parallel: bool (train/prefill activation layout).
+    ``opts`` (all optional — §Perf levers, see :func:`plan_for_combo`)
+    builds the PrecisionPlan when no explicit ``plan`` is given.
+    ``spec_tree`` skips the parameter-tree walk when the caller already
+    built one (run_one shares its wire-geometry tree).
     """
     opts = dict(opts or {})
+    plan = plan_for_combo(cfg, shape, round_to, opts, plan)
     storage_abs, metas = param_shapes(cfg, tp=mesh_cfg.tp)
-    spec_tree = build_spec_tree(storage_abs, metas, mesh_cfg)
+    if spec_tree is None:
+        spec_tree = build_spec_tree(storage_abs, metas, mesh_cfg)
     storage = tree_to_storage(storage_abs, spec_tree, mesh_cfg)
     batch = input_specs(cfg, shape)
-    round_tos = (round_to,) * (cfg.num_groups + 1)
     shard_batch = shape.global_batch >= mesh_cfg.dshards
-    env_kw = dict(env_kw or {})
-    if "causal_skip" in opts:
-        env_kw["causal_skip"] = opts["causal_skip"]
-    if "mlstm_chunk" in opts:
-        env_kw["mlstm_chunk"] = opts["mlstm_chunk"]
-
-    seq_parallel = bool(opts.get("seq_parallel"))
 
     if shape.kind == "train":
-        dtype = jnp.bfloat16 if opts.get("train_dtype") == "bf16" else jnp.float32
         step = make_train_step(
-            cfg, mesh_cfg, mesh, spec_tree, round_tos, SGDConfig(),
-            batch, dtype=dtype, env_kw=env_kw,
-            grad_round_to=opts.get("grad_round_to"),
-            accum_steps=opts.get("accum", 1),
-            seq_parallel=seq_parallel,
+            cfg, mesh_cfg, mesh, spec_tree, SGDConfig(), batch, plan=plan
         )
         mom = _sds_tree(storage)
         lr = jax.ShapeDtypeStruct((), jnp.float32)
-        return step, (storage, mom, batch, lr)
+        args = (storage, mom, batch, lr)
+        if plan.needs_rng:
+            args = args + (jax.ShapeDtypeStruct((2,), jnp.uint32),)
+        return step, args
 
     if shape.kind == "prefill":
         step = make_prefill_step(
-            cfg, mesh_cfg, mesh, spec_tree, round_tos, batch,
+            cfg, mesh_cfg, mesh, spec_tree, batch, plan=plan,
             cache_capacity=shape.seq_len, shard_batch=shard_batch,
-            dtype=jnp.bfloat16, env_kw=env_kw, seq_parallel=seq_parallel,
         )
         return step, (storage, batch)
 
@@ -99,23 +124,19 @@ def build_lowerable(cfg, shape, mesh_cfg, mesh, round_to, *, env_kw=None,
     capacity = min(shape.seq_len, window or shape.seq_len)
     if cfg.sliding_window:
         capacity = min(capacity, cfg.sliding_window)
-    int8_kv = bool(opts.get("int8_kv"))
-    cache_dtype = jnp.int8 if int8_kv else jnp.bfloat16
-    if int8_kv:
-        env_kw["int8_kv"] = True
+    cache_dtype = jnp.int8 if plan.int8_kv else jnp.bfloat16
     caches = global_cache_shapes(
         cfg, mesh_cfg, shape.global_batch, capacity,
         cache_dtype, shard_batch=shard_batch,
     )
     step = make_decode_step(
-        cfg, mesh_cfg, mesh, spec_tree, round_tos, batch,
+        cfg, mesh_cfg, mesh, spec_tree, batch, plan=plan,
         shard_batch=shard_batch, window_override=window,
-        dtype=jnp.bfloat16, env_kw=env_kw,
         weight_stationary=bool(opts.get("weight_stationary")),
     )
     if opts.get("weight_stationary"):
         place, _ = make_place_step(
-            cfg, mesh_cfg, mesh, spec_tree, round_tos,
+            cfg, mesh_cfg, mesh, spec_tree, plan=plan,
             resident_dtype=(
                 jnp.bfloat16 if opts.get("resident_bf16") else None
             ),
@@ -125,8 +146,8 @@ def build_lowerable(cfg, shape, mesh_cfg, mesh, round_to, *, env_kw=None,
     return step, (storage, caches, batch)
 
 
-def run_one(arch, shape_name, multi_pod, round_to, *, env_kw=None,
-            verbose=True, opts=None):
+def run_one(arch, shape_name, multi_pod, round_to, *,
+            verbose=True, opts=None, plan=None):
     cfg = get_config(arch)
     shape = get_shape(shape_name)
     ok, reason = applicable(cfg, shape)
@@ -138,33 +159,47 @@ def run_one(arch, shape_name, multi_pod, round_to, *, env_kw=None,
     mesh_cfg = mesh_cfg_for(multi_pod=multi_pod)
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh_cfg.tp * mesh_cfg.dp * mesh_cfg.pods
+    plan = plan_for_combo(cfg, shape, round_to, opts, plan)
 
+    # one spec tree serves both the step build and the wire geometry:
+    # the plan is also the unit of cost accounting, so the roofline gets
+    # the per-group compressed element counts for its per-entry report
+    storage_abs, metas = param_shapes(cfg, tp=mesh_cfg.tp)
+    spec_tree = build_spec_tree(storage_abs, metas, mesh_cfg)
     t0 = time.time()
     step, args = build_lowerable(cfg, shape, mesh_cfg, mesh, round_to,
-                                 env_kw=env_kw, opts=opts)
+                                 opts=opts, plan=plan, spec_tree=spec_tree)
+    nrt = cfg.num_groups + 1
+    plan_geometry = {
+        "dist_elems_per_group": dist_elems_per_group(
+            spec_tree, mesh_cfg, nrt
+        ),
+        "gather_axis_size": max(mesh_cfg.dshards, 1),
+        "training": shape.kind == "train",
+    }
     with mesh:
         lowered = step.lower(*args)
         t_lower = time.time() - t0
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
-        act_bytes = 2 if (
-            (opts or {}).get("train_dtype") == "bf16"
-            or get_shape(shape_name).kind != "train"
-        ) else 4
+        act_bytes = 2 if plan.dtype == "bf16" else 4
         # the seq-parallel RS correction must not rescale raw-dtype
         # *gradient* reduce-scatters (indistinguishable from activation
         # RS in HLO text): only enable it when the shape has a seq layout
         # and any grad RS rides compressed planes (prefill has no grads)
-        kind = get_shape(shape_name).kind
-        sp_opt = bool((opts or {}).get("seq_parallel"))
-        sp_corr = sp_opt and (
+        kind = shape.kind
+        sp_corr = plan.seq_parallel and (
             kind == "prefill"
-            or (kind == "train" and (opts or {}).get("grad_round_to", 4) < 4)
+            or (
+                kind == "train"
+                and any(p.compresses_grads for p in plan.weight_policies())
+            )
         )
         rf = roofline_from_compiled(
             compiled, model_flops_estimate(cfg, shape, chips),
             act_bytes=act_bytes, seq_parallel=sp_corr,
+            plan=plan, plan_geometry=plan_geometry,
         )
     result = {
         "arch": arch,
@@ -172,6 +207,7 @@ def run_one(arch, shape_name, multi_pod, round_to, *, env_kw=None,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "round_to": round_to,
         "opts": opts or {},
+        "plan": plan.to_json_dict(),
         "lower_s": round(t_lower, 1),
         "compile_s": round(t_compile, 1),
         "memory": {
@@ -202,7 +238,11 @@ def main():
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--no-causal-skip", action="store_true")
     ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--chunks", type=int, default=1)
+    ap.add_argument("--plan", default=None,
+                    help="PrecisionPlan JSON (overrides the sugar flags)")
     args = ap.parse_args()
+    plan = PrecisionPlan.from_file(args.plan) if args.plan else None
     opts = {}
     if args.bf16_train:
         opts["train_dtype"] = "bf16"
@@ -218,6 +258,8 @@ def main():
         opts["causal_skip"] = False
     if args.seq_parallel:
         opts["seq_parallel"] = True
+    if args.chunks > 1:
+        opts["chunks"] = args.chunks
 
     combos = (
         [(a, s) for a in sorted(ARCHS) for s in INPUT_SHAPES]
@@ -230,7 +272,7 @@ def main():
         try:
             results.append(
                 run_one(arch, shape, args.multi_pod, args.round_to,
-                        opts=opts)
+                        opts=opts, plan=plan)
             )
         except Exception as e:
             failures += 1

@@ -1,6 +1,11 @@
 """Production serving launcher: ADT-compressed weight placement + batched
 prefill/decode with optional weight-stationary residency and int8 KV.
 
+One :class:`~repro.plan.PrecisionPlan` drives the weight wire format,
+activation compression, sequence-parallel prefill, chunked gathers and
+the int8 KV cache: pass ``--plan plan.json`` or use the individual flags
+as plan-builder sugar.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
       --requests 8 --prompt-len 64 --gen 32 [--weight-stationary] [--int8-kv]
 """
@@ -18,7 +23,7 @@ from repro.dist.spec import build_spec_tree, tree_to_storage
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.launch.train import _null, parse_mesh
 from repro.models.init import init_params
-from repro.transport import act_policy_for
+from repro.plan import PrecisionPlan
 from repro.serve.step import (
     make_decode_step, make_place_step, make_prefill_step,
 )
@@ -32,6 +37,9 @@ def main():
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--plan", default="",
+                    help="PrecisionPlan JSON (other precision flags are "
+                         "ignored when set)")
     ap.add_argument("--round-to", type=int, default=2)
     ap.add_argument("--act-round-to", type=int, default=4,
                     help="activation wire format on the TP axis (<4 routes "
@@ -39,6 +47,8 @@ def main():
     ap.add_argument("--seq-parallel", action="store_true",
                     help="sequence-parallel prefill activations (decode is "
                          "single-token and keeps the psum layout)")
+    ap.add_argument("--chunks", type=int, default=1,
+                    help="weight-gather chunk count (double buffering)")
     ap.add_argument("--weight-stationary", action="store_true")
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--window", type=int, default=0,
@@ -58,9 +68,18 @@ def main():
     params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=mesh_cfg.tp)
     spec_tree = build_spec_tree(params, metas, mesh_cfg)
     storage = tree_to_storage(params, spec_tree, mesh_cfg)
-    rts = (args.round_to,) * (cfg.num_groups + 1)
-    env_kw = {"int8_kv": True} if args.int8_kv else {}
-    act_policy = act_policy_for(args.act_round_to)
+    nrt = cfg.num_groups + 1
+    if args.plan:
+        plan = PrecisionPlan.from_file(args.plan).broadcast(nrt)
+    else:
+        plan = PrecisionPlan.build(
+            nrt,
+            round_to=args.round_to,
+            act_round_to=args.act_round_to,
+            seq_parallel=args.seq_parallel,
+            chunks=args.chunks,
+            int8_kv=args.int8_kv,
+        )
 
     rng = np.random.default_rng(0)
     batch = {"tokens": jnp.asarray(
@@ -81,23 +100,23 @@ def main():
     ctx = mesh if mesh is not None else _null()
     with ctx:
         prefill = make_prefill_step(
-            cfg, mesh_cfg, mesh, spec_tree, rts, bshapes,
-            cache_capacity=cap, shard_batch=shard_batch, env_kw=env_kw,
-            act_policy=act_policy, seq_parallel=args.seq_parallel,
+            cfg, mesh_cfg, mesh, spec_tree, bshapes, plan=plan,
+            cache_capacity=cap, shard_batch=shard_batch,
         )
         decode = make_decode_step(
-            cfg, mesh_cfg, mesh, spec_tree, rts, dshapes,
-            shard_batch=shard_batch, window_override=window, env_kw=env_kw,
-            weight_stationary=args.weight_stationary, act_policy=act_policy,
-            seq_parallel=args.seq_parallel,
+            cfg, mesh_cfg, mesh, spec_tree, dshapes, plan=plan,
+            shard_batch=shard_batch, window_override=window,
+            weight_stationary=args.weight_stationary,
         )
         weights = storage
         if args.weight_stationary:
-            place, _ = make_place_step(cfg, mesh_cfg, mesh, spec_tree, rts)
+            place, _ = make_place_step(
+                cfg, mesh_cfg, mesh, spec_tree, plan=plan
+            )
             t0 = time.time()
             weights = place(storage)
             jax.block_until_ready(jax.tree_util.tree_leaves(weights)[0])
-            print(f"weight placement (ADT rt={args.round_to}): "
+            print(f"weight placement (ADT rts={plan.round_tos}): "
                   f"{time.time()-t0:.2f}s one-time")
 
         t0 = time.time()

@@ -5,9 +5,18 @@ and runs the A²DTWP loop (AWP controller + ADT-compressed gathers) on the
 synthetic pipeline. On this CPU container use ``--reduced`` plus a small
 ``--mesh``; on a real pod run the full config on 16x16 or 2x16x16.
 
+Every precision knob rides one :class:`~repro.plan.PrecisionPlan`:
+``--plan plan.json`` loads a declarative plan (the single source of
+truth — checkpointed next to the AWP state), and the individual flags
+(``--grad-round-to``, ``--act-round-to``, ``--seq-parallel``, ``--bf16``,
+``--chunks``, ``--grad-mode``, AWP options) are sugar that builds the
+same plan. ``--chunks auto`` picks the double-buffered gather chunk
+count from the roofline sweep (``repro.plan.pick_chunks``).
+
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
       --mesh 2x4 --steps 100 --policy awp
-  XLA_FLAGS=--xla_force_host_platform_device_count=8 ... --mesh 2x4
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --reduced \
+      --mesh 2x4 --steps 20 --plan plan.json
 """
 from __future__ import annotations
 
@@ -20,17 +29,17 @@ import numpy as np
 
 from repro.checkpoint.ckpt import save_checkpoint
 from repro.configs.registry import ARCHS, get_config, reduced
-from repro.core.awp import AWPConfig
 from repro.data.pipeline import synthetic_feature_batch, synthetic_lm_batch
 from repro.dist.spec import (
-    DIST, LeafSpec, MeshCfg, build_spec_tree, tree_to_storage,
+    DIST, LeafSpec, MeshCfg, build_spec_tree, dist_elems_per_group,
+    tree_to_storage,
 )
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.models.init import init_params
 from repro.optim.sgd import SGDConfig, init_momentum
+from repro.plan import PrecisionPlan, pick_chunks
 from repro.train.loop import Trainer
 from repro.train.step import make_train_step
-from repro.transport import act_policy_for
 
 
 def parse_mesh(spec: str) -> MeshCfg:
@@ -43,20 +52,48 @@ def parse_mesh(spec: str) -> MeshCfg:
     raise SystemExit(f"bad --mesh {spec!r}")
 
 
-def count_dist_elems(spec_tree, mesh_cfg, n_groups):
-    elems = [0] * n_groups
-
-    def visit(idx, subtree):
-        for s in jax.tree_util.tree_leaves(
-            subtree, is_leaf=lambda x: isinstance(x, LeafSpec)
-        ):
-            if isinstance(s, LeafSpec) and s.kind == DIST:
-                elems[idx] += s.s_loc * mesh_cfg.dshards
-
-    for g, gs in enumerate(spec_tree["groups"]):
-        visit(g, gs)
-    visit(n_groups - 1, {k: v for k, v in spec_tree.items() if k != "groups"})
-    return elems
+def plan_from_args(args, nrt: int, spec_tree, mesh_cfg) -> PrecisionPlan:
+    """CLI flags -> PrecisionPlan (``--plan`` wins outright)."""
+    if args.plan:
+        return PrecisionPlan.from_file(args.plan).broadcast(nrt)
+    schedule = "awp"
+    round_to = 4
+    if args.policy == "baseline":
+        schedule = "static"
+    elif args.policy.startswith("oracle:"):
+        schedule = "static"
+        round_to = int(args.policy.split(":")[1])
+    elif args.policy != "awp":
+        raise SystemExit(f"bad --policy {args.policy!r}")
+    if args.chunks == "auto":
+        # representative shard: the largest per-group flat shard length
+        s_loc = max(
+            (s.s_loc for s in jax.tree_util.tree_leaves(
+                spec_tree, is_leaf=lambda x: isinstance(x, LeafSpec)
+            ) if isinstance(s, LeafSpec) and s.kind == DIST),
+            default=0,
+        )
+        chunks = pick_chunks(
+            s_loc, max(mesh_cfg.dshards, 1),
+            round_to if schedule == "static" else 1,
+        )
+        print(f"--chunks auto -> {chunks} (roofline sweep, s_loc={s_loc})")
+    else:
+        chunks = int(args.chunks)
+    return PrecisionPlan.build(
+        nrt,
+        round_to=round_to,
+        grad_round_to=args.grad_round_to,
+        grad_mode=args.grad_mode,
+        act_round_to=args.act_round_to,
+        seq_parallel=args.seq_parallel,
+        chunks=chunks,
+        dtype="bf16" if args.bf16 else "f32",
+        accum_steps=args.accum,
+        schedule=schedule,
+        awp_threshold=args.awp_threshold,
+        awp_interval=args.awp_interval,
+    )
 
 
 def main():
@@ -68,11 +105,21 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--policy", default="awp")
+    ap.add_argument("--plan", default="",
+                    help="PrecisionPlan JSON: the declarative source of "
+                         "truth for every precision knob (other precision "
+                         "flags are ignored when set)")
+    ap.add_argument("--policy", default="awp",
+                    help="awp | baseline | oracle:<rt> (plan-builder sugar)")
     ap.add_argument("--awp-threshold", type=float, default=1e-3)
     ap.add_argument("--awp-interval", type=int, default=25)
     ap.add_argument("--bf16", action="store_true")
     ap.add_argument("--grad-round-to", type=int, default=4)
+    ap.add_argument("--grad-mode", default="nearest",
+                    choices=["truncate", "nearest", "stochastic"],
+                    help="rounding of the compressed gradient "
+                         "reduce-scatter (stochastic plumbs a per-step "
+                         "PRNG key through the step)")
     ap.add_argument("--act-round-to", type=int, default=4,
                     help="activation wire format on the TP axis (<4 routes "
                          "TP psums and seq collectives through packed planes)")
@@ -80,6 +127,9 @@ def main():
                     help="sequence-parallel activations: norms/residuals on "
                          "1/tp sequence shards, block boundaries become "
                          "seq_gather/seq_scatter (requires seq %% tp == 0)")
+    ap.add_argument("--chunks", default="1",
+                    help="weight-gather chunk count (int, or 'auto' to pick "
+                         "from the roofline sweep)")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--ckpt", default="")
     args = ap.parse_args()
@@ -100,8 +150,10 @@ def main():
     spec_tree = build_spec_tree(params, metas, mesh_cfg)
     storage = tree_to_storage(params, spec_tree, mesh_cfg)
     n = sum(int(np.prod(l.shape)) for l in jax.tree_util.tree_leaves(params))
+    nrt = cfg.num_groups + 1
+    plan = plan_from_args(args, nrt, spec_tree, mesh_cfg)
     print(f"{cfg.name}: {n/1e6:.1f}M params, mesh {mesh_cfg.shape}, "
-          f"policy {args.policy}")
+          f"schedule {plan.schedule.source}, rts {plan.round_tos}")
 
     B, S = args.batch, args.seq
     audio = cfg.embed_is_input_stub
@@ -121,24 +173,16 @@ def main():
         )
 
     opt = SGDConfig(lr=args.lr, momentum=0.9, weight_decay=1e-4)
-    nrt = cfg.num_groups + 1
-
-    act_policy = act_policy_for(args.act_round_to)
 
     def builder(round_tos):
         return make_train_step(
-            cfg, mesh_cfg, mesh, spec_tree, round_tos, opt, batch_shapes,
-            dtype=jnp.bfloat16 if args.bf16 else jnp.float32,
-            grad_round_to=args.grad_round_to, accum_steps=args.accum,
-            act_policy=act_policy, seq_parallel=args.seq_parallel,
+            cfg, mesh_cfg, mesh, spec_tree, opt, batch_shapes,
+            plan=plan.with_round_tos(round_tos),
         )
 
     trainer = Trainer(
-        builder, nrt, policy=args.policy,
-        awp_config=AWPConfig(
-            threshold=args.awp_threshold, interval=args.awp_interval
-        ),
-        dist_elems_per_group=count_dist_elems(spec_tree, mesh_cfg, nrt),
+        builder, nrt, plan=plan,
+        dist_elems_per_group=dist_elems_per_group(spec_tree, mesh_cfg, nrt),
         gather_axis_size=max(mesh_cfg.dshards, 1),
     )
     mom = init_momentum(storage)
@@ -161,7 +205,12 @@ def main():
                     rngi.normal(0, 1, (B, cfg.num_image_tokens, cfg.vision_dim)),
                     jnp.float32,
                 )
-            storage, mom, _ = trainer.run_step(storage, mom, batch, args.lr)
+            extra = (
+                (jax.random.PRNGKey(step),) if plan.needs_rng else ()
+            )
+            storage, mom, _ = trainer.run_step(
+                storage, mom, batch, args.lr, *extra
+            )
             if step % 20 == 19:
                 r = trainer.records[-1]
                 print(f"step {step+1:4d}  loss {r.loss:.4f}  rts {r.round_tos}"
@@ -170,10 +219,16 @@ def main():
     s = trainer.summary()
     print(f"done: loss {s['final_loss']:.4f}  wire-reduction "
           f"{s['wire_reduction']*100:.1f}%  recompiles {s['recompiles']}")
+    if "wire_by_entry" in s:
+        entries = ", ".join(
+            f"{k} {v/1e6:.1f}MB" for k, v in s["wire_by_entry"].items() if v
+        )
+        print(f"wire by plan entry: {entries}")
     print(f"AWP: {s['bits_history']}")
     if args.ckpt:
-        save_checkpoint(args.ckpt, storage, mom, trainer.controller, args.steps)
-        print(f"checkpoint -> {args.ckpt}")
+        save_checkpoint(args.ckpt, storage, mom, trainer.controller,
+                        args.steps, plan=plan)
+        print(f"checkpoint -> {args.ckpt} (plan persisted)")
 
 
 class _null:

@@ -55,6 +55,15 @@ class Env:
     int8_kv: bool = False                   # int8 KV cache (decode, §Perf)
     mlstm_chunk: int = 0                    # chunkwise mLSTM (0 = sequential)
     act_policy: Any = None                  # activation CompressionPolicy
+    seq_policy: Any = None                  # seq-boundary policy (None = act)
+
+    # ------------------------------------------------------------------
+    @property
+    def _seq_pol(self):
+        """Policy of the sequence-parallel boundary pair: the plan's
+        ``seq_boundary`` traffic class, defaulting to the activation
+        (TP-region) policy when unset."""
+        return self.seq_policy if self.seq_policy is not None else self.act_policy
 
     # ------------------------------------------------------------------
     @property
@@ -77,7 +86,7 @@ class Env:
         if self.model_axis is None:
             return x
         if self.seq_parallel:
-            return seq_gather(x, self.model_axis, self.act_policy, axis)
+            return seq_gather(x, self.model_axis, self._seq_pol, axis)
         return tp_region_enter(x, self.model_axis, self.act_policy)
 
     def exit(self, x, axis: int = 1):
@@ -87,7 +96,7 @@ class Env:
         if self.model_axis is None:
             return x
         if self.seq_parallel:
-            return seq_scatter(x, self.model_axis, self.act_policy, axis)
+            return seq_scatter(x, self.model_axis, self._seq_pol, axis)
         return tp_region_exit(x, self.model_axis, self.act_policy)
 
     def psum_enter(self, x):
@@ -109,14 +118,14 @@ class Env:
         when there is no model axis)."""
         if self.model_axis is None:
             return x
-        return seq_gather(x, self.model_axis, self.act_policy, axis)
+        return seq_gather(x, self.model_axis, self._seq_pol, axis)
 
     def seq_scatter(self, x, axis: int = 1):
         """Sequence-parallel exit: reduce-scatter along the sequence dim
         (identity when there is no model axis)."""
         if self.model_axis is None:
             return x
-        return seq_scatter(x, self.model_axis, self.act_policy, axis)
+        return seq_scatter(x, self.model_axis, self._seq_pol, axis)
 
     def seq_shard(self, x, axis: int = 1):
         """Replicated activation -> this rank's sequence shard (identity

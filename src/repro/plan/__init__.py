@@ -1,0 +1,35 @@
+"""repro.plan — the declarative PrecisionPlan API (see docs/plan.md).
+
+One validated, serializable object owns every precision knob: the
+per-traffic-class :class:`~repro.transport.CompressionPolicy` entries,
+the schedule source (static oracle vs AWP dynamic), and the execution
+layout (``seq_parallel`` / ``chunks`` / compute dtype / ``int8_kv`` /
+``accum_steps``). Step factories take ``plan=``, ``Env`` is built from
+the plan, launchers load ``--plan plan.json``, checkpoints persist it,
+and the roofline analyzers account wire bytes per plan entry.
+"""
+from repro.plan.plan import (
+    ENV_OVERRIDE_KEYS,
+    TRAFFIC_CLASSES,
+    PrecisionPlan,
+    Schedule,
+    policy_uses_rng,
+)
+from repro.plan.sweep import (
+    CHUNK_CANDIDATES,
+    modeled_gather_time,
+    pick_chunks,
+    sweep_chunks,
+)
+
+__all__ = [
+    "CHUNK_CANDIDATES",
+    "ENV_OVERRIDE_KEYS",
+    "PrecisionPlan",
+    "Schedule",
+    "TRAFFIC_CLASSES",
+    "modeled_gather_time",
+    "policy_uses_rng",
+    "pick_chunks",
+    "sweep_chunks",
+]

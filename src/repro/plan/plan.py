@@ -1,0 +1,539 @@
+"""PrecisionPlan — the single declarative object that owns every
+precision decision in the framework.
+
+The paper's contribution is *one algorithm* that adapts the
+data-representation format of every tensor crossing the wire; before
+this module the configuration surface mirroring it was shattered across
+``round_tos`` tuples, ``grad_round_to``, ``act_policy`` kwargs,
+``env_kw`` dicts, ``seq_parallel`` flags and AWP CLI options. A
+:class:`PrecisionPlan` gathers all of them into one validated,
+serializable value:
+
+  * **per-traffic-class policies** — one
+    :class:`~repro.transport.CompressionPolicy` entry per class of wire
+    traffic (see :data:`TRAFFIC_CLASSES` and docs/plan.md):
+
+      | entry | carrier |
+      |---|---|
+      | ``weights``     | per-precision-group forward weight gathers (FSDP axes) |
+      | ``gradients``   | the backward reduce-scatter of weight gradients |
+      | ``activations`` | TP-region psums / activation cotangents |
+      | ``seq_boundary``| the sequence-parallel ``seq_gather``/``seq_scatter`` pair |
+      | ``host_device`` | paper §III host→device staging (accounting entry) |
+
+    ``gradients`` is described by its *forward* fields (``round_to``,
+    ``mode``) and folded into the weight policies' grad fields when the
+    plan is resolved; ``seq_boundary`` defaults to ``activations``;
+    ``host_device`` defaults to the weight entries.
+
+  * **a schedule source** — ``static`` (the paper's oracle: the plan's
+    formats are final) or ``awp`` (Algorithm 1 widens the weight
+    entries at runtime; threshold / interval / initial bits live here).
+
+  * **execution layout** — ``seq_parallel``, ``chunks`` (double-buffered
+    weight-gather blocks), compute ``dtype``, ``int8_kv``,
+    ``accum_steps``, plus whitelisted ``Env`` overrides.
+
+Every consumer derives from the plan: the step factories
+(``plan=`` on ``make_train_step`` / ``make_prefill_step`` /
+``make_decode_step`` / ``make_cnn_train_step``), the ``Env``
+(:meth:`PrecisionPlan.make_env` is the one plan→Env constructor),
+the trainer's schedule + wire log, checkpoints (the plan is persisted
+next to the AWP state), and the roofline analyzers
+(:meth:`PrecisionPlan.wire_table` is the per-entry byte account whose
+numbers come from the same ``CompressionPolicy`` formulas the HLO
+analyzers charge compiled collectives with).
+
+Invalid plans raise :class:`ValueError` at *construction* — never at
+trace time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+from typing import Any, Mapping
+
+import jax.numpy as jnp
+
+from repro.core.awp import AWPConfig
+from repro.transport import CompressionPolicy, policy_for
+from repro.transport.policy import FP32_BYTES
+
+TRAFFIC_CLASSES = (
+    "weights", "gradients", "activations", "seq_boundary", "host_device"
+)
+VALID_SCHEDULES = ("static", "awp")
+VALID_DTYPES = ("f32", "bf16")
+# Env knobs a plan may override beyond the fields it owns outright
+ENV_OVERRIDE_KEYS = ("attn_chunk", "causal_skip", "mlstm_chunk")
+
+_DTYPES = {"f32": jnp.float32, "bf16": jnp.bfloat16}
+
+
+def policy_uses_rng(p: CompressionPolicy) -> bool:
+    """True when materializing/synchronizing under this policy packs
+    planes with stochastic rounding *at its current widths* (which needs
+    a PRNG key). The single definition shared by the step factories'
+    key-threading decision."""
+    return (p.mode == "stochastic" and p.round_to < FP32_BYTES) or (
+        p.grad_mode == "stochastic" and p.grad_round_to < FP32_BYTES
+    )
+
+
+def _pol_configured_rng(p: CompressionPolicy) -> bool:
+    """True when a stochastic mode is *configured* on either direction,
+    regardless of the current widths. This is deliberately
+    width-independent: under an AWP schedule ``with_round_tos`` swaps
+    widths at runtime, and the step-function signature (trailing PRNG
+    key) must not flip with them."""
+    return p.mode == "stochastic" or p.grad_mode == "stochastic"
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Who decides the weight formats at runtime.
+
+    ``static`` — the plan's weight entries are final (the paper's
+    *oracle* policy; a uniform rt=4 plan is the fp32 baseline).
+    ``awp`` — Algorithm 1 monitors Σw² per group and widens the weight
+    entries; the controller hyper-parameters live here so one JSON file
+    describes the whole run.
+    """
+
+    source: str = "static"
+    awp_threshold: float = -2e-3
+    awp_interval: int = 100
+    awp_initial_bits: int = 8
+
+    def __post_init__(self):
+        if self.source not in VALID_SCHEDULES:
+            raise ValueError(
+                f"schedule source must be in {VALID_SCHEDULES}, "
+                f"got {self.source!r}"
+            )
+        if self.awp_interval <= 0:
+            raise ValueError("awp_interval must be positive")
+        if self.awp_initial_bits % 8 or not (8 <= self.awp_initial_bits <= 32):
+            raise ValueError("awp_initial_bits must be 8/16/24/32")
+
+    def awp_config(self) -> AWPConfig:
+        return AWPConfig(
+            threshold=self.awp_threshold,
+            interval=self.awp_interval,
+            initial_bits=self.awp_initial_bits,
+        )
+
+
+def _coerce_policy(v) -> CompressionPolicy | None:
+    if v is None or isinstance(v, CompressionPolicy):
+        return v
+    if isinstance(v, Mapping):
+        return CompressionPolicy(**v)
+    return policy_for(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class PrecisionPlan:
+    """Declarative precision + layout plan (see module docstring)."""
+
+    weights: tuple[CompressionPolicy, ...] = (CompressionPolicy(),)
+    gradients: CompressionPolicy | None = None
+    activations: CompressionPolicy | None = None
+    seq_boundary: CompressionPolicy | None = None
+    host_device: CompressionPolicy | None = None
+    schedule: Schedule = dataclasses.field(default_factory=Schedule)
+    # --- execution layout ------------------------------------------------
+    seq_parallel: bool = False
+    chunks: int = 1
+    dtype: str = "f32"
+    int8_kv: bool = False
+    accum_steps: int = 1
+    env_overrides: tuple[tuple[str, Any], ...] = ()
+
+    # ------------------------------------------------------------------
+    def __post_init__(self):
+        ws = self.weights
+        if isinstance(ws, CompressionPolicy):
+            ws = (ws,)
+        ws = tuple(_coerce_policy(w) for w in ws)
+        if not ws or any(w is None for w in ws):
+            raise ValueError("plan needs at least one weights entry")
+        object.__setattr__(self, "weights", ws)
+        for name in ("gradients", "activations", "seq_boundary",
+                     "host_device"):
+            object.__setattr__(
+                self, name, _coerce_policy(getattr(self, name))
+            )
+        if isinstance(self.schedule, Mapping):
+            object.__setattr__(self, "schedule", Schedule(**self.schedule))
+        if not isinstance(self.schedule, Schedule):
+            raise ValueError("schedule must be a Schedule")
+        if not isinstance(self.chunks, int) or self.chunks < 1:
+            raise ValueError("chunks must be an int >= 1")
+        if self.dtype not in VALID_DTYPES:
+            raise ValueError(f"dtype must be in {VALID_DTYPES}")
+        if not isinstance(self.accum_steps, int) or self.accum_steps < 1:
+            raise ValueError("accum_steps must be an int >= 1")
+        if isinstance(self.env_overrides, Mapping):
+            object.__setattr__(
+                self, "env_overrides",
+                tuple(sorted(self.env_overrides.items())),
+            )
+        for k, _ in self.env_overrides:
+            if k not in ENV_OVERRIDE_KEYS:
+                raise ValueError(
+                    f"unknown env override {k!r} (allowed: "
+                    f"{ENV_OVERRIDE_KEYS})"
+                )
+        # activation-path stochastic rounding has no PRNG plumbing (the
+        # collectives sit inside TP-region custom VJPs): reject early
+        for name in ("activations", "seq_boundary"):
+            p = getattr(self, name)
+            if p is not None and _pol_configured_rng(p):
+                raise ValueError(
+                    f"{name} policy cannot use stochastic rounding "
+                    "(no PRNG path through the activation collectives); "
+                    "use mode='nearest'"
+                )
+
+    # -- resolution ------------------------------------------------------
+    @property
+    def num_weight_groups(self) -> int:
+        return len(self.weights)
+
+    @property
+    def round_tos(self) -> tuple[int, ...]:
+        return tuple(w.round_to for w in self.weights)
+
+    def broadcast(self, num_groups: int) -> "PrecisionPlan":
+        """Expand a single weights entry to ``num_groups`` groups (a
+        plan JSON need not know the architecture's group count)."""
+        if len(self.weights) == num_groups:
+            return self
+        if len(self.weights) == 1:
+            return dataclasses.replace(
+                self, weights=self.weights * num_groups
+            )
+        raise ValueError(
+            f"plan has {len(self.weights)} weight entries, "
+            f"model needs {num_groups}"
+        )
+
+    def with_round_tos(self, round_tos) -> "PrecisionPlan":
+        """Same plan with the weight formats replaced — how the AWP
+        schedule materializes each widening as a new (cacheable) plan."""
+        rts = tuple(int(r) for r in round_tos)
+        ws = self.weights
+        if len(ws) == 1 and len(rts) > 1:
+            ws = ws * len(rts)
+        if len(ws) != len(rts):
+            raise ValueError(f"{len(rts)} round_tos for {len(ws)} entries")
+        return dataclasses.replace(
+            self,
+            weights=tuple(
+                dataclasses.replace(w, round_to=rt)
+                for w, rt in zip(ws, rts)
+            ),
+        )
+
+    def weight_policies(self) -> tuple[CompressionPolicy, ...]:
+        """The fully-resolved per-group policies the transport runs:
+        weight entries with the ``gradients`` entry folded into their
+        grad fields and the plan's ``chunks`` applied."""
+        out = []
+        for w in self.weights:
+            if self.gradients is not None:
+                w = dataclasses.replace(
+                    w,
+                    grad_round_to=self.gradients.round_to,
+                    grad_mode=self.gradients.mode,
+                )
+            if self.chunks != w.chunks:
+                w = dataclasses.replace(w, chunks=self.chunks)
+            out.append(w)
+        return tuple(out)
+
+    def seq_policy(self) -> CompressionPolicy | None:
+        return (
+            self.seq_boundary
+            if self.seq_boundary is not None
+            else self.activations
+        )
+
+    def host_device_policies(self) -> tuple[CompressionPolicy, ...]:
+        if self.host_device is not None:
+            return (self.host_device,) * len(self.weights)
+        return self.weights
+
+    @property
+    def compute_dtype(self):
+        return _DTYPES[self.dtype]
+
+    @property
+    def needs_rng(self) -> bool:
+        """True when the step functions must be fed a PRNG key (a
+        stochastic mode is configured on the weight/gradient path).
+
+        Width-independent on purpose: ``with_round_tos`` must never flip
+        the step signature, or an AWP widening would break the caller's
+        key-passing convention mid-run. A policy that is stochastic but
+        currently uncompressed simply ignores its key."""
+        return any(_pol_configured_rng(p) for p in self.weight_policies())
+
+    def awp_config(self) -> AWPConfig | None:
+        if self.schedule.source != "awp":
+            return None
+        return self.schedule.awp_config()
+
+    # -- the one plan -> Env constructor ---------------------------------
+    def make_env(self, mesh_cfg, *, seq_parallel: bool | None = None):
+        """Build the execution :class:`~repro.models.env.Env` — the
+        single replacement for the three env-kwarg merging helpers the
+        train / serve / cnn steps used to carry."""
+        from repro.models.env import Env
+
+        return Env(
+            model_axis=mesh_cfg.model_axis if mesh_cfg.tp > 1 else None,
+            fsdp_axes=mesh_cfg.fsdp_axes if mesh_cfg.dshards > 1 else None,
+            tp=mesh_cfg.tp,
+            dtype=self.compute_dtype,
+            act_policy=self.activations,
+            seq_policy=self.seq_boundary,
+            seq_parallel=(
+                self.seq_parallel if seq_parallel is None else seq_parallel
+            ),
+            int8_kv=self.int8_kv,
+            **dict(self.env_overrides),
+        )
+
+    # -- per-entry wire accounting ---------------------------------------
+    def wire_table(
+        self,
+        dist_elems_per_group,
+        gather_axis_size: int,
+        *,
+        training: bool = True,
+        tp: int = 1,
+        act_elems: int = 0,
+        act_collectives: int = 0,
+    ) -> dict:
+        """Per-traffic-class wire bytes of ONE step — the plan as the
+        unit of cost accounting.
+
+        Every number comes from the corresponding
+        :class:`~repro.transport.CompressionPolicy` formula
+        (``all_gather_wire_bytes`` / ``reduce_scatter_wire_bytes`` /
+        ``all_reduce_wire_bytes`` / ``seq_pair_wire_bytes`` /
+        ``host_device_bytes``) so the table cannot drift from what the
+        HLO analyzers charge compiled collectives.
+
+        ``dist_elems_per_group`` — global compressed element count per
+        precision group (see ``repro.dist.spec.dist_elems_per_group``).
+        ``gather_axis_size`` — FSDP shards; ``<= 1`` selects the paper's
+        host→device staging model instead of the gather entries.
+        ``act_elems`` × ``act_collectives`` — gathered activation element
+        count and number of TP-region boundaries per step (optional; the
+        activation entries report 0 when unknown).
+        """
+        pols = self.weight_policies()
+        elems = list(dist_elems_per_group)
+        if len(elems) != len(pols):
+            raise ValueError(
+                f"{len(elems)} group element counts for {len(pols)} "
+                "weight entries"
+            )
+        n = int(gather_axis_size)
+        table = {k: 0 for k in TRAFFIC_CLASSES}
+        if n > 1:
+            for pol, e in zip(pols, elems):
+                table["weights"] += pol.all_gather_wire_bytes(e // n, n)
+                if training:
+                    table["gradients"] += pol.reduce_scatter_wire_bytes(
+                        e // n, n
+                    )
+        else:
+            for pol, e in zip(self.host_device_policies(), elems):
+                table["host_device"] += pol.host_device_bytes(e)
+        if act_collectives and act_elems and tp > 1:
+            act = self.activations or CompressionPolicy()
+            seq = self.seq_policy() or CompressionPolicy()
+            if self.seq_parallel:
+                table["seq_boundary"] = act_collectives * seq.seq_pair_wire_bytes(
+                    act_elems, tp
+                )
+            else:
+                table["activations"] = act_collectives * act.all_reduce_wire_bytes(
+                    act_elems, tp
+                )
+        table["total"] = sum(table[k] for k in TRAFFIC_CLASSES)
+        return table
+
+    # -- serialization ---------------------------------------------------
+    def to_json_dict(self) -> dict:
+        def pol(p):
+            return None if p is None else dataclasses.asdict(p)
+
+        return {
+            "version": 1,
+            "weights": [pol(w) for w in self.weights],
+            "gradients": pol(self.gradients),
+            "activations": pol(self.activations),
+            "seq_boundary": pol(self.seq_boundary),
+            "host_device": pol(self.host_device),
+            "schedule": dataclasses.asdict(self.schedule),
+            "seq_parallel": self.seq_parallel,
+            "chunks": self.chunks,
+            "dtype": self.dtype,
+            "int8_kv": self.int8_kv,
+            "accum_steps": self.accum_steps,
+            "env_overrides": dict(self.env_overrides),
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: Mapping) -> "PrecisionPlan":
+        d = dict(d)
+        version = d.pop("version", 1)
+        if version != 1:
+            raise ValueError(f"unknown plan version {version!r}")
+        ws = d.pop("weights", None)
+        if ws is None:
+            raise ValueError("plan JSON needs a 'weights' entry")
+        if isinstance(ws, Mapping):
+            ws = [ws]
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(d) - known
+        if unknown:
+            raise ValueError(f"unknown plan fields {sorted(unknown)}")
+        return cls(weights=tuple(ws), **d)
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_json_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "PrecisionPlan":
+        return cls.from_json_dict(json.loads(text))
+
+    def to_file(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def from_file(cls, path: str) -> "PrecisionPlan":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -- builder sugar ---------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        num_groups: int = 1,
+        round_to: int = 4,
+        *,
+        mode: str = "truncate",
+        impl: str = "auto",
+        grad_round_to: int | None = None,
+        grad_mode: str = "nearest",
+        act_round_to: int = 4,
+        act_mode: str = "nearest",
+        seq_parallel: bool = False,
+        chunks: int = 1,
+        dtype: str = "f32",
+        int8_kv: bool = False,
+        accum_steps: int = 1,
+        schedule: str = "static",
+        awp_threshold: float = -2e-3,
+        awp_interval: int = 100,
+        awp_initial_bits: int = 8,
+        env_overrides=(),
+    ) -> "PrecisionPlan":
+        """The CLI flag → plan builder both launchers use: every legacy
+        knob maps onto exactly one plan field."""
+        gradients = None
+        if grad_round_to is not None and (
+            grad_round_to != 4 or grad_mode != "nearest"
+        ):
+            gradients = CompressionPolicy(
+                round_to=int(grad_round_to), mode=grad_mode, impl=impl
+            )
+        activations = None
+        if act_round_to < FP32_BYTES:
+            activations = CompressionPolicy(
+                round_to=int(act_round_to),
+                grad_round_to=int(act_round_to),
+                mode=act_mode,
+                grad_mode=act_mode,
+                impl=impl,
+            )
+        return cls(
+            weights=(CompressionPolicy(
+                round_to=int(round_to), mode=mode, impl=impl
+            ),) * num_groups,
+            gradients=gradients,
+            activations=activations,
+            schedule=Schedule(
+                source=schedule,
+                awp_threshold=awp_threshold,
+                awp_interval=awp_interval,
+                awp_initial_bits=awp_initial_bits,
+            ),
+            seq_parallel=seq_parallel,
+            chunks=chunks,
+            dtype=dtype,
+            int8_kv=int8_kv,
+            accum_steps=accum_steps,
+            env_overrides=env_overrides,
+        )
+
+    @classmethod
+    def from_legacy(
+        cls,
+        round_tos,
+        *,
+        grad_round_to=None,
+        act_policy=None,
+        seq_parallel=False,
+        env_kw=None,
+        dtype=jnp.float32,
+        accum_steps=1,
+        chunks=None,
+        caller="step factory",
+    ) -> "PrecisionPlan":
+        """Deprecation shim: the pre-plan kwarg sprawl → one plan.
+
+        Emits a :class:`DeprecationWarning`; the legacy signature is
+        kept for one release.
+        """
+        warnings.warn(
+            f"passing round_tos/grad_round_to/act_policy/seq_parallel/"
+            f"env_kw to {caller} is deprecated; build a "
+            f"repro.plan.PrecisionPlan and pass plan=",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        kw = dict(env_kw or {})
+        int8_kv = bool(kw.pop("int8_kv", False))
+        if "act_policy" in kw and act_policy is None:
+            act_policy = kw.pop("act_policy")
+        kw.pop("act_policy", None)
+        seq_parallel = bool(kw.pop("seq_parallel", False)) or seq_parallel
+        weights = tuple(policy_for(rt) for rt in round_tos)
+        gradients = None
+        if grad_round_to is not None:
+            gradients = CompressionPolicy(
+                round_to=int(grad_round_to),
+                mode=weights[0].grad_mode if weights else "nearest",
+            )
+        if chunks is None:
+            chunks = max((w.chunks for w in weights), default=1)
+        return cls(
+            weights=weights,
+            gradients=gradients,
+            activations=_coerce_policy(act_policy),
+            seq_parallel=seq_parallel,
+            chunks=chunks,
+            dtype="bf16" if dtype == jnp.bfloat16 else "f32",
+            int8_kv=int8_kv,
+            accum_steps=accum_steps,
+            env_overrides=tuple(sorted(kw.items())),
+        )

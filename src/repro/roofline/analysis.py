@@ -142,7 +142,7 @@ class Roofline:
 
 def roofline_from_compiled(
     compiled, model_flops_per_device: float, act_bytes: int = 4,
-    *, seq_parallel: bool = False,
+    *, seq_parallel: bool = False, plan=None, plan_geometry: dict | None = None,
 ) -> Roofline:
     """While-trip-aware roofline (see repro.roofline.hlo_cost for why raw
     cost_analysis cannot be used with scanned layer stacks).
@@ -174,8 +174,16 @@ def roofline_from_compiled(
     reduce-scatter residue. (Caveat: only pass ``seq_parallel=True`` for
     steps whose weight-gradient reduce-scatters are compressed — an
     uncompressed f32 grad reduce-scatter is indistinguishable from an
-    activation one in HLO text and would be wrongly scaled.)"""
-    from repro.roofline.hlo_cost import analyze_hlo
+    activation one in HLO text and would be wrongly scaled.)
+
+    ``plan`` + ``plan_geometry`` (``dist_elems_per_group``,
+    ``gather_axis_size``, optional ``training``): break the wire down by
+    :class:`~repro.plan.PrecisionPlan` traffic class — the per-entry
+    numbers come from the plan's ``CompressionPolicy`` formulas and the
+    measured packed-plane residue (see
+    :func:`repro.roofline.hlo_cost.plan_wire_split`); the table lands in
+    ``collectives["per_plan_entry"]``."""
+    from repro.roofline.hlo_cost import analyze_hlo, plan_wire_split
 
     cost = compiled.cost_analysis()
     if isinstance(cost, list):  # older jax returns [dict]
@@ -205,6 +213,9 @@ def roofline_from_compiled(
     terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
     dominant = max(terms, key=terms.get)
     useful = model_flops_per_device / flops if flops else 0.0
+    per_plan_entry = None
+    if plan is not None:
+        per_plan_entry = plan_wire_split(c, plan, **(plan_geometry or {}))
     return Roofline(
         flops=flops,
         hbm_bytes=hbm,
@@ -222,6 +233,8 @@ def roofline_from_compiled(
             # weight gathers, grad reduce-scatters, TP activation planes
             "plane_wire_bytes": c.plane_wire,
             "plane_wire_total": c.plane_wire_total,
+            # wire bytes by PrecisionPlan traffic class (plan-driven runs)
+            "per_plan_entry": per_plan_entry,
             "raw_cost_analysis": {"flops": raw_flops, "bytes": raw_bytes},
         },
     )

@@ -384,3 +384,51 @@ class HloModule:
 
 def analyze_hlo(text: str) -> Cost:
     return HloModule(text).entry_cost()
+
+
+def plan_wire_split(
+    cost: Cost,
+    plan,
+    dist_elems_per_group,
+    gather_axis_size: int,
+    *,
+    training: bool = True,
+) -> dict:
+    """Split a measured :class:`Cost` by :class:`~repro.plan.PrecisionPlan`
+    traffic class — the plan as the unit of cost accounting.
+
+    The ``weights`` / ``gradients`` / ``host_device`` entries come from
+    the plan's own :meth:`~repro.plan.PrecisionPlan.wire_table` (the
+    ``CompressionPolicy`` formulas, so they agree with what this module
+    charges the corresponding collectives). ``plane_residue`` is the
+    *measured* packed-plane wire not explained by the compressed
+    weight/gradient entries: the TP-axis activation / seq-boundary
+    pipelines, plus remat-replayed weight gathers on configs that
+    rematerialize the layer stack (the recompute repeats the forward
+    plane gather, which the once-per-step analytic entry deliberately
+    does not count). ``raw_wire`` is the non-plane remainder
+    (uncompressed psums, grad syncs, cache shuffles). The measured
+    totals ride along so reports can show analytic-vs-HLO drift."""
+    table = plan.wire_table(
+        dist_elems_per_group, gather_axis_size, training=training
+    )
+    # only the groups that actually compress ride u8 planes: an rt=4
+    # entry's gather is a raw f32 collective and must not be subtracted
+    # from the measured plane wire (mixed-width plans are the norm under
+    # per-group AWP widening)
+    plane_share = 0
+    n = int(gather_axis_size)
+    if n > 1:
+        for pol, e in zip(plan.weight_policies(), dist_elems_per_group):
+            if pol.compresses:
+                plane_share += pol.all_gather_wire_bytes(e // n, n)
+            if training and pol.compresses_grads:
+                plane_share += pol.reduce_scatter_wire_bytes(e // n, n)
+    split = {k: v for k, v in table.items()}
+    split["plane_residue"] = max(
+        round(cost.plane_wire_total - plane_share), 0
+    )
+    split["raw_wire"] = round(cost.wire_total - cost.plane_wire_total)
+    split["measured_plane_wire"] = round(cost.plane_wire_total)
+    split["measured_wire"] = round(cost.wire_total)
+    return split

@@ -3,14 +3,19 @@
 Weights flow through the same ADT-compressed gathers as training — serving
 models the paper's "send weights to accelerators" motion at inference
 load time / per step, and decode roofline shows where int8 KV (beyond-
-paper) pays off. ``act_policy`` compresses the TP-axis activation
-collectives (the gathered-activation psums around every attention/MLP
-block) the same way; combined with ``env_kw={"int8_kv": True}`` both
-resident KV state and wire-crossing activations shrink.
+paper) pays off. A :class:`~repro.plan.PrecisionPlan` drives every
+precision choice: the per-group weight entries, the activation policy
+compressing the TP-axis collectives, ``int8_kv`` (resident KV state),
+``seq_parallel`` for prefill, and the chunked weight gather.
+
+Serving is deterministic: a plan whose *forward* weight path uses
+stochastic rounding is rejected here (there is no per-request PRNG key);
+its gradient fields are simply unused.
+
+Legacy ``(round_tos, batch_shapes, act_policy=, seq_parallel=, env_kw=)``
+signatures are shimmed for one release with a ``DeprecationWarning``.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -26,14 +31,46 @@ from repro.dist.spec import (
     tree_partition_specs,
 )
 from repro.models import model as M
+from repro.plan import PrecisionPlan
 from repro.train.step import (
     batch_pspecs,
     check_seq_parallel,
-    make_env,
     make_mat_fns,
-    merge_env_kw,
+    resolve_plan,
 )
-from repro.transport import policy_for
+from repro.transport.policy import FP32_BYTES
+
+_LEGACY_SERVE_KW = (
+    "round_tos", "act_policy", "seq_parallel", "env_kw", "dtype",
+)
+
+
+def _serve_plan(cfg, args, plan, legacy, *, caller, n_positional):
+    """Shared legacy/plan dispatch for the serve factories:
+    ``args`` may be ``(round_tos, *rest)`` (legacy) or ``rest`` (new)."""
+    round_tos = None
+    rest = args
+    if len(args) == n_positional + 1:
+        round_tos, rest = args[0], args[1:]
+    elif len(args) != n_positional:
+        raise TypeError(f"{caller}: unexpected positional args {args}")
+    for k in list(legacy):
+        if legacy[k] is None:
+            legacy.pop(k)
+    unknown = set(legacy) - set(_LEGACY_SERVE_KW)
+    if unknown:
+        raise TypeError(f"{caller}: unknown kwargs {sorted(unknown)}")
+    plan = resolve_plan(
+        cfg, plan=plan, round_tos=round_tos, legacy=legacy, caller=caller
+    )
+    for pol in plan.weight_policies():
+        if pol.mode == "stochastic" and pol.round_to < FP32_BYTES:
+            raise ValueError(
+                f"{caller}: stochastic forward rounding is not supported "
+                "in serving steps (deterministic, no PRNG key); use "
+                "mode='nearest'"
+            )
+    return plan, rest
 
 
 def cache_pspecs(cfg: ModelConfig, mesh_cfg: MeshCfg, shard_batch: bool,
@@ -134,22 +171,25 @@ def make_prefill_step(
     mesh_cfg: MeshCfg,
     mesh,
     spec_tree,
-    round_tos,
-    batch_shapes: dict,
-    *,
+    *args,
+    plan: PrecisionPlan | None = None,
+    batch_shapes: dict | None = None,
     cache_capacity: int,
     shard_batch: bool = True,
-    dtype=jnp.float32,
-    env_kw: dict | None = None,
-    act_policy=None,
-    seq_parallel: bool = False,
+    **legacy,
 ):
-    env = make_env(
-        cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy, seq_parallel)
+    plan, rest = _serve_plan(
+        cfg, args, plan, legacy, caller="make_prefill_step",
+        n_positional=0 if batch_shapes is not None else 1,
     )
+    if batch_shapes is None:
+        (batch_shapes,) = rest
+    env = plan.make_env(mesh_cfg)
     if env.seq_parallel and mesh_cfg.tp > 1:
         check_seq_parallel(batch_shapes, mesh_cfg)
-    mat_group, mat_top_factory = make_mat_fns(spec_tree, mesh_cfg, round_tos, dtype)
+    mat_group, mat_top_factory = make_mat_fns(
+        spec_tree, mesh_cfg, plan.weight_policies(), plan.compute_dtype
+    )
 
     def step(storage, batch):
         return M.forward_prefill(
@@ -163,9 +203,7 @@ def make_prefill_step(
 
     pspecs = tree_partition_specs(spec_tree, mesh_cfg)
     bspecs = batch_pspecs(batch_shapes, mesh_cfg, shard_batch)
-    cspecs = cache_pspecs(
-        cfg, mesh_cfg, shard_batch, int8_kv=bool((env_kw or {}).get("int8_kv"))
-    )
+    cspecs = cache_pspecs(cfg, mesh_cfg, shard_batch, int8_kv=plan.int8_kv)
     mo = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
     dp = _logits_dp(mesh_cfg, shard_batch)
     logits_spec = P(dp, None, mo)  # (B, 1, V_local): batch+vocab sharded
@@ -181,17 +219,21 @@ def make_place_step(
     mesh_cfg: MeshCfg,
     mesh,
     spec_tree,
-    round_tos,
-    *,
-    dtype=jnp.float32,
+    *args,
+    plan: PrecisionPlan | None = None,
     resident_dtype=None,
+    **legacy,
 ):
     """Weight-stationary serving (§Perf): run every ADT-compressed gather
     ONCE, emitting per-TP-rank resident weights. Decode steps built with
     ``weight_stationary=True`` then contain no weight collectives at all.
 
     Returns (place_fn, placed_pspecs): ``placed = place_fn(storage)``."""
-    policies = tuple(policy_for(rt) for rt in round_tos)
+    legacy.pop("dtype", None)  # legacy signature took (unused here) dtype
+    plan, _ = _serve_plan(
+        cfg, args, plan, legacy, caller="make_place_step", n_positional=0
+    )
+    policies = plan.weight_policies()
 
     def _walk(storage_sub, spec_sub, g):
         pol = policies[g]
@@ -235,24 +277,26 @@ def make_decode_step(
     mesh_cfg: MeshCfg,
     mesh,
     spec_tree,
-    round_tos,
-    batch_shapes: dict,
-    *,
+    *args,
+    plan: PrecisionPlan | None = None,
+    batch_shapes: dict | None = None,
     shard_batch: bool = True,
     window_override=None,
-    dtype=jnp.float32,
-    env_kw: dict | None = None,
     weight_stationary: bool = False,
-    act_policy=None,
-    seq_parallel: bool = False,
+    **legacy,
 ):
-    # seq_parallel is accepted for launcher symmetry but decode has no
-    # sequence dim to shard: forward_decode drops the flag (model.py)
-    env = make_env(
-        cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy, seq_parallel)
+    plan, rest = _serve_plan(
+        cfg, args, plan, legacy, caller="make_decode_step",
+        n_positional=0 if batch_shapes is not None else 1,
     )
+    if batch_shapes is None:
+        (batch_shapes,) = rest
+    # seq_parallel is part of the plan for launcher symmetry but decode
+    # has no sequence dim to shard: forward_decode drops the flag (model.py)
+    env = plan.make_env(mesh_cfg)
     mat_group, mat_top_factory = make_mat_fns(
-        spec_tree, mesh_cfg, round_tos, dtype, placed=weight_stationary
+        spec_tree, mesh_cfg, plan.weight_policies(), plan.compute_dtype,
+        placed=weight_stationary,
     )
 
     def step(storage, caches, batch):
@@ -273,9 +317,7 @@ def make_decode_step(
     else:
         pspecs = tree_partition_specs(spec_tree, mesh_cfg)
     bspecs = batch_pspecs(batch_shapes, mesh_cfg, shard_batch)
-    cspecs = cache_pspecs(
-        cfg, mesh_cfg, shard_batch, int8_kv=bool((env_kw or {}).get("int8_kv"))
-    )
+    cspecs = cache_pspecs(cfg, mesh_cfg, shard_batch, int8_kv=plan.int8_kv)
     mo = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
     dp = _logits_dp(mesh_cfg, shard_batch)
     logits_spec = P(dp, None, mo)

@@ -1,7 +1,18 @@
 """Data-parallel CNN train step with per-layer ADT compression — the
 paper's exact setting (host master weights, per-batch compressed sends,
-uncompressed gradient returns, per-layer AWP)."""
+uncompressed gradient returns, per-layer AWP).
+
+A :class:`~repro.plan.PrecisionPlan` (``cfg.num_groups`` weight entries —
+the CNN has no top-level group) drives the per-layer formats, the
+gradient reduce-scatter entry, and the activation policy (here a
+straight-through stage-boundary quantize: pure DP has no TP collective
+to compress). The step already takes a PRNG ``key`` (dropout), so
+stochastic rounding needs no signature change: the quantization keys are
+folded off the same argument.
+"""
 from __future__ import annotations
+
+import itertools
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +31,12 @@ from repro.dist.spec import (
 )
 from repro.models.cnn import CNNConfig, cnn_loss, topk_error
 from repro.optim.sgd import SGDConfig, sgd_update
+from repro.plan import PrecisionPlan, policy_uses_rng
+from repro.train.step import resolve_plan
 from repro.transport import policy_for
 from repro.transport import transport as _T
+
+_LEGACY_CNN_KW = ("round_tos", "act_policy")
 
 
 def _act_quant_fn(act_policy):
@@ -53,17 +68,49 @@ def cnn_to_storage(params, spec_tree, mesh_cfg: MeshCfg):
     )
 
 
-def _mat(storage, spec_tree, mesh_cfg, groups, round_tos):
-    """Materialize every layer with its own AWP format (per-layer mode)."""
-    policies = {name: policy_for(round_tos[g]) for name, g in groups.items()}
+def _mat(storage, spec_tree, mesh_cfg, groups, policies, rng=None):
+    """Materialize every layer with its own AWP format (per-layer mode).
+
+    ``rng``: stochastic-rounding key — each layer leaf gets a distinct
+    fold (the CNN stacks nothing, so per-layer noise is independent,
+    matching the paper's per-layer setting)."""
+    by_name = {name: policies[g] for name, g in groups.items()}
+    fold = itertools.count()
     out = {}
     for name, leafs in storage["layers"].items():
-        pol = policies[name]
+        pol = by_name[name]
+        use_key = rng is not None and policy_uses_rng(pol)
         out[name] = {
-            k: materialize_leaf(v, spec_tree["layers"][name][k], mesh_cfg, pol)
+            k: materialize_leaf(
+                v, spec_tree["layers"][name][k], mesh_cfg, pol,
+                key=(
+                    jax.random.fold_in(rng, next(fold)) if use_key else None
+                ),
+            )
             for k, v in leafs.items()
         }
     return out
+
+
+def _cnn_plan(cfg, groups_info, args, plan, legacy, *, caller, n_rest):
+    _, num_groups = groups_info
+    round_tos = None
+    rest = args
+    if len(args) == n_rest + 1:
+        round_tos, rest = args[0], args[1:]
+    elif len(args) != n_rest:
+        raise TypeError(f"{caller}: unexpected positional args {args}")
+    for k in list(legacy):
+        if legacy[k] is None:
+            legacy.pop(k)
+    unknown = set(legacy) - set(_LEGACY_CNN_KW)
+    if unknown:
+        raise TypeError(f"{caller}: unknown kwargs {sorted(unknown)}")
+    plan = resolve_plan(
+        cfg, plan=plan, round_tos=round_tos, legacy=legacy,
+        caller=caller, num_groups=num_groups,
+    )
+    return plan, rest
 
 
 def make_cnn_train_step(
@@ -72,20 +119,42 @@ def make_cnn_train_step(
     mesh,
     spec_tree,
     groups_info,
-    round_tos: tuple[int, ...],
-    opt_cfg: SGDConfig,
-    batch_shapes: dict,
-    *,
-    act_policy=None,
+    *args,
+    plan: PrecisionPlan | None = None,
+    opt_cfg: SGDConfig | None = None,
+    batch_shapes: dict | None = None,
+    **legacy,
 ):
+    """Returns jit-able ``step(storage, momentum, batch, lr, key)``.
+
+    Preferred: ``make_cnn_train_step(cfg, mesh_cfg, mesh, spec_tree,
+    groups_info, opt_cfg, batch_shapes, plan=plan)`` — the plan has
+    ``num_groups`` weight entries (per layer/block). Legacy
+    ``(round_tos, opt_cfg, batch_shapes, act_policy=)`` is shimmed."""
+    n_rest = 2 - (opt_cfg is not None) - (batch_shapes is not None)
+    plan, rest = _cnn_plan(
+        cfg, groups_info, args, plan, legacy,
+        caller="make_cnn_train_step", n_rest=n_rest,
+    )
+    rest = list(rest)
+    if opt_cfg is None:
+        opt_cfg = rest.pop(0)
+    if batch_shapes is None:
+        batch_shapes = rest.pop(0)
     groups, num_groups = groups_info
-    assert len(round_tos) == num_groups
+    policies = plan.weight_policies()
+    needs_rng = plan.needs_rng
     dp = mesh_cfg.fsdp_axes[0] if mesh_cfg.dshards > 1 else None
-    aq = _act_quant_fn(act_policy)
+    aq = _act_quant_fn(plan.activations)
 
     def step(storage, momentum, batch, lr, key):
+        # independent streams: dropout rides `key` as before, stochastic
+        # rounding a folded-off branch (so enabling it never perturbs
+        # the dropout pattern of an existing run)
+        rngq = jax.random.fold_in(key, 0xAD7) if needs_rng else None
+
         def loss_fn(st):
-            layers = _mat(st, spec_tree, mesh_cfg, groups, round_tos)
+            layers = _mat(st, spec_tree, mesh_cfg, groups, policies, rngq)
             return cnn_loss(
                 layers, batch["images"], batch["labels"], cfg,
                 train=True, key=key, act_quant=aq,
@@ -141,11 +210,25 @@ def make_cnn_train_step(
     return jax.jit(sharded, donate_argnums=(0, 1))
 
 
-def make_cnn_eval(cfg, mesh_cfg, mesh, spec_tree, groups_info, round_tos):
+def make_cnn_eval(
+    cfg, mesh_cfg, mesh, spec_tree, groups_info, *args,
+    plan: PrecisionPlan | None = None, **legacy,
+):
+    plan, _ = _cnn_plan(
+        cfg, groups_info, args, plan, legacy,
+        caller="make_cnn_eval", n_rest=0,
+    )
     groups, _ = groups_info
+    # evaluation is deterministic: stochastic forward rounding falls back
+    # to nearest (same kept bytes, no PRNG dependence)
+    policies = tuple(
+        pol if pol.mode != "stochastic"
+        else policy_for(pol, mode="nearest")
+        for pol in plan.weight_policies()
+    )
 
     def evaluate(storage, images, labels):
-        layers = _mat(storage, spec_tree, mesh_cfg, groups, round_tos)
+        layers = _mat(storage, spec_tree, mesh_cfg, groups, policies)
         return topk_error(layers, images, labels, cfg, k=5)
 
     if mesh is None:

@@ -4,6 +4,13 @@
 (8→16→24→32 bits), so at most ``3 × num_groups`` recompiles happen over a
 whole run — each logged, amortized to ~0 exactly as in the paper where
 AWP's reconfiguration also happens outside the accelerator graph.
+
+A :class:`~repro.plan.PrecisionPlan` is the preferred way to drive the
+loop: its schedule source selects between the static oracle and AWP
+(with the controller hyper-parameters folded in), and its per-entry
+:meth:`~repro.plan.PrecisionPlan.wire_table` becomes the wire log — the
+plan is the unit of cost accounting. The legacy ``policy=`` strings
+("awp" / "baseline" / "oracle:<rt>") keep working.
 """
 from __future__ import annotations
 
@@ -14,6 +21,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core.awp import AWPConfig, AWPController
+from repro.plan import PrecisionPlan
 from repro.transport import CompressionPolicy
 
 
@@ -25,6 +33,8 @@ class StepRecord:
     wire_bytes: int
     recompiled: bool
     wall_s: float
+    # per-traffic-class split (plan-driven runs; None for legacy policies)
+    wire_by_entry: dict | None = None
 
 
 class Trainer:
@@ -32,8 +42,14 @@ class Trainer:
 
     step_builder(round_tos) -> step_fn(storage, opt, batch, lr, *extra)
         returning (storage, opt, metrics with 'loss' and 'group_norms_sq').
-    policy: "awp" (Algorithm 1), "oracle:<rt>" (fixed format), "baseline"
-        (fp32 — the paper's 32-bit FP baseline).
+        Plan-driven callers typically close over the plan:
+        ``lambda rts: make_train_step(..., plan=plan.with_round_tos(rts))``.
+    plan: drive schedule + accounting from a PrecisionPlan (overrides
+        ``policy`` / ``awp_config``): schedule "awp" runs Algorithm 1
+        with the plan's threshold/interval/initial bits, "static" pins
+        the plan's own formats (the paper's oracle; rt=4 = baseline).
+    policy (legacy): "awp" (Algorithm 1), "oracle:<rt>" (fixed format),
+        "baseline" (fp32 — the paper's 32-bit FP baseline).
     """
 
     def __init__(
@@ -41,6 +57,7 @@ class Trainer:
         step_builder: Callable,
         num_groups: int,
         *,
+        plan: PrecisionPlan | None = None,
         policy: str = "awp",
         awp_config: AWPConfig | None = None,
         dist_elems_per_group: list[int] | None = None,
@@ -48,6 +65,12 @@ class Trainer:
     ):
         self.step_builder = step_builder
         self.num_groups = num_groups
+        self.plan = plan.broadcast(num_groups) if plan is not None else None
+        if self.plan is not None:
+            policy = (
+                "awp" if self.plan.schedule.source == "awp" else "plan"
+            )
+            awp_config = self.plan.awp_config() or awp_config
         self.policy = policy
         self.controller = AWPController(num_groups, awp_config)
         self._cache: dict[tuple[int, ...], Callable] = {}
@@ -59,6 +82,8 @@ class Trainer:
     def current_round_tos(self) -> tuple[int, ...]:
         if self.policy == "baseline":
             return (4,) * self.num_groups
+        if self.policy == "plan":
+            return self.plan.round_tos
         if self.policy.startswith("oracle:"):
             return (int(self.policy.split(":")[1]),) * self.num_groups
         return self.controller.round_to
@@ -68,7 +93,19 @@ class Trainer:
             self._cache[round_tos] = self.step_builder(round_tos)
         return self._cache[round_tos]
 
+    def wire_entries(self, round_tos) -> dict | None:
+        """Per-traffic-class wire bytes of one step at these formats
+        (plan-driven runs only — the plan is the accounting unit)."""
+        if self.plan is None:
+            return None
+        return self.plan.with_round_tos(round_tos).wire_table(
+            self.dist_elems, self.gather_n
+        )
+
     def wire_bytes(self, round_tos) -> int:
+        table = self.wire_entries(round_tos)
+        if table is not None:
+            return table["total"]
         total = 0
         for g, rt in enumerate(round_tos):
             pol = CompressionPolicy(round_to=rt)
@@ -91,14 +128,19 @@ class Trainer:
         if self.policy == "awp":
             norms = np.asarray(metrics["group_norms_sq"])
             self.controller.update(norms)
+        entries = self.wire_entries(rts)
         self.records.append(
             StepRecord(
                 step=len(self.records),
                 loss=loss,
                 round_tos=rts,
-                wire_bytes=self.wire_bytes(rts),
+                wire_bytes=(
+                    entries["total"] if entries is not None
+                    else self.wire_bytes(rts)
+                ),
                 recompiled=recompiled,
                 wall_s=time.time() - t0,
+                wire_by_entry=entries,
             )
         )
         return storage, opt_state, metrics
@@ -113,7 +155,7 @@ class Trainer:
         base_wire = sum(
             self.wire_bytes((4,) * self.num_groups) for _ in self.records
         )
-        return {
+        out = {
             "steps": len(self.records),
             "final_loss": self.records[-1].loss if self.records else None,
             "recompiles": sum(r.recompiled for r in self.records),
@@ -122,3 +164,11 @@ class Trainer:
             "wire_reduction": 1 - total_wire / base_wire if base_wire else 0.0,
             "bits_history": self.bits_history,
         }
+        if self.plan is not None:
+            by_entry: dict[str, int] = {}
+            for r in self.records:
+                for k, v in (r.wire_by_entry or {}).items():
+                    if k != "total":
+                        by_entry[k] = by_entry.get(k, 0) + v
+            out["wire_by_entry"] = by_entry
+        return out

@@ -1,16 +1,29 @@
 """Distributed train step: shard_map(grad(forward)) with ADT weight gathers.
 
-The step is built *per precision configuration* (`round_tos`): the wire
+The step is built *per* :class:`~repro.plan.PrecisionPlan`: the wire
 format of every weight gather is static inside the compiled program, and
-the AWP controller swaps compiled steps when formats change (DESIGN.md §2).
+the AWP controller swaps compiled steps when the plan's weight formats
+change (DESIGN.md §2). The plan's ``weights`` tuple has
+``cfg.num_groups + 1`` entries; the last entry covers the top-level
+weights (embedding / head / projectors).
 
-round_tos has cfg.num_groups + 1 entries; the last entry covers the
-top-level weights (embedding / head / projectors).
+``plan.needs_rng`` (stochastic rounding anywhere on the weight/grad
+path) changes the step signature to
+``step(storage, momentum, batch, lr, key)``: the key is folded per
+materialization site and reaches the backward gradient pack through the
+transport's ``all_gather`` VJP. Within a scanned layer group all
+repetitions share one noise realization per step (the scan body is one
+traced materialization site); keys differ across steps, groups, leaves
+and fwd/bwd directions.
+
+The legacy ``(round_tos, opt_cfg, batch_shapes, grad_round_to=,
+act_policy=, seq_parallel=, env_kw=, dtype=, accum_steps=)`` signature
+still works for one release and emits a ``DeprecationWarning`` pointing
+at ``plan=``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
+import itertools
 
 import jax
 import jax.numpy as jnp
@@ -27,33 +40,47 @@ from repro.dist.spec import (
     materialize_placed_leaf,
     tree_partition_specs,
 )
-from repro.models.env import Env
+from repro.plan import PrecisionPlan, policy_uses_rng
 from repro.models import model as M
 from repro.optim.sgd import SGDConfig, sgd_update
 from repro.transport import policy_for
 
-
-def make_env(cfg: ModelConfig, mesh_cfg: MeshCfg, dtype=jnp.float32, **kw) -> Env:
-    act = kw.pop("act_policy", None)
-    return Env(
-        model_axis=mesh_cfg.model_axis if mesh_cfg.tp > 1 else None,
-        fsdp_axes=mesh_cfg.fsdp_axes if mesh_cfg.dshards > 1 else None,
-        tp=mesh_cfg.tp,
-        dtype=dtype,
-        act_policy=None if act is None else policy_for(act),
-        **kw,
-    )
+_LEGACY_TRAIN_KW = (
+    "round_tos", "grad_round_to", "act_policy", "seq_parallel", "env_kw",
+    "dtype", "accum_steps",
+)
 
 
-def merge_env_kw(env_kw: dict | None, act_policy, seq_parallel: bool = False):
-    """Activation policy / seq-parallel flag -> Env kwargs (explicit args
-    win over env_kw)."""
-    kw = dict(env_kw or {})
-    if act_policy is not None:
-        kw["act_policy"] = act_policy
-    if seq_parallel:
-        kw["seq_parallel"] = True
-    return kw
+def resolve_plan(
+    cfg: ModelConfig,
+    *,
+    plan: PrecisionPlan | None,
+    round_tos=None,
+    legacy: dict | None = None,
+    caller: str = "step factory",
+    num_groups: int | None = None,
+) -> PrecisionPlan:
+    """One dispatch point for the plan= / legacy-kwarg split shared by
+    the train, serve and cnn step factories."""
+    legacy = dict(legacy or {})
+    if plan is not None:
+        if round_tos is not None or legacy:
+            raise TypeError(
+                f"{caller}: pass either plan= or the legacy "
+                f"round_tos/{sorted(legacy)} arguments, not both"
+            )
+        if not isinstance(plan, PrecisionPlan):
+            raise TypeError(f"{caller}: plan must be a PrecisionPlan")
+    else:
+        if round_tos is None:
+            round_tos = legacy.pop("round_tos", None)
+        if round_tos is None:
+            raise TypeError(f"{caller}: needs plan= (or legacy round_tos)")
+        plan = PrecisionPlan.from_legacy(
+            round_tos, caller=caller, **legacy
+        )
+    n = num_groups if num_groups is not None else cfg.num_groups + 1
+    return plan.broadcast(n)
 
 
 def check_seq_parallel(batch_shapes: dict, mesh_cfg: MeshCfg):
@@ -78,7 +105,7 @@ def _dp_axes(mesh_cfg: MeshCfg):
 
 def make_mat_fns(
     spec_tree, mesh_cfg: MeshCfg, round_tos, dtype=jnp.float32,
-    grad_round_to: int | None = None, placed: bool = False,
+    grad_round_to: int | None = None, placed: bool = False, rng=None,
 ):
     """(mat_group, mat_top_factory) shared by train and serve steps.
 
@@ -86,12 +113,18 @@ def make_mat_fns(
     bf16 beyond-paper+serving); the fp32 master stays in storage.
     Per-group wire behaviour is bundled into a
     :class:`~repro.transport.CompressionPolicy` (``round_tos`` entries may
-    be ints or ready-made policies). ``grad_round_to < 4`` compresses the
-    backward reduce-scatter too (beyond-paper); the ``None`` default
-    keeps each ready-made policy's own grad format (ints get 4).
-    ``placed=True`` consumes pre-gathered weights (see serve.place:
-    weight-stationary decode)."""
+    be ints or ready-made policies — a plan passes
+    ``plan.weight_policies()``). ``placed=True`` consumes pre-gathered
+    weights (see serve.place: weight-stationary decode). ``rng`` is the
+    stochastic-rounding key: each materialization site of a policy that
+    needs one gets a distinct ``fold_in``."""
     policies = tuple(policy_for(rt, grad_round_to) for rt in round_tos)
+    fold = itertools.count()
+
+    def _key_for(pol):
+        if rng is None or not policy_uses_rng(pol):
+            return None
+        return jax.random.fold_in(rng, next(fold))
 
     def _cast(x):
         return x.astype(dtype) if x.dtype == jnp.float32 else x
@@ -99,7 +132,9 @@ def make_mat_fns(
     def _mat(x, s, pol):
         if placed:
             return _cast(materialize_placed_leaf(x, s, mesh_cfg))
-        return _cast(materialize_leaf(x, s, mesh_cfg, pol))
+        return _cast(
+            materialize_leaf(x, s, mesh_cfg, pol, key=_key_for(pol))
+        )
 
     def mat_group(g, key, storage):
         specs = spec_tree["groups"][g][key]
@@ -213,43 +248,64 @@ def make_train_step(
     mesh_cfg: MeshCfg,
     mesh,
     spec_tree,
-    round_tos: tuple[int, ...],
-    opt_cfg: SGDConfig,
-    batch_shapes: dict,
-    *,
-    dtype=jnp.float32,
+    *args,
+    plan: PrecisionPlan | None = None,
+    opt_cfg: SGDConfig | None = None,
+    batch_shapes: dict | None = None,
     aux_coef: float = 1e-2,
-    env_kw: dict | None = None,
-    grad_round_to: int | None = None,
-    accum_steps: int = 1,
-    act_policy=None,
-    seq_parallel: bool = False,
+    **legacy,
 ):
-    """Returns jit-able ``step(storage, momentum, batch, lr) -> (storage',
-    momentum', metrics)``. metrics: loss, token_count, group norms (for AWP).
+    """Returns jit-able ``step(storage, momentum, batch, lr[, key]) ->
+    (storage', momentum', metrics)``. metrics: loss, token_count, group
+    norms (for AWP). The trailing ``key`` argument exists exactly when
+    ``plan.needs_rng`` (stochastic rounding on the weight/grad path).
 
-    §Perf levers: ``dtype=bf16`` (compute/activations), ``grad_round_to<4``
-    (compressed gradient reduce-scatter), ``accum_steps>1`` (gradient
-    accumulation over batch-dim microbatches — divides activation memory),
-    ``act_policy`` (activation CompressionPolicy: TP-axis psums and
-    sequence collectives ride packed planes fwd AND bwd),
-    ``seq_parallel`` (norms/residuals on 1/tp sequence shards; every block
-    boundary becomes the transport's seq_gather/seq_scatter pair instead
-    of the enter/exit psums — requires seq % tp == 0).
+    Preferred call::
+
+        make_train_step(cfg, mesh_cfg, mesh, spec_tree, opt_cfg,
+                        batch_shapes, plan=plan)
+
+    The plan owns every precision + layout lever: per-group weight
+    formats, the gradient reduce-scatter entry, the activation /
+    seq-boundary policies, compute dtype, ``accum_steps``, ``chunks``
+    and ``seq_parallel``. Legacy ``round_tos`` calls are shimmed with a
+    ``DeprecationWarning``.
     """
-    assert len(round_tos) == cfg.num_groups + 1
-    env = make_env(
-        cfg, mesh_cfg, dtype, **merge_env_kw(env_kw, act_policy, seq_parallel)
+    round_tos = None
+    if len(args) == 3:
+        round_tos, opt_cfg, batch_shapes = args
+    elif len(args) == 2:
+        opt_cfg, batch_shapes = args
+    elif args:
+        raise TypeError(f"make_train_step: unexpected positional args {args}")
+    for k in _LEGACY_TRAIN_KW:
+        if k in legacy and legacy[k] is None:
+            legacy.pop(k)
+    unknown = set(legacy) - set(_LEGACY_TRAIN_KW)
+    if unknown:
+        raise TypeError(f"make_train_step: unknown kwargs {sorted(unknown)}")
+    if opt_cfg is None or batch_shapes is None:
+        raise TypeError("make_train_step: opt_cfg and batch_shapes required")
+    plan = resolve_plan(
+        cfg, plan=plan, round_tos=round_tos, legacy=legacy,
+        caller="make_train_step",
     )
+
+    env = plan.make_env(mesh_cfg)
     if env.seq_parallel and mesh_cfg.tp > 1:
         check_seq_parallel(batch_shapes, mesh_cfg)
+    dtype = plan.compute_dtype
+    accum_steps = plan.accum_steps
+    policies = plan.weight_policies()
+    needs_rng = plan.needs_rng
     dp = _dp_axes(mesh_cfg) if mesh_cfg.dshards > 1 else None
-    mat_group, mat_top_factory = make_mat_fns(
-        spec_tree, mesh_cfg, round_tos, dtype, grad_round_to=grad_round_to
-    )
     wd_mask = build_wd_mask(spec_tree)
 
-    def grad_one(storage, batch, total):
+    def grad_one(storage, batch, total, rng):
+        mat_group, mat_top_factory = make_mat_fns(
+            spec_tree, mesh_cfg, policies, dtype, rng=rng
+        )
+
         def loss_fn(st):
             loss_sum, metrics = M.forward_loss(
                 st, batch, cfg, env,
@@ -263,7 +319,7 @@ def make_train_step(
 
         return jax.value_and_grad(loss_fn, has_aux=True)(storage)
 
-    def step(storage, momentum, batch, lr):
+    def _step(storage, momentum, batch, lr, rng):
         # one count pass is avoided by normalising with the static token
         # count (all labels valid in our pipelines); per-microbatch valid
         # counts still feed the reported loss.
@@ -274,7 +330,7 @@ def make_train_step(
         total = jnp.asarray(local_tokens * max(mesh_cfg.dshards, 1), jnp.float32)
 
         if accum_steps == 1:
-            (loss, metrics), grads = grad_one(storage, batch, total)
+            (loss, metrics), grads = grad_one(storage, batch, total, rng)
         else:
             micro = jax.tree_util.tree_map(
                 lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps)
@@ -284,7 +340,7 @@ def make_train_step(
 
             def body(carry, mb):
                 acc, loss_acc, cnt_acc = carry
-                (l, m), g = grad_one(storage, mb, total)
+                (l, m), g = grad_one(storage, mb, total, rng)
                 acc = jax.tree_util.tree_map(jnp.add, acc, g)
                 return (acc, loss_acc + l, cnt_acc + m["token_count"]), None
 
@@ -316,16 +372,26 @@ def make_train_step(
         }
         return new_storage, new_momentum, out_metrics
 
+    if needs_rng:
+        def step(storage, momentum, batch, lr, key):
+            return _step(storage, momentum, batch, lr, key)
+    else:
+        def step(storage, momentum, batch, lr):
+            return _step(storage, momentum, batch, lr, None)
+
     if mesh is None:  # single-device path (tests, CNN repro)
         return jax.jit(step, donate_argnums=(0, 1))
 
     pspecs = tree_partition_specs(spec_tree, mesh_cfg)
     bspecs = batch_pspecs(batch_shapes, mesh_cfg, shard_batch=True)
     metrics_specs = {"loss": P(), "token_count": P(), "group_norms_sq": P(None)}
+    in_specs = (pspecs, pspecs, bspecs, P())
+    if needs_rng:
+        in_specs = in_specs + (P(None),)
     sharded = shard_map(
         step,
         mesh=mesh,
-        in_specs=(pspecs, pspecs, bspecs, P()),
+        in_specs=in_specs,
         out_specs=(pspecs, pspecs, metrics_specs),
     )
     return jax.jit(sharded, donate_argnums=(0, 1))

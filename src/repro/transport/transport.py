@@ -53,6 +53,7 @@ from typing import Hashable, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.kernels import ref
@@ -151,22 +152,25 @@ def unpack_planes(planes: jnp.ndarray, *, impl: str = "auto") -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _packed_all_gather(x, axis_names, round_to, mode, impl, axis: int):
+def _packed_all_gather(x, axis_names, round_to, mode, impl, axis: int,
+                       key=None):
     """Compressed all-gather of an arbitrary-rank array along ``axis``.
 
     Dtype-preserving: non-fp32 inputs (bf16 activations) are cast to fp32
     — exactly — before packing and the unpacked result is cast back.
+    ``key`` feeds stochastic rounding (required iff mode="stochastic").
     """
     axis = axis % x.ndim  # planes prepend a dim: negatives must resolve first
     out_dtype = x.dtype
     xf = x.astype(jnp.float32)
-    planes = pack_planes(xf, round_to, mode=mode, impl=impl)
+    planes = pack_planes(xf, round_to, mode=mode, impl=impl, key=key)
     # planes prepend the plane dim, so the data axis shifts by one
     planes_g = lax.all_gather(planes, axis_names, axis=axis + 1, tiled=True)
     return unpack_planes(planes_g, impl=impl).astype(out_dtype)
 
 
-def _packed_reduce_scatter(g, axis_names, round_to, mode, impl, axis: int):
+def _packed_reduce_scatter(g, axis_names, round_to, mode, impl, axis: int,
+                           key=None):
     """Compressed reduce-scatter of an arbitrary-rank array along ``axis``.
 
     The scatter dim is split into per-peer plane blocks *here* — call
@@ -187,7 +191,7 @@ def _packed_reduce_scatter(g, axis_names, round_to, mode, impl, axis: int):
     out_dtype = g.dtype
     gm = jnp.moveaxis(g.astype(jnp.float32), axis, 0)
     gm = gm.reshape((size, length // size) + gm.shape[1:])
-    planes = pack_planes(gm, round_to, mode=mode, impl=impl)
+    planes = pack_planes(gm, round_to, mode=mode, impl=impl, key=key)
     # (round_to, size, loc, ...): exchange the `size` dim; after the
     # all_to_all the exchanged dim stays `size` (= one block per peer).
     planes_x = lax.all_to_all(
@@ -198,7 +202,8 @@ def _packed_reduce_scatter(g, axis_names, round_to, mode, impl, axis: int):
     return jnp.moveaxis(out, 0, axis).astype(out_dtype)
 
 
-def _all_gather_impl(w, axis_names, policy: CompressionPolicy, axis: int):
+def _all_gather_impl(w, axis_names, policy: CompressionPolicy, axis: int,
+                     key=None):
     if not policy.compresses:
         return lax.all_gather(w, axis_names, axis=axis, tiled=True)
     if (
@@ -207,13 +212,14 @@ def _all_gather_impl(w, axis_names, policy: CompressionPolicy, axis: int):
         and w.ndim == 1
         and w.shape[0] % policy.chunks == 0
     ):
-        return _chunked_all_gather(w, axis_names, policy)
+        return _chunked_all_gather(w, axis_names, policy, key)
     return _packed_all_gather(
-        w, axis_names, policy.round_to, policy.mode, policy.impl, axis
+        w, axis_names, policy.round_to, policy.mode, policy.impl, axis,
+        key=key,
     )
 
 
-def _chunked_all_gather(w, axis_names, policy: CompressionPolicy):
+def _chunked_all_gather(w, axis_names, policy: CompressionPolicy, key=None):
     """Double-buffered gather: independent per-block plane pipelines,
     re-interleaved to match the unchunked layout exactly."""
     n_chunks = policy.chunks
@@ -222,7 +228,8 @@ def _chunked_all_gather(w, axis_names, policy: CompressionPolicy):
     for c in range(n_chunks):
         piece = lax.slice_in_dim(w, c * loc, (c + 1) * loc)
         planes = pack_planes(
-            piece, policy.round_to, mode=policy.mode, impl=policy.impl
+            piece, policy.round_to, mode=policy.mode, impl=policy.impl,
+            key=None if key is None else jax.random.fold_in(key, c),
         )
         planes_g = lax.all_gather(planes, axis_names, axis=1, tiled=True)
         gathered.append(unpack_planes(planes_g, impl=policy.impl))
@@ -233,14 +240,15 @@ def _chunked_all_gather(w, axis_names, policy: CompressionPolicy):
     return jnp.transpose(stacked, (1, 0, 2)).reshape(-1)
 
 
-def _reduce_scatter_impl(g, axis_names, policy: CompressionPolicy, axis: int):
+def _reduce_scatter_impl(g, axis_names, policy: CompressionPolicy, axis: int,
+                         key=None):
     if not policy.compresses_grads:
         return lax.psum_scatter(
             g, axis_names, scatter_dimension=axis, tiled=True
         )
     return _packed_reduce_scatter(
         g, axis_names, policy.grad_round_to, policy.grad_mode, policy.impl,
-        axis,
+        axis, key=key,
     )
 
 
@@ -294,12 +302,27 @@ def _all_reduce_impl(
 
 
 def _quantize_impl(w, policy: CompressionPolicy, key=None):
-    if not policy.compresses and policy.mode == "truncate":
+    if not policy.compresses:
+        # rt=4 keeps every byte: rounding is a no-op regardless of mode
         return w
     planes = pack_planes(
         w, policy.round_to, mode=policy.mode, impl=policy.impl, key=key
     )
     return unpack_planes(planes, impl=policy.impl)
+
+
+def _key_cotangent(key):
+    """Cotangent for an (integer) PRNG-key primal in a custom VJP: the
+    zero of jax's float0 — integer inputs carry no tangent."""
+    if key is None:
+        return None
+    return np.zeros(np.shape(key), jax.dtypes.float0)
+
+
+# fold id of the backward (cotangent) pack. Deliberately outside the
+# forward chunked gather's per-chunk fold range (0..chunks-1) so forward
+# and backward stochastic-rounding noise never share a stream.
+_BWD_FOLD = 0x62776421
 
 
 # ---------------------------------------------------------------------------
@@ -313,6 +336,7 @@ def all_gather(
     axis_names: AxisNames,
     policy: CompressionPolicy,
     axis: int = 0,
+    key=None,
 ) -> jnp.ndarray:
     """Compressed all-gather with a reduce-scatter VJP.
 
@@ -321,16 +345,26 @@ def all_gather(
     ``policy.grad_round_to`` (4 = uncompressed, paper-faithful). The
     format itself is not differentiated — straight-through, like the
     paper's fp32 master-weight update.
+
+    ``key`` is the stochastic-rounding PRNG key (a primal input so it
+    can reach the backward pack: the forward uses it as-is — folded per
+    chunk when chunked — and the cotangent reduce-scatter packs with a
+    dedicated fold outside the chunk range). Required exactly when a
+    used direction has ``mode="stochastic"``.
     """
-    return _all_gather_impl(w_local, axis_names, policy, axis)
+    return _all_gather_impl(w_local, axis_names, policy, axis, key)
 
 
-def _ag_fwd(w_local, axis_names, policy, axis):
-    return _all_gather_impl(w_local, axis_names, policy, axis), None
+def _ag_fwd(w_local, axis_names, policy, axis, key):
+    return _all_gather_impl(w_local, axis_names, policy, axis, key), key
 
 
-def _ag_bwd(axis_names, policy, axis, _, g):
-    return (_reduce_scatter_impl(g, axis_names, policy, axis),)
+def _ag_bwd(axis_names, policy, axis, key, g):
+    gkey = None if key is None else jax.random.fold_in(key, _BWD_FOLD)
+    return (
+        _reduce_scatter_impl(g, axis_names, policy, axis, key=gkey),
+        _key_cotangent(key),
+    )
 
 
 all_gather.defvjp(_ag_fwd, _ag_bwd)
@@ -341,6 +375,7 @@ def reduce_scatter(
     axis_names: AxisNames,
     policy: CompressionPolicy,
     axis: int = 0,
+    key=None,
 ) -> jnp.ndarray:
     """Compressed reduce-scatter along ``axis`` (default 0: the flat
     gradient path, ``(S,)`` -> ``(S_loc,)``).
@@ -350,8 +385,9 @@ def reduce_scatter(
     to per-peer plane blocks handled inside the transport. Wire format is
     ``policy.grad_round_to`` bytes; rounding defaults to *nearest* (not
     the paper's truncation) because gradient sums are bias-sensitive.
+    ``grad_mode="stochastic"`` needs ``key``.
     """
-    return _reduce_scatter_impl(g, axis_names, policy, axis)
+    return _reduce_scatter_impl(g, axis_names, policy, axis, key=key)
 
 
 # -- activation path (TP axis) ----------------------------------------------
@@ -444,17 +480,18 @@ def all_reduce(
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def quantize(w: jnp.ndarray, policy: CompressionPolicy) -> jnp.ndarray:
-    """Format truncation (pack∘unpack) with a straight-through VJP."""
-    return _quantize_impl(w, policy)
+def quantize(w: jnp.ndarray, policy: CompressionPolicy, key=None) -> jnp.ndarray:
+    """Format truncation (pack∘unpack) with a straight-through VJP.
+    ``key`` feeds stochastic rounding (trivial-mesh materialization)."""
+    return _quantize_impl(w, policy, key)
 
 
-def _q_fwd(w, policy):
-    return _quantize_impl(w, policy), None
+def _q_fwd(w, policy, key):
+    return _quantize_impl(w, policy, key), key
 
 
-def _q_bwd(policy, _, g):
-    return (g,)
+def _q_bwd(policy, key, g):
+    return (g, _key_cotangent(key))
 
 
 quantize.defvjp(_q_fwd, _q_bwd)
@@ -487,11 +524,13 @@ class Transport:
             axis_names = tuple(axis_names)
         self.axis_names = axis_names
 
-    def all_gather(self, w, policy, *, axis: int = 0):
-        return all_gather(w, self.axis_names, policy_for(policy), axis)
+    def all_gather(self, w, policy, *, axis: int = 0, key=None):
+        return all_gather(w, self.axis_names, policy_for(policy), axis, key)
 
-    def reduce_scatter(self, g, policy, *, axis: int = 0):
-        return reduce_scatter(g, self.axis_names, policy_for(policy), axis)
+    def reduce_scatter(self, g, policy, *, axis: int = 0, key=None):
+        return reduce_scatter(
+            g, self.axis_names, policy_for(policy), axis, key
+        )
 
     def seq_gather(self, x, policy, *, axis: int = 1):
         return seq_gather(x, self.axis_names, policy_for(policy), axis)
@@ -505,8 +544,8 @@ class Transport:
             use_grad_format=use_grad_format,
         )
 
-    def quantize(self, w, policy):
-        return quantize(w, policy_for(policy))
+    def quantize(self, w, policy, *, key=None):
+        return quantize(w, policy_for(policy), key)
 
     def axis_size(self) -> int:
         return axis_size(self.axis_names)

@@ -24,9 +24,16 @@ from repro.dist.spec import MeshCfg, SINGLE, build_spec_tree, tree_to_storage
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.models.init import init_params
 from repro.optim.sgd import SGDConfig, init_momentum
+from repro.plan import PrecisionPlan
 from repro.serve.step import global_cache_shapes, make_decode_step, make_prefill_step
 from repro.train.step import make_train_step
 from repro.transport import CompressionPolicy
+
+
+def _plan(nrt, rt=4, act_policy=None):
+    p = PrecisionPlan.build(nrt, round_to=rt)
+    import dataclasses
+    return dataclasses.replace(p, activations=act_policy)
 from repro.configs.base import InputShape
 from repro.configs.shapes import input_specs
 
@@ -57,7 +64,7 @@ def run_arch(arch, mesh_cfg, mesh, *, atol_loss=2e-4):
     spec1 = build_spec_tree(params1, metas, SINGLE)
     storage1 = tree_to_storage(params1, spec1, SINGLE)
     step1 = make_train_step(
-        cfg, SINGLE, None, spec1, (4,) * nrt, opt, batch_shapes
+        cfg, SINGLE, None, spec1, opt, batch_shapes, plan=_plan(nrt)
     )
     mom1 = init_momentum(storage1)
     s1, m1, met1 = step1(storage1, mom1, batch, 0.05)
@@ -66,7 +73,7 @@ def run_arch(arch, mesh_cfg, mesh, *, atol_loss=2e-4):
     spec = build_spec_tree(params, metas, mesh_cfg)
     storage = tree_to_storage(params, spec, mesh_cfg)
     step = make_train_step(
-        cfg, mesh_cfg, mesh, spec, (4,) * nrt, opt, batch_shapes
+        cfg, mesh_cfg, mesh, spec, opt, batch_shapes, plan=_plan(nrt)
     )
     mom = init_momentum(storage)
     s4, m4, met4 = step(storage, mom, batch, 0.05)
@@ -86,7 +93,7 @@ def run_arch(arch, mesh_cfg, mesh, *, atol_loss=2e-4):
     params_c, _ = init_params(cfg, jax.random.PRNGKey(0), tp=mesh_cfg.tp)
     storage_c = tree_to_storage(params_c, spec, mesh_cfg)
     step_c = make_train_step(
-        cfg, mesh_cfg, mesh, spec, (2,) * nrt, opt, batch_shapes
+        cfg, mesh_cfg, mesh, spec, opt, batch_shapes, plan=_plan(nrt, rt=2)
     )
     sc, mc, metc = step_c(storage_c, init_momentum(storage_c), batch, 0.05)
     lc = float(metc["loss"])
@@ -113,14 +120,16 @@ def run_serve(arch, mesh_cfg, mesh):
     spec1 = build_spec_tree(params1, metas, SINGLE)
     st1 = tree_to_storage(params1, spec1, SINGLE)
     pre1 = make_prefill_step(
-        cfg, SINGLE, None, spec1, (4,) * nrt, batch_shapes, cache_capacity=S + 2
+        cfg, SINGLE, None, spec1, batch_shapes, plan=_plan(nrt),
+        cache_capacity=S + 2,
     )
     logits1, caches1 = pre1(st1, batch)
 
     spec = build_spec_tree(params, metas, mesh_cfg)
     st = tree_to_storage(params, spec, mesh_cfg)
     pre = make_prefill_step(
-        cfg, mesh_cfg, mesh, spec, (4,) * nrt, batch_shapes, cache_capacity=S + 2
+        cfg, mesh_cfg, mesh, spec, batch_shapes, plan=_plan(nrt),
+        cache_capacity=S + 2,
     )
     logits, caches = pre(st, batch)
     np.testing.assert_allclose(
@@ -133,8 +142,10 @@ def run_serve(arch, mesh_cfg, mesh):
         "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
         "pos": jax.ShapeDtypeStruct((), jnp.int32),
     }
-    dstep1 = make_decode_step(cfg, SINGLE, None, spec1, (4,) * nrt, dec_shapes)
-    dstep = make_decode_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, dec_shapes)
+    dstep1 = make_decode_step(cfg, SINGLE, None, spec1, dec_shapes,
+                              plan=_plan(nrt))
+    dstep = make_decode_step(cfg, mesh_cfg, mesh, spec, dec_shapes,
+                             plan=_plan(nrt))
     tok = {"tokens": jnp.ones((B, 1), jnp.int32), "pos": jnp.asarray(S, jnp.int32)}
     dl1, _ = dstep1(st1, caches1, tok)
     dl, _ = dstep(st, caches, tok)
@@ -161,16 +172,16 @@ def run_act_compression(arch, mesh_cfg, mesh):
     params1, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
     spec1 = build_spec_tree(params1, metas, SINGLE)
     st1 = tree_to_storage(params1, spec1, SINGLE)
-    step1 = make_train_step(cfg, SINGLE, None, spec1, (4,) * nrt, opt,
-                            batch_shapes)
+    step1 = make_train_step(cfg, SINGLE, None, spec1, opt, batch_shapes,
+                            plan=_plan(nrt))
     _, _, met1 = step1(st1, init_momentum(st1), batch, 0.05)
     l1 = float(met1["loss"])
 
     params, _ = init_params(cfg, jax.random.PRNGKey(0), tp=mesh_cfg.tp)
     spec = build_spec_tree(params, metas, mesh_cfg)
     st = tree_to_storage(params, spec, mesh_cfg)
-    step = make_train_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, opt,
-                           batch_shapes, act_policy=act2)
+    step = make_train_step(cfg, mesh_cfg, mesh, spec, opt, batch_shapes,
+                           plan=_plan(nrt, act_policy=act2))
     st, mom, met = step(st, init_momentum(st), batch, 0.05)
     la = float(met["loss"])
     # every TP psum now carries rt=2 nearest-rounded planes: bf16-grade
@@ -183,8 +194,9 @@ def run_act_compression(arch, mesh_cfg, mesh):
     params_e, _ = init_params(cfg, jax.random.PRNGKey(0), tp=mesh_cfg.tp)
     st_e = tree_to_storage(params_e, spec, mesh_cfg)
     step4 = make_train_step(
-        cfg, mesh_cfg, mesh, spec, (4,) * nrt, opt, batch_shapes,
-        act_policy=CompressionPolicy(round_to=4, grad_round_to=4),
+        cfg, mesh_cfg, mesh, spec, opt, batch_shapes,
+        plan=_plan(nrt, act_policy=CompressionPolicy(round_to=4,
+                                                     grad_round_to=4)),
     )
     _, _, met4 = step4(st_e, init_momentum(st_e), batch, 0.05)
     assert abs(float(met4["loss"]) - l1) < 2e-4, (l1, float(met4["loss"]))
@@ -195,13 +207,14 @@ def run_act_compression(arch, mesh_cfg, mesh):
     st1 = tree_to_storage(params1s, spec1, SINGLE)
     sbatch = {"tokens": batch["tokens"][:, :16]}
     sshapes = {"tokens": jax.ShapeDtypeStruct((B, 16), jnp.int32)}
-    pre1 = make_prefill_step(cfg, SINGLE, None, spec1, (4,) * nrt, sshapes,
-                             cache_capacity=18)
+    pre1 = make_prefill_step(cfg, SINGLE, None, spec1, sshapes,
+                             plan=_plan(nrt), cache_capacity=18)
     logits1, caches1 = pre1(st1, sbatch)
     params_s, _ = init_params(cfg, jax.random.PRNGKey(0), tp=mesh_cfg.tp)
     st_s = tree_to_storage(params_s, spec, mesh_cfg)
-    pre = make_prefill_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, sshapes,
-                            cache_capacity=18, act_policy=act2)
+    pre = make_prefill_step(cfg, mesh_cfg, mesh, spec, sshapes,
+                            plan=_plan(nrt, act_policy=act2),
+                            cache_capacity=18)
     logits, caches = pre(st_s, sbatch)
     v = cfg.vocab_size
     err = np.max(np.abs(np.asarray(logits1[..., :v]) - np.asarray(logits[..., :v])))
@@ -212,9 +225,10 @@ def run_act_compression(arch, mesh_cfg, mesh):
         "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
         "pos": jax.ShapeDtypeStruct((), jnp.int32),
     }
-    dstep1 = make_decode_step(cfg, SINGLE, None, spec1, (4,) * nrt, dshapes)
-    dstep = make_decode_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, dshapes,
-                             act_policy=act2)
+    dstep1 = make_decode_step(cfg, SINGLE, None, spec1, dshapes,
+                              plan=_plan(nrt))
+    dstep = make_decode_step(cfg, mesh_cfg, mesh, spec, dshapes,
+                             plan=_plan(nrt, act_policy=act2))
     tok = {"tokens": jnp.ones((B, 1), jnp.int32),
            "pos": jnp.asarray(16, jnp.int32)}
     dl1, _ = dstep1(st1, caches1, tok)

@@ -18,6 +18,7 @@ from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.models.init import init_params
 from repro.optim.sgd import SGDConfig, init_momentum
+from repro.plan import PrecisionPlan
 from repro.serve.step import (
     make_decode_step, make_place_step, make_prefill_step,
 )
@@ -49,8 +50,8 @@ def main():
                 init_params(cfg, jax.random.PRNGKey(0), tp=2)[0], spec, mesh_cfg
             )
             step = make_train_step(
-                cfg, mesh_cfg, mesh, spec, (4,) * nrt, opt, bshapes,
-                accum_steps=accum,
+                cfg, mesh_cfg, mesh, spec, opt, bshapes,
+                plan=PrecisionPlan.build(nrt, accum_steps=accum),
             )
             st, mom, m = step(st, init_momentum(st), batch, 0.05)
             _, _, m2 = step(st, mom, batch, 0.05)
@@ -64,8 +65,8 @@ def main():
             init_params(cfg, jax.random.PRNGKey(0), tp=2)[0], spec, mesh_cfg
         )
         step_cg = make_train_step(
-            cfg, mesh_cfg, mesh, spec, (2,) * nrt, opt, bshapes,
-            grad_round_to=2,
+            cfg, mesh_cfg, mesh, spec, opt, bshapes,
+            plan=PrecisionPlan.build(nrt, round_to=2, grad_round_to=2),
         )
         mom = init_momentum(st)
         ls = []
@@ -80,9 +81,9 @@ def main():
         params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=2)
         st = tree_to_storage(params, spec, mesh_cfg)
         pre = make_prefill_step(
-            cfg, mesh_cfg, mesh, spec, (4,) * nrt,
+            cfg, mesh_cfg, mesh, spec,
             {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)},
-            cache_capacity=S + 2,
+            plan=PrecisionPlan.build(nrt), cache_capacity=S + 2,
         )
         logits0, caches = pre(st, {"tokens": batch["tokens"]})
         dshapes = {
@@ -92,14 +93,16 @@ def main():
         tok = {"tokens": jnp.ones((B, 1), jnp.int32),
                "pos": jnp.asarray(S, jnp.int32)}
 
-        dstep = make_decode_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, dshapes)
+        dstep = make_decode_step(cfg, mesh_cfg, mesh, spec, dshapes,
+                                 plan=PrecisionPlan.build(nrt))
         want, _ = dstep(st, caches, tok)
 
-        place, _ = make_place_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt)
+        place, _ = make_place_step(cfg, mesh_cfg, mesh, spec,
+                                   plan=PrecisionPlan.build(nrt))
         placed = place(st)
         dstep_ws = make_decode_step(
-            cfg, mesh_cfg, mesh, spec, (4,) * nrt, dshapes,
-            weight_stationary=True,
+            cfg, mesh_cfg, mesh, spec, dshapes,
+            plan=PrecisionPlan.build(nrt), weight_stationary=True,
         )
         logits0b, caches_b = pre(st, {"tokens": batch["tokens"]})
         got, _ = dstep_ws(placed, caches_b, tok)
@@ -120,8 +123,8 @@ def main():
             )
 
         dstep_q = make_decode_step(
-            cfg, mesh_cfg, mesh, spec, (4,) * nrt, dshapes,
-            env_kw={"int8_kv": True},
+            cfg, mesh_cfg, mesh, spec, dshapes,
+            plan=PrecisionPlan.build(nrt, int8_kv=True),
         )
 
         def roll(step_fn, caches, n=6):

@@ -1,0 +1,289 @@
+"""Subprocess scenario: the PrecisionPlan drives train/serve/roofline
+end-to-end on an 8-device mesh.
+
+  * chunks>1: the plan-selected double-buffered weight gather is
+    BIT-exact vs chunks=1 (losses, norms and updated storage identical),
+    in train and prefill.
+  * grad_mode="stochastic": the plumbed PRNG key reaches the backward
+    gradient pack — training descends, same key reproduces bit-exactly,
+    different keys give different updates.
+  * CNN repro eval: stochastic vs nearest gradient rounding on the
+    paper's DP CNN setting — both descend to comparable loss/error.
+  * plan JSON file -> step factory round-trip (the launchers' --plan path).
+  * roofline per-plan-entry report: the compiled HLO's packed-plane
+    all-gather / all-to-all wire equals the plan's analytic weights /
+    gradients entries (the CompressionPolicy formulas).
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config, reduced
+from repro.dist.spec import (
+    MeshCfg, build_spec_tree, dist_elems_per_group, tree_to_storage,
+)
+from repro.launch.mesh import make_mesh_from_cfg
+from repro.models.init import init_params
+from repro.optim.sgd import SGDConfig, init_momentum
+from repro.plan import PrecisionPlan, pick_chunks
+from repro.roofline.hlo_cost import analyze_hlo, plan_wire_split
+from repro.serve.step import make_prefill_step
+from repro.train.step import make_train_step
+from repro.transport import CompressionPolicy
+
+MESH_CFG = MeshCfg(tp=2, dp=4)
+OPT = SGDConfig(lr=0.05, momentum=0.9, weight_decay=0.0)
+
+
+def _setup(cfg, mesh_cfg):
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=mesh_cfg.tp)
+    spec = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec, mesh_cfg)
+    return spec, storage
+
+
+def _batch(cfg, B, S, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+
+
+def run_chunked_bit_exact(mesh):
+    """chunks>1 (incl. the sweep-selected count) == chunks=1, bitwise."""
+    cfg = reduced(get_config("qwen3-1.7b"))
+    nrt = cfg.num_groups + 1
+    B, S = 8, 32
+    batch = _batch(cfg, B, S)
+    bsh = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+    spec, _ = _setup(cfg, MESH_CFG)
+
+    # sweep-selected chunk count for a representative shard (the
+    # ROADMAP's "pick block sizes from a roofline sweep")
+    elems = dist_elems_per_group(spec, MESH_CFG, nrt)
+    s_loc = max(elems) // max(MESH_CFG.dshards, 1)
+    auto = pick_chunks(s_loc, MESH_CFG.dshards, 2)
+    results = {}
+    for chunks in (1, 2, auto):
+        if chunks in results:
+            continue
+        plan = PrecisionPlan.build(nrt, round_to=2, chunks=chunks)
+        _, storage = _setup(cfg, MESH_CFG)
+        step = make_train_step(cfg, MESH_CFG, mesh, spec, OPT, bsh, plan=plan)
+        st, mom, met = step(storage, init_momentum(storage), batch, 0.05)
+        st2, _, met2 = step(st, mom, _batch(cfg, B, S, 1), 0.05)
+        results[chunks] = (
+            float(met["loss"]), float(met2["loss"]),
+            [np.asarray(x) for x in jax.tree_util.tree_leaves(st2)],
+        )
+    l1, l1b, leaves1 = results[1]
+    for chunks, (lc, lcb, leaves) in results.items():
+        assert lc == l1 and lcb == l1b, (chunks, lc, l1)
+        for a, b in zip(leaves, leaves1):
+            np.testing.assert_array_equal(a, b)
+    print(f"  chunked gather bit-exact (chunks 1 == 2 == auto({auto})) OK")
+
+    # prefill path too (serve weight gathers)
+    sb = {"tokens": bsh["tokens"]}
+    logits = {}
+    for chunks in (1, 4):
+        _, storage = _setup(cfg, MESH_CFG)
+        pre = make_prefill_step(
+            cfg, MESH_CFG, mesh, spec, sb,
+            plan=PrecisionPlan.build(nrt, round_to=2, chunks=chunks),
+            cache_capacity=S + 2,
+        )
+        lg, _ = pre(storage, {"tokens": batch["tokens"]})
+        logits[chunks] = np.asarray(lg)
+    np.testing.assert_array_equal(logits[1], logits[4])
+    print("  chunked prefill bit-exact OK")
+
+
+def run_stochastic_grads(mesh):
+    """grad_mode='stochastic' end-to-end: descends, reproducible per key."""
+    cfg = reduced(get_config("qwen3-1.7b"))
+    nrt = cfg.num_groups + 1
+    B, S = 8, 32
+    batch = _batch(cfg, B, S)
+    bsh = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+    spec, _ = _setup(cfg, MESH_CFG)
+    plan = PrecisionPlan.build(
+        nrt, round_to=2, grad_round_to=2, grad_mode="stochastic"
+    )
+    assert plan.needs_rng
+    step = make_train_step(cfg, MESH_CFG, mesh, spec, OPT, bsh, plan=plan)
+
+    _, st = _setup(cfg, MESH_CFG)
+    mom = init_momentum(st)
+    losses = []
+    for i in range(4):
+        st, mom, m = step(st, mom, batch, 0.05, jax.random.PRNGKey(i))
+        losses.append(float(m["loss"]))
+    assert all(np.isfinite(losses)), losses
+    assert losses[-1] < losses[0], losses
+
+    # same key -> bit-identical step; different key -> different update
+    def one(key):
+        _, st0 = _setup(cfg, MESH_CFG)
+        s, _, m = step(st0, init_momentum(st0), batch, 0.05, key)
+        return np.concatenate([
+            np.asarray(x).ravel() for x in jax.tree_util.tree_leaves(s)
+        ]), float(m["loss"])
+
+    va, la = one(jax.random.PRNGKey(7))
+    vb, lb = one(jax.random.PRNGKey(7))
+    vc, lc = one(jax.random.PRNGKey(8))
+    np.testing.assert_array_equal(va, vb)
+    assert np.any(va != vc), "different keys must give different updates"
+    # nearest twin stays close: stochastic rounding is noise around it
+    plan_n = PrecisionPlan.build(nrt, round_to=2, grad_round_to=2)
+    step_n = make_train_step(cfg, MESH_CFG, mesh, spec, OPT, bsh, plan=plan_n)
+    _, st0 = _setup(cfg, MESH_CFG)
+    _, _, mn = step_n(st0, init_momentum(st0), batch, 0.05)
+    assert abs(la - float(mn["loss"])) < 0.05 + 0.05 * abs(la)
+    print(f"  stochastic grads: descends {losses}, reproducible, "
+          f"keyed OK")
+
+
+def run_cnn_stochastic_vs_nearest(mesh_unused):
+    """Paper CNN repro: stochastic vs nearest gradient rounding both
+    train; the §V-style eval stays comparable (DP grad reduce-scatter)."""
+    from repro.data.pipeline import SyntheticImageNet
+    from repro.models.cnn import ALEXNET, init_cnn, reduced_cnn
+    from repro.train.cnn_step import (
+        build_cnn_spec_tree, cnn_to_storage, make_cnn_eval,
+        make_cnn_train_step,
+    )
+
+    cfg = reduced_cnn(ALEXNET, num_classes=10, in_hw=32)
+    data = SyntheticImageNet(num_classes=10, hw=32, noise=0.1)
+    mesh_cfg = MeshCfg(tp=1, dp=4, compress_min_size=256)
+    mesh = make_mesh_from_cfg(mesh_cfg)
+
+    def train(grad_mode, steps=20):
+        params, metas, gi = init_cnn(cfg, jax.random.PRNGKey(0))
+        spec = build_cnn_spec_tree(params, metas, mesh_cfg)
+        st = cnn_to_storage(params, spec, mesh_cfg)
+        _, ng = gi
+        plan = PrecisionPlan.build(
+            ng, round_to=2, grad_round_to=2, grad_mode=grad_mode,
+        )
+        with mesh:
+            step = make_cnn_train_step(
+                cfg, mesh_cfg, mesh, spec, gi,
+                SGDConfig(lr=0.05, momentum=0.9, weight_decay=5e-4), {},
+                plan=plan,
+            )
+            mom = init_momentum(st)
+            losses = []
+            for i in range(steps):
+                imgs, labels = data.batch(64, i)
+                st, mom, m = step(
+                    st, mom, {"images": imgs, "labels": labels}, 0.05,
+                    jax.random.PRNGKey(i),
+                )
+                losses.append(float(m["loss"]))
+            ev = make_cnn_eval(cfg, mesh_cfg, mesh, spec, gi, plan=plan)
+            imgs, labels = data.validation(128)
+            err = float(ev(st, imgs, labels))
+        return losses, err
+
+    ln, en = train("nearest")
+    ls, es = train("stochastic")
+    assert np.isfinite(ln).all() and np.isfinite(ls).all()
+    assert ln[-1] < ln[0] and ls[-1] < ls[0], (ln, ls)
+    assert abs(ls[-1] - ln[-1]) < 0.2 + 0.1 * abs(ln[-1]), (ln[-1], ls[-1])
+    assert abs(es - en) < 0.25, (en, es)
+    print(f"  CNN grad rounding: nearest loss {ln[-1]:.3f} err {en:.3f} | "
+          f"stochastic loss {ls[-1]:.3f} err {es:.3f} OK")
+
+
+def run_plan_json_drive(mesh):
+    """--plan path: JSON file -> factory -> training step (launcher route)."""
+    cfg = reduced(get_config("qwen3-1.7b"))
+    nrt = cfg.num_groups + 1
+    B, S = 8, 32
+    batch = _batch(cfg, B, S)
+    bsh = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+    spec, storage = _setup(cfg, MESH_CFG)
+    plan = PrecisionPlan.build(
+        1, round_to=2, grad_round_to=2, grad_mode="stochastic",
+        act_round_to=2, chunks=2, schedule="awp",
+    )
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "plan.json")
+        plan.to_file(path)
+        loaded = PrecisionPlan.from_file(path).broadcast(nrt)
+    step = make_train_step(cfg, MESH_CFG, mesh, spec, OPT, bsh, plan=loaded)
+    st, mom, m = step(storage, init_momentum(storage), batch, 0.05,
+                      jax.random.PRNGKey(0))
+    assert np.isfinite(float(m["loss"]))
+    print(f"  plan.json -> train step (awp/stochastic/chunked/act2) OK")
+
+
+def run_roofline_per_entry(mesh):
+    """Compiled-HLO plane wire == the plan's analytic weights/gradients
+    entries (the CompressionPolicy formulas): the plan is the unit of
+    cost accounting, and the measured and analytic sides agree."""
+    cfg = reduced(get_config("qwen3-1.7b"))
+    nrt = cfg.num_groups + 1
+    B, S = 8, 32
+    bsh = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    spec, storage = _setup(cfg, MESH_CFG)
+    plan = PrecisionPlan.build(nrt, round_to=2, grad_round_to=2)
+    step = make_train_step(cfg, MESH_CFG, mesh, spec, OPT, bsh, plan=plan)
+    mom = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), storage
+    )
+    batch = _batch(cfg, B, S)
+    with mesh:
+        compiled = step.lower(
+            storage, mom, batch, jax.ShapeDtypeStruct((), jnp.float32)
+        ).compile()
+    cost = analyze_hlo(compiled.as_text())
+    elems = dist_elems_per_group(spec, MESH_CFG, nrt)
+    split = plan_wire_split(
+        cost, plan, elems, MESH_CFG.dshards, training=True
+    )
+    # no activation policy: every packed plane belongs to the weight
+    # gathers (u8 all-gather) or the gradient reduce-scatters (u8
+    # all-to-all) — measured == analytic per entry
+    ag = cost.plane_wire.get("all-gather", 0)
+    a2a = cost.plane_wire.get("all-to-all", 0)
+    np.testing.assert_allclose(ag, split["weights"], rtol=1e-3)
+    np.testing.assert_allclose(a2a, split["gradients"], rtol=1e-3)
+    # no act policy and no remat on the reduced config: every plane byte
+    # is attributed, the residue is ~0
+    assert split["plane_residue"] <= max(
+        1e-3 * cost.plane_wire_total, 64
+    ), split
+    assert split["measured_plane_wire"] == round(cost.plane_wire_total)
+    print(f"  per-plan-entry roofline: weights {split['weights']/1e6:.2f}MB "
+          f"== plane-ag, gradients {split['gradients']/1e6:.2f}MB == "
+          f"plane-a2a OK")
+
+
+def main():
+    mesh = make_mesh_from_cfg(MESH_CFG)
+    with mesh:
+        run_chunked_bit_exact(mesh)
+        run_stochastic_grads(mesh)
+        run_plan_json_drive(mesh)
+        run_roofline_per_entry(mesh)
+    run_cnn_stochastic_vs_nearest(None)
+    print("scenario_plan OK")
+
+
+if __name__ == "__main__":
+    main()

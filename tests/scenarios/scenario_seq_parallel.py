@@ -30,12 +30,17 @@ from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.models.init import init_params
 from repro.optim.sgd import SGDConfig, init_momentum
+from repro.plan import PrecisionPlan
 from repro.serve.step import make_decode_step, make_prefill_step
 from repro.train.step import make_train_step
 from repro.transport import CompressionPolicy
 
 OPT = SGDConfig(lr=0.05, momentum=0.9, weight_decay=0.0)
 B, S = 8, 32
+
+
+def _plan(nrt, **kw):
+    return PrecisionPlan.build(nrt, **kw)
 
 
 def _batch(cfg, seed=0):
@@ -82,12 +87,13 @@ def run_train_equivalence(arch, mesh_cfg, mesh):
     spec = build_spec_tree(params, metas, mesh_cfg)
 
     st = tree_to_storage(params, spec, mesh_cfg)
-    step = make_train_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, OPT, bs)
+    step = make_train_step(cfg, mesh_cfg, mesh, spec, OPT, bs,
+                           plan=_plan(nrt))
     s_a, m_a, met_a = step(st, init_momentum(st), batch, 0.05)
 
     st2 = _fresh_storage(cfg, spec, mesh_cfg)
     step_sp = make_train_step(
-        cfg, mesh_cfg, mesh, spec, (4,) * nrt, OPT, bs, seq_parallel=True
+        cfg, mesh_cfg, mesh, spec, OPT, bs, plan=_plan(nrt, seq_parallel=True)
     )
     s_b, m_b, met_b = step_sp(st2, init_momentum(st2), batch, 0.05)
 
@@ -112,14 +118,17 @@ def run_compressed(cfg, spec, mesh_cfg, mesh):
     act2 = CompressionPolicy(round_to=2, grad_round_to=2, mode="nearest")
 
     st = _fresh_storage(cfg, spec, mesh_cfg)
-    step = make_train_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, OPT, bs)
+    step = make_train_step(cfg, mesh_cfg, mesh, spec, OPT, bs,
+                           plan=_plan(nrt))
     _, _, met_ref = step(st, init_momentum(st), batch, 0.05)
     l_ref = float(met_ref["loss"])
 
     st2 = _fresh_storage(cfg, spec, mesh_cfg)
+    plan_c = PrecisionPlan(
+        weights=_plan(nrt).weights, activations=act2, seq_parallel=True
+    )
     step_c = make_train_step(
-        cfg, mesh_cfg, mesh, spec, (4,) * nrt, OPT, bs,
-        seq_parallel=True, act_policy=act2,
+        cfg, mesh_cfg, mesh, spec, OPT, bs, plan=plan_c,
     )
     s_c, m_c, met_c = step_c(st2, init_momentum(st2), batch, 0.05)
     l_c = float(met_c["loss"])
@@ -142,12 +151,13 @@ def run_serve(cfg, spec, mesh_cfg, mesh):
     st = _fresh_storage(cfg, spec, mesh_cfg)
 
     pre = make_prefill_step(
-        cfg, mesh_cfg, mesh, spec, (4,) * nrt, bshapes, cache_capacity=Sp + 2
+        cfg, mesh_cfg, mesh, spec, bshapes, plan=_plan(nrt),
+        cache_capacity=Sp + 2,
     )
     lg_a, caches_a = pre(st, batch)
     pre_sp = make_prefill_step(
-        cfg, mesh_cfg, mesh, spec, (4,) * nrt, bshapes,
-        cache_capacity=Sp + 2, seq_parallel=True,
+        cfg, mesh_cfg, mesh, spec, bshapes,
+        plan=_plan(nrt, seq_parallel=True), cache_capacity=Sp + 2,
     )
     lg_b, caches_b = pre_sp(st, batch)
     v = cfg.vocab_size
@@ -168,10 +178,12 @@ def run_serve(cfg, spec, mesh_cfg, mesh):
     }
     tok = {"tokens": jnp.ones((B, 1), jnp.int32),
            "pos": jnp.asarray(Sp, jnp.int32)}
-    dstep = make_decode_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, dshapes)
+    dstep = make_decode_step(cfg, mesh_cfg, mesh, spec, dshapes,
+                             plan=_plan(nrt))
     dl_a, _ = dstep(st, caches_a, tok)
     dstep_sp = make_decode_step(
-        cfg, mesh_cfg, mesh, spec, (4,) * nrt, dshapes, seq_parallel=True
+        cfg, mesh_cfg, mesh, spec, dshapes,
+        plan=_plan(nrt, seq_parallel=True),
     )
     dl_b, _ = dstep_sp(st, caches_b, tok)
     np.testing.assert_allclose(
@@ -198,11 +210,12 @@ def run_ep_moe(mesh_cfg, mesh):
     spec = build_spec_tree(params, metas, mesh_cfg)
 
     st = tree_to_storage(params, spec, mesh_cfg)
-    step = make_train_step(cfg, mesh_cfg, mesh, spec, (4,) * nrt, OPT, bs)
+    step = make_train_step(cfg, mesh_cfg, mesh, spec, OPT, bs,
+                           plan=_plan(nrt))
     _, _, met_a = step(st, init_momentum(st), batch, 0.05)
     st2 = _fresh_storage(cfg, spec, mesh_cfg)
     step_sp = make_train_step(
-        cfg, mesh_cfg, mesh, spec, (4,) * nrt, OPT, bs, seq_parallel=True
+        cfg, mesh_cfg, mesh, spec, OPT, bs, plan=_plan(nrt, seq_parallel=True)
     )
     s_b, m_b, met_b = step_sp(st2, init_momentum(st2), batch, 0.05)
     la, lb = float(met_a["loss"]), float(met_b["loss"])
@@ -218,7 +231,8 @@ def run_seq_divisibility_guard(cfg, spec, mesh_cfg, mesh):
     nrt = cfg.num_groups + 1
     try:
         make_train_step(
-            cfg, mesh_cfg, mesh, spec, (4,) * nrt, OPT, bad, seq_parallel=True
+            cfg, mesh_cfg, mesh, spec, OPT, bad,
+            plan=_plan(nrt, seq_parallel=True),
         )
     except ValueError as e:
         assert "seq_parallel" in str(e)

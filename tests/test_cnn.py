@@ -9,7 +9,9 @@ from repro.dist.spec import MeshCfg
 from repro.models.cnn import (
     ALEXNET, RESNET34, VGG_A, cnn_forward, init_cnn, reduced_cnn,
 )
+from repro.transport import CompressionPolicy
 from repro.optim.sgd import SGDConfig, init_momentum
+from repro.plan import PrecisionPlan
 from repro.train.cnn_step import (
     build_cnn_spec_tree, cnn_to_storage, make_cnn_eval, make_cnn_train_step,
 )
@@ -41,7 +43,8 @@ def test_train_step_descends(rt):
     _, ng = gi
     opt = SGDConfig(lr=0.05, momentum=0.9, weight_decay=5e-4)
     step = make_cnn_train_step(
-        cfg, MESH, None, spec, gi, (rt,) * ng, opt, {}
+        cfg, MESH, None, spec, gi, opt, {},
+        plan=PrecisionPlan.build(ng, round_to=rt),
     )
     mom = init_momentum(storage)
     losses = []
@@ -64,8 +67,6 @@ def test_train_step_with_act_policy_descends():
     """Activation group in the DP CNN setting: stage-boundary
     straight-through truncation — training still descends and stays
     close to the uncompressed trajectory over a few steps."""
-    from repro.transport import CompressionPolicy
-
     cfg = reduced_cnn(ALEXNET, num_classes=10, in_hw=32)
     data = SyntheticImageNet(num_classes=10, hw=32, noise=0.1)
     opt = SGDConfig(lr=0.05, momentum=0.9, weight_decay=5e-4)
@@ -75,9 +76,11 @@ def test_train_step_with_act_policy_descends():
         spec = build_cnn_spec_tree(params, metas, MESH)
         storage = cnn_to_storage(params, spec, MESH)
         _, ng = gi
+        plan = PrecisionPlan(
+            weights=(CompressionPolicy(),) * ng, activations=act_policy
+        )
         step = make_cnn_train_step(
-            cfg, MESH, None, spec, gi, (4,) * ng, opt, {},
-            act_policy=act_policy,
+            cfg, MESH, None, spec, gi, opt, {}, plan=plan,
         )
         mom = init_momentum(storage)
         losses = []
@@ -108,7 +111,8 @@ def test_eval_top5():
     spec = build_cnn_spec_tree(params, metas, MESH)
     storage = cnn_to_storage(params, spec, MESH)
     _, ng = gi
-    ev = make_cnn_eval(cfg, MESH, None, spec, gi, (4,) * ng)
+    ev = make_cnn_eval(cfg, MESH, None, spec, gi,
+                       plan=PrecisionPlan.build(ng))
     imgs, labels = data.validation(64)
     err = float(ev(storage, imgs, labels))
     assert 0.0 <= err <= 1.0

@@ -10,6 +10,7 @@ SCENARIOS = [
     "scenario_compressed_collectives.py",
     "scenario_dist_train.py",
     "scenario_perf_levers.py",
+    "scenario_plan.py",
     "scenario_seq_parallel.py",
     "scenario_transport.py",
 ]

@@ -1,0 +1,467 @@
+"""PrecisionPlan API: construction-time validation, JSON + checkpoint
+round-trips, the plan→Env constructor, per-entry wire accounting vs the
+CompressionPolicy formulas, the chunk sweep, and the one-release
+deprecation shim on every step factory."""
+import dataclasses
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import load_checkpoint, load_plan, save_checkpoint
+from repro.configs.registry import get_config, reduced
+from repro.core.awp import AWPConfig, AWPController
+from repro.dist.spec import (
+    SINGLE, MeshCfg, build_spec_tree, dist_elems_per_group, tree_to_storage,
+)
+from repro.models.init import init_params
+from repro.optim.sgd import SGDConfig, init_momentum
+from repro.plan import (
+    PrecisionPlan, Schedule, modeled_gather_time, pick_chunks, sweep_chunks,
+)
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.train.step import make_train_step
+from repro.transport import CompressionPolicy
+
+
+# ---------------------------------------------------------------------------
+# construction + validation
+# ---------------------------------------------------------------------------
+
+
+def test_defaults_are_paper_baseline():
+    p = PrecisionPlan()
+    assert p.round_tos == (4,)
+    assert not p.needs_rng
+    assert p.schedule.source == "static"
+    assert p.compute_dtype == jnp.float32
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(weights=()),                                   # no entries
+        dict(weights=({"round_to": 5},)),                   # bad round_to
+        dict(weights=({"round_to": 2, "mode": "floor"},)),  # bad mode
+        dict(chunks=0),                                     # chunks < 1
+        dict(chunks=1.5),                                   # non-int chunks
+        dict(dtype="fp16"),                                 # unknown dtype
+        dict(accum_steps=0),
+        dict(schedule={"source": "magic"}),                 # unknown schedule
+        dict(schedule={"source": "awp", "awp_interval": 0}),
+        dict(env_overrides={"int8_kv": True}),              # plan-owned knob
+        dict(activations={"round_to": 2, "mode": "stochastic"}),  # no PRNG path
+        dict(seq_boundary={"round_to": 2, "grad_mode": "stochastic",
+                           "grad_round_to": 2}),
+    ],
+)
+def test_invalid_plans_raise_at_construction(kw):
+    with pytest.raises((ValueError, TypeError)):
+        PrecisionPlan(**kw)
+
+
+def test_broadcast_and_with_round_tos():
+    p = PrecisionPlan.build(1, round_to=2).broadcast(5)
+    assert p.round_tos == (2,) * 5
+    assert p.with_round_tos((1, 2, 3, 4, 4)).round_tos == (1, 2, 3, 4, 4)
+    with pytest.raises(ValueError):
+        p.broadcast(3)  # 5 entries cannot become 3
+    # a 1-entry plan broadcasts through with_round_tos too
+    assert PrecisionPlan().with_round_tos((2, 2)).round_tos == (2, 2)
+
+
+def test_gradients_entry_folds_into_weight_policies():
+    p = PrecisionPlan.build(
+        2, round_to=2, grad_round_to=1, grad_mode="stochastic", chunks=4
+    )
+    for pol in p.weight_policies():
+        assert pol.round_to == 2
+        assert pol.grad_round_to == 1
+        assert pol.grad_mode == "stochastic"
+        assert pol.chunks == 4
+    assert p.needs_rng
+    # without a gradients entry the weight entries keep their own fields
+    q = PrecisionPlan(weights=(CompressionPolicy(round_to=2, grad_round_to=3),))
+    assert q.weight_policies()[0].grad_round_to == 3
+    assert not q.needs_rng
+
+
+def test_needs_rng_stable_under_awp_widening():
+    """The step signature must never flip when AWP swaps widths: a plan
+    with a stochastic mode configured needs a key at EVERY width (an
+    uncompressed stochastic policy simply ignores it)."""
+    p = PrecisionPlan.build(
+        2, round_to=2, mode="stochastic", schedule="awp"
+    )
+    assert p.needs_rng
+    assert p.with_round_tos((4, 4)).needs_rng  # widened to fp32: still keyed
+    g = PrecisionPlan.build(2, round_to=4, grad_round_to=2,
+                            grad_mode="stochastic")
+    assert g.needs_rng and g.with_round_tos((1, 1)).needs_rng
+    # and a fully deterministic plan never asks for one
+    assert not PrecisionPlan.build(2, round_to=2).with_round_tos((1, 1)).needs_rng
+
+
+def test_plan_wire_split_mixed_widths():
+    """plan_wire_split only subtracts the *compressing* groups from the
+    measured plane wire: an rt=4 group's gather is raw f32, not planes."""
+    from repro.roofline.hlo_cost import Cost, plan_wire_split
+
+    plan = PrecisionPlan(
+        weights=(CompressionPolicy(round_to=2, grad_round_to=2),
+                 CompressionPolicy(round_to=4)),
+    )
+    elems, n = [4096, 4096], 4
+    pols = plan.weight_policies()
+    plane_bytes = (pols[0].all_gather_wire_bytes(1024, n)
+                   + pols[0].reduce_scatter_wire_bytes(1024, n))
+    cost = Cost(wire={"all-gather": plane_bytes},
+                plane_wire={"all-gather": plane_bytes})
+    split = plan_wire_split(cost, plan, elems, n)
+    # all measured planes are attributed; nothing of the rt=4 group's
+    # analytic f32 bytes is subtracted, so the residue is exactly zero
+    assert split["plane_residue"] == 0
+    # the analytic table itself still counts the rt=4 group
+    assert split["weights"] > pols[0].all_gather_wire_bytes(1024, n)
+
+
+def test_seq_boundary_defaults_to_activations():
+    act = CompressionPolicy(round_to=2, grad_round_to=2, mode="nearest")
+    p = PrecisionPlan(activations=act)
+    assert p.seq_policy() == act
+    sb = CompressionPolicy(round_to=1, grad_round_to=1, mode="nearest")
+    assert PrecisionPlan(activations=act, seq_boundary=sb).seq_policy() == sb
+
+
+# ---------------------------------------------------------------------------
+# serialization
+# ---------------------------------------------------------------------------
+
+
+def test_json_roundtrip_exact():
+    p = PrecisionPlan.build(
+        3, round_to=2, mode="nearest", grad_round_to=2,
+        grad_mode="stochastic", act_round_to=2, seq_parallel=True,
+        chunks=2, dtype="bf16", int8_kv=True, accum_steps=2,
+        schedule="awp", awp_threshold=-1e-3, awp_interval=7,
+        env_overrides={"causal_skip": False},
+    )
+    assert PrecisionPlan.from_json(p.to_json()) == p
+    # and through a file
+    d = json.loads(p.to_json())
+    assert d["version"] == 1
+    assert len(d["weights"]) == 3
+
+
+def test_json_rejects_unknown_fields_and_versions():
+    with pytest.raises(ValueError):
+        PrecisionPlan.from_json_dict({"version": 9, "weights": [{}]})
+    with pytest.raises(ValueError):
+        PrecisionPlan.from_json_dict({"weights": [{}], "turbo": True})
+    with pytest.raises(ValueError):
+        PrecisionPlan.from_json_dict({"version": 1})  # no weights
+
+
+def test_plan_file_roundtrip(tmp_path):
+    p = PrecisionPlan.build(2, round_to=2, seq_parallel=True)
+    path = str(tmp_path / "plan.json")
+    p.to_file(path)
+    assert PrecisionPlan.from_file(path) == p
+
+
+# ---------------------------------------------------------------------------
+# plan -> Env (the deduped env constructor)
+# ---------------------------------------------------------------------------
+
+
+def test_make_env_from_plan():
+    act = CompressionPolicy(round_to=2, grad_round_to=2, mode="nearest")
+    p = PrecisionPlan(
+        weights=(CompressionPolicy(round_to=2),),
+        activations=act,
+        seq_parallel=True,
+        dtype="bf16",
+        int8_kv=True,
+        env_overrides={"causal_skip": False, "mlstm_chunk": 8},
+    )
+    mesh_cfg = MeshCfg(tp=2, dp=2)
+    env = p.make_env(mesh_cfg)
+    assert env.model_axis == "model" and env.fsdp_axes == ("data",)
+    assert env.tp == 2 and env.dtype == jnp.bfloat16
+    assert env.act_policy == act and env.seq_policy is None
+    assert env._seq_pol == act  # seq boundary rides the act policy
+    assert env.seq_parallel and env.int8_kv
+    assert not env.causal_skip and env.mlstm_chunk == 8
+    # trivial mesh: no axes, and seq_parallel can be overridden off
+    env1 = p.make_env(SINGLE, seq_parallel=False)
+    assert env1.model_axis is None and env1.fsdp_axes is None
+    assert not env1.seq_parallel
+
+
+# ---------------------------------------------------------------------------
+# per-entry wire accounting vs the policy formulas
+# ---------------------------------------------------------------------------
+
+
+def test_wire_table_matches_policy_formulas():
+    p = PrecisionPlan.build(2, round_to=2, grad_round_to=1)
+    elems = [4096, 1024]
+    n = 4
+    t = p.wire_table(elems, n)
+    pols = p.weight_policies()
+    assert t["weights"] == sum(
+        pol.all_gather_wire_bytes(e // n, n) for pol, e in zip(pols, elems)
+    )
+    assert t["gradients"] == sum(
+        pol.reduce_scatter_wire_bytes(e // n, n) for pol, e in zip(pols, elems)
+    )
+    assert t["host_device"] == 0
+    assert t["total"] == t["weights"] + t["gradients"]
+    # serving: no gradient entry
+    assert p.wire_table(elems, n, training=False)["gradients"] == 0
+    # single gather shard -> the paper's host->device staging model
+    t1 = p.wire_table(elems, 1)
+    assert t1["weights"] == 0 and t1["gradients"] == 0
+    assert t1["host_device"] == sum(
+        pol.host_device_bytes(e) for pol, e in zip(pols, elems)
+    )
+    # activation entries appear when the TP geometry is known
+    pa = dataclasses.replace(
+        p, activations=CompressionPolicy(round_to=2, grad_round_to=2)
+    )
+    ta = pa.wire_table(elems, n, tp=2, act_elems=512, act_collectives=3)
+    assert ta["activations"] == 3 * pa.activations.all_reduce_wire_bytes(512, 2)
+    ps = dataclasses.replace(pa, seq_parallel=True)
+    ts = ps.wire_table(elems, n, tp=2, act_elems=512, act_collectives=3)
+    assert ts["seq_boundary"] == 3 * ps.seq_policy().seq_pair_wire_bytes(512, 2)
+    assert ts["activations"] == 0
+
+
+def test_trainer_wire_log_per_entry():
+    from repro.train.loop import Trainer
+
+    p = PrecisionPlan.build(2, round_to=2, grad_round_to=2)
+    calls = []
+
+    def builder(rts):
+        def fake_step(storage, opt, batch, lr):
+            calls.append(rts)
+            return storage, opt, {
+                "loss": 1.0, "group_norms_sq": np.ones(2)
+            }
+        return fake_step
+
+    tr = Trainer(builder, 2, plan=p, dist_elems_per_group=[1024, 256],
+                 gather_axis_size=4)
+    assert tr.policy == "plan"  # static schedule pins the plan's formats
+    tr.run_step({}, {}, {}, 0.1)
+    rec = tr.records[-1]
+    assert rec.round_tos == (2, 2)
+    assert rec.wire_by_entry is not None
+    assert rec.wire_bytes == rec.wire_by_entry["total"]
+    assert rec.wire_by_entry == p.wire_table([1024, 256], 4)
+    s = tr.summary()
+    assert s["wire_by_entry"]["weights"] == rec.wire_by_entry["weights"]
+    # awp schedule wires the plan's controller hyper-parameters in
+    pa = PrecisionPlan.build(
+        2, schedule="awp", awp_threshold=-5e-4, awp_interval=3,
+    )
+    tra = Trainer(builder, 2, plan=pa)
+    assert tra.policy == "awp"
+    assert tra.controller.config.threshold == -5e-4
+    assert tra.controller.config.interval == 3
+
+
+# ---------------------------------------------------------------------------
+# chunk sweep
+# ---------------------------------------------------------------------------
+
+
+def test_chunk_sweep_picks_divisible_optimum():
+    table = sweep_chunks(1 << 20, 8, 2)
+    assert set(table) == {1, 2, 4, 8, 16}
+    best = pick_chunks(1 << 20, 8, 2)
+    assert table[best] == min(table.values())
+    # non-dividing candidates are excluded (silent-fallback trap)
+    assert set(sweep_chunks(6, 2, 2)) == {1, 2}
+    # degenerate gathers keep the unchunked pipeline
+    assert pick_chunks(0, 8) == 1
+    assert pick_chunks(1 << 20, 1) == 1
+    assert pick_chunks(7, 8) == 1  # prime shard: nothing divides
+    # the model is monotone in the obvious places: a chunked pipeline
+    # never models slower than 3x the unchunked one at these sizes
+    assert modeled_gather_time(1 << 20, 8, CompressionPolicy(round_to=2), best) \
+        <= 3 * modeled_gather_time(1 << 20, 8, CompressionPolicy(round_to=2), 1)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint round-trip: plan + AWP schedule state
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_persists_plan_and_awp(tmp_path):
+    storage = {"a": jnp.arange(8, dtype=jnp.float32)}
+    opt = {"m": jnp.zeros((8,))}
+    plan = PrecisionPlan.build(
+        3, round_to=2, grad_round_to=2, grad_mode="stochastic",
+        schedule="awp", awp_threshold=-1e-3, awp_interval=2,
+    )
+    awp = AWPController(3, plan.awp_config())
+    norms = np.array([1.0, 2.0, 3.0])
+    awp.update(norms**2)
+    awp.update((norms * 0.8) ** 2)
+    awp.update((norms * 0.6) ** 2)  # widen fires
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, storage, opt, awp, step=5, plan=plan)
+
+    got = load_plan(path)
+    assert got == plan
+    awp2 = AWPController(3, got.awp_config())
+    s2, o2, step = load_checkpoint(path, storage, opt, awp2)
+    assert step == 5
+    np.testing.assert_array_equal(awp2.state.bits, awp.state.bits)
+    assert awp2.history == awp.history
+    # the restored plan + AWP bits reproduce the exact wire formats
+    assert got.with_round_tos(awp2.state.round_to()).round_tos \
+        == awp.state.round_to()
+    # checkpoints without a plan stay loadable
+    save_checkpoint(str(tmp_path / "old"), storage, opt, None, step=1)
+    assert load_plan(str(tmp_path / "old")) is None
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim: legacy signatures still work, once, with a warning
+# ---------------------------------------------------------------------------
+
+
+def _tiny_lm():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec = build_spec_tree(params, metas, SINGLE)
+    storage = tree_to_storage(params, spec, SINGLE)
+    return cfg, spec, storage
+
+
+def test_legacy_train_signature_warns_and_matches_plan():
+    cfg, spec, storage = _tiny_lm()
+    nrt = cfg.num_groups + 1
+    B, S = 2, 16
+    rng = np.random.default_rng(0)
+    batch = {
+        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
+    }
+    bsh = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+    opt = SGDConfig(lr=0.05, momentum=0.9, weight_decay=0.0)
+    act2 = CompressionPolicy(round_to=2, grad_round_to=2, mode="nearest")
+
+    with pytest.warns(DeprecationWarning, match="plan="):
+        step_legacy = make_train_step(
+            cfg, SINGLE, None, spec, (2,) * nrt, opt, bsh,
+            grad_round_to=2, act_policy=act2,
+        )
+    s1, m1, met1 = step_legacy(storage, init_momentum(storage), batch, 0.05)
+
+    plan = PrecisionPlan(
+        weights=(CompressionPolicy(round_to=2),) * nrt,
+        gradients=CompressionPolicy(round_to=2),
+        activations=act2,
+    )
+    cfg2, spec2, storage2 = _tiny_lm()
+    step_plan = make_train_step(cfg, SINGLE, None, spec2, opt, bsh, plan=plan)
+    s2, m2, met2 = step_plan(storage2, init_momentum(storage2), batch, 0.05)
+    assert float(met1["loss"]) == float(met2["loss"])  # bit-identical
+
+    # mixing plan= with legacy kwargs is an error, not a silent merge
+    with pytest.raises(TypeError):
+        make_train_step(
+            cfg, SINGLE, None, spec, (2,) * nrt, opt, bsh, plan=plan
+        )
+
+
+def test_legacy_serve_signature_warns():
+    cfg, spec, storage = _tiny_lm()
+    nrt = cfg.num_groups + 1
+    B, S = 2, 8
+    bsh = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    with pytest.warns(DeprecationWarning, match="plan="):
+        pre = make_prefill_step(
+            cfg, SINGLE, None, spec, (4,) * nrt, bsh, cache_capacity=S + 1
+        )
+    logits, caches = pre(storage, {"tokens": jnp.ones((B, S), jnp.int32)})
+    dsh = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+           "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    with pytest.warns(DeprecationWarning, match="plan="):
+        dec = make_decode_step(
+            cfg, SINGLE, None, spec, (4,) * nrt, dsh,
+            env_kw={"int8_kv": False},
+        )
+    dl, _ = dec(storage, caches,
+                {"tokens": jnp.ones((B, 1), jnp.int32),
+                 "pos": jnp.asarray(S, jnp.int32)})
+    assert np.isfinite(np.asarray(dl)).all()
+
+
+def test_serve_rejects_stochastic_forward():
+    cfg, spec, _ = _tiny_lm()
+    nrt = cfg.num_groups + 1
+    bsh = {"tokens": jax.ShapeDtypeStruct((2, 8), jnp.int32)}
+    with pytest.raises(ValueError, match="stochastic"):
+        make_prefill_step(
+            cfg, SINGLE, None, spec, bsh,
+            plan=PrecisionPlan.build(nrt, round_to=2, mode="stochastic"),
+            cache_capacity=9,
+        )
+
+
+def test_legacy_cnn_signature_warns():
+    from repro.models.cnn import ALEXNET, init_cnn, reduced_cnn
+    from repro.train.cnn_step import (
+        build_cnn_spec_tree, cnn_to_storage, make_cnn_train_step,
+    )
+
+    ccfg = reduced_cnn(ALEXNET, num_classes=10, in_hw=32)
+    mesh = MeshCfg(tp=1, dp=1, compress_min_size=256)
+    p, m, gi = init_cnn(ccfg, jax.random.PRNGKey(0))
+    spec = build_cnn_spec_tree(p, m, mesh)
+    st = cnn_to_storage(p, spec, mesh)
+    _, ng = gi
+    opt = SGDConfig(lr=0.05, momentum=0.9, weight_decay=5e-4)
+    with pytest.warns(DeprecationWarning, match="plan="):
+        step = make_cnn_train_step(
+            ccfg, mesh, None, spec, gi, (2,) * ng, opt, {}
+        )
+    imgs = jnp.zeros((4, 32, 32, 3))
+    labels = jnp.zeros((4,), jnp.int32)
+    st, mom, met = step(st, init_momentum(st),
+                        {"images": imgs, "labels": labels}, 0.05,
+                        jax.random.PRNGKey(0))
+    assert np.isfinite(float(met["loss"]))
+
+
+# ---------------------------------------------------------------------------
+# stochastic rounding statistics (single device)
+# ---------------------------------------------------------------------------
+
+
+def test_stochastic_rounding_unbiased_vs_nearest():
+    from repro.transport import quantize
+
+    w = jnp.asarray(np.random.default_rng(0).normal(size=(256,)), jnp.float32)
+    pol_s = CompressionPolicy(round_to=2, mode="stochastic")
+    pol_n = CompressionPolicy(round_to=2, mode="nearest")
+    qs = np.stack([
+        np.asarray(quantize(w, pol_s, jax.random.PRNGKey(i)))
+        for i in range(64)
+    ])
+    # different keys -> different realizations; mean approaches w
+    assert np.any(qs[0] != qs[1])
+    ulp = np.abs(np.asarray(quantize(w, pol_n)) - np.asarray(w)).max() * 2 + 1e-12
+    assert np.abs(qs.mean(0) - np.asarray(w)).max() < ulp
+    # same key -> bit-identical (reproducible training)
+    np.testing.assert_array_equal(
+        qs[3], np.asarray(quantize(w, pol_s, jax.random.PRNGKey(3)))
+    )
