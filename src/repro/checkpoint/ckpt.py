@@ -76,6 +76,21 @@ def load_checkpoint(path: str, storage_like, opt_like,
     return storage, opt_state, meta["step"]
 
 
+def load_storage(path: str, storage_like):
+    """Weights-only restore for serving: the flattened ``(storage,
+    opt_state)`` order puts the storage leaves first, so inference-time
+    consumers can skip materializing (and immediately discarding) a
+    momentum tree the size of the model. Returns ``(storage, step)``."""
+    data = np.load(_npz_path(path), allow_pickle=False)
+    meta = json.loads(str(data["__meta__"]))
+    flat_like, treedef = jax.tree_util.tree_flatten(storage_like)
+    assert meta["num_arrays"] >= len(flat_like), "checkpoint structure mismatch"
+    flat = [data[f"a{i}"] for i in range(len(flat_like))]
+    for like, got in zip(flat_like, flat):
+        assert like.shape == got.shape, "checkpoint storage shape mismatch"
+    return jax.tree_util.tree_unflatten(treedef, flat), meta["step"]
+
+
 def load_plan(path: str) -> PrecisionPlan | None:
     """The PrecisionPlan persisted with the checkpoint (None for
     checkpoints written without one)."""

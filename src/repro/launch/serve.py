@@ -1,32 +1,150 @@
-"""Production serving launcher: ADT-compressed weight placement + batched
-prefill/decode with optional weight-stationary residency and int8 KV.
+"""Production serving launcher: continuous batching over the slotted
+KV cache (`repro.serve.engine`), with the pre-engine static one-shot
+path kept as the bit-exact reference (``--static`` / ``--check-static``).
 
 One :class:`~repro.plan.PrecisionPlan` drives the weight wire format,
-activation compression, sequence-parallel prefill, chunked gathers and
-the int8 KV cache: pass ``--plan plan.json`` or use the individual flags
-as plan-builder sugar.
+activation compression, sequence-parallel prefill, chunked gathers, the
+int8 KV cache AND the host<->device token staging (the plan's
+``host_device`` entry): pass ``--plan plan.json``. The individual
+precision flags are the pre-plan legacy sprawl — they still work as
+plan-builder sugar but emit a ``DeprecationWarning`` (and are ignored
+outright when ``--plan`` is set); the layout flags (``--int8-kv``,
+``--seq-parallel``, ``--chunks``, ``--weight-stationary``) stay
+first-class and override the loaded plan.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
-      --requests 8 --prompt-len 64 --gen 32 [--weight-stationary] [--int8-kv]
+      --prompt-lens 64,48,64,32 --gen 32 --max-slots 2 [--int8-kv] \
+      [--plan plan.json] [--check-static] [--ckpt ckpt.npz]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+import warnings
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint.ckpt import load_plan, load_storage
 from repro.configs.registry import ARCHS, get_config, reduced
 from repro.dist.spec import build_spec_tree, tree_to_storage
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.launch.train import _null, parse_mesh
 from repro.models.init import init_params
 from repro.plan import PrecisionPlan
-from repro.serve.step import (
-    make_decode_step, make_place_step, make_prefill_step,
-)
+from repro.serve.engine import Request, ServeEngine, generate_static
+
+_LEGACY_PRECISION_FLAGS = ("round_to", "act_round_to")
+
+
+def plan_from_args(args, nrt: int) -> PrecisionPlan:
+    """Serve-launcher plan resolution: ``--plan`` (or the checkpointed
+    plan) wins; legacy precision flags are deprecated sugar routed
+    through the same :meth:`PrecisionPlan.build` the train launcher
+    uses; layout flags override either source."""
+    legacy = {
+        k: getattr(args, k)
+        for k in _LEGACY_PRECISION_FLAGS
+        if getattr(args, k) is not None
+    }
+    plan = None
+    if args.plan:
+        plan = PrecisionPlan.from_file(args.plan).broadcast(nrt)
+    elif args.ckpt:
+        plan = load_plan(args.ckpt)
+        if plan is not None:
+            plan = plan.broadcast(nrt)
+        else:
+            warnings.warn(
+                f"checkpoint {args.ckpt} carries no PrecisionPlan "
+                "(pre-plan training run?): serving falls back to the "
+                "flag-built plan — pass --plan to pin the formats the "
+                "run actually used",
+                stacklevel=2,
+            )
+    if plan is not None:
+        if legacy:
+            warnings.warn(
+                f"--{'/--'.join(k.replace('_', '-') for k in legacy)} are "
+                "ignored when a plan is loaded; encode precision in the "
+                "plan JSON",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+    else:
+        if legacy:
+            warnings.warn(
+                "the individual precision flags are pre-plan legacy sugar; "
+                "prefer --plan plan.json (they build the same "
+                "PrecisionPlan)",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+        plan = PrecisionPlan.build(
+            nrt,
+            round_to=args.round_to if args.round_to is not None else 2,
+            act_round_to=(
+                args.act_round_to if args.act_round_to is not None else 4
+            ),
+        )
+    # layout flags stay first-class and override the loaded plan
+    overrides = {}
+    if args.seq_parallel:
+        overrides["seq_parallel"] = True
+    if args.int8_kv:
+        overrides["int8_kv"] = True
+    if args.chunks is not None:
+        overrides["chunks"] = args.chunks
+    if overrides:
+        plan = dataclasses.replace(plan, **overrides)
+    return plan
+
+
+def build_requests(args, cfg) -> list[Request]:
+    if args.prompt_lens:
+        lens = [int(s) for s in args.prompt_lens.split(",")]
+    else:
+        lens = [args.prompt_len] * args.requests
+    rng = np.random.default_rng(0)
+    return [
+        Request(
+            rid=i,
+            prompt=tuple(
+                int(t) for t in rng.integers(0, cfg.vocab_size, S)
+            ),
+            max_new_tokens=args.gen,
+        )
+        for i, S in enumerate(lens)
+    ]
+
+
+def run_static(cfg, mesh_cfg, mesh, spec_tree, storage, requests, plan,
+               window, image_features=None):
+    t0 = time.time()
+    if cfg.num_experts:
+        # MoE capacity dispatch ranks a whole batch's tokens per expert,
+        # so a *grouped* static prefill is not a valid comparison target
+        # for the engine's batch-of-1 prefills (see repro.serve.engine):
+        # reference MoE archs per request. Each call builds fresh step
+        # closures (one compile per request, not per distinct length) —
+        # acceptable for a reference path.
+        streams = {}
+        for r in requests:
+            streams.update(generate_static(
+                cfg, mesh_cfg, mesh, spec_tree, storage, [r], plan=plan,
+                window=window, image_features=image_features,
+            ))
+        kind = "per-request static"
+    else:
+        streams = generate_static(
+            cfg, mesh_cfg, mesh, spec_tree, storage, requests, plan=plan,
+            window=window, image_features=image_features,
+        )
+        kind = "static one-shot"
+    print(f"{kind} reference: {len(requests)} requests in "
+          f"{time.time()-t0:.2f}s (incl. compile)")
+    return streams
 
 
 def main():
@@ -36,23 +154,41 @@ def main():
     ap.add_argument("--mesh", default="1x1")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--prompt-lens", default="",
+                    help="comma-separated per-request prompt lengths "
+                         "(mixed-length continuous batching); overrides "
+                         "--requests/--prompt-len")
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="KV slots resident in the engine (default: "
+                         "min(4, requests))")
     ap.add_argument("--plan", default="",
-                    help="PrecisionPlan JSON (other precision flags are "
-                         "ignored when set)")
-    ap.add_argument("--round-to", type=int, default=2)
-    ap.add_argument("--act-round-to", type=int, default=4,
-                    help="activation wire format on the TP axis (<4 routes "
-                         "TP psums through packed planes)")
+                    help="PrecisionPlan JSON — the declarative source of "
+                         "truth incl. the host_device staging entry")
+    ap.add_argument("--ckpt", default="",
+                    help="restore served weights (+ plan, unless --plan "
+                         "overrides) from a training checkpoint")
+    # pre-plan legacy precision sprawl: deprecated plan-builder sugar
+    ap.add_argument("--round-to", type=int, default=None,
+                    help="(deprecated sugar) ADT weight wire format")
+    ap.add_argument("--act-round-to", type=int, default=None,
+                    help="(deprecated sugar) activation wire format on "
+                         "the TP axis")
+    # layout flags: first-class, override a loaded plan
     ap.add_argument("--seq-parallel", action="store_true",
                     help="sequence-parallel prefill activations (decode is "
                          "single-token and keeps the psum layout)")
-    ap.add_argument("--chunks", type=int, default=1,
+    ap.add_argument("--chunks", type=int, default=None,
                     help="weight-gather chunk count (double buffering)")
     ap.add_argument("--weight-stationary", action="store_true")
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--window", type=int, default=0,
                     help="sliding-window decode override (long-context)")
+    ap.add_argument("--static", action="store_true",
+                    help="run ONLY the static one-shot reference path")
+    ap.add_argument("--check-static", action="store_true",
+                    help="run both paths and assert bit-exact token "
+                         "streams (CI smoke)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -63,87 +199,93 @@ def main():
     mesh_cfg = parse_mesh(args.mesh)
     mesh = make_mesh_from_cfg(mesh_cfg)
 
-    B, S = args.requests, args.prompt_len
-    cap = S + args.gen
     params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=mesh_cfg.tp)
     spec_tree = build_spec_tree(params, metas, mesh_cfg)
     storage = tree_to_storage(params, spec_tree, mesh_cfg)
     nrt = cfg.num_groups + 1
-    if args.plan:
-        plan = PrecisionPlan.from_file(args.plan).broadcast(nrt)
-    else:
-        plan = PrecisionPlan.build(
-            nrt,
-            round_to=args.round_to,
-            act_round_to=args.act_round_to,
-            seq_parallel=args.seq_parallel,
-            chunks=args.chunks,
-            int8_kv=args.int8_kv,
-        )
+    plan = plan_from_args(args, nrt)
+    if args.ckpt:
+        storage, ckpt_step = load_storage(args.ckpt, storage)
+        print(f"restored weights from {args.ckpt} (train step {ckpt_step}, "
+              f"plan rts {plan.round_tos})")
 
-    rng = np.random.default_rng(0)
-    batch = {"tokens": jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
-    if cfg.num_image_tokens:
-        batch["image_features"] = jnp.asarray(
-            rng.normal(0, 1, (B, cfg.num_image_tokens, cfg.vision_dim)),
-            jnp.float32,
-        )
-    bshapes = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
-    dshapes = {
-        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
-        "pos": jax.ShapeDtypeStruct((), jnp.int32),
-    }
-    shard_batch = B >= mesh_cfg.dshards
+    requests = build_requests(args, cfg)
+    lens = [len(r.prompt) for r in requests]
     window = args.window or None
+    # windowed decode rings only when capacity <= window (the engine
+    # validates this): cap at the window so long prompts wrap instead of
+    # silently dropping writes past a too-small linear cache
+    cap = max(lens) + args.gen if window is None else min(
+        max(lens) + args.gen, window
+    )
+    slots = args.max_slots or min(4, len(requests))
+
+    image_features = None
+    if cfg.num_image_tokens:
+        # vision cross-attn archs serve via the static path only: image
+        # payloads are not token-stageable through the engine's boundary
+        if not args.static:
+            raise SystemExit(
+                f"{args.arch} has image inputs: serve it with --static "
+                "(the continuous-batching engine stages token payloads "
+                "only)"
+            )
+        frng = np.random.default_rng(0)
+        image_features = {
+            r.rid: frng.normal(
+                0, 1, (cfg.num_image_tokens, cfg.vision_dim)
+            ).astype(np.float32)
+            for r in requests
+        }
 
     ctx = mesh if mesh is not None else _null()
     with ctx:
-        prefill = make_prefill_step(
-            cfg, mesh_cfg, mesh, spec_tree, bshapes, plan=plan,
-            cache_capacity=cap, shard_batch=shard_batch,
-        )
-        decode = make_decode_step(
-            cfg, mesh_cfg, mesh, spec_tree, dshapes, plan=plan,
-            shard_batch=shard_batch, window_override=window,
+        static_streams = None
+        if args.static or args.check_static:
+            static_streams = run_static(
+                cfg, mesh_cfg, mesh, spec_tree, storage, requests, plan,
+                window, image_features,
+            )
+            if args.static:
+                for r in requests[:4]:
+                    print(f"  req{r.rid}: "
+                          f"{static_streams[r.rid][:16]}")
+                return
+
+        engine = ServeEngine(
+            cfg, mesh_cfg, mesh, spec_tree, storage, plan=plan,
+            max_slots=slots, cache_capacity=cap, window=window,
             weight_stationary=args.weight_stationary,
         )
-        weights = storage
-        if args.weight_stationary:
-            place, _ = make_place_step(
-                cfg, mesh_cfg, mesh, spec_tree, plan=plan
-            )
-            t0 = time.time()
-            weights = place(storage)
-            jax.block_until_ready(jax.tree_util.tree_leaves(weights)[0])
-            print(f"weight placement (ADT rts={plan.round_tos}): "
-                  f"{time.time()-t0:.2f}s one-time")
-
         t0 = time.time()
-        logits, caches = prefill(storage, batch)
-        tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], -1)[:, None]
-        t_pre = time.time() - t0
+        results = engine.run(requests)
+        wall = time.time() - t0
 
-        outs = [tok]
-        t0 = time.time()
-        for i in range(args.gen - 1):
-            lg, caches = decode(
-                weights, caches,
-                {"tokens": tok.astype(jnp.int32),
-                 "pos": jnp.asarray(S + i, jnp.int32)},
+    total_new = sum(len(r.tokens) for r in results.values())
+    summary = engine.wire_summary()
+    print(f"{cfg.name}: {len(requests)} requests, prompts {min(lens)}"
+          f"..{max(lens)}, +{args.gen} tokens, {slots} slots")
+    print(f"engine: {summary['steps']} steps "
+          f"({summary['decode_steps']} decode) in {wall:.2f}s "
+          f"({total_new/max(wall, 1e-9):.1f} tok/s incl. compile)")
+    print(f"host_device wire: {summary['host_device']} B staged at "
+          f"{summary['token_width']} B/token "
+          f"({4/summary['token_width']:.1f}x vs raw int32)")
+    for r in requests[:4]:
+        print(f"  req{r.rid}: {results[r.rid].tokens[:16]}")
+
+    if args.check_static:
+        bad = [
+            r.rid for r in requests
+            if results[r.rid].tokens != static_streams[r.rid]
+        ]
+        if bad:
+            raise SystemExit(
+                f"continuous vs static token streams DIVERGED for "
+                f"requests {bad}"
             )
-            tok = jnp.argmax(lg[:, 0, : cfg.vocab_size], -1)[:, None]
-            outs.append(tok)
-        jax.block_until_ready(tok)
-        t_dec = time.time() - t0
-
-    total = (args.gen) * B
-    print(f"{cfg.name}: {B} requests, prompt {S}, +{args.gen} tokens")
-    print(f"prefill {t_pre:.2f}s | decode {t_dec:.2f}s "
-          f"({total/max(t_dec,1e-9):.1f} tok/s incl. compile)")
-    gen = np.concatenate([np.asarray(t) for t in outs], axis=1)
-    for b in range(min(B, 3)):
-        print(f"  req{b}: {gen[b][:16].tolist()}")
+        print(f"check-static: {len(requests)} streams bit-exact vs the "
+              "static one-shot reference")
 
 
 if __name__ == "__main__":

@@ -87,13 +87,19 @@ def _quantize_kv(x):
     return q, scale
 
 
-def init_cache(batch: int, capacity: int, kv_heads: int, head_dim: int, dtype):
+def init_cache(batch: int, capacity: int, kv_heads: int, head_dim: int, dtype,
+               per_slot: bool = False):
+    """``per_slot=True`` gives the cache a ``(batch,)`` position vector —
+    the serve engine's slotted layout where every request sits at its own
+    sequence offset. Scalar ``pos`` (the default) keeps the historical
+    uniform-batch semantics byte-for-byte."""
+    pos = jnp.zeros((batch,) if per_slot else (), jnp.int32)
     if dtype == jnp.int8:
         z = jnp.zeros((batch, capacity, kv_heads, head_dim), jnp.int8)
         sc = jnp.zeros((batch, capacity, kv_heads), jnp.float32)
-        return QuantKVCache(z, z, sc, sc, jnp.zeros((), jnp.int32))
+        return QuantKVCache(z, z, sc, sc, pos)
     zeros = jnp.zeros((batch, capacity, kv_heads, head_dim), dtype)
-    return KVCache(zeros, zeros, jnp.zeros((), jnp.int32))
+    return KVCache(zeros, zeros, pos)
 
 
 # ---------------------------------------------------------------------------
@@ -204,19 +210,36 @@ def attend_decode(
     window: Optional[int],
 ) -> jnp.ndarray:
     """Single-token attention over the (already updated) cache; handles
-    both fp (KVCache) and int8 (QuantKVCache) layouts."""
+    both fp (KVCache) and int8 (QuantKVCache) layouts.
+
+    ``cache.pos`` may be a scalar (uniform batch — the historical path,
+    kept bit-for-bit) or a ``(B,)`` vector (per-slot positions from the
+    continuous-batching serve engine): the validity mask then becomes
+    per-request, so every slot attends exactly its own prefix."""
     B, _, Kv, G, hd = q.shape
     C = cache.capacity
     pos = cache.pos - 1  # absolute position of the current token
     slots = jnp.arange(C)
-    if ring:
-        # slot j currently holds absolute position: pos - ((pos - j) mod C)
-        slot_pos = pos - jnp.mod(pos - slots, C)
+    if jnp.ndim(pos):
+        pos_b = pos[:, None]  # (B, 1)
+        if ring:
+            slot_pos = pos_b - jnp.mod(pos_b - slots[None, :], C)
+        else:
+            slot_pos = jnp.broadcast_to(slots[None, :], (B, C))
+        valid = (slot_pos >= 0) & (slot_pos <= pos_b)
+        if window is not None:
+            valid &= (pos_b - slot_pos) < window
+        vmask = valid[:, None, None, :]  # (B, 1, 1, C)
     else:
-        slot_pos = slots
-    valid = (slot_pos >= 0) & (slot_pos <= pos)
-    if window is not None:
-        valid &= (pos - slot_pos) < window
+        if ring:
+            # slot j currently holds absolute position: pos - ((pos-j) mod C)
+            slot_pos = pos - jnp.mod(pos - slots, C)
+        else:
+            slot_pos = slots
+        valid = (slot_pos >= 0) & (slot_pos <= pos)
+        if window is not None:
+            valid &= (pos - slot_pos) < window
+        vmask = valid[None, None, None, :]
     scale = hd**-0.5
     qh = q[:, 0]  # B,Kv,G,hd
     quant = isinstance(cache, QuantKVCache)
@@ -226,7 +249,7 @@ def attend_decode(
     if quant:
         # scores were computed against int8 codes: apply per-slot scales
         s = s * cache.k_scale.transpose(0, 2, 1)[:, :, None, :]
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(vmask, s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     if quant:
         p = p * cache.v_scale.transpose(0, 2, 1)[:, :, None, :]
@@ -294,9 +317,13 @@ def mha(
             k = head_rms_norm(k, w["k_norm"], cfg.norm_eps)
 
     if not is_cross:
-        q_pos = pos_offset + jnp.arange(S)
+        if jnp.ndim(pos_offset):  # (B,) per-slot offsets (serve engine)
+            q_pos = pos_offset[:, None] + jnp.arange(S)
+            k_pos = pos_offset[:, None] + jnp.arange(k.shape[1])
+        else:
+            q_pos = pos_offset + jnp.arange(S)
+            k_pos = pos_offset + jnp.arange(k.shape[1])
         q = apply_rope(q, q_pos, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
-        k_pos = pos_offset + jnp.arange(k.shape[1])
         k = apply_rope(k, k_pos, rotary_pct=cfg.rotary_pct, theta=cfg.rope_theta)
 
     qg = q.reshape(B, S, Kv_l, G, hd)
@@ -306,8 +333,31 @@ def mha(
         assert cache is not None and S == 1
         C = cache.capacity
         ring = window is not None and C <= window
+        per_slot = jnp.ndim(cache.pos) > 0
         idx = jnp.mod(cache.pos, C) if ring else cache.pos
-        if isinstance(cache, QuantKVCache):
+        if per_slot:
+            # per-request write positions (continuous batching): a batched
+            # scatter at (slot, idx[slot]); mode="drop" silently skips
+            # requests whose linear cache is already full (a retired slot
+            # the engine keeps decoding as ballast)
+            bi = jnp.arange(B)
+            if isinstance(cache, QuantKVCache):
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                kc = cache.k.at[bi, idx].set(kq[:, 0], mode="drop")
+                vc = cache.v.at[bi, idx].set(vq[:, 0], mode="drop")
+                ksc = cache.k_scale.at[bi, idx].set(ks[:, 0], mode="drop")
+                vsc = cache.v_scale.at[bi, idx].set(vs[:, 0], mode="drop")
+                new_cache = QuantKVCache(kc, vc, ksc, vsc, cache.pos + 1)
+            else:
+                kc = cache.k.at[bi, idx].set(
+                    k[:, 0].astype(cache.k.dtype), mode="drop"
+                )
+                vc = cache.v.at[bi, idx].set(
+                    v[:, 0].astype(cache.v.dtype), mode="drop"
+                )
+                new_cache = KVCache(kc, vc, cache.pos + 1)
+        elif isinstance(cache, QuantKVCache):
             kq, ks = _quantize_kv(k)
             vq, vs = _quantize_kv(v)
             kc = lax.dynamic_update_slice(cache.k, kq, (0, idx, 0, 0))
@@ -345,6 +395,10 @@ def mha(
                 assert cache is not None
                 C = cache.capacity
                 pos = jnp.asarray(S, jnp.int32)
+                # C < S keeps the trailing window, ROLLED so absolute
+                # position p sits at slot p % C — the layout the ring
+                # decode formula (attend_decode) and the ring write index
+                # (idx = pos % C above) both assume
                 if isinstance(cache, QuantKVCache):
                     ks, kv_sc = _quantize_kv(k if C >= S else k[:, S - C:])
                     vs, vv_sc = _quantize_kv(v if C >= S else v[:, S - C:])
@@ -354,16 +408,20 @@ def mha(
                         ksc = lax.dynamic_update_slice(cache.k_scale, kv_sc, (0, 0, 0))
                         vsc = lax.dynamic_update_slice(cache.v_scale, vv_sc, (0, 0, 0))
                     else:
-                        kc, vc, ksc, vsc = ks, vs, kv_sc, vv_sc
+                        r = S % C
+                        kc = jnp.roll(ks, r, axis=1)
+                        vc = jnp.roll(vs, r, axis=1)
+                        ksc = jnp.roll(kv_sc, r, axis=1)
+                        vsc = jnp.roll(vv_sc, r, axis=1)
                     new_cache = QuantKVCache(kc, vc, ksc, vsc, pos)
                 else:
                     kc, vc = cache.k, cache.v
                     if C >= S:
                         kc = lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, 0, 0, 0))
                         vc = lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, 0, 0, 0))
-                    else:  # keep the trailing window
-                        kc = k[:, S - C :].astype(kc.dtype)
-                        vc = v[:, S - C :].astype(vc.dtype)
+                    else:
+                        kc = jnp.roll(k[:, S - C :], S % C, axis=1).astype(kc.dtype)
+                        vc = jnp.roll(v[:, S - C :], S % C, axis=1).astype(vc.dtype)
                     new_cache = KVCache(kc, vc, pos)
 
     out = out.reshape(B, S, Hq_l * hd)

@@ -32,7 +32,12 @@ def apply_rope(
     rotary_pct: float = 1.0,
     theta: float = 1e4,
 ) -> jnp.ndarray:
-    """Rotary embedding on ``x: (..., S, H, head_dim)`` at ``positions: (S,)``.
+    """Rotary embedding on ``x: (..., S, H, head_dim)`` at ``positions``.
+
+    ``positions`` is ``(S,)`` (shared across the batch — train/prefill and
+    uniform decode) or ``(B, S)`` (per-request absolute positions — the
+    serve engine's continuous-batching decode, where every KV slot sits at
+    its own sequence offset).
 
     ``rotary_pct < 1`` rotates only the leading fraction of head dims
     (chatglm-style partial / "2d" RoPE); the tail passes through.
@@ -43,10 +48,12 @@ def apply_rope(
     if rot == 0:
         return x
     dtype = x.dtype
-    ang = positions.astype(jnp.float32)[:, None] * inv_freq[None, :]  # (S, rot/2)
+    ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (..., S, rot/2)
     cos, sin = jnp.cos(ang), jnp.sin(ang)
-    cos = cos[None, :, None, :]
-    sin = sin[None, :, None, :]
+    if positions.ndim == 1:
+        cos, sin = cos[None], sin[None]
+    cos = cos[..., None, :]  # (..., S, 1, rot/2)
+    sin = sin[..., None, :]
     x_rot, x_pass = x[..., :rot].astype(jnp.float32), x[..., rot:]
     x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
     y1 = x1 * cos - x2 * sin

@@ -293,7 +293,8 @@ def forward_decode(params, batch, caches, cfg, env, *, mat_group, mat_top,
 # ---------------------------------------------------------------------------
 
 
-def _block_cache(kind, cfg: ModelConfig, env: Env, batch, capacity, dtype):
+def _block_cache(kind, cfg: ModelConfig, env: Env, batch, capacity, dtype,
+                 per_slot: bool = False):
     hd = cfg.head_dim
     if kind in ("attn", "local"):
         kv_l = env.heads_local(cfg.num_kv_heads)
@@ -301,7 +302,7 @@ def _block_cache(kind, cfg: ModelConfig, env: Env, batch, capacity, dtype):
         if kind == "local" and cfg.sliding_window:
             cap = min(capacity, cfg.sliding_window)
         kv_dtype = jnp.int8 if env.int8_kv else dtype
-        return init_cache(batch, cap, kv_l, hd, kv_dtype)
+        return init_cache(batch, cap, kv_l, hd, kv_dtype, per_slot=per_slot)
     if kind == "cross":
         kv_l = env.heads_local(cfg.num_kv_heads)
         return init_cache(batch, max(cfg.num_image_tokens, 1), kv_l, hd, dtype)
@@ -321,15 +322,21 @@ def _block_cache(kind, cfg: ModelConfig, env: Env, batch, capacity, dtype):
     raise ValueError(kind)
 
 
-def init_caches(cfg: ModelConfig, env: Env, batch: int, capacity: int, dtype):
-    """Stacked caches per group: groups[g][p<i>] leading dim = repetitions."""
+def init_caches(cfg: ModelConfig, env: Env, batch: int, capacity: int, dtype,
+                per_slot: bool = False):
+    """Stacked caches per group: groups[g][p<i>] leading dim = repetitions.
+
+    ``per_slot=True`` builds the serve engine's slotted layout: KV caches
+    carry a ``(reps, batch)`` position vector so every request (slot)
+    tracks its own absorbed-token count independently."""
     pat = cfg.pattern
     reps = cfg.layers_per_group // len(pat)
     groups = []
     for g in range(cfg.num_groups):
         entry = {}
         for pi, kind in enumerate(pat):
-            one = _block_cache(kind, cfg, env, batch, capacity, dtype)
+            one = _block_cache(kind, cfg, env, batch, capacity, dtype,
+                               per_slot=per_slot)
             entry[f"p{pi}"] = jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), one
             )

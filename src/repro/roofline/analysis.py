@@ -20,6 +20,12 @@ width, docs/collectives.md): the activation all-reduce entries disappear
 from these reports and reappear under all-gather / reduce-scatter /
 all-to-all, packed-plane when an activation policy compresses.
 
+The serving path has its own wire model:
+:func:`serve_host_device_bytes` prices the continuous-batching engine's
+host<->device token staging (the plan's ``host_device`` traffic class)
+from the same ``CompressionPolicy`` formulas the engine's measured log
+uses, so logged and analytic bytes are pinned equal.
+
 Hardware constants (TPU v5e class, per chip): 197 TFLOP/s bf16,
 819 GB/s HBM, ~50 GB/s/link ICI.
 """
@@ -238,6 +244,53 @@ def roofline_from_compiled(
             "raw_cost_analysis": {"flops": raw_flops, "bytes": raw_bytes},
         },
     )
+
+
+def serve_host_device_bytes(
+    plan_or_policy,
+    vocab_size: int,
+    *,
+    n_slots: int,
+    prompt_lens,
+    decode_steps: int,
+) -> dict:
+    """Analytic serve-wire model: host<->device staging bytes of one
+    continuous-batching engine run (the serving twin of
+    :meth:`~repro.plan.PrecisionPlan.wire_table`).
+
+    Every term derives from
+    :meth:`~repro.transport.CompressionPolicy.token_host_bytes` — the
+    same formula the engine's measured ``step_log`` packing uses — so
+    ``ServeEngine.wire_summary()["host_device"]`` must equal this
+    table's ``total`` for the run's observed geometry
+    (``tests/test_serve_engine.py`` pins it):
+
+      * ``prompt_h2d``     — each admitted prompt (one ``prompt_lens``
+        entry per admission) staged once, h2d;
+      * ``first_token_d2h``— one sampled id per admission (the prefill
+        logits' argmax) returning d2h;
+      * ``decode_token_io``— per decode step the engine stages the full
+        slot batch both ways (next-step feed h2d + sampled ids d2h),
+        retired-slot ballast included — the honest cost of the
+        fixed-shape batch.
+    """
+    pol = plan_or_policy
+    if hasattr(pol, "host_device_policies"):  # a PrecisionPlan
+        pol = pol.host_device_policies()[0]
+    prompt_lens = list(prompt_lens)
+    admissions = len(prompt_lens)
+    tok = pol.token_host_bytes
+    table = {
+        "prompt_h2d": tok(sum(prompt_lens), vocab_size),
+        "first_token_d2h": tok(admissions, vocab_size),
+        "decode_token_io": 2 * tok(n_slots, vocab_size) * int(decode_steps),
+        "token_width": pol.token_wire_width(vocab_size),
+    }
+    table["total"] = (
+        table["prompt_h2d"] + table["first_token_d2h"]
+        + table["decode_token_io"]
+    )
+    return table
 
 
 def model_flops_estimate(cfg, shape, chips: int) -> float:

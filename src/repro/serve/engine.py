@@ -1,0 +1,560 @@
+"""Continuous-batching serve engine (`repro.serve.engine`).
+
+The production serving loop the ROADMAP left open: a request queue is
+drained through a **slotted KV cache** — ``max_slots`` resident requests
+decode together as one fixed-shape batch, and whenever a slot frees up
+(stop condition hit) the scheduler admits the next queued prompt
+*between decode steps* (prefill/decode interleave). Every slot carries
+its own absolute position (``init_caches(per_slot=True)`` →
+``(reps, slots)`` KV position vectors), so mixed prompt lengths and
+staggered admissions coexist in one compiled decode program.
+
+Data-motion story (the paper's host<->device boundary, finally exercised
+by serving traffic): prompts enter and sampled ids leave through the
+plan's ``host_device`` :class:`~repro.transport.CompressionPolicy` entry
+— token ids are staged as lossless byte planes
+(:mod:`repro.transport.hostdev`) at
+:meth:`~repro.transport.CompressionPolicy.token_wire_width` bytes each,
+and the engine logs the **measured** staged bytes per step
+(:attr:`ServeEngine.step_log`, the serving twin of the trainer's
+``StepRecord.wire_by_entry``). The analytic mirror lives in
+:func:`repro.roofline.analysis.serve_host_device_bytes`; the two are
+pinned equal by ``tests/test_serve_engine.py``.
+
+Determinism contract: sampling is greedy and slots are independent, so
+every request's token stream is a pure function of its prompt — byte
+for byte the same regardless of arrival order, slot assignment, or what
+else shares the batch, and bit-exact against the static one-shot
+reference (:func:`generate_static`). Caveat for MoE archs: the capacity
+dispatch ranks the *whole* batch's tokens per expert, so decode couples
+slots once a single expert can be offered more than ``capacity`` tokens
+— keep ``max_slots * top_k <= 8`` (the dispatch capacity floor) for a
+drop-free, companion-independent decode, and note the batched static
+reference prefills requests *together* while the engine prefills one at
+a time, which changes MoE prefill capacity pressure: compare MoE archs
+against per-request (batch-of-1) references. Vision cross-attention
+archs are rejected (image payloads are not token-stageable; the static
+launcher path still serves them).
+
+Engine compilation surface: ONE decode program (fixed ``(slots, 1)``
+shape) plus one prefill program per distinct prompt length — bucket
+arrival lengths if that set is unbounded.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.spec import MeshCfg
+from repro.models import model as M
+from repro.plan import PrecisionPlan
+from repro.serve.step import (
+    global_cache_shapes,
+    make_decode_step,
+    make_place_step,
+    make_prefill_step,
+)
+from repro.transport.hostdev import (
+    pack_tokens,
+    pack_tokens_host,
+    unpack_tokens,
+    unpack_tokens_host,
+)
+
+
+# ---------------------------------------------------------------------------
+# request / result types
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request: a prompt and its stop conditions."""
+
+    rid: int
+    prompt: tuple[int, ...]
+    max_new_tokens: int
+    eos_id: int | None = None
+
+    def __post_init__(self):
+        if not self.prompt:
+            raise ValueError(f"request {self.rid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.rid}: max_new_tokens < 1")
+
+
+@dataclasses.dataclass
+class GenResult:
+    """Completed generation: emitted ids in order (eos included if hit)."""
+
+    rid: int
+    prompt_len: int
+    tokens: list[int]
+    admitted_step: int
+    finished_step: int
+
+
+@dataclasses.dataclass
+class _ReqState:
+    req: Request
+    slot: int
+    admitted_step: int
+    tokens: list[int] = dataclasses.field(default_factory=list)
+
+    def emit(self, tok: int) -> bool:
+        """Record one sampled id; True when the request just finished."""
+        self.tokens.append(tok)
+        if self.req.eos_id is not None and tok == self.req.eos_id:
+            return True
+        return len(self.tokens) >= self.req.max_new_tokens
+
+
+# ---------------------------------------------------------------------------
+# slot manager
+# ---------------------------------------------------------------------------
+
+
+class SlotManager:
+    """KV-slot allocator with leak-audit counters.
+
+    Slots are the unit of cache residency: ``alloc`` hands the lowest
+    free slot to a request at admission, ``release`` returns it at
+    retirement. :meth:`audit` asserts the conservation invariant (every
+    slot is exactly free xor owned, allocs == releases + active) — the
+    scheduler-invariant tests drive it after every admit/evict cycle.
+    """
+
+    def __init__(self, n_slots: int):
+        if n_slots < 1:
+            raise ValueError("need at least one slot")
+        self.n_slots = n_slots
+        self._free = list(range(n_slots - 1, -1, -1))  # pop() -> lowest first
+        self._owner: dict[int, int] = {}  # slot -> rid
+        self.alloc_count = 0
+        self.release_count = 0
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free)
+
+    @property
+    def active(self) -> dict[int, int]:
+        return dict(self._owner)
+
+    def alloc(self, rid: int) -> int:
+        if not self._free:
+            raise RuntimeError("no free slot")
+        slot = self._free.pop()
+        if slot in self._owner:
+            raise RuntimeError(f"slot {slot} double-allocated")
+        self._owner[slot] = rid
+        self.alloc_count += 1
+        return slot
+
+    def release(self, slot: int) -> None:
+        if slot not in self._owner:
+            raise RuntimeError(f"release of unowned slot {slot}")
+        del self._owner[slot]
+        self._free.append(slot)
+        self.release_count += 1
+
+    def audit(self) -> dict:
+        free, owned = set(self._free), set(self._owner)
+        if free & owned:
+            raise AssertionError(f"slots both free and owned: {free & owned}")
+        if len(self._free) != len(free):
+            raise AssertionError("duplicate entries in the free list")
+        if free | owned != set(range(self.n_slots)):
+            raise AssertionError("slot leak: free ∪ owned != all slots")
+        if self.alloc_count != self.release_count + len(owned):
+            raise AssertionError("alloc/release counters out of balance")
+        return {
+            "free": len(free),
+            "active": len(owned),
+            "allocs": self.alloc_count,
+            "releases": self.release_count,
+        }
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class ServeEngine:
+    """Continuous-batching driver over ``make_prefill_step`` /
+    ``make_decode_step`` (see module docstring).
+
+    Parameters mirror the step factories; ``storage`` is the sharded
+    weight tree (``tree_to_storage``), ``plan`` the
+    :class:`~repro.plan.PrecisionPlan` driving every precision choice
+    including the ``host_device`` staging entry. ``cache_capacity`` caps
+    ``prompt_len + max_new_tokens`` per request (validated at submit).
+    """
+
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        mesh_cfg: MeshCfg,
+        mesh,
+        spec_tree,
+        storage,
+        *,
+        plan: PrecisionPlan,
+        max_slots: int,
+        cache_capacity: int,
+        window: int | None = None,
+        weight_stationary: bool = False,
+    ):
+        if not cfg.causal:
+            raise ValueError(f"{cfg.name} is encoder-only: nothing to serve")
+        if cfg.num_image_tokens or cfg.embed_is_input_stub:
+            raise ValueError(
+                f"{cfg.name}: the serve engine stages token payloads only "
+                "(no image/feature requests)"
+            )
+        if cfg.num_experts and max_slots * cfg.top_k > 8:
+            warnings.warn(
+                f"{cfg.name}: max_slots={max_slots} x top_k={cfg.top_k} "
+                "exceeds the MoE dispatch capacity floor (8) — congested "
+                "experts may drop ranked decode tokens, coupling slots "
+                "(see the determinism contract in repro.serve.engine)",
+                stacklevel=2,
+            )
+        self.cfg = cfg
+        self.mesh_cfg = mesh_cfg
+        self.mesh = mesh
+        self.spec_tree = spec_tree
+        self.storage = storage
+        self.plan = plan.broadcast(cfg.num_groups + 1)
+        self.max_slots = int(max_slots)
+        self.cache_capacity = int(cache_capacity)
+        self.window = window
+        self.host_policy = self.plan.host_device_policies()[0]
+        self.token_width = self.host_policy.token_wire_width(cfg.vocab_size)
+        self.slots = SlotManager(self.max_slots)
+        self.step_log: list[dict] = []
+
+        B = self.max_slots
+        self._shard_batch = (
+            mesh_cfg.dshards > 1 and B % mesh_cfg.dshards == 0
+        )
+        dshapes = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+        self._decode = make_decode_step(
+            cfg, mesh_cfg, mesh, spec_tree, dshapes, plan=self.plan,
+            shard_batch=self._shard_batch, window_override=window,
+            weight_stationary=weight_stationary, slot_caches=True,
+        )
+        self._weights = storage
+        if weight_stationary:
+            place, _ = make_place_step(
+                cfg, mesh_cfg, mesh, spec_tree, plan=self.plan
+            )
+            self._weights = place(storage)
+        self._prefill_cache: dict[int, object] = {}
+        self._cache_dtype = self.plan.compute_dtype
+        self._unpack = jax.jit(unpack_tokens)
+        vocab = cfg.vocab_size
+        width = self.token_width
+
+        def sample_pack(logits):
+            tok = jnp.argmax(
+                logits[:, -1, :vocab], axis=-1
+            ).astype(jnp.int32)  # (B,)
+            return tok, pack_tokens(tok, width)
+
+        self._sample = jax.jit(sample_pack)
+
+        def insert(big, small, slot):
+            # prefill caches (batch of 1) -> slot `slot` of the engine
+            # caches; the pos leaves are the one rank mismatch: (R,)
+            # scalar-per-rep from prefill vs the engine's (R, B) vector
+            def one(b, s):
+                if b.ndim == s.ndim:
+                    return b.at[:, slot].set(s[:, 0])
+                return b.at[:, slot].set(s)
+
+            return jax.tree_util.tree_map(one, big, small)
+
+        self._insert = jax.jit(insert, donate_argnums=(0,))
+
+    # -- compiled-program plumbing ---------------------------------------
+    def _prefill(self, prompt_len: int):
+        """One compiled prefill per distinct prompt length."""
+        if prompt_len not in self._prefill_cache:
+            plan = self.plan
+            if plan.seq_parallel and prompt_len % max(self.mesh_cfg.tp, 1):
+                # seq-parallel needs S % tp == 0; odd lengths fall back to
+                # the psum layout (pinned bit-exact by scenario_seq_parallel)
+                plan = dataclasses.replace(plan, seq_parallel=False)
+            bshapes = {
+                "tokens": jax.ShapeDtypeStruct((1, prompt_len), jnp.int32)
+            }
+            self._prefill_cache[prompt_len] = make_prefill_step(
+                self.cfg, self.mesh_cfg, self.mesh, self.spec_tree, bshapes,
+                plan=plan, cache_capacity=self.cache_capacity,
+                shard_batch=False,
+            )
+        return self._prefill_cache[prompt_len]
+
+    def _init_caches(self):
+        shapes = global_cache_shapes(
+            self.cfg, self.mesh_cfg, self.max_slots, self.cache_capacity,
+            self._cache_dtype, shard_batch=self._shard_batch, per_slot=True,
+            int8_kv=self.plan.int8_kv,
+        )
+        return jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), shapes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    def _validate(self, req: Request):
+        if max(req.prompt) >= self.cfg.vocab_size or min(req.prompt) < 0:
+            raise ValueError(f"request {req.rid}: prompt id out of vocab")
+        cap = self.cache_capacity
+        need = len(req.prompt) + req.max_new_tokens
+        # the cache is a ring buffer ONLY when capacity <= window (mha's
+        # rule); a linear cache must hold the whole request — without
+        # this check writes past capacity are silently dropped
+        ring = self.window is not None and cap <= self.window
+        if need > cap:
+            if not ring:
+                hint = (
+                    " (no sliding window)" if self.window is None else
+                    f" (window={self.window} does not ring: capacity "
+                    f"{cap} > window — shrink cache_capacity to the "
+                    "window)"
+                )
+                raise ValueError(
+                    f"request {req.rid}: prompt+gen = {need} exceeds "
+                    f"cache capacity {cap}{hint}"
+                )
+            if cap < self.window:
+                # a wrapping ring narrower than the window evicts tokens
+                # the attention mask still wants — streams would silently
+                # diverge from the reference
+                raise ValueError(
+                    f"request {req.rid}: prompt+gen = {need} wraps a "
+                    f"ring cache of {cap} slots that is smaller than "
+                    f"window={self.window}: live tokens would be "
+                    "evicted — set cache_capacity == window"
+                )
+        # cap == window rings faithfully (wrapping IS window eviction),
+        # and prefill keeps the trailing window for any prompt length
+
+    # -- the serving loop -------------------------------------------------
+    def run(self, requests, *, max_steps: int = 1_000_000) -> dict[int, GenResult]:
+        """Drain ``requests`` (admission in list order) to completion.
+
+        Returns ``{rid: GenResult}``. Appends one record per engine step
+        to :attr:`step_log`:
+        ``{"step", "admitted", "active", "decoded", "host_device"}`` —
+        ``host_device`` is the *measured* staged byte count (sum of
+        ``planes.nbytes`` over every boundary crossing that step).
+        """
+        requests = list(requests)
+        if len({r.rid for r in requests}) != len(requests):
+            raise ValueError("duplicate request ids")
+        for r in requests:
+            self._validate(r)
+        # an aborted previous run (exception mid-decode) leaves its slots
+        # owned; every run starts from a fresh allocator — the engine
+        # cache is rebuilt below, so stale residency means nothing
+        self.slots = SlotManager(self.max_slots)
+
+        B, w = self.max_slots, self.token_width
+        queue = collections.deque(requests)
+        active: dict[int, _ReqState] = {}
+        results: dict[int, GenResult] = {}
+        caches = self._init_caches()
+        next_tok = np.zeros((B,), np.int32)  # host-side per-slot feed tokens
+        pos_host = np.zeros((B,), np.int32)  # per-slot absorbed-token counts
+        self.step_log = []
+
+        step = 0
+        while (queue or active) and step < max_steps:
+            rec = {"step": step, "admitted": 0, "active": 0,
+                   "decoded": 0, "host_device": 0}
+
+            # -- admission: fill free slots between decode steps ----------
+            while queue and self.slots.free_slots:
+                req = queue.popleft()
+                slot = self.slots.alloc(req.rid)
+                S = len(req.prompt)
+                planes = pack_tokens_host(
+                    np.asarray(req.prompt, np.int32)[None, :], w
+                )  # (w, 1, S) — h2d prompt staging
+                rec["host_device"] += planes.nbytes
+                tokens_dev = self._unpack(jax.device_put(planes))
+                logits, pcaches = self._prefill(S)(
+                    self.storage, {"tokens": tokens_dev}
+                )
+                caches = self._insert(caches, pcaches, np.int32(slot))
+                _, tok_planes = self._sample(logits)
+                tok_planes = np.asarray(tok_planes)  # (w, 1) — d2h first id
+                rec["host_device"] += tok_planes.nbytes
+                first = int(unpack_tokens_host(tok_planes)[0])
+                st = _ReqState(req, slot, step)
+                next_tok[slot] = first
+                pos_host[slot] = S
+                rec["admitted"] += 1
+                if st.emit(first):
+                    results[req.rid] = self._retire(st, step)
+                else:
+                    active[slot] = st
+
+            rec["active"] = len(active)
+            if not active:
+                self.step_log.append(rec)
+                step += 1
+                continue
+
+            # -- one decode step over the full slot batch ------------------
+            feed_planes = pack_tokens_host(next_tok[:, None], w)  # (w, B, 1)
+            rec["host_device"] += feed_planes.nbytes  # h2d token staging
+            tokens_dev = self._unpack(jax.device_put(feed_planes))
+            batch = {"tokens": tokens_dev, "pos": jax.device_put(pos_host)}
+            logits, caches = self._decode(self._weights, caches, batch)
+            _, out_planes = self._sample(logits)
+            out_planes = np.asarray(out_planes)  # (w, B) — d2h sampled ids
+            rec["host_device"] += out_planes.nbytes
+            sampled = unpack_tokens_host(out_planes)
+            pos_host += 1  # mirrors cache.pos + 1 (every slot, ballast too)
+            rec["decoded"] = len(active)
+            for slot, st in list(active.items()):
+                tok = int(sampled[slot])
+                next_tok[slot] = tok
+                if st.emit(tok):
+                    results[st.req.rid] = self._retire(st, step)
+                    del active[slot]
+
+            self.step_log.append(rec)
+            step += 1
+
+        if queue or active:
+            raise RuntimeError(f"engine stopped at max_steps={max_steps} "
+                               f"with {len(queue) + len(active)} unfinished")
+        self.slots.audit()
+        return results
+
+    def _retire(self, st: _ReqState, step: int) -> GenResult:
+        self.slots.release(st.slot)
+        return GenResult(
+            rid=st.req.rid,
+            prompt_len=len(st.req.prompt),
+            tokens=list(st.tokens),
+            admitted_step=st.admitted_step,
+            finished_step=step,
+        )
+
+    # -- accounting --------------------------------------------------------
+    def wire_summary(self) -> dict:
+        """Aggregate of :attr:`step_log` in the shape the analytic
+        serve-wire model (:func:`repro.roofline.analysis.
+        serve_host_device_bytes`) reproduces."""
+        return {
+            "host_device": sum(r["host_device"] for r in self.step_log),
+            "decode_steps": sum(1 for r in self.step_log if r["decoded"]),
+            "admissions": sum(r["admitted"] for r in self.step_log),
+            "steps": len(self.step_log),
+            "token_width": self.token_width,
+        }
+
+
+# ---------------------------------------------------------------------------
+# static one-shot reference path
+# ---------------------------------------------------------------------------
+
+
+def generate_static(
+    cfg: ModelConfig,
+    mesh_cfg: MeshCfg,
+    mesh,
+    spec_tree,
+    storage,
+    requests,
+    *,
+    plan: PrecisionPlan,
+    window: int | None = None,
+    image_features=None,
+) -> dict[int, list[int]]:
+    """The pre-engine reference path: classic static batching. Requests
+    are grouped by prompt length, each group runs one batched prefill and
+    a scalar-``pos`` decode loop to the group's longest request; per-
+    request stop conditions truncate the streams afterwards. The engine
+    is pinned bit-exact against this for identical request sets.
+
+    ``image_features`` (``{rid: (num_image_tokens, vision_dim) array}``)
+    feeds causal vision cross-attn archs — the one serveable family the
+    engine rejects (its payloads are not token-stageable)."""
+    plan = plan.broadcast(cfg.num_groups + 1)
+    if cfg.num_image_tokens and image_features is None:
+        raise ValueError(
+            f"{cfg.name} needs image_features per request (rid -> "
+            f"({cfg.num_image_tokens}, {cfg.vision_dim}) array)"
+        )
+    groups: dict[int, list[Request]] = {}
+    for r in requests:
+        groups.setdefault(len(r.prompt), []).append(r)
+    out: dict[int, list[int]] = {}
+    for S, reqs in groups.items():
+        B = len(reqs)
+        gen = max(r.max_new_tokens for r in reqs)
+        cap = S + gen
+        toks = jnp.asarray([r.prompt for r in reqs], jnp.int32)
+        bshapes = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        batch = {"tokens": toks}
+        if cfg.num_image_tokens:
+            batch["image_features"] = jnp.asarray(
+                np.stack([image_features[r.rid] for r in reqs]),
+                jnp.float32,
+            )
+            bshapes["image_features"] = jax.ShapeDtypeStruct(
+                batch["image_features"].shape, jnp.float32
+            )
+        gplan = plan
+        if gplan.seq_parallel and S % max(mesh_cfg.tp, 1):
+            gplan = dataclasses.replace(gplan, seq_parallel=False)
+        shard_batch = mesh_cfg.dshards > 1 and B % mesh_cfg.dshards == 0
+        prefill = make_prefill_step(
+            cfg, mesh_cfg, mesh, spec_tree, bshapes, plan=gplan,
+            cache_capacity=cap, shard_batch=shard_batch,
+        )
+        dshapes = {
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        decode = make_decode_step(
+            cfg, mesh_cfg, mesh, spec_tree, dshapes, plan=gplan,
+            shard_batch=shard_batch, window_override=window,
+        )
+        logits, caches = prefill(storage, batch)
+        tok = jnp.argmax(
+            logits[:, -1, : cfg.vocab_size], -1
+        )[:, None].astype(jnp.int32)
+        streams = [np.asarray(tok)[:, 0]]
+        for i in range(gen - 1):
+            logits, caches = decode(
+                storage, caches,
+                {"tokens": tok, "pos": jnp.asarray(S + i, jnp.int32)},
+            )
+            tok = jnp.argmax(
+                logits[:, 0, : cfg.vocab_size], -1
+            )[:, None].astype(jnp.int32)
+            streams.append(np.asarray(tok)[:, 0])
+        mat = np.stack(streams, axis=1)  # (B, gen)
+        for b, r in enumerate(reqs):
+            ids = mat[b].tolist()[: r.max_new_tokens]
+            if r.eos_id is not None and r.eos_id in ids:
+                ids = ids[: ids.index(r.eos_id) + 1]
+            out[r.rid] = ids
+    return out

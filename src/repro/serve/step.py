@@ -74,8 +74,12 @@ def _serve_plan(cfg, args, plan, legacy, *, caller, n_positional):
 
 
 def cache_pspecs(cfg: ModelConfig, mesh_cfg: MeshCfg, shard_batch: bool,
-                 int8_kv: bool = False):
-    """PartitionSpec tree matching model.init_caches structure."""
+                 int8_kv: bool = False, per_slot: bool = False):
+    """PartitionSpec tree matching model.init_caches structure.
+
+    ``per_slot=True`` matches the engine's slotted layout
+    (``init_caches(per_slot=True)``): KV positions are ``(R, B)`` vectors
+    sharded like the batch dim instead of replicated scalars."""
     if mesh_cfg.tp == 1 and mesh_cfg.dshards == 1:
         none = lambda *a: P()
         dp = mo = None
@@ -86,6 +90,7 @@ def cache_pspecs(cfg: ModelConfig, mesh_cfg: MeshCfg, shard_batch: bool,
             else mesh_cfg.fsdp_axes[0]
         ) if (mesh_cfg.dshards > 1 and shard_batch) else None
         mo = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
+    pos_spec = P(None, dp) if per_slot else P(None)
     pat = cfg.pattern
     groups = []
     for g in range(cfg.num_groups):
@@ -96,9 +101,9 @@ def cache_pspecs(cfg: ModelConfig, mesh_cfg: MeshCfg, shard_batch: bool,
                 kv = P(None, dp, None, mo, None)
                 if int8_kv and kind != "cross":
                     sc = P(None, dp, None, mo)
-                    entry[f"p{pi}"] = M.QuantKVCache(kv, kv, sc, sc, P(None))
+                    entry[f"p{pi}"] = M.QuantKVCache(kv, kv, sc, sc, pos_spec)
                 else:
-                    entry[f"p{pi}"] = M.KVCache(kv, kv, P(None))
+                    entry[f"p{pi}"] = M.KVCache(kv, kv, pos_spec)
             elif kind == "mlstm":
                 entry[f"p{pi}"] = jax.tree_util.tree_unflatten(
                     jax.tree_util.tree_structure(
@@ -129,19 +134,33 @@ def global_cache_shapes(
     dtype=jnp.float32,
     *,
     shard_batch: bool = True,
+    per_slot: bool = False,
+    int8_kv: bool | None = None,
 ):
     """Global ShapeDtypeStruct tree for decode-step cache inputs (zero alloc).
 
     Local cache shapes come from ``model.init_caches`` under eval_shape; any
     dim mapped to the model axis in ``cache_pspecs`` is scaled by tp to get
-    the global (pre-shard_map) shape."""
+    the global (pre-shard_map) shape. ``per_slot=True`` selects the serve
+    engine's slotted layout (per-request KV position vectors).
+
+    ``int8_kv`` quantizes the attention KV leaves only; recurrent state
+    leaves keep ``dtype``. The legacy spelling (``dtype=jnp.int8``) is
+    still honored when ``int8_kv`` is unset."""
     from repro.models.env import Env
 
-    env = Env(tp=mesh_cfg.tp, int8_kv=(dtype == jnp.int8))
+    if int8_kv is None:  # legacy spelling: every leaf follows dtype
+        int8_kv = dtype == jnp.int8
+        state_dtype = dtype
+    else:
+        state_dtype = jnp.float32 if dtype == jnp.int8 else dtype
+    env = Env(tp=mesh_cfg.tp, int8_kv=int8_kv)
     local = jax.eval_shape(
-        lambda: M.init_caches(cfg, env, batch, capacity, dtype)
+        lambda: M.init_caches(cfg, env, batch, capacity, state_dtype,
+                              per_slot=per_slot)
     )
-    cspecs = cache_pspecs(cfg, mesh_cfg, shard_batch, int8_kv=(dtype == jnp.int8))
+    cspecs = cache_pspecs(cfg, mesh_cfg, shard_batch, int8_kv=int8_kv,
+                          per_slot=per_slot)
 
     def fix(sds, spec):
         shape = list(sds.shape)
@@ -283,6 +302,7 @@ def make_decode_step(
     shard_batch: bool = True,
     window_override=None,
     weight_stationary: bool = False,
+    slot_caches: bool = False,
     **legacy,
 ):
     plan, rest = _serve_plan(
@@ -317,7 +337,8 @@ def make_decode_step(
     else:
         pspecs = tree_partition_specs(spec_tree, mesh_cfg)
     bspecs = batch_pspecs(batch_shapes, mesh_cfg, shard_batch)
-    cspecs = cache_pspecs(cfg, mesh_cfg, shard_batch, int8_kv=plan.int8_kv)
+    cspecs = cache_pspecs(cfg, mesh_cfg, shard_batch, int8_kv=plan.int8_kv,
+                          per_slot=slot_caches)
     mo = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
     dp = _logits_dp(mesh_cfg, shard_batch)
     logits_spec = P(dp, None, mo)

@@ -12,7 +12,16 @@ Public surface:
     (docs/collectives.md documents the wire contract per entry point).
   * :func:`pack_planes` / :func:`unpack_planes` — kernel dispatch
     (Pallas compiled on TPU / interpret off-TPU, or the jnp oracle).
+  * :func:`pack_tokens` / :func:`unpack_tokens` (+ ``_host`` twins) —
+    lossless byte-plane staging of token ids across the host<->device
+    boundary (the serve engine's ``host_device`` traffic class).
 """
+from repro.transport.hostdev import (
+    pack_tokens,
+    pack_tokens_host,
+    unpack_tokens,
+    unpack_tokens_host,
+)
 from repro.transport.policy import (
     CompressionPolicy,
     act_policy_for,
@@ -42,6 +51,8 @@ __all__ = [
     "all_reduce",
     "axis_size",
     "pack_planes",
+    "pack_tokens",
+    "pack_tokens_host",
     "pick_split_axis",
     "policy_for",
     "quantize",
@@ -51,4 +62,6 @@ __all__ = [
     "seq_gather",
     "seq_scatter",
     "unpack_planes",
+    "unpack_tokens",
+    "unpack_tokens_host",
 ]

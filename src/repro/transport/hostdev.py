@@ -1,0 +1,81 @@
+"""Host<->device staging of integer token payloads (serve engine).
+
+The paper's §III motion class this models is the host->device boundary:
+on a real system prompts arrive on the host (tokenizer output) and
+sampled ids return to it (detokenizer / stop conditions), so every serve
+step moves token ids across the PCIe/DMA link. The transport adapts the
+representation before the move exactly like the weight path adapts fp32
+words: an int32 id is split into byte planes (most-significant first,
+mirroring :func:`repro.transport.pack_planes`) and only the planes a
+``vocab_size`` id can populate are staged —
+:meth:`~repro.transport.CompressionPolicy.token_wire_width` is the
+single width formula shared by this module, the engine's measured wire
+log, and the roofline's analytic serve model, so the three cannot drift.
+
+Unlike the fp32 weight planes this packing is *lossless* by
+construction (ids are exact integers): ``unpack ∘ pack`` is the
+identity for any id in ``[0, 2**(8*width))``.
+
+Two symmetric implementations:
+
+  * :func:`pack_tokens_host` / :func:`unpack_tokens_host` — pure numpy,
+    run on the host side of the boundary (the engine's scheduler).
+  * :func:`pack_tokens` / :func:`unpack_tokens` — jnp, traced into the
+    device-side jitted programs (sampler pack, prompt unpack).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "pack_tokens",
+    "unpack_tokens",
+    "pack_tokens_host",
+    "unpack_tokens_host",
+]
+
+
+def _shifts(width: int):
+    """Bit shifts per plane, most-significant plane first."""
+    return [8 * (width - 1 - i) for i in range(width)]
+
+
+def pack_tokens(tokens: jnp.ndarray, width: int) -> jnp.ndarray:
+    """int token ids (any shape) -> uint8 planes ``(width, *shape)``.
+
+    Device-side variant (jit-traceable): the serve engine packs sampled
+    ids with this before they leave the device."""
+    t = tokens.astype(jnp.uint32)
+    return jnp.stack(
+        [((t >> s) & 0xFF).astype(jnp.uint8) for s in _shifts(width)], axis=0
+    )
+
+
+def unpack_tokens(planes: jnp.ndarray) -> jnp.ndarray:
+    """uint8 planes ``(width, *shape)`` -> int32 ids ``shape``."""
+    width = planes.shape[0]
+    t = jnp.zeros(planes.shape[1:], jnp.uint32)
+    for i, s in enumerate(_shifts(width)):
+        t = t | (planes[i].astype(jnp.uint32) << s)
+    return t.astype(jnp.int32)
+
+
+def pack_tokens_host(tokens, width: int) -> np.ndarray:
+    """Host-side (numpy) twin of :func:`pack_tokens`: the engine stages
+    prompts and next-step tokens with this; ``result.nbytes`` is the
+    measured h2d wire contribution."""
+    t = np.asarray(tokens, np.uint32)
+    return np.stack(
+        [((t >> s) & 0xFF).astype(np.uint8) for s in _shifts(width)], axis=0
+    )
+
+
+def unpack_tokens_host(planes) -> np.ndarray:
+    """Host-side twin of :func:`unpack_tokens` (sampled ids arriving d2h)."""
+    planes = np.asarray(planes, np.uint8)
+    width = planes.shape[0]
+    t = np.zeros(planes.shape[1:], np.uint32)
+    for i, s in enumerate(_shifts(width)):
+        t |= planes[i].astype(np.uint32) << np.uint32(s)
+    return t.astype(np.int32)

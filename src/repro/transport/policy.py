@@ -138,6 +138,28 @@ class CompressionPolicy:
         """Paper's host->device model: every weight moves once per batch."""
         return elems * self.round_to
 
+    # -- host<->device token staging (serve engine) -----------------------
+    def token_wire_width(self, vocab_size: int) -> int:
+        """Staged bytes per token id on the host<->device boundary.
+
+        Token ids are integers, so the adapted representation must stay
+        *lossless*: an uncompressed policy (``round_to == 4``) stages raw
+        int32 words (the fp32-baseline analogue), while a compressing
+        policy keeps only the low byte planes a ``vocab_size`` id can
+        actually populate — never narrower than that floor even if
+        ``round_to`` asks for fewer bytes (ADT adapts the format *to the
+        data*; a truncated id would be a different token)."""
+        needed = max(1, (max(int(vocab_size) - 1, 1).bit_length() + 7) // 8)
+        if self.round_to >= FP32_BYTES:
+            return FP32_BYTES
+        return min(FP32_BYTES, max(needed, self.round_to))
+
+    def token_host_bytes(self, n_tokens: int, vocab_size: int) -> int:
+        """Bytes staged across the host<->device boundary for ``n_tokens``
+        ids in one direction — the serve engine's ``host_device`` wire
+        entry (prompts h2d, sampled tokens d2h, next-step tokens h2d)."""
+        return n_tokens * self.token_wire_width(vocab_size)
+
     # -- activation-path accounting (TP axis; this policy = act group) ----
     # Forward collectives move (round_to, mode) planes, cotangent
     # collectives (grad_round_to, grad_mode) planes — exactly mirroring

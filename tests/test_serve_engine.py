@@ -1,0 +1,364 @@
+"""Continuous-batching serve engine: scheduler invariants, determinism,
+bit-exactness vs static batching, and host<->device wire accounting.
+
+The contracts pinned here (see docs/serving.md):
+
+  * no KV-slot leaks across admit/evict cycles (``SlotManager.audit``);
+  * per-request token streams are a pure function of the prompt —
+    identical regardless of arrival order or batch companions;
+  * continuous batching is BIT-EXACT vs the static one-shot reference
+    (``generate_static``) for identical request sets, mixed prompt
+    lengths included, fp32 and int8-KV alike;
+  * the engine's measured ``host_device`` staged bytes equal the
+    analytic roofline serve model
+    (``repro.roofline.analysis.serve_host_device_bytes``) — the serving
+    twin of ``test_collective_wire_bytes``'s no-drift rule.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import load_plan, load_storage, save_checkpoint
+from repro.configs.registry import get_config, reduced
+from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
+from repro.models.init import init_params
+from repro.plan import PrecisionPlan
+from repro.roofline.analysis import serve_host_device_bytes
+from repro.serve.engine import (
+    GenResult,
+    Request,
+    ServeEngine,
+    SlotManager,
+    generate_static,
+)
+from repro.transport import CompressionPolicy
+from repro.transport.hostdev import (
+    pack_tokens,
+    pack_tokens_host,
+    unpack_tokens,
+    unpack_tokens_host,
+)
+
+CAPACITY = 24
+SLOTS = 2
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    mesh_cfg = MeshCfg(tp=1, dp=1, compress_min_size=4096)
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    plan = PrecisionPlan(
+        weights=(CompressionPolicy(round_to=2),) * (cfg.num_groups + 1),
+        host_device=CompressionPolicy(round_to=2),
+    )
+    return cfg, mesh_cfg, spec_tree, storage, plan
+
+
+def _requests(cfg, spec=((16, 6), (12, 8), (16, 4), (8, 8), (12, 5))):
+    rng = np.random.default_rng(7)
+    return [
+        Request(
+            rid=i,
+            prompt=tuple(int(t) for t in rng.integers(0, cfg.vocab_size, S)),
+            max_new_tokens=gen,
+        )
+        for i, (S, gen) in enumerate(spec)
+    ]
+
+
+@pytest.fixture(scope="module")
+def engine(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    return ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+        max_slots=SLOTS, cache_capacity=CAPACITY,
+    )
+
+
+@pytest.fixture(scope="module")
+def static_streams(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    return generate_static(
+        cfg, mesh_cfg, None, spec_tree, storage, _requests(cfg), plan=plan
+    )
+
+
+# ---------------------------------------------------------------------------
+# slot manager invariants (pure python)
+# ---------------------------------------------------------------------------
+
+
+def test_slot_manager_alloc_release_audit():
+    sm = SlotManager(3)
+    a = sm.alloc(10)
+    b = sm.alloc(11)
+    assert (a, b) == (0, 1)  # lowest free slot first
+    sm.audit()
+    sm.release(a)
+    c = sm.alloc(12)
+    assert c == a  # freed slot is reused
+    sm.release(b)
+    sm.release(c)
+    audit = sm.audit()
+    assert audit == {"free": 3, "active": 0, "allocs": 3, "releases": 3}
+
+
+def test_slot_manager_rejects_double_free_and_exhaustion():
+    sm = SlotManager(1)
+    s = sm.alloc(1)
+    with pytest.raises(RuntimeError):
+        sm.alloc(2)
+    sm.release(s)
+    with pytest.raises(RuntimeError):
+        sm.release(s)
+
+
+def test_slot_manager_audit_catches_leak():
+    sm = SlotManager(2)
+    sm.alloc(1)
+    sm._owner.pop(0)  # simulate a lost slot (neither free nor owned)
+    with pytest.raises(AssertionError):
+        sm.audit()
+
+
+# ---------------------------------------------------------------------------
+# token staging (host<->device byte planes)
+# ---------------------------------------------------------------------------
+
+
+def test_token_planes_lossless_and_host_device_parity():
+    ids = np.array([0, 1, 255, 256, 65535, 99999, 151935], np.int32)
+    for width in (1, 2, 3, 4):
+        sub = ids[ids < 2 ** (8 * width)]
+        host = pack_tokens_host(sub, width)
+        dev = np.asarray(pack_tokens(jnp.asarray(sub), width))
+        assert host.dtype == np.uint8 and host.shape == (width,) + sub.shape
+        np.testing.assert_array_equal(host, dev)
+        np.testing.assert_array_equal(unpack_tokens_host(host), sub)
+        np.testing.assert_array_equal(
+            np.asarray(unpack_tokens(jnp.asarray(host))), sub
+        )
+
+
+def test_token_wire_width_adapts_to_vocab():
+    # compressing policies stage the lossless floor, never narrower
+    assert CompressionPolicy(round_to=1).token_wire_width(256) == 1
+    assert CompressionPolicy(round_to=1).token_wire_width(257) == 2
+    assert CompressionPolicy(round_to=2).token_wire_width(151936) == 3
+    assert CompressionPolicy(round_to=3).token_wire_width(512) == 3
+    # uncompressed policy = raw int32 staging (the fp32-baseline analogue)
+    assert CompressionPolicy(round_to=4).token_wire_width(512) == 4
+    assert CompressionPolicy(round_to=2).token_host_bytes(10, 512) == 20
+
+
+# ---------------------------------------------------------------------------
+# scheduler end-to-end contracts
+# ---------------------------------------------------------------------------
+
+
+def test_continuous_matches_static_mixed_lengths(engine, setup, static_streams):
+    cfg = setup[0]
+    reqs = _requests(cfg)
+    results = engine.run(reqs)
+    assert set(results) == {r.rid for r in reqs}
+    for r in reqs:
+        assert isinstance(results[r.rid], GenResult)
+        assert results[r.rid].tokens == static_streams[r.rid], r.rid
+    # with 2 slots and 5 requests, admissions must have been staggered
+    assert max(g.admitted_step for g in results.values()) > 0
+
+
+def test_no_slot_leaks_across_admit_evict_cycles(engine, setup):
+    cfg = setup[0]
+    reqs = _requests(cfg)
+    engine.run(reqs)
+    audit = engine.slots.audit()
+    assert audit["active"] == 0 and audit["free"] == SLOTS
+    assert audit["allocs"] == audit["releases"]
+    assert audit["allocs"] >= len(reqs)  # every request got a slot
+
+
+def test_deterministic_streams_regardless_of_arrival_order(engine, setup):
+    cfg = setup[0]
+    reqs = _requests(cfg)
+    a = engine.run(reqs)
+    b = engine.run(list(reversed(reqs)))
+    for r in reqs:
+        assert a[r.rid].tokens == b[r.rid].tokens, r.rid
+
+
+def test_wire_log_pins_analytic_serve_model(engine, setup):
+    cfg, _, _, _, plan = setup
+    reqs = _requests(cfg)
+    engine.run(reqs)
+    measured = engine.wire_summary()
+    analytic = serve_host_device_bytes(
+        plan, cfg.vocab_size, n_slots=SLOTS,
+        prompt_lens=[len(r.prompt) for r in reqs],
+        decode_steps=measured["decode_steps"],
+    )
+    assert measured["host_device"] == analytic["total"]
+    assert measured["token_width"] == analytic["token_width"]
+    # per-step: admissions stage prompt+first token, decode the full batch
+    w = measured["token_width"]
+    by_rid = {r.rid: len(r.prompt) for r in reqs}
+    admit_order = [r.rid for r in reqs]  # engine admits in list order
+    i = 0
+    for rec in engine.step_log:
+        expect = 0
+        for _ in range(rec["admitted"]):
+            expect += w * (by_rid[admit_order[i]] + 1)
+            i += 1
+        if rec["decoded"]:
+            expect += 2 * w * SLOTS
+        assert rec["host_device"] == expect, rec
+
+
+def test_stop_on_eos_truncates_and_matches_static(engine, setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    base = _requests(cfg)[:2]
+    free_run = engine.run(base)
+    # pick an id the longer stream actually emits mid-way as the eos
+    target = free_run[1].tokens[2]
+    reqs = [
+        base[0],
+        Request(rid=1, prompt=base[1].prompt,
+                max_new_tokens=base[1].max_new_tokens, eos_id=target),
+    ]
+    results = engine.run(reqs)
+    want = free_run[1].tokens[: free_run[1].tokens.index(target) + 1]
+    assert results[1].tokens == want
+    assert results[1].tokens[-1] == target
+    ref = generate_static(
+        cfg, mesh_cfg, None, spec_tree, storage, reqs, plan=plan
+    )
+    for r in reqs:
+        assert results[r.rid].tokens == ref[r.rid]
+
+
+def test_int8_kv_continuous_matches_static(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    import dataclasses
+
+    plan8 = dataclasses.replace(plan, int8_kv=True)
+    reqs = _requests(cfg, spec=((12, 5), (8, 6), (12, 4)))
+    engine = ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage, plan=plan8,
+        max_slots=2, cache_capacity=CAPACITY,
+    )
+    results = engine.run(reqs)
+    ref = generate_static(
+        cfg, mesh_cfg, None, spec_tree, storage, reqs, plan=plan8
+    )
+    for r in reqs:
+        assert results[r.rid].tokens == ref[r.rid], r.rid
+
+
+def test_engine_restores_from_checkpoint(tmp_path, setup, engine, static_streams):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    path = str(tmp_path / "served")
+    momentum = jax.tree_util.tree_map(jnp.zeros_like, storage)
+    save_checkpoint(path, storage, momentum, None, 3, plan=plan)
+    restored_plan = load_plan(path)
+    assert restored_plan == plan.broadcast(len(plan.weights))
+    like = jax.tree_util.tree_map(jnp.zeros_like, storage)
+    restored, step = load_storage(path, like)  # weights-only serve restore
+    assert step == 3
+    eng = ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, restored, plan=restored_plan,
+        max_slots=SLOTS, cache_capacity=CAPACITY,
+    )
+    results = eng.run(_requests(cfg)[:2])
+    for rid in (0, 1):
+        assert results[rid].tokens == static_streams[rid]
+
+
+def test_windowed_ring_decode_matches_static(setup):
+    # capacity == window -> the cache rings; prompt+gen exceed capacity
+    # so the ring genuinely wraps, and the masked linear cache of the
+    # static reference must still agree token for token
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    window = 12
+    reqs = _requests(cfg, spec=((16, 8), (10, 8)))
+    engine = ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+        max_slots=2, cache_capacity=window, window=window,
+    )
+    results = engine.run(reqs)
+    ref = generate_static(
+        cfg, mesh_cfg, None, spec_tree, storage, reqs, plan=plan,
+        window=window,
+    )
+    for r in reqs:
+        assert results[r.rid].tokens == ref[r.rid], r.rid
+
+
+def test_non_ring_window_capacity_is_rejected(setup):
+    # window set but capacity > window: the cache stays linear (mha only
+    # rings when C <= window), so an overflowing request must be refused
+    # up front instead of silently dropping its KV writes
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    engine = ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+        max_slots=1, cache_capacity=20, window=12,
+    )
+    with pytest.raises(ValueError, match="does not ring"):
+        engine.run([Request(rid=0, prompt=(1,) * 16, max_new_tokens=8)])
+    # ring narrower than the window: wrapping would evict tokens the
+    # attention mask still wants — refused rather than silently diverging
+    narrow = ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+        max_slots=1, cache_capacity=10, window=16,
+    )
+    with pytest.raises(ValueError, match="live tokens would be evicted"):
+        narrow.run([Request(rid=0, prompt=(1,) * 8, max_new_tokens=8)])
+    # ...but a narrow ring the request never wraps is fine
+    narrow.run([Request(rid=1, prompt=(1, 2, 3), max_new_tokens=2)])
+
+
+def test_moe_engine_matches_per_request_static():
+    # MoE decode routes the slot batch through one capacity dispatch;
+    # with max_slots * top_k <= 8 (the capacity floor) no token drops, so
+    # streams stay companion-independent and match per-request (batch-of-
+    # 1) static references — the comparison the launcher's --check-static
+    # uses for MoE archs (grouped prefill would change capacity pressure)
+    cfg = reduced(get_config("mixtral-8x7b"))
+    assert cfg.num_experts and 2 * cfg.top_k <= 8
+    mesh_cfg = MeshCfg(tp=1, dp=1, compress_min_size=4096)
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    plan = PrecisionPlan(
+        weights=(CompressionPolicy(round_to=2),) * (cfg.num_groups + 1),
+        host_device=CompressionPolicy(round_to=2),
+    )
+    reqs = _requests(cfg, spec=((12, 4), (8, 5), (12, 3)))
+    engine = ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+        max_slots=2, cache_capacity=CAPACITY,
+    )
+    results = engine.run(reqs)
+    for r in reqs:
+        ref = generate_static(
+            cfg, mesh_cfg, None, spec_tree, storage, [r], plan=plan
+        )
+        assert results[r.rid].tokens == ref[r.rid], r.rid
+
+
+def test_request_validation(engine):
+    with pytest.raises(ValueError):
+        Request(rid=0, prompt=(), max_new_tokens=4)
+    with pytest.raises(ValueError):
+        Request(rid=0, prompt=(1,), max_new_tokens=0)
+    with pytest.raises(ValueError):  # prompt + gen beyond cache capacity
+        engine.run([Request(rid=0, prompt=(1,) * 20,
+                            max_new_tokens=CAPACITY)])
+    with pytest.raises(ValueError):  # duplicate rid
+        engine.run([
+            Request(rid=0, prompt=(1, 2), max_new_tokens=1),
+            Request(rid=0, prompt=(3, 4), max_new_tokens=1),
+        ])

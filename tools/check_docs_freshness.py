@@ -30,6 +30,15 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 # not satisfy itself (or another doc) — only real source keeps it alive
 SOURCE_DIRS = ("src", "tests", "benchmarks", "examples", "tools")
 SEARCH_EXTS = {".py", ".md", ".toml", ".yml"}
+# every registered doc must exist: deleting one without de-registering
+# it here fails CI the same way a stale symbol reference does
+REQUIRED_DOCS = (
+    "architecture.md",
+    "collectives.md",
+    "plan.md",
+    "serving.md",
+    "transport.md",
+)
 
 FENCE_RE = re.compile(r"```.*?```", re.S)
 SPAN_RE = re.compile(r"`([^`\n]+)`")
@@ -76,6 +85,13 @@ def check(doc_paths=None) -> list[str]:
     corpus = _corpus()
     stale = []
     docs = doc_paths or sorted((ROOT / "docs").glob("*.md"))
+    if doc_paths is None:
+        present = {d.name for d in docs}
+        stale.extend(
+            f"docs/{name}: registered in REQUIRED_DOCS but missing"
+            for name in REQUIRED_DOCS
+            if name not in present
+        )
     for doc in docs:
         text = FENCE_RE.sub("", doc.read_text())
         for m in SPAN_RE.finditer(text):
