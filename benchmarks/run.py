@@ -166,6 +166,98 @@ def compression_ratio():
         )
 
 
+def serve_engine_bench(out_path="BENCH_serve.json"):
+    """Serve-engine benchmark: contiguous vs block-paged KV on the same
+    request mix (mixed prompt lengths + a 2-page shared prefix). Emits
+    ``BENCH_serve.json`` with tokens/sec, decode-step wall-clock, KV
+    bytes resident per token, and host<->device wire bytes per token —
+    the committed snapshot CI regenerates and uploads as an artifact."""
+    from repro.configs.registry import get_config, reduced
+    from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
+    from repro.models.init import init_params
+    from repro.plan import PrecisionPlan
+    from repro.serve.engine import Request, ServeEngine
+    from repro.transport import CompressionPolicy
+
+    page = 8
+    cfg = reduced(get_config("qwen3-1.7b"))
+    mesh_cfg = MeshCfg(tp=1, dp=1, compress_min_size=4096)
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    plan = PrecisionPlan(
+        weights=(CompressionPolicy(round_to=2),) * (cfg.num_groups + 1),
+        host_device=CompressionPolicy(round_to=2),
+    )
+    rng = np.random.default_rng(0)
+    shared = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 2 * page))
+    reqs = [
+        Request(rid=i, prompt=shared + tuple(
+            int(t) for t in rng.integers(0, cfg.vocab_size, tail)),
+            max_new_tokens=8)
+        for i, tail in enumerate((8, 4, 12, 6, 10, 5))
+    ]
+    report = {"arch": cfg.name, "page_size": page, "requests": len(reqs),
+              "max_slots": 2, "layouts": {}}
+    for layout in ("contiguous", "paged"):
+        eng = ServeEngine(
+            cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+            max_slots=2, cache_capacity=40,
+            paged=layout == "paged", page_size=page,
+        )
+        eng.run(reqs)  # warm the compile caches
+        t0 = time.perf_counter()
+        results = eng.run(reqs)
+        wall = time.perf_counter() - t0
+        new_tokens = sum(len(r.tokens) for r in results.values())
+        wire = eng.wire_summary()
+        decode_steps = wire["decode_steps"]
+        entry = {
+            "wall_s": round(wall, 4),
+            "new_tokens": new_tokens,
+            "tokens_per_s": round(new_tokens / wall, 2),
+            "decode_step_us": round(1e6 * wall / max(decode_steps, 1), 1),
+            "wire_bytes_per_token": round(
+                wire["host_device"] / new_tokens, 2
+            ),
+        }
+        if layout == "paged":
+            res = eng.kv_residency()
+            cap_tokens = eng.pages.peak * page
+            entry["kv_bytes_resident_per_token"] = round(
+                res["kv_bytes_peak"] / cap_tokens
+            )
+            entry["pages_peak"] = res["pages_peak"]
+            entry["prefill_compiles"] = wire["prefill_misses"]
+            entry["prefill_bucket_hits"] = wire["prefill_hits"]
+        else:
+            # contiguous: every slot holds full capacity whether used
+            # or not — the resident-bytes-per-token baseline paging beats
+            kv_bytes = _page_pool_equiv_bytes(cfg, 40, 2)
+            entry["kv_bytes_resident_per_token"] = round(kv_bytes / (40 * 2))
+        report["layouts"][layout] = entry
+        row(
+            f"serve.{layout}_tokens_per_s", entry["decode_step_us"],
+            f"tok_per_s={entry['tokens_per_s']}"
+            f"_wireB_per_tok={entry['wire_bytes_per_token']}",
+        )
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    row("serve.bench_json", 0.0, f"wrote={out_path}")
+
+
+def _page_pool_equiv_bytes(cfg, capacity, slots):
+    """Contiguous-layout resident KV bytes (fp32): every attn layer holds
+    slots x capacity x kv_heads x head_dim x 2 (K+V)."""
+    layers = cfg.num_groups * cfg.layers_per_group
+    attn = sum(1 for k in cfg.pattern if k == "attn") / len(cfg.pattern)
+    return int(
+        layers * attn * 2 * slots * capacity
+        * cfg.num_kv_heads * cfg.head_dim * 4
+    )
+
+
 def roofline_table():
     """§Roofline terms from the dry-run JSONs (if present)."""
     for mesh_name, path in (
@@ -195,13 +287,23 @@ def roofline_table():
 
 
 def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    entries = [
+        ("table2_3_profile", table2_3_profile),
+        ("fig2_bitpack_kernel", fig2_bitpack_kernel),
+        ("compression_ratio", compression_ratio),
+        ("fig4_normalized_time", fig4_normalized_time),
+        ("fig3_convergence", lambda: fig3_convergence(
+            steps=int(os.environ.get("BENCH_FIG3_STEPS", "140"))
+        )),
+        ("serve_engine_bench", serve_engine_bench),
+        ("roofline_table", roofline_table),
+    ]
     print("name,us_per_call,derived")
-    table2_3_profile()
-    fig2_bitpack_kernel()
-    compression_ratio()
-    fig4_normalized_time()
-    fig3_convergence(steps=int(os.environ.get("BENCH_FIG3_STEPS", "140")))
-    roofline_table()
+    for name, fn in entries:
+        if only and only not in name:
+            continue
+        fn()
     print(f"# {len(ROWS)} rows", file=sys.stderr)
 
 

@@ -15,6 +15,12 @@ first-class and override the loaded plan.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
       --prompt-lens 64,48,64,32 --gen 32 --max-slots 2 [--int8-kv] \
       [--plan plan.json] [--check-static] [--ckpt ckpt.npz]
+
+``--paged`` switches the engine to the block-paged KV layout (page pool
++ per-slot page table, ``--page-size`` tokens per page); ``--shared-prefix
+N`` prepends N common tokens to every prompt so the refcounted prefix-
+page sharing is visible in the printed page stats. Streams stay
+bit-exact vs ``--contiguous`` and the static reference either way.
 """
 from __future__ import annotations
 
@@ -107,10 +113,13 @@ def build_requests(args, cfg) -> list[Request]:
     else:
         lens = [args.prompt_len] * args.requests
     rng = np.random.default_rng(0)
+    shared = tuple(
+        int(t) for t in rng.integers(0, cfg.vocab_size, args.shared_prefix)
+    )
     return [
         Request(
             rid=i,
-            prompt=tuple(
+            prompt=shared + tuple(
                 int(t) for t in rng.integers(0, cfg.vocab_size, S)
             ),
             max_new_tokens=args.gen,
@@ -184,6 +193,21 @@ def main():
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--window", type=int, default=0,
                     help="sliding-window decode override (long-context)")
+    layout = ap.add_mutually_exclusive_group()
+    layout.add_argument("--paged", action="store_true",
+                        help="block-paged KV layout: page pool + per-slot "
+                             "page table, shared-prefix pages refcounted")
+    layout.add_argument("--contiguous", action="store_true",
+                        help="slotted contiguous KV layout (default)")
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="tokens per KV page (--paged)")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="page-pool size (default: slots x table width)")
+    ap.add_argument("--no-share-prefix", action="store_true",
+                    help="disable shared-prefix page interning (--paged)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many common tokens to every "
+                         "prompt (demonstrates prefix-page sharing)")
     ap.add_argument("--static", action="store_true",
                     help="run ONLY the static one-shot reference path")
     ap.add_argument("--check-static", action="store_true",
@@ -256,6 +280,9 @@ def main():
             cfg, mesh_cfg, mesh, spec_tree, storage, plan=plan,
             max_slots=slots, cache_capacity=cap, window=window,
             weight_stationary=args.weight_stationary,
+            paged=args.paged, page_size=args.page_size,
+            num_pages=args.num_pages or None,
+            share_prefix=not args.no_share_prefix,
         )
         t0 = time.time()
         results = engine.run(requests)
@@ -271,6 +298,17 @@ def main():
     print(f"host_device wire: {summary['host_device']} B staged at "
           f"{summary['token_width']} B/token "
           f"({4/summary['token_width']:.1f}x vs raw int32)")
+    if args.paged:
+        res = engine.kv_residency()
+        audit = engine.pages.audit()
+        print(f"paged KV: page_size={res['page_size']}, "
+              f"{audit['allocs']} page allocs / {audit['releases']} "
+              f"releases, peak {res['pages_peak']} pages resident "
+              f"({res['kv_bytes_peak']} B at {res['bytes_per_page']} "
+              "B/page)")
+        print(f"paged prefill: {summary['prefill_misses']} compiles, "
+              f"{summary['prefill_hits']} bucket cache hits; page-table "
+              f"staging {summary['page_table']} B")
     for r in requests[:4]:
         print(f"  req{r.rid}: {results[r.rid].tokens[:16]}")
 

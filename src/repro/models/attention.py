@@ -77,6 +77,71 @@ class QuantKVCache:
         return self.k.shape[1]
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedKVCache:
+    """Block-paged KV cache: a shared page *pool* instead of per-slot
+    contiguous arrays. K/V for all slots live in ``(P, page, Kv_local,
+    head_dim)`` pools; which pool rows a slot owns is decided by the
+    host-side page table (``(B, n_pages)`` int32, staged into each decode
+    step as ``batch["page_table"]`` — it is scheduler state, not cache
+    state, so it does NOT travel in this pytree). The last pool row is
+    the **trash page**: retired slots' ballast writes and unused table
+    entries point there, so resident bytes track tokens actually written,
+    not ``max_slots * capacity``.
+
+    ``pos`` is the per-slot absorbed-token count, exactly as in the
+    slotted :class:`KVCache` layout."""
+
+    k: jnp.ndarray    # (P, page, Kv_local, head_dim) — row P-1 is trash
+    v: jnp.ndarray
+    pos: jnp.ndarray  # (B,) int32
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def num_pages(self) -> int:
+        """Pool rows including the trailing trash page."""
+        return self.k.shape[0]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedQuantKVCache:
+    """int8 variant of :class:`PagedKVCache`: codes pools plus per-(page
+    row, offset, head) fp32 scale pools."""
+
+    k: jnp.ndarray        # (P, page, Kv_local, head_dim) int8
+    v: jnp.ndarray
+    k_scale: jnp.ndarray  # (P, page, Kv_local) f32
+    v_scale: jnp.ndarray
+    pos: jnp.ndarray      # (B,) int32
+
+    def tree_flatten(self):
+        return (self.k, self.v, self.k_scale, self.v_scale, self.pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def page_size(self) -> int:
+        return self.k.shape[1]
+
+    @property
+    def num_pages(self) -> int:
+        return self.k.shape[0]
+
+
 def _quantize_kv(x):
     """(B, S, Kv, hd) fp -> (int8 values, (B, S, Kv) scales)."""
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
@@ -87,12 +152,55 @@ def _quantize_kv(x):
     return q, scale
 
 
+def check_cache_geometry(capacity: int, window: Optional[int], context: int,
+                         *, label: str = ""):
+    """Guard against a KV cache that silently drops or evicts live tokens.
+
+    ``mha``'s rule: a cache rings iff ``window is not None and capacity
+    <= window``; a linear cache must hold the whole ``context``. Raised
+    here (shared by ``init_cache``/``init_caches`` construction and the
+    serve engine's per-request admission check) so the train-side
+    windowed ring caches get the same guard as the serve path."""
+    if context <= capacity:
+        return
+    ring = window is not None and capacity <= window
+    if not ring:
+        hint = (
+            " (no sliding window)" if window is None else
+            f" (window={window} does not ring: capacity "
+            f"{capacity} > window — shrink the cache capacity to the "
+            "window)"
+        )
+        raise ValueError(
+            f"{label}context {context} exceeds cache capacity "
+            f"{capacity}{hint}"
+        )
+    if capacity < window:
+        # a wrapping ring narrower than the window evicts tokens the
+        # attention mask still wants — streams would silently diverge
+        raise ValueError(
+            f"{label}context {context} wraps a ring cache of "
+            f"{capacity} slots that is smaller than window={window}: "
+            "live tokens would be evicted — set the cache capacity == "
+            "window"
+        )
+    # capacity == window rings faithfully (wrapping IS window eviction)
+
+
 def init_cache(batch: int, capacity: int, kv_heads: int, head_dim: int, dtype,
-               per_slot: bool = False):
+               per_slot: bool = False, *, window: Optional[int] = None,
+               context: Optional[int] = None):
     """``per_slot=True`` gives the cache a ``(batch,)`` position vector —
     the serve engine's slotted layout where every request sits at its own
     sequence offset. Scalar ``pos`` (the default) keeps the historical
-    uniform-batch semantics byte-for-byte."""
+    uniform-batch semantics byte-for-byte.
+
+    ``context`` (when known) is the number of tokens this cache will be
+    asked to absorb: construction then runs :func:`check_cache_geometry`
+    against ``window`` so a silently-evicting geometry fails loudly at
+    build time instead of corrupting streams."""
+    if context is not None:
+        check_cache_geometry(capacity, window, context)
     pos = jnp.zeros((batch,) if per_slot else (), jnp.int32)
     if dtype == jnp.int8:
         z = jnp.zeros((batch, capacity, kv_heads, head_dim), jnp.int8)
@@ -100,6 +208,21 @@ def init_cache(batch: int, capacity: int, kv_heads: int, head_dim: int, dtype,
         return QuantKVCache(z, z, sc, sc, pos)
     zeros = jnp.zeros((batch, capacity, kv_heads, head_dim), dtype)
     return KVCache(zeros, zeros, pos)
+
+
+def init_paged_cache(batch: int, num_pages: int, page_size: int,
+                     kv_heads: int, head_dim: int, dtype):
+    """Paged pool + per-slot positions. ``num_pages`` counts *allocatable*
+    pages; one extra trash row (index ``num_pages``) is appended for
+    ballast writes and unused page-table entries."""
+    P = num_pages + 1
+    pos = jnp.zeros((batch,), jnp.int32)
+    if dtype == jnp.int8:
+        z = jnp.zeros((P, page_size, kv_heads, head_dim), jnp.int8)
+        sc = jnp.zeros((P, page_size, kv_heads), jnp.float32)
+        return PagedQuantKVCache(z, z, sc, sc, pos)
+    zeros = jnp.zeros((P, page_size, kv_heads, head_dim), dtype)
+    return PagedKVCache(zeros, zeros, pos)
 
 
 # ---------------------------------------------------------------------------
@@ -259,6 +382,107 @@ def attend_decode(
     return out[:, None]
 
 
+def attend_decode_paged(
+    q: jnp.ndarray,  # (B, 1, Kv, G, hd)
+    cache,           # PagedKVCache | PagedQuantKVCache (already updated)
+    page_table: jnp.ndarray,  # (B, n_pages) int32
+    *,
+    window: Optional[int] = None,
+    impl: Optional[str] = None,
+) -> jnp.ndarray:
+    """Single-token attention over the paged pool.
+
+    ``impl=None`` dispatches like ``kernels.bitpack.resolve_interpret``:
+    the fused page-walking Pallas kernel on a real TPU (fp caches, no
+    window), the dense reference elsewhere. ``impl="dense"`` gathers the
+    slot's pages into a contiguous per-slot view and runs the *exact*
+    ``attend_decode`` ops — positions past ``pos`` mask to ``NEG_INF``
+    so their softmax weight is exactly 0.0, which keeps paged streams
+    bit-identical to the contiguous engine layout."""
+    quant = isinstance(cache, PagedQuantKVCache)
+    if impl is None:
+        impl = (
+            "pallas"
+            if jax.default_backend() == "tpu" and not quant and window is None
+            else "dense"
+        )
+    if impl == "pallas":
+        from repro.kernels.paged_attention import paged_attend
+
+        out = paged_attend(q[:, 0], cache.k, cache.v, page_table, cache.pos)
+        return out[:, None]
+    B = q.shape[0]
+    n_pages = page_table.shape[1]
+    cap = n_pages * cache.page_size
+    gk = cache.k[page_table].reshape(B, cap, *cache.k.shape[2:])
+    gv = cache.v[page_table].reshape(B, cap, *cache.v.shape[2:])
+    if quant:
+        gks = cache.k_scale[page_table].reshape(B, cap, -1)
+        gvs = cache.v_scale[page_table].reshape(B, cap, -1)
+        dense = QuantKVCache(gk, gv, gks, gvs, cache.pos)
+    else:
+        dense = KVCache(gk, gv, cache.pos)
+    return attend_decode(q, dense, ring=False, window=window)
+
+
+def _paged_write(cache, k, v, page_table):
+    """Scatter one decoded token per slot into its page-table slot.
+
+    ``k/v (B, 1, Kv, hd)``. Logical page ``pos // page`` is clamped to
+    the table width: retired-ballast slots (table all-trash, ``pos``
+    still advancing) then keep writing into the trash page."""
+    B = page_table.shape[0]
+    page = cache.page_size
+    pos = cache.pos  # (B,) tokens absorbed BEFORE this one
+    pi = jnp.minimum(pos // page, page_table.shape[1] - 1)
+    phys = page_table[jnp.arange(B), pi]  # (B,)
+    off = jnp.mod(pos, page)
+    if isinstance(cache, PagedQuantKVCache):
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        return PagedQuantKVCache(
+            cache.k.at[phys, off].set(kq[:, 0]),
+            cache.v.at[phys, off].set(vq[:, 0]),
+            cache.k_scale.at[phys, off].set(ks[:, 0]),
+            cache.v_scale.at[phys, off].set(vs[:, 0]),
+            pos + 1,
+        )
+    return PagedKVCache(
+        cache.k.at[phys, off].set(k[:, 0].astype(cache.k.dtype)),
+        cache.v.at[phys, off].set(v[:, 0].astype(cache.v.dtype)),
+        pos + 1,
+    )
+
+
+def _flash_prefill_viable(causal, window, is_cross, pos_offset, qg, k):
+    """The fused flash kernel handles the plain causal prefill shape on a
+    real TPU; everything else (CPU tests — the bit-exactness pins — and
+    windows/cross/per-slot offsets/untiled lengths) keeps ``attend_tiled``."""
+    if jax.default_backend() != "tpu":
+        return False
+    if not causal or window is not None or is_cross:
+        return False
+    if jnp.ndim(pos_offset):
+        return False
+    B, Sq, Kv, G, hd = qg.shape
+    Sk = k.shape[1]
+    if hd % 128:
+        return False
+    return Sq % 128 == 0 and Sk % 128 == 0
+
+
+def _flash_prefill_call(qg, k, v, *, q_offset):
+    """(B,S,Kv,G,hd) q / (B,Sk,Kv,hd) kv -> fused kernel layouts and back."""
+    from repro.kernels.flash_prefill import flash_prefill
+
+    B, Sq, Kv, G, hd = qg.shape
+    qf = qg.transpose(0, 2, 3, 1, 4).reshape(B, Kv * G, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3)
+    vf = v.transpose(0, 2, 1, 3)
+    out = flash_prefill(qf, kf, vf, causal=True, q_offset=q_offset)
+    return out.reshape(B, Kv, G, Sq, hd).transpose(0, 3, 1, 2, 4)
+
+
 # ---------------------------------------------------------------------------
 # full attention layer (projections + rope + cache plumbing)
 # ---------------------------------------------------------------------------
@@ -276,6 +500,7 @@ def mha(
     kv_ext: Optional[jnp.ndarray] = None,  # cross-attn source (B, N, d)
     is_cross: bool = False,
     pos_offset=0,
+    page_table: Optional[jnp.ndarray] = None,  # (B, n_pages) — paged decode
 ) -> tuple[jnp.ndarray, Optional[KVCache]]:
     """One attention layer. Returns (out (B,S,d), updated cache).
 
@@ -328,8 +553,23 @@ def mha(
 
     qg = q.reshape(B, S, Kv_l, G, hd)
     new_cache = cache
+    paged = isinstance(cache, (PagedKVCache, PagedQuantKVCache))
 
-    if mode == "decode" and not is_cross:
+    if paged and mode != "decode":
+        raise ValueError(
+            "paged caches are decode-only: prefill runs on contiguous "
+            "caches and the serve engine scatters them into pages"
+        )
+    if mode == "decode" and paged:
+        assert page_table is not None and S == 1
+        if window is not None:
+            raise ValueError(
+                "paged KV keeps the full context: sliding-window decode "
+                "stays on the contiguous ring layout"
+            )
+        new_cache = _paged_write(cache, k, v, page_table)
+        out = attend_decode_paged(qg, new_cache, page_table)
+    elif mode == "decode" and not is_cross:
         assert cache is not None and S == 1
         C = cache.capacity
         ring = window is not None and C <= window
@@ -380,14 +620,18 @@ def mha(
         new_cache = cache
     else:
         causal = cfg.causal and not is_cross
-        out = attend_tiled(
-            qg, k, v,
-            causal=causal,
-            window=window,
-            q_offset=int(pos_offset) if isinstance(pos_offset, int) else 0,
-            chunk=min(env.attn_chunk, S),
-            causal_skip=env.causal_skip,
-        )
+        q_off = int(pos_offset) if isinstance(pos_offset, int) else 0
+        if _flash_prefill_viable(causal, window, is_cross, pos_offset, qg, k):
+            out = _flash_prefill_call(qg, k, v, q_offset=q_off)
+        else:
+            out = attend_tiled(
+                qg, k, v,
+                causal=causal,
+                window=window,
+                q_offset=q_off,
+                chunk=min(env.attn_chunk, S),
+                causal_skip=env.causal_skip,
+            )
         if mode == "prefill":
             if is_cross:
                 new_cache = KVCache(k, v, jnp.asarray(k.shape[1], jnp.int32))

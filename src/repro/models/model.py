@@ -18,7 +18,16 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.models import ssm
-from repro.models.attention import KVCache, QuantKVCache, init_cache, mha
+from repro.models.attention import (
+    KVCache,
+    PagedKVCache,
+    PagedQuantKVCache,
+    QuantKVCache,
+    check_cache_geometry,
+    init_cache,
+    init_paged_cache,
+    mha,
+)
 from repro.models.env import Env
 from repro.models.layers import embed_lookup_vp, rms_norm
 from repro.models.loss import lm_loss
@@ -54,6 +63,7 @@ def apply_block(
     img_kv: Optional[jnp.ndarray] = None,
     window_override: Optional[int] = None,
     pos_offset=0,
+    page_table: Optional[jnp.ndarray] = None,
 ):
     """One block of the pattern. Returns (x', cache', aux)."""
     aux = 0.0
@@ -74,6 +84,7 @@ def apply_block(
             y, cache = mha(
                 xn, wa, cfg, env, mode=mode, cache=cache,
                 window=window, pos_offset=pos_offset,
+                page_table=page_table,
             )
         x = x + y
         dy, aux = _channel_mix(x, w, cfg, env)
@@ -106,6 +117,7 @@ def run_group(
     img_kv: Optional[jnp.ndarray] = None,
     window_override: Optional[int] = None,
     pos_offset=0,
+    page_table: Optional[jnp.ndarray] = None,
 ):
     """Scan the group's pattern repetitions. Returns (x, caches', aux)."""
     pat = cfg.pattern
@@ -120,7 +132,7 @@ def run_group(
             xc, c_out, aux = apply_block(
                 kind, xc, w, cfg, env, mode=mode, cache=c_in,
                 img_kv=img_kv, window_override=window_override,
-                pos_offset=pos_offset,
+                pos_offset=pos_offset, page_table=page_table,
             )
             new_caches[f"p{pi}"] = c_out
             aux_acc = aux_acc + aux
@@ -241,12 +253,22 @@ def forward_loss(
     return loss_local, metrics
 
 
-def forward_prefill(params, batch, cfg, env, *, mat_group, mat_top, cache_capacity):
-    """Prefill: returns (last-token logits, caches per group)."""
+def forward_prefill(params, batch, cfg, env, *, mat_group, mat_top,
+                    cache_capacity, window_override=None):
+    """Prefill: returns (last-token logits, caches per group).
+
+    ``batch["last"]`` (scalar int32, optional) marks the last *real*
+    token when the prompt is right-padded to a page-bucket length: the
+    logits are read there instead of at ``S - 1``. Padding is causal-
+    safe for pure-attention patterns only (the serve engine gates
+    bucketing accordingly); ``last`` requires the replicated layout
+    (no ``seq_parallel``), since an arbitrary position cannot be
+    gathered off one sequence shard."""
     x = _embed(params, batch, cfg, env, mat_top).astype(env.dtype)
     img_kv = _img_kv(params, batch, cfg, env, mat_top)
     B, S = x.shape[:2]
-    caches = init_caches(cfg, env, B, cache_capacity, env.dtype)
+    caches = init_caches(cfg, env, B, cache_capacity, env.dtype,
+                         context=S, window_override=window_override)
     new_caches = []
     for g, gp in enumerate(params["groups"]):
         x, c, _ = run_group(
@@ -256,12 +278,22 @@ def forward_prefill(params, batch, cfg, env, *, mat_group, mat_top, cache_capaci
         )
         new_caches.append(c)
     if env.seq_parallel_active:
+        if "last" in batch:
+            raise ValueError(
+                "batch['last'] (bucketed prefill) requires the replicated "
+                "layout: disable seq_parallel for padded prompts"
+            )
         # gather only each shard's LAST token (B, tp, d) — the global last
         # token is the final rank's — instead of the full residual stream;
         # the logits entry then runs replicated (a (B,1,d) slice can't shard)
         x = env.seq_unshard(x[:, -1:])
         env = env.without_seq_parallel()
-    logits = _logits(x[:, -1:], params, cfg, env, mat_top)
+        x_last = x[:, -1:]
+    elif "last" in batch:
+        x_last = lax.dynamic_slice_in_dim(x, batch["last"], 1, axis=1)
+    else:
+        x_last = x[:, -1:]
+    logits = _logits(x_last, params, cfg, env, mat_top)
     return logits, new_caches
 
 
@@ -275,13 +307,14 @@ def forward_decode(params, batch, caches, cfg, env, *, mat_group, mat_top,
     env = env.without_seq_parallel()
     x = _embed(params, batch, cfg, env, mat_top).astype(env.dtype)
     pos = batch["pos"]  # () int32 — tokens absorbed so far
+    page_table = batch.get("page_table")  # (B, n_pages) — paged engine only
     new_caches = []
     for g, gp in enumerate(params["groups"]):
         x, c, _ = run_group(
             x, gp, cfg, env, mode="decode",
             mat_fn=functools.partial(mat_group, g),
             caches=caches[g], window_override=window_override,
-            pos_offset=pos,
+            pos_offset=pos, page_table=page_table,
         )
         new_caches.append(c)
     logits = _logits(x, params, cfg, env, mat_top)
@@ -294,15 +327,24 @@ def forward_decode(params, batch, caches, cfg, env, *, mat_group, mat_top,
 
 
 def _block_cache(kind, cfg: ModelConfig, env: Env, batch, capacity, dtype,
-                 per_slot: bool = False):
+                 per_slot: bool = False, context=None, window_override=None):
     hd = cfg.head_dim
     if kind in ("attn", "local"):
         kv_l = env.heads_local(cfg.num_kv_heads)
         cap = capacity
         if kind == "local" and cfg.sliding_window:
             cap = min(capacity, cfg.sliding_window)
+        # the same window selection apply_block will use at runtime, so
+        # the construction-time geometry guard sees the real mask
+        window = cfg.sliding_window if cfg.sliding_window else None
+        if window_override is not None:
+            window = (
+                window_override if window is None
+                else min(window, window_override)
+            )
         kv_dtype = jnp.int8 if env.int8_kv else dtype
-        return init_cache(batch, cap, kv_l, hd, kv_dtype, per_slot=per_slot)
+        return init_cache(batch, cap, kv_l, hd, kv_dtype, per_slot=per_slot,
+                          window=window, context=context)
     if kind == "cross":
         kv_l = env.heads_local(cfg.num_kv_heads)
         return init_cache(batch, max(cfg.num_image_tokens, 1), kv_l, hd, dtype)
@@ -323,12 +365,18 @@ def _block_cache(kind, cfg: ModelConfig, env: Env, batch, capacity, dtype,
 
 
 def init_caches(cfg: ModelConfig, env: Env, batch: int, capacity: int, dtype,
-                per_slot: bool = False):
+                per_slot: bool = False, *, context=None,
+                window_override=None):
     """Stacked caches per group: groups[g][p<i>] leading dim = repetitions.
 
     ``per_slot=True`` builds the serve engine's slotted layout: KV caches
     carry a ``(reps, batch)`` position vector so every request (slot)
-    tracks its own absorbed-token count independently."""
+    tracks its own absorbed-token count independently.
+
+    ``context`` (tokens the caches will absorb, when known) arms the
+    construction-time :func:`~repro.models.attention.check_cache_geometry`
+    guard with the effective window (``sliding_window`` merged with
+    ``window_override`` exactly as ``apply_block`` merges them)."""
     pat = cfg.pattern
     reps = cfg.layers_per_group // len(pat)
     groups = []
@@ -336,7 +384,43 @@ def init_caches(cfg: ModelConfig, env: Env, batch: int, capacity: int, dtype,
         entry = {}
         for pi, kind in enumerate(pat):
             one = _block_cache(kind, cfg, env, batch, capacity, dtype,
-                               per_slot=per_slot)
+                               per_slot=per_slot, context=context,
+                               window_override=window_override)
+            entry[f"p{pi}"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), one
+            )
+        groups.append(entry)
+    return groups
+
+
+def init_paged_caches(cfg: ModelConfig, env: Env, batch: int, num_pages: int,
+                      page_size: int, dtype):
+    """Paged twin of ``init_caches(per_slot=True)``: every plain "attn"
+    block gets a shared page pool (:func:`init_paged_cache`) instead of a
+    per-slot contiguous array; recurrent/state kinds keep their slotted
+    layout (their state is O(1) per slot — nothing to page). Sliding
+    ("local") and cross blocks have no paged variant: rings and static
+    image KV stay contiguous."""
+    pat = cfg.pattern
+    reps = cfg.layers_per_group // len(pat)
+    groups = []
+    for g in range(cfg.num_groups):
+        entry = {}
+        for pi, kind in enumerate(pat):
+            if kind == "attn":
+                kv_l = env.heads_local(cfg.num_kv_heads)
+                kv_dtype = jnp.int8 if env.int8_kv else dtype
+                one = init_paged_cache(
+                    batch, num_pages, page_size, kv_l, cfg.head_dim, kv_dtype
+                )
+            elif kind in ("local", "cross"):
+                raise ValueError(
+                    f"{kind!r} blocks have no paged layout (sliding-window "
+                    "rings and image KV stay contiguous)"
+                )
+            else:
+                one = _block_cache(kind, cfg, env, batch, 1, dtype,
+                                   per_slot=True)
             entry[f"p{pi}"] = jax.tree_util.tree_map(
                 lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), one
             )

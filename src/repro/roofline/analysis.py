@@ -253,6 +253,7 @@ def serve_host_device_bytes(
     n_slots: int,
     prompt_lens,
     decode_steps: int,
+    page_table_entries: int = 0,
 ) -> dict:
     """Analytic serve-wire model: host<->device staging bytes of one
     continuous-batching engine run (the serving twin of
@@ -272,7 +273,11 @@ def serve_host_device_bytes(
       * ``decode_token_io``— per decode step the engine stages the full
         slot batch both ways (next-step feed h2d + sampled ids d2h),
         retired-slot ballast included — the honest cost of the
-        fixed-shape batch.
+        fixed-shape batch;
+      * ``page_table_h2d`` — paged engines re-stage the host page table
+        (``page_table_entries`` = slots x table width, raw int32 — no
+        token packing) every decode step; zero entries for the
+        contiguous layout keeps the model backward compatible.
     """
     pol = plan_or_policy
     if hasattr(pol, "host_device_policies"):  # a PrecisionPlan
@@ -284,13 +289,59 @@ def serve_host_device_bytes(
         "prompt_h2d": tok(sum(prompt_lens), vocab_size),
         "first_token_d2h": tok(admissions, vocab_size),
         "decode_token_io": 2 * tok(n_slots, vocab_size) * int(decode_steps),
+        "page_table_h2d": 4 * int(page_table_entries) * int(decode_steps),
         "token_width": pol.token_wire_width(vocab_size),
     }
     table["total"] = (
         table["prompt_h2d"] + table["first_token_d2h"]
-        + table["decode_token_io"]
+        + table["decode_token_io"] + table["page_table_h2d"]
     )
     return table
+
+
+def serve_paged_kv_bytes(
+    cfg,
+    *,
+    page_size: int,
+    requests,
+    shared_prefix_len: int = 0,
+    int8_kv: bool = False,
+    dtype_bytes: int = 4,
+) -> dict:
+    """Analytic page-granular KV residency for the paged serve engine:
+    the peak-resident byte model ``ServeEngine.kv_residency()`` must
+    reproduce when every request is resident at once (the shared-prefix
+    test pins measured == analytic).
+
+    ``requests`` is an iterable of ``(prompt_len, max_new_tokens)``;
+    ``shared_prefix_len`` tokens are common to ALL requests, so their
+    whole pages (``shared_prefix_len // page_size``) are stored once and
+    refcounted instead of per-request. Per page, every attention layer
+    holds K + V — ``2 * page_size * num_kv_heads * head_dim`` elements
+    at ``dtype_bytes`` (1 for int8 KV, which then adds two fp32 scale
+    planes of ``page_size * num_kv_heads`` each).
+    """
+    reqs = list(requests)
+    layers = cfg.num_groups * cfg.layers_per_group
+    attn_frac = sum(1 for k in cfg.pattern if k == "attn") / len(cfg.pattern)
+    attn_layers = int(layers * attn_frac)
+    kv_elems = page_size * cfg.num_kv_heads * cfg.head_dim
+    per_layer = 2 * kv_elems * (1 if int8_kv else dtype_bytes)
+    if int8_kv:
+        per_layer += 2 * page_size * cfg.num_kv_heads * 4  # fp32 scales
+    bytes_per_page = per_layer * attn_layers
+    shared_pages = shared_prefix_len // page_size
+    private_pages = sum(
+        -(-(s + g) // page_size) - shared_pages for s, g in reqs
+    )
+    pages = shared_pages + private_pages
+    return {
+        "bytes_per_page": bytes_per_page,
+        "shared_pages": shared_pages,
+        "private_pages": private_pages,
+        "pages": pages,
+        "kv_bytes_resident": pages * bytes_per_page,
+    }
 
 
 def model_flops_estimate(cfg, shape, chips: int) -> float:

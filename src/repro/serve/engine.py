@@ -39,6 +39,16 @@ launcher path still serves them).
 Engine compilation surface: ONE decode program (fixed ``(slots, 1)``
 shape) plus one prefill program per distinct prompt length — bucket
 arrival lengths if that set is unbounded.
+
+``paged=True`` swaps the contiguous slotted layout for the **block-paged
+KV cache**: fixed-size pages in a slot-global pool, a host-side per-slot
+page table staged each decode step, a refcounted :class:`PageAllocator`
+(``SlotManager``'s page-granular twin), shared-prefix page interning
+(a common system prompt is resident ONCE, copy-on-write), and prompt
+bucketing to page granularity so one prefill program serves a whole
+bucket. Streams stay bit-exact vs the contiguous engine and
+``generate_static``; see docs/serving.md §paged for the layout and
+lifecycle.
 """
 from __future__ import annotations
 
@@ -182,6 +192,108 @@ class SlotManager:
         }
 
 
+class PageAllocator:
+    """Free-page allocator with refcounts — the page-granular twin of
+    :class:`SlotManager`, same leak-audit contract.
+
+    Pages are the unit of KV residency in the paged layout: ``alloc``
+    hands out physical pool rows at admission, ``retain`` adds a
+    reference when a shared-prefix page is reused (CoW sharing: shared
+    pages are immutable by construction — decode only ever writes a
+    slot's private tail pages), ``release`` drops one reference and
+    returns the page to the free list when the count hits zero.
+    :meth:`audit` asserts conservation (free xor live, allocs ==
+    releases + live)."""
+
+    def __init__(self, num_pages: int):
+        if num_pages < 1:
+            raise ValueError("need at least one page")
+        self.num_pages = num_pages
+        self._free = list(range(num_pages - 1, -1, -1))  # pop() -> lowest
+        self._refs: dict[int, int] = {}  # page -> refcount
+        self.alloc_count = 0
+        self.release_count = 0
+        self.peak = 0
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def live_pages(self) -> int:
+        return len(self._refs)
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise RuntimeError(f"need {n} pages, {len(self._free)} free")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            if p in self._refs:
+                raise RuntimeError(f"page {p} double-allocated")
+            self._refs[p] = 1
+        self.alloc_count += n
+        self.peak = max(self.peak, len(self._refs))
+        return pages
+
+    def retain(self, page: int) -> None:
+        if page not in self._refs:
+            raise RuntimeError(f"retain of dead page {page}")
+        self._refs[page] += 1
+
+    def release(self, page: int) -> bool:
+        """Drop one reference; True when the page was actually freed."""
+        if page not in self._refs:
+            raise RuntimeError(f"release of dead page {page}")
+        self._refs[page] -= 1
+        if self._refs[page] > 0:
+            return False
+        del self._refs[page]
+        self._free.append(page)
+        self.release_count += 1
+        return True
+
+    def audit(self) -> dict:
+        free, live = set(self._free), set(self._refs)
+        if free & live:
+            raise AssertionError(f"pages both free and live: {free & live}")
+        if len(self._free) != len(free):
+            raise AssertionError("duplicate entries in the free page list")
+        if free | live != set(range(self.num_pages)):
+            raise AssertionError("page leak: free ∪ live != all pages")
+        if any(c < 1 for c in self._refs.values()):
+            raise AssertionError("live page with refcount < 1")
+        if self.alloc_count != self.release_count + len(live):
+            raise AssertionError("page alloc/release counters out of balance")
+        return {
+            "free": len(free),
+            "live": len(live),
+            "allocs": self.alloc_count,
+            "releases": self.release_count,
+            "peak": self.peak,
+        }
+
+
+def _page_pool_bytes(caches) -> int:
+    """Global bytes ONE page occupies summed over every paged pool node
+    (all groups x reps x K/V, plus int8 scale planes). Works on the
+    ``global_cache_shapes`` tree (ShapeDtypeStructs) or live arrays."""
+    per_page = 0
+    for group in caches:
+        for node in group.values():
+            if isinstance(node, (M.PagedKVCache, M.PagedQuantKVCache)):
+                leaves = [node.k, node.v]
+                if isinstance(node, M.PagedQuantKVCache):
+                    leaves += [node.k_scale, node.v_scale]
+                for leaf in leaves:
+                    P = leaf.shape[1]  # stacked (R, P, page, ...)
+                    size = int(np.prod(leaf.shape))
+                    per_page += size * jnp.dtype(leaf.dtype).itemsize // P
+    return per_page
+
+
 # ---------------------------------------------------------------------------
 # the engine
 # ---------------------------------------------------------------------------
@@ -211,6 +323,10 @@ class ServeEngine:
         cache_capacity: int,
         window: int | None = None,
         weight_stationary: bool = False,
+        paged: bool = False,
+        page_size: int = 64,
+        num_pages: int | None = None,
+        share_prefix: bool = True,
     ):
         if not cfg.causal:
             raise ValueError(f"{cfg.name} is encoder-only: nothing to serve")
@@ -236,23 +352,64 @@ class ServeEngine:
         self.max_slots = int(max_slots)
         self.cache_capacity = int(cache_capacity)
         self.window = window
+        self.paged = bool(paged)
+        self.page_size = int(page_size)
+        if self.paged:
+            if self.page_size < 1:
+                raise ValueError("page_size must be >= 1")
+            if window is not None or cfg.sliding_window:
+                raise ValueError(
+                    f"{cfg.name}: paged serving keeps the full context "
+                    "resident — sliding-window (ring) serving stays on the "
+                    "contiguous layout"
+                )
+        # page-table width: capacity rounded up to whole pages
+        self._table_width = -(-self.cache_capacity // self.page_size)
+        self.num_pages = (
+            int(num_pages) if num_pages is not None
+            else self.max_slots * self._table_width
+        )
+        # padded (page-bucketed) prompts are causal-safe only for pure-
+        # attention patterns: MoE capacity dispatch ranks tokens across the
+        # sequence and recurrent state absorbs pad positions
+        self._bucket = (
+            self.paged
+            and not cfg.num_experts
+            and all(k == "attn" for k in cfg.pattern)
+        )
+        # prefix pages are bit-shareable only when position i depends on
+        # tokens <= i alone; the MoE dispatch breaks that per-position
+        # causality (capacity ranking sees the whole sequence)
+        self.share_prefix = (
+            bool(share_prefix) and self.paged and not cfg.num_experts
+        )
         self.host_policy = self.plan.host_device_policies()[0]
         self.token_width = self.host_policy.token_wire_width(cfg.vocab_size)
         self.slots = SlotManager(self.max_slots)
+        self.pages = PageAllocator(self.num_pages) if self.paged else None
+        self._intern: dict[tuple, int] = {}  # prompt-prefix key -> page
+        self._page_key: dict[int, tuple] = {}  # page -> interned key
+        self._slot_pages: dict[int, list[int]] = {}  # slot -> page row
         self.step_log: list[dict] = []
 
         B = self.max_slots
         self._shard_batch = (
-            mesh_cfg.dshards > 1 and B % mesh_cfg.dshards == 0
+            not self.paged  # the page pool has no batch dim to shard
+            and mesh_cfg.dshards > 1 and B % mesh_cfg.dshards == 0
         )
         dshapes = {
             "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
             "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
         }
+        if self.paged:
+            dshapes["page_table"] = jax.ShapeDtypeStruct(
+                (B, self._table_width), jnp.int32
+            )
         self._decode = make_decode_step(
             cfg, mesh_cfg, mesh, spec_tree, dshapes, plan=self.plan,
             shard_batch=self._shard_batch, window_override=window,
             weight_stationary=weight_stationary, slot_caches=True,
+            paged=self.paged,
         )
         self._weights = storage
         if weight_stationary:
@@ -287,69 +444,123 @@ class ServeEngine:
 
         self._insert = jax.jit(insert, donate_argnums=(0,))
 
+        page = self.page_size
+
+        def insert_paged(big, small, slot, phys, start, pos_val):
+            # scatter the prompt's freshly computed KV pages into the pool
+            # (shared-prefix hits are already resident and immutable —
+            # skipped, so the first writer's bits stay authoritative) and
+            # stamp the slot's position; non-paged nodes (recurrent state)
+            # keep the contiguous slot insert
+            n_new = phys.shape[0]
+
+            def pool_write(b, s):
+                # b (R, P, page, ...) pool; s (R, 1, cap_pre, ...) prefill
+                seg = jax.lax.dynamic_slice_in_dim(
+                    s[:, 0], start, n_new * page, axis=1
+                )
+                seg = seg.reshape(s.shape[0], n_new, page, *s.shape[3:])
+                return b.at[:, phys].set(seg.astype(b.dtype))
+
+            def one_node(bn, sn):
+                if isinstance(bn, M.PagedQuantKVCache):
+                    return M.PagedQuantKVCache(
+                        pool_write(bn.k, sn.k), pool_write(bn.v, sn.v),
+                        pool_write(bn.k_scale, sn.k_scale),
+                        pool_write(bn.v_scale, sn.v_scale),
+                        bn.pos.at[:, slot].set(pos_val),
+                    )
+                if isinstance(bn, M.PagedKVCache):
+                    return M.PagedKVCache(
+                        pool_write(bn.k, sn.k), pool_write(bn.v, sn.v),
+                        bn.pos.at[:, slot].set(pos_val),
+                    )
+
+                def one(b, s):
+                    if b.ndim == s.ndim:
+                        return b.at[:, slot].set(s[:, 0])
+                    return b.at[:, slot].set(s)
+
+                return jax.tree_util.tree_map(one, bn, sn)
+
+            return [
+                {key: one_node(bn, sg[key]) for key, bn in bg.items()}
+                for bg, sg in zip(big, small)
+            ]
+
+        self._insert_paged = jax.jit(insert_paged, donate_argnums=(0,))
+        self._page_bytes = (
+            _page_pool_bytes(self._cache_shapes()) if self.paged else 0
+        )
+
     # -- compiled-program plumbing ---------------------------------------
     def _prefill(self, prompt_len: int):
-        """One compiled prefill per distinct prompt length."""
+        """One compiled prefill per distinct prompt length (per distinct
+        page-*bucket* length when prompt bucketing is on — the paged
+        engine pads prompts to page multiples so arrivals share
+        programs; padding happens device-side, staging stays at the true
+        length)."""
         if prompt_len not in self._prefill_cache:
             plan = self.plan
-            if plan.seq_parallel and prompt_len % max(self.mesh_cfg.tp, 1):
+            if self.paged:
+                # batch["last"] (the true last-token gather for padded
+                # prompts) needs the replicated layout
+                plan = dataclasses.replace(plan, seq_parallel=False)
+            elif plan.seq_parallel and prompt_len % max(self.mesh_cfg.tp, 1):
                 # seq-parallel needs S % tp == 0; odd lengths fall back to
                 # the psum layout (pinned bit-exact by scenario_seq_parallel)
                 plan = dataclasses.replace(plan, seq_parallel=False)
             bshapes = {
                 "tokens": jax.ShapeDtypeStruct((1, prompt_len), jnp.int32)
             }
+            cap = self.cache_capacity
+            if self.paged:
+                # page-rounded so any padded bucket length fits; the extra
+                # tail positions never reach the pool (insert slices whole
+                # prompt pages only) and a bigger prefill cache does not
+                # change the logits
+                cap = self._table_width * self.page_size
+                bshapes["last"] = jax.ShapeDtypeStruct((), jnp.int32)
             self._prefill_cache[prompt_len] = make_prefill_step(
                 self.cfg, self.mesh_cfg, self.mesh, self.spec_tree, bshapes,
-                plan=plan, cache_capacity=self.cache_capacity,
-                shard_batch=False,
+                plan=plan, cache_capacity=cap, shard_batch=False,
+                window_override=self.window,
             )
         return self._prefill_cache[prompt_len]
 
-    def _init_caches(self):
-        shapes = global_cache_shapes(
+    def _cache_shapes(self):
+        return global_cache_shapes(
             self.cfg, self.mesh_cfg, self.max_slots, self.cache_capacity,
             self._cache_dtype, shard_batch=self._shard_batch, per_slot=True,
             int8_kv=self.plan.int8_kv,
+            paged_pages=self.num_pages if self.paged else None,
+            page_size=self.page_size,
         )
+
+    def _init_caches(self):
         return jax.tree_util.tree_map(
-            lambda s: jnp.zeros(s.shape, s.dtype), shapes,
+            lambda s: jnp.zeros(s.shape, s.dtype), self._cache_shapes(),
             is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
         )
 
     def _validate(self, req: Request):
         if max(req.prompt) >= self.cfg.vocab_size or min(req.prompt) < 0:
             raise ValueError(f"request {req.rid}: prompt id out of vocab")
-        cap = self.cache_capacity
         need = len(req.prompt) + req.max_new_tokens
-        # the cache is a ring buffer ONLY when capacity <= window (mha's
-        # rule); a linear cache must hold the whole request — without
-        # this check writes past capacity are silently dropped
-        ring = self.window is not None and cap <= self.window
-        if need > cap:
-            if not ring:
-                hint = (
-                    " (no sliding window)" if self.window is None else
-                    f" (window={self.window} does not ring: capacity "
-                    f"{cap} > window — shrink cache_capacity to the "
-                    "window)"
-                )
+        # the geometry rules (linear cache must hold the request; rings
+        # only when capacity <= window; narrow rings evict live tokens)
+        # live with the cache constructors — same guard, same wording
+        M.check_cache_geometry(
+            self.cache_capacity, self.window, need,
+            label=f"request {req.rid}: prompt+gen ",
+        )
+        if self.paged:
+            need_pages = -(-need // self.page_size)
+            if need_pages > self.num_pages:
                 raise ValueError(
-                    f"request {req.rid}: prompt+gen = {need} exceeds "
-                    f"cache capacity {cap}{hint}"
+                    f"request {req.rid}: needs {need_pages} pages of "
+                    f"{self.page_size}, the pool has {self.num_pages}"
                 )
-            if cap < self.window:
-                # a wrapping ring narrower than the window evicts tokens
-                # the attention mask still wants — streams would silently
-                # diverge from the reference
-                raise ValueError(
-                    f"request {req.rid}: prompt+gen = {need} wraps a "
-                    f"ring cache of {cap} slots that is smaller than "
-                    f"window={self.window}: live tokens would be "
-                    "evicted — set cache_capacity == window"
-                )
-        # cap == window rings faithfully (wrapping IS window eviction),
-        # and prefill keeps the trailing window for any prompt length
 
     # -- the serving loop -------------------------------------------------
     def run(self, requests, *, max_steps: int = 1_000_000) -> dict[int, GenResult]:
@@ -370,8 +581,16 @@ class ServeEngine:
         # owned; every run starts from a fresh allocator — the engine
         # cache is rebuilt below, so stale residency means nothing
         self.slots = SlotManager(self.max_slots)
-
         B, w = self.max_slots, self.token_width
+        page = self.page_size
+        if self.paged:
+            self.pages = PageAllocator(self.num_pages)
+            self._intern, self._page_key, self._slot_pages = {}, {}, {}
+            # host-side page table; index num_pages = the pool's trash row
+            # (unused entries and retired slots' ballast writes land there)
+            self._table = np.full(
+                (B, self._table_width), self.num_pages, np.int32
+            )
         queue = collections.deque(requests)
         active: dict[int, _ReqState] = {}
         results: dict[int, GenResult] = {}
@@ -384,21 +603,70 @@ class ServeEngine:
         while (queue or active) and step < max_steps:
             rec = {"step": step, "admitted": 0, "active": 0,
                    "decoded": 0, "host_device": 0}
+            if self.paged:
+                rec.update(page_table=0, prefill_hits=0, prefill_misses=0)
 
             # -- admission: fill free slots between decode steps ----------
             while queue and self.slots.free_slots:
-                req = queue.popleft()
-                slot = self.slots.alloc(req.rid)
+                req = queue[0]
                 S = len(req.prompt)
+                hits: list[int] = []
+                if self.paged:
+                    need = -(-(S + req.max_new_tokens) // page)
+                    full_pages = S // page  # whole-prompt pages, internable
+                    if self.share_prefix:
+                        for i in range(full_pages):
+                            pid = self._intern.get(req.prompt[:(i + 1) * page])
+                            if pid is None:
+                                break
+                            hits.append(pid)
+                    if need - len(hits) > self.pages.free_pages:
+                        break  # FIFO: head of line waits for pages to free
+                queue.popleft()
+                slot = self.slots.alloc(req.rid)
+                if self.paged:
+                    for pid in hits:
+                        self.pages.retain(pid)
+                    row = hits + self.pages.alloc(need - len(hits))
+                    for i in range(len(hits), full_pages):
+                        key = req.prompt[:(i + 1) * page]
+                        self._intern[key] = row[i]
+                        self._page_key[row[i]] = key
+                    self._slot_pages[slot] = list(row)
+                    self._table[slot, :] = self.num_pages  # trash
+                    self._table[slot, :len(row)] = row
                 planes = pack_tokens_host(
                     np.asarray(req.prompt, np.int32)[None, :], w
-                )  # (w, 1, S) — h2d prompt staging
+                )  # (w, 1, S) — h2d prompt staging (true length, no pads)
                 rec["host_device"] += planes.nbytes
                 tokens_dev = self._unpack(jax.device_put(planes))
-                logits, pcaches = self._prefill(S)(
-                    self.storage, {"tokens": tokens_dev}
-                )
-                caches = self._insert(caches, pcaches, np.int32(slot))
+                if self.paged:
+                    Spad = -(-S // page) * page if self._bucket else S
+                    rec["prefill_hits" if Spad in self._prefill_cache
+                        else "prefill_misses"] += 1
+                    if Spad > S:
+                        tokens_dev = jnp.pad(
+                            tokens_dev, ((0, 0), (0, Spad - S))
+                        )
+                    pbatch = {"tokens": tokens_dev,
+                              "last": jnp.asarray(S - 1, jnp.int32)}
+                    logits, pcaches = self._prefill(Spad)(
+                        self.storage, pbatch
+                    )
+                    n_hits = len(hits)
+                    prompt_pages = -(-S // page)
+                    phys = jnp.asarray(
+                        row[n_hits:prompt_pages], jnp.int32
+                    )
+                    caches = self._insert_paged(
+                        caches, pcaches, np.int32(slot), phys,
+                        np.int32(n_hits * page), np.int32(S),
+                    )
+                else:
+                    logits, pcaches = self._prefill(S)(
+                        self.storage, {"tokens": tokens_dev}
+                    )
+                    caches = self._insert(caches, pcaches, np.int32(slot))
                 _, tok_planes = self._sample(logits)
                 tok_planes = np.asarray(tok_planes)  # (w, 1) — d2h first id
                 rec["host_device"] += tok_planes.nbytes
@@ -423,6 +691,12 @@ class ServeEngine:
             rec["host_device"] += feed_planes.nbytes  # h2d token staging
             tokens_dev = self._unpack(jax.device_put(feed_planes))
             batch = {"tokens": tokens_dev, "pos": jax.device_put(pos_host)}
+            if self.paged:
+                # the page table is scheduler state staged fresh each step
+                # (retires/admissions edit the host copy between steps)
+                rec["host_device"] += self._table.nbytes
+                rec["page_table"] += self._table.nbytes
+                batch["page_table"] = jax.device_put(self._table)
             logits, caches = self._decode(self._weights, caches, batch)
             _, out_planes = self._sample(logits)
             out_planes = np.asarray(out_planes)  # (w, B) — d2h sampled ids
@@ -444,10 +718,22 @@ class ServeEngine:
             raise RuntimeError(f"engine stopped at max_steps={max_steps} "
                                f"with {len(queue) + len(active)} unfinished")
         self.slots.audit()
+        if self.paged:
+            audit = self.pages.audit()
+            if audit["live"] or self._intern or self._slot_pages:
+                raise AssertionError("page leak after drain")
         return results
 
     def _retire(self, st: _ReqState, step: int) -> GenResult:
         self.slots.release(st.slot)
+        if self.paged:
+            for pid in self._slot_pages.pop(st.slot):
+                if self.pages.release(pid):
+                    # last holder gone: an interned prefix page dies with it
+                    key = self._page_key.pop(pid, None)
+                    if key is not None:
+                        del self._intern[key]
+            self._table[st.slot, :] = self.num_pages  # ballast -> trash
         return GenResult(
             rid=st.req.rid,
             prompt_len=len(st.req.prompt),
@@ -461,12 +747,42 @@ class ServeEngine:
         """Aggregate of :attr:`step_log` in the shape the analytic
         serve-wire model (:func:`repro.roofline.analysis.
         serve_host_device_bytes`) reproduces."""
-        return {
+        out = {
             "host_device": sum(r["host_device"] for r in self.step_log),
             "decode_steps": sum(1 for r in self.step_log if r["decoded"]),
             "admissions": sum(r["admitted"] for r in self.step_log),
             "steps": len(self.step_log),
             "token_width": self.token_width,
+        }
+        if self.paged:
+            out["page_table"] = sum(
+                r.get("page_table", 0) for r in self.step_log
+            )
+            out["page_table_entries"] = self.max_slots * self._table_width
+            out["prefill_hits"] = sum(
+                r.get("prefill_hits", 0) for r in self.step_log
+            )
+            out["prefill_misses"] = sum(
+                r.get("prefill_misses", 0) for r in self.step_log
+            )
+        return out
+
+    def kv_residency(self) -> dict:
+        """Measured page-granular KV residency — the counterpart of the
+        analytic :func:`repro.roofline.analysis.serve_paged_kv_bytes`.
+        ``bytes_per_page`` sums every paged pool's per-page footprint
+        across layers (int8 KV includes the scale planes)."""
+        if not self.paged:
+            raise RuntimeError("kv_residency is defined for the paged "
+                               "engine (paged=True)")
+        live, peak = self.pages.live_pages, self.pages.peak
+        return {
+            "pages_live": live,
+            "pages_peak": peak,
+            "page_size": self.page_size,
+            "bytes_per_page": self._page_bytes,
+            "kv_bytes_resident": live * self._page_bytes,
+            "kv_bytes_peak": peak * self._page_bytes,
         }
 
 

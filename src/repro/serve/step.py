@@ -74,12 +74,19 @@ def _serve_plan(cfg, args, plan, legacy, *, caller, n_positional):
 
 
 def cache_pspecs(cfg: ModelConfig, mesh_cfg: MeshCfg, shard_batch: bool,
-                 int8_kv: bool = False, per_slot: bool = False):
+                 int8_kv: bool = False, per_slot: bool = False,
+                 paged: bool = False):
     """PartitionSpec tree matching model.init_caches structure.
 
     ``per_slot=True`` matches the engine's slotted layout
     (``init_caches(per_slot=True)``): KV positions are ``(R, B)`` vectors
-    sharded like the batch dim instead of replicated scalars."""
+    sharded like the batch dim instead of replicated scalars.
+
+    ``paged=True`` matches ``model.init_paged_caches``: attn blocks hold
+    a page *pool* ``(R, P, page, Kv_l, hd)`` — kv heads stay rank-local
+    on the model axis, but the pool has no batch dim to dp-shard (every
+    shard must see every page, so paged serving forces
+    ``shard_batch=False``)."""
     if mesh_cfg.tp == 1 and mesh_cfg.dshards == 1:
         none = lambda *a: P()
         dp = mo = None
@@ -90,13 +97,26 @@ def cache_pspecs(cfg: ModelConfig, mesh_cfg: MeshCfg, shard_batch: bool,
             else mesh_cfg.fsdp_axes[0]
         ) if (mesh_cfg.dshards > 1 and shard_batch) else None
         mo = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
+    if paged and dp is not None:
+        raise ValueError("paged caches cannot shard the batch dim: the "
+                         "page pool is slot-global")
     pos_spec = P(None, dp) if per_slot else P(None)
     pat = cfg.pattern
     groups = []
     for g in range(cfg.num_groups):
         entry = {}
         for pi, kind in enumerate(pat):
-            if kind in ("attn", "local", "cross"):
+            if paged and kind == "attn":
+                # Paged(Quant)KVCache: pool (R,P,page,Kv_l,hd), pos (R,B)
+                kv = P(None, None, None, mo, None)
+                if int8_kv:
+                    sc = P(None, None, None, mo)
+                    entry[f"p{pi}"] = M.PagedQuantKVCache(
+                        kv, kv, sc, sc, P(None, None)
+                    )
+                else:
+                    entry[f"p{pi}"] = M.PagedKVCache(kv, kv, P(None, None))
+            elif kind in ("attn", "local", "cross"):
                 # KVCache(k, v, pos): (R,B,C,Kv_l,hd) — kv heads are rank-local
                 kv = P(None, dp, None, mo, None)
                 if int8_kv and kind != "cross":
@@ -136,13 +156,17 @@ def global_cache_shapes(
     shard_batch: bool = True,
     per_slot: bool = False,
     int8_kv: bool | None = None,
+    paged_pages: int | None = None,
+    page_size: int | None = None,
 ):
     """Global ShapeDtypeStruct tree for decode-step cache inputs (zero alloc).
 
     Local cache shapes come from ``model.init_caches`` under eval_shape; any
     dim mapped to the model axis in ``cache_pspecs`` is scaled by tp to get
     the global (pre-shard_map) shape. ``per_slot=True`` selects the serve
-    engine's slotted layout (per-request KV position vectors).
+    engine's slotted layout (per-request KV position vectors);
+    ``paged_pages`` + ``page_size`` select ``model.init_paged_caches``
+    (``capacity`` is then ignored for attn blocks).
 
     ``int8_kv`` quantizes the attention KV leaves only; recurrent state
     leaves keep ``dtype``. The legacy spelling (``dtype=jnp.int8``) is
@@ -155,12 +179,19 @@ def global_cache_shapes(
     else:
         state_dtype = jnp.float32 if dtype == jnp.int8 else dtype
     env = Env(tp=mesh_cfg.tp, int8_kv=int8_kv)
-    local = jax.eval_shape(
-        lambda: M.init_caches(cfg, env, batch, capacity, state_dtype,
-                              per_slot=per_slot)
-    )
+    paged = paged_pages is not None
+    if paged:
+        local = jax.eval_shape(
+            lambda: M.init_paged_caches(cfg, env, batch, paged_pages,
+                                        page_size, state_dtype)
+        )
+    else:
+        local = jax.eval_shape(
+            lambda: M.init_caches(cfg, env, batch, capacity, state_dtype,
+                                  per_slot=per_slot)
+        )
     cspecs = cache_pspecs(cfg, mesh_cfg, shard_batch, int8_kv=int8_kv,
-                          per_slot=per_slot)
+                          per_slot=per_slot, paged=paged)
 
     def fix(sds, spec):
         shape = list(sds.shape)
@@ -195,6 +226,7 @@ def make_prefill_step(
     batch_shapes: dict | None = None,
     cache_capacity: int,
     shard_batch: bool = True,
+    window_override=None,
     **legacy,
 ):
     plan, rest = _serve_plan(
@@ -214,7 +246,7 @@ def make_prefill_step(
         return M.forward_prefill(
             storage, batch, cfg, env,
             mat_group=mat_group, mat_top=mat_top_factory(storage),
-            cache_capacity=cache_capacity,
+            cache_capacity=cache_capacity, window_override=window_override,
         )
 
     if mesh is None:
@@ -303,6 +335,7 @@ def make_decode_step(
     window_override=None,
     weight_stationary: bool = False,
     slot_caches: bool = False,
+    paged: bool = False,
     **legacy,
 ):
     plan, rest = _serve_plan(
@@ -338,7 +371,7 @@ def make_decode_step(
         pspecs = tree_partition_specs(spec_tree, mesh_cfg)
     bspecs = batch_pspecs(batch_shapes, mesh_cfg, shard_batch)
     cspecs = cache_pspecs(cfg, mesh_cfg, shard_batch, int8_kv=plan.int8_kv,
-                          per_slot=slot_caches)
+                          per_slot=slot_caches, paged=paged)
     mo = mesh_cfg.model_axis if mesh_cfg.tp > 1 else None
     dp = _logits_dp(mesh_cfg, shard_batch)
     logits_spec = P(dp, None, mo)

@@ -9,6 +9,7 @@ import pytest
 SCENARIOS = [
     "scenario_compressed_collectives.py",
     "scenario_dist_train.py",
+    "scenario_paged_serve.py",
     "scenario_perf_levers.py",
     "scenario_plan.py",
     "scenario_seq_parallel.py",

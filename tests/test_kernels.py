@@ -158,3 +158,117 @@ def test_special_values_survive():
             # represent zero exactly but not 1.0 or inf — as in the paper,
             # 8-bit is only useful very early in training.
             np.testing.assert_array_equal(q[:2], np.asarray(w)[:2])
+
+
+# ---------------------------------------------------------------------------
+# attention kernels: flash prefill + paged decode (interpret-mode parity)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.flash_prefill import flash_prefill, flash_prefill_ref
+from repro.kernels.paged_attention import paged_attend, paged_attend_ref
+
+
+def _qkv(B, H, Kv, Sq, Sk, hd, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(0, 1, (B, H, Sq, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (B, Kv, Sk, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (B, Kv, Sk, hd)).astype(np.float32))
+    return q, k, v
+
+
+def _dense_softmax_attn(q, k, v, causal, q_offset):
+    # plain softmax reference (not the kernel's schedule): allclose only
+    B, H, Sq, hd = q.shape
+    Kv, Sk = k.shape[1], k.shape[2]
+    g = H // Kv
+    kh = jnp.repeat(k, g, axis=1)
+    vh = jnp.repeat(v, g, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, kh) * hd ** -0.5
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)[:, None]
+        mask = qpos >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vh)
+
+
+@pytest.mark.parametrize("shape", [(1, 2, 1, 256, 256, 128),
+                                   (2, 4, 2, 128, 384, 128)])
+def test_flash_prefill_kernel_matches_ref_bitwise(shape):
+    B, H, Kv, Sq, Sk, hd = shape
+    off = Sk - Sq  # chunked prefill: q tile ends the kv sequence
+    q, k, v = _qkv(B, H, Kv, Sq, Sk, hd, seed=5)
+    got = flash_prefill(q, k, v, causal=True, q_offset=off, interpret=True)
+    want = flash_prefill_ref(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_allclose(
+        np.asarray(got),
+        np.asarray(_dense_softmax_attn(q, k, v, True, off)),
+        atol=2e-5,
+    )
+
+
+def test_flash_prefill_q_offset_parity():
+    # chunked prefill: the q tile sits at the END of the kv sequence
+    q, k, v = _qkv(1, 2, 2, 128, 256, 128, seed=9)
+    got = flash_prefill(q, k, v, causal=True, q_offset=128, interpret=True)
+    want = flash_prefill_ref(q, k, v, causal=True, q_offset=128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def _paged_setup(B, Kv, G, page, n_pages, num_phys, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(
+        rng.normal(0, 1, (B, Kv, G, 128)).astype(np.float32)
+    )
+    pool_shape = (num_phys, page, Kv, 128)
+    k_pool = jnp.asarray(rng.normal(0, 1, pool_shape).astype(np.float32))
+    v_pool = jnp.asarray(rng.normal(0, 1, pool_shape).astype(np.float32))
+    # distinct physical pages per (slot, logical) entry
+    perm = rng.permutation(num_phys)[: B * n_pages]
+    table = jnp.asarray(perm.reshape(B, n_pages).astype(np.int32))
+    lengths = jnp.asarray(
+        rng.integers(1, page * n_pages + 1, (B,)).astype(np.int32)
+    )
+    return q, k_pool, v_pool, table, lengths
+
+
+def test_paged_attend_kernel_matches_ref_bitwise():
+    q, kp, vp, table, lengths = _paged_setup(3, 2, 2, 8, 4, 16, seed=11)
+    got = paged_attend(q, kp, vp, table, lengths, interpret=True)
+    want = paged_attend_ref(q, kp, vp, table, lengths)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paged_attend_matches_dense_softmax():
+    q, kp, vp, table, lengths = _paged_setup(2, 2, 4, 8, 4, 12, seed=13)
+    out = np.asarray(paged_attend(q, kp, vp, table, lengths, interpret=True))
+    B, Kv, G, hd = q.shape
+    page, n_pages = kp.shape[1], table.shape[1]
+    for b in range(B):
+        L = int(lengths[b])
+        k = np.asarray(kp)[np.asarray(table)[b]].reshape(-1, Kv, hd)[:L]
+        v = np.asarray(vp)[np.asarray(table)[b]].reshape(-1, Kv, hd)[:L]
+        s = np.einsum("kgh,pkh->kgp", np.asarray(q)[b], k) * hd ** -0.5
+        p = np.exp(s - s.max(-1, keepdims=True))
+        p /= p.sum(-1, keepdims=True)
+        want = np.einsum("kgp,pkh->kgh", p, v)
+        np.testing.assert_allclose(out[b], want, atol=2e-5)
+
+
+def test_paged_attend_page_table_permutation_invariance():
+    # scatter the same logical pages to different physical rows: the
+    # output must be BITWISE identical — attention walks the table, so
+    # physical placement can never leak into the math
+    q, kp, vp, table, lengths = _paged_setup(2, 2, 2, 8, 3, 12, seed=17)
+    base = np.asarray(paged_attend(q, kp, vp, table, lengths, interpret=True))
+    rng = np.random.default_rng(23)
+    perm = rng.permutation(kp.shape[0])
+    inv = np.argsort(perm)
+    kp2 = jnp.asarray(np.asarray(kp)[perm])
+    vp2 = jnp.asarray(np.asarray(vp)[perm])
+    table2 = jnp.asarray(inv[np.asarray(table)].astype(np.int32))
+    moved = np.asarray(
+        paged_attend(q, kp2, vp2, table2, lengths, interpret=True)
+    )
+    np.testing.assert_array_equal(base, moved)

@@ -362,3 +362,163 @@ def test_request_validation(engine):
             Request(rid=0, prompt=(1, 2), max_new_tokens=1),
             Request(rid=0, prompt=(3, 4), max_new_tokens=1),
         ])
+
+
+# ---------------------------------------------------------------------------
+# block-paged KV cache (page pool + page table + shared-prefix interning)
+# ---------------------------------------------------------------------------
+
+from repro.models.attention import init_cache
+from repro.roofline.analysis import serve_paged_kv_bytes
+from repro.serve.engine import PageAllocator
+
+PAGE = 8
+
+
+def _paged_engine(setup, plan=None, **kw):
+    cfg, mesh_cfg, spec_tree, storage, default_plan = setup
+    kw.setdefault("max_slots", SLOTS)
+    kw.setdefault("cache_capacity", CAPACITY)
+    kw.setdefault("page_size", PAGE)
+    return ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage,
+        plan=plan or default_plan, paged=True, **kw,
+    )
+
+
+def test_page_allocator_refcount_and_audit():
+    pa = PageAllocator(4)
+    a, b = pa.alloc(2)
+    assert (a, b) == (0, 1)
+    pa.retain(a)  # shared-prefix second holder
+    assert pa.refcount(a) == 2
+    assert not pa.release(a)  # still one holder -> not freed
+    assert pa.release(a)  # last holder -> freed
+    assert pa.release(b)
+    audit = pa.audit()
+    assert audit["live"] == 0 and audit["free"] == 4
+    assert audit["allocs"] == audit["releases"] + audit["live"]
+    with pytest.raises(RuntimeError):
+        pa.release(a)  # double free
+    with pytest.raises(RuntimeError):
+        pa.alloc(5)  # exhaustion
+    pa._refs[9] = 1  # simulate a leaked page
+    with pytest.raises(AssertionError):
+        pa.audit()
+
+
+def test_paged_matches_contiguous_and_static(engine, setup, static_streams):
+    # mixed prompt lengths, slot reuse after release (5 requests, 2
+    # slots), prompt bucketing active: streams must stay BIT-EXACT
+    cfg = setup[0]
+    reqs = _requests(cfg)
+    paged = _paged_engine(setup)
+    results = paged.run(reqs)
+    cont = engine.run(reqs)
+    for r in reqs:
+        assert results[r.rid].tokens == static_streams[r.rid], r.rid
+        assert results[r.rid].tokens == cont[r.rid].tokens, r.rid
+    paged.slots.audit()
+    audit = paged.pages.audit()
+    assert audit["live"] == 0
+    assert audit["allocs"] == audit["releases"] >= len(reqs)
+    # bucketing: lens (16,12,16,8,12) at page 8 -> buckets {16, 8},
+    # so 2 compiles serve all 5 admissions
+    w = paged.wire_summary()
+    assert w["prefill_misses"] == 2
+    assert w["prefill_hits"] == 3
+
+
+def test_paged_int8_kv_matches_static(setup):
+    import dataclasses
+
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    plan8 = dataclasses.replace(plan, int8_kv=True)
+    reqs = _requests(cfg, spec=((12, 5), (8, 6), (12, 4)))
+    results = _paged_engine(setup, plan=plan8).run(reqs)
+    ref = generate_static(
+        cfg, mesh_cfg, None, spec_tree, storage, reqs, plan=plan8
+    )
+    for r in reqs:
+        assert results[r.rid].tokens == ref[r.rid], r.rid
+
+
+def test_paged_shared_prefix_refcount_and_residency(setup):
+    # 3 requests share a 2-page system prompt; all resident at once, so
+    # the measured peak must equal the analytic page-granular model:
+    # shared pages stored ONCE + per-request private tails
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    rng = np.random.default_rng(3)
+    shared = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 2 * PAGE))
+    tails, gen = (4, 9, 12), 6
+    reqs = [
+        Request(rid=i, prompt=shared + tuple(
+            int(t) for t in rng.integers(0, cfg.vocab_size, t)),
+            max_new_tokens=gen)
+        for i, t in enumerate(tails)
+    ]
+    eng = _paged_engine(setup, max_slots=len(reqs), cache_capacity=40)
+    results = eng.run(reqs)
+    ref = generate_static(
+        cfg, mesh_cfg, None, spec_tree, storage, reqs, plan=plan
+    )
+    for r in reqs:
+        assert results[r.rid].tokens == ref[r.rid], r.rid
+    analytic = serve_paged_kv_bytes(
+        cfg, page_size=PAGE,
+        requests=[(len(r.prompt), gen) for r in reqs],
+        shared_prefix_len=len(shared),
+    )
+    assert analytic["shared_pages"] == 2
+    res = eng.kv_residency()
+    assert res["bytes_per_page"] == analytic["bytes_per_page"]
+    assert res["pages_peak"] == analytic["pages"]
+    assert res["kv_bytes_peak"] == analytic["kv_bytes_resident"]
+    # every retirement dropped its refcounts back to zero
+    assert res["pages_live"] == 0 and res["kv_bytes_resident"] == 0
+    audit = eng.pages.audit()
+    assert audit["live"] == 0 and audit["allocs"] == audit["releases"]
+    # sharing actually deduped: without it every request would intern
+    # its own copy of the 2 shared pages
+    no_share = sum(-(-(len(r.prompt) + gen) // PAGE) for r in reqs)
+    assert analytic["pages"] == no_share - 2 * (len(reqs) - 1) < no_share
+
+
+def test_paged_wire_log_pins_analytic_serve_model(setup):
+    cfg, _, _, _, plan = setup
+    reqs = _requests(cfg)
+    eng = _paged_engine(setup)
+    eng.run(reqs)
+    measured = eng.wire_summary()
+    analytic = serve_host_device_bytes(
+        plan, cfg.vocab_size, n_slots=SLOTS,
+        prompt_lens=[len(r.prompt) for r in reqs],
+        decode_steps=measured["decode_steps"],
+        page_table_entries=measured["page_table_entries"],
+    )
+    assert measured["host_device"] == analytic["total"]
+    assert measured["page_table"] == analytic["page_table_h2d"]
+
+
+def test_paged_rejects_windows_and_oversized_requests(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    with pytest.raises(ValueError, match="contiguous"):
+        _paged_engine(setup, window=12)
+    eng = _paged_engine(setup, num_pages=2)
+    with pytest.raises(ValueError, match="pages"):
+        eng.run([Request(rid=0, prompt=(1,) * 16, max_new_tokens=8)])
+
+
+def test_cache_constructor_geometry_guard():
+    # the admission-time window/capacity rules now live in the cache
+    # constructors: a linear cache too small for its context, and a ring
+    # narrower than its window, both fail at construction
+    with pytest.raises(ValueError, match="does not ring"):
+        init_cache(1, 20, 2, 8, jnp.float32, window=12, context=24)
+    with pytest.raises(ValueError, match="live tokens would be evicted"):
+        init_cache(1, 10, 2, 8, jnp.float32, window=16, context=18)
+    with pytest.raises(ValueError, match="no sliding window"):
+        init_cache(1, 16, 2, 8, jnp.float32, context=24)
+    # capacity == window rings faithfully; fitting contexts are fine
+    init_cache(1, 12, 2, 8, jnp.float32, window=12, context=24)
+    init_cache(1, 24, 2, 8, jnp.float32, context=24)
