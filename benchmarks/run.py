@@ -247,6 +247,145 @@ def serve_engine_bench(out_path="BENCH_serve.json"):
     row("serve.bench_json", 0.0, f"wrote={out_path}")
 
 
+def train_io_bench(out_path="BENCH_train.json"):
+    """Training-I/O benchmark: tiered shard ingest through the
+    prefetcher + width-aware sync/async checkpointing on the reduced
+    qwen3-1.7b. Emits ``BENCH_train.json`` with steps/sec, ingest bytes
+    per step at two quality tiers (measured == analytic asserted), and
+    checkpoint wall/bytes for sync vs async saves — the committed
+    snapshot CI regenerates and uploads as an artifact."""
+    import shutil
+    import tempfile
+
+    from repro.checkpoint.ckpt import (
+        AsyncCheckpointer, ckpt_dir, save_checkpoint,
+    )
+    from repro.checkpoint.sharded import manifest_bytes, read_meta
+    from repro.configs.registry import get_config, reduced
+    from repro.data.prefetch import Prefetcher
+    from repro.data.shards import ShardReader, batches, write_lm_shards
+    from repro.dist.spec import (
+        MeshCfg, build_spec_tree, dist_elems_per_group, tree_to_storage,
+    )
+    from repro.models.init import init_params
+    from repro.optim.sgd import SGDConfig, init_momentum
+    from repro.plan import PrecisionPlan
+    from repro.roofline.analysis import (
+        train_checkpoint_bytes, train_ingest_bytes,
+    )
+    from repro.train.loop import Trainer
+    from repro.train.step import make_train_step
+
+    b, seq, steps = 2, 32, 6
+    cfg = reduced(get_config("qwen3-1.7b"))
+    mesh_cfg = MeshCfg()
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    nrt = cfg.num_groups + 1
+    plan = PrecisionPlan.build(nrt, round_to=2, schedule="static")
+    shapes = {
+        "tokens": jax.ShapeDtypeStruct((b, seq), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, seq), jnp.int32),
+    }
+    trainer = Trainer(
+        lambda rts: make_train_step(
+            cfg, mesh_cfg, None, spec_tree, SGDConfig(lr=0.05),
+            shapes, plan=plan.with_round_tos(rts),
+        ),
+        nrt, plan=plan,
+        dist_elems_per_group=dist_elems_per_group(spec_tree, mesh_cfg, nrt),
+        gather_axis_size=1,
+    )
+    mom = init_momentum(storage)
+    tmp = tempfile.mkdtemp(prefix="train_io_bench_")
+    report = {"arch": cfg.name, "batch": b, "seq": seq, "steps": steps,
+              "ingest": {}, "checkpoint": {}}
+    try:
+        # LM shards are all-integer (lossless floor), so quality is moot
+        # here: one ingest entry, first (compile) step excluded from the
+        # timing but included in the measured-vs-analytic byte pin
+        shard_dir = os.path.join(tmp, "shards")
+        write_lm_shards(shard_dir, vocab=cfg.vocab_size, seq=seq,
+                        num_records=b * (steps + 1))
+        rd = ShardReader(shard_dir, seed=0)
+        analytic = train_ingest_bytes(
+            plan, cfg.vocab_size, kind="lm", batch=b, seq=seq,
+            steps=steps + 1, reader=rd,
+        )
+        pf = Prefetcher(batches(rd, b), kind="lm",
+                        vocab=cfg.vocab_size, plan=plan)
+        io = {"shard_read": 0, "host_device": 0}
+        t0 = None
+        for _ in range(steps + 1):
+            batch, log = pf.next()
+            storage, mom, m = trainer.run_step(
+                storage, mom, batch, 0.05, io_log=log,
+            )
+            io = {k: io[k] + log[k] for k in io}
+            if t0 is None:  # warmup step done: compile paid, start clock
+                jax.block_until_ready(m["loss"])
+                t0 = time.perf_counter()
+        jax.block_until_ready(m["loss"])
+        wall = time.perf_counter() - t0
+        pf.close()
+        rd.close()
+        assert io["shard_read"] == analytic["shard_read"], (io, analytic)
+        assert io["host_device"] == analytic["ingest_h2d"], (io, analytic)
+        report["ingest"] = {
+            "steps_per_s": round(steps / wall, 2),
+            "shard_read_bytes_per_step": io["shard_read"] // (steps + 1),
+            "h2d_bytes_per_step": io["host_device"] // (steps + 1),
+            "token_width": analytic["token_width"],
+        }
+        row(
+            "train_io.ingest", 1e6 * wall / steps,
+            f"shardB_per_step={io['shard_read'] // (steps + 1)}"
+            f"_h2dB_per_step={io['host_device'] // (steps + 1)}",
+        )
+        rts = trainer.current_round_tos()
+        for mode in ("sync", "async"):
+            ck = os.path.join(tmp, f"ck_{mode}")
+            ac = AsyncCheckpointer() if mode == "async" else None
+            t0 = time.perf_counter()
+            save_checkpoint(ck, storage, mom, trainer.controller, steps,
+                            plan=plan, spec_tree=spec_tree, round_tos=rts,
+                            async_ckpt=ac)
+            t_submit = time.perf_counter() - t0
+            if ac is not None:
+                ac.wait()
+            t_total = time.perf_counter() - t0
+            mb = manifest_bytes(read_meta(ckpt_dir(ck)))
+            entry = {
+                "submit_us": round(1e6 * t_submit, 1),
+                "total_us": round(1e6 * t_total, 1),
+                "wire_bytes": mb["wire"],
+                "residual_bytes": mb["residual"],
+                "total_bytes": mb["total"],
+            }
+            report["checkpoint"][mode] = entry
+            row(f"train_io.ckpt_{mode}", entry["total_us"],
+                f"submit_us={entry['submit_us']}_totalB={mb['total']}")
+        analytic_ck = train_checkpoint_bytes(
+            storage, mom, spec_tree=spec_tree, round_tos=rts,
+        )
+        assert analytic_ck == {
+            k: report["checkpoint"]["sync"][f"{k}_bytes"]
+            for k in ("wire", "residual", "total")
+        }
+        full = train_checkpoint_bytes(storage, mom, spec_tree=spec_tree,
+                                      round_tos=(4,) * nrt)
+        report["checkpoint"]["wire_vs_fp32"] = round(
+            analytic_ck["wire"] / full["wire"], 4
+        )
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    row("train_io.bench_json", 0.0, f"wrote={out_path}")
+
+
 def _page_pool_equiv_bytes(cfg, capacity, slots):
     """Contiguous-layout resident KV bytes (fp32): every attn layer holds
     slots x capacity x kv_heads x head_dim x 2 (K+V)."""
@@ -297,6 +436,7 @@ def main() -> None:
             steps=int(os.environ.get("BENCH_FIG3_STEPS", "140"))
         )),
         ("serve_engine_bench", serve_engine_bench),
+        ("train_io_bench", train_io_bench),
         ("roofline_table", roofline_table),
     ]
     print("name,us_per_call,derived")

@@ -1,11 +1,25 @@
-"""npz-based checkpointing for storage pytrees + AWP controller state +
-the :class:`~repro.plan.PrecisionPlan` that produced the run.
+"""Checkpoint compatibility shims over :mod:`repro.checkpoint.sharded`.
 
-Works on sharded arrays (gathers to host) — adequate for the scales this
-container trains; the format records the flattened key paths so restore is
-structure-checked. The plan is persisted next to the AWP state so a
-resumed run reconstructs the exact schedule + wire formats from the
-checkpoint alone (``load_plan``).
+The original implementation gathered the whole ``(storage, opt_state)``
+tree into one blocking fp32 ``.npz``. The format is now the width-aware
+sharded directory (``<path>.ckpt/``) written by
+:func:`~repro.checkpoint.sharded.save_sharded`; these entry points keep
+the historical call signatures so launchers and tests do not churn:
+
+* :func:`save_checkpoint` — forwards to ``save_sharded`` (pass
+  ``spec_tree=``/``round_tos=`` to store compressible fp32 leaves as
+  width-sized wire tiers + residual tiers, ``extra=`` for e.g. the data
+  pipeline's iterator state, ``async_ckpt=`` an
+  :class:`~repro.checkpoint.sharded.AsyncCheckpointer` to overlap the
+  write with the next step);
+* :func:`load_checkpoint` / :func:`load_storage` / :func:`load_plan` —
+  read the sharded directory, falling back to a legacy ``.npz`` if one
+  is what's on disk (old runs stay restorable).
+
+Structure mismatches raise
+:class:`~repro.checkpoint.sharded.CheckpointError` naming the first
+mismatching key path — typed, so it survives ``python -O`` (the old
+bare ``assert``\\ s did not) and callers can catch it distinctly.
 """
 from __future__ import annotations
 
@@ -15,87 +29,191 @@ import os
 import jax
 import numpy as np
 
+from repro.checkpoint.sharded import (
+    CheckpointError,
+    AsyncCheckpointer,
+    leaf_entries,
+    awp_from_meta,
+    load_sharded,
+    read_meta,
+    save_sharded,
+)
 from repro.core.awp import AWPController
 from repro.plan import PrecisionPlan
-from repro.utils.trees import flatten_dict, unflatten_dict
+
+__all__ = [
+    "CheckpointError",
+    "AsyncCheckpointer",
+    "ckpt_dir",
+    "save_checkpoint",
+    "load_checkpoint",
+    "load_storage",
+    "load_plan",
+]
 
 
-def _flatten_pytree(tree):
-    flat, treedef = jax.tree_util.tree_flatten(tree)
-    return flat, treedef
+def ckpt_dir(path: str) -> str:
+    """Canonical sharded-checkpoint directory for a user-supplied path:
+    a legacy ``foo.npz`` (or bare ``foo``) maps to ``foo.ckpt`` so save
+    and load always agree on the on-disk name."""
+    if path.endswith(".npz"):
+        path = path[: -len(".npz")]
+    if not path.endswith(".ckpt"):
+        path = path + ".ckpt"
+    return path
 
 
 def _npz_path(path: str) -> str:
-    """``np.savez`` appends ``.npz`` when the suffix is missing; normalize
-    so save and load always agree on the on-disk name (a bare ``"ckpt"``
-    used to save ``ckpt.npz`` and then fail to load ``"ckpt"``)."""
     return path if path.endswith(".npz") else path + ".npz"
 
 
-def save_checkpoint(path: str, storage, opt_state, awp: AWPController | None,
-                    step: int, plan: PrecisionPlan | None = None):
-    path = _npz_path(path)
-    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
-    flat, _ = jax.tree_util.tree_flatten((storage, opt_state))
-    arrays = {f"a{i}": np.asarray(x) for i, x in enumerate(flat)}
-    meta = {"step": step, "num_arrays": len(flat)}
-    if plan is not None:
-        meta["plan"] = plan.to_json_dict()
-    if awp is not None:
-        meta["awp"] = {
-            "bits": awp.state.bits.tolist(),
-            "counters": awp.state.counters.tolist(),
-            "prev_norms": (
-                awp.state.prev_norms.tolist()
-                if awp.state.prev_norms is not None
-                else None
-            ),
-            "step": awp.state.step,
-            "history": [[s, list(b)] for s, b in awp.history],
-        }
-    np.savez(path, __meta__=json.dumps(meta), **arrays)
+def save_checkpoint(
+    path: str,
+    storage,
+    opt_state,
+    awp: AWPController | None,
+    step: int,
+    plan: PrecisionPlan | None = None,
+    *,
+    spec_tree=None,
+    round_tos=None,
+    extra: dict | None = None,
+    residuals: bool = True,
+    async_ckpt: AsyncCheckpointer | None = None,
+):
+    """Write the sharded checkpoint at ``ckpt_dir(path)``.
+
+    With ``async_ckpt`` the serialization runs on its worker thread and
+    this returns immediately (call ``async_ckpt.wait()`` before reading
+    the checkpoint back). Width-aware tiers need both ``spec_tree`` and
+    ``round_tos`` — pass the AWP controller's *current* formats so a
+    rt=2 weight occupies 2 bytes on disk."""
+    target = ckpt_dir(path)
+    parent = os.path.dirname(target)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    kw = dict(
+        plan=plan, spec_tree=spec_tree, round_tos=round_tos,
+        extra=extra, residuals=residuals,
+    )
+    if async_ckpt is not None:
+        async_ckpt.save(target, storage, opt_state, awp, step, **kw)
+        return None
+    return save_sharded(target, storage, opt_state, awp, step, **kw)
 
 
-def load_checkpoint(path: str, storage_like, opt_like,
-                    awp: AWPController | None = None):
-    data = np.load(_npz_path(path), allow_pickle=False)
+# ---------------------------------------------------------------------------
+# legacy .npz fallback
+# ---------------------------------------------------------------------------
+
+
+def _legacy_load(path: str):
+    data = np.load(path, allow_pickle=False)
     meta = json.loads(str(data["__meta__"]))
+    return data, meta
+
+
+def _legacy_checkpoint(path, storage_like, opt_like, awp):
+    data, meta = _legacy_load(path)
     flat_like, treedef = jax.tree_util.tree_flatten((storage_like, opt_like))
-    assert meta["num_arrays"] == len(flat_like), "checkpoint structure mismatch"
+    if meta["num_arrays"] != len(flat_like):
+        paths = [p for p, _ in leaf_entries((storage_like, opt_like))]
+        at = (
+            paths[meta["num_arrays"]]
+            if meta["num_arrays"] < len(paths)
+            else f"<checkpoint leaf {len(flat_like)}>"
+        )
+        raise CheckpointError(
+            f"checkpoint holds {meta['num_arrays']} leaves, restore "
+            f"target has {len(flat_like)} (first unmatched: {at})"
+        )
     flat = [data[f"a{i}"] for i in range(len(flat_like))]
     storage, opt_state = jax.tree_util.tree_unflatten(treedef, flat)
-    if awp is not None and "awp" in meta:
-        a = meta["awp"]
-        awp.state.bits = np.asarray(a["bits"], np.int64)
-        awp.state.counters = np.asarray(a["counters"], np.int64)
-        awp.state.prev_norms = (
-            np.asarray(a["prev_norms"]) if a["prev_norms"] is not None else None
-        )
-        awp.state.step = a["step"]
-        awp.history = [(s, tuple(b)) for s, b in a["history"]]
+    awp_from_meta(awp, meta.get("awp"))
     return storage, opt_state, meta["step"]
 
 
-def load_storage(path: str, storage_like):
-    """Weights-only restore for serving: the flattened ``(storage,
-    opt_state)`` order puts the storage leaves first, so inference-time
-    consumers can skip materializing (and immediately discarding) a
-    momentum tree the size of the model. Returns ``(storage, step)``."""
-    data = np.load(_npz_path(path), allow_pickle=False)
-    meta = json.loads(str(data["__meta__"]))
+def _legacy_storage(path, storage_like):
+    data, meta = _legacy_load(path)
     flat_like, treedef = jax.tree_util.tree_flatten(storage_like)
-    assert meta["num_arrays"] >= len(flat_like), "checkpoint structure mismatch"
+    if meta["num_arrays"] < len(flat_like):
+        paths = [p for p, _ in leaf_entries(storage_like)]
+        raise CheckpointError(
+            f"checkpoint holds {meta['num_arrays']} leaves, storage "
+            f"target has {len(flat_like)} (first unmatched: "
+            f"{paths[meta['num_arrays']]})"
+        )
     flat = [data[f"a{i}"] for i in range(len(flat_like))]
-    for like, got in zip(flat_like, flat):
-        assert like.shape == got.shape, "checkpoint storage shape mismatch"
+    for (kpath, like), got in zip(leaf_entries(storage_like), flat):
+        if tuple(like.shape) != tuple(got.shape):
+            raise CheckpointError(
+                f"checkpoint shape mismatch at {kpath}: checkpoint "
+                f"{tuple(got.shape)} vs target {tuple(like.shape)}"
+            )
     return jax.tree_util.tree_unflatten(treedef, flat), meta["step"]
+
+
+def _resolve(path: str) -> tuple[str, bool]:
+    """On-disk artifact for ``path``: ``(location, is_sharded)``.
+
+    Prefers the sharded directory; falls back to a legacy ``.npz``."""
+    d = ckpt_dir(path)
+    if os.path.isdir(d):
+        return d, True
+    npz = _npz_path(path)
+    if os.path.isfile(npz):
+        return npz, False
+    raise CheckpointError(f"no checkpoint found at {d!r} or {npz!r}")
+
+
+def load_checkpoint(path: str, storage_like, opt_like,
+                    awp: AWPController | None = None,
+                    *, quality: str = "exact"):
+    """Restore ``(storage, opt_state, step)`` (+ AWP controller state in
+    place). ``quality`` follows :func:`load_sharded`; legacy ``.npz``
+    checkpoints are always full precision."""
+    loc, sharded = _resolve(path)
+    if not sharded:
+        return _legacy_checkpoint(loc, storage_like, opt_like, awp)
+    storage, opt_state, step, _ = load_sharded(
+        loc, storage_like, opt_like, awp, quality=quality
+    )
+    return storage, opt_state, step
+
+
+def load_storage(path: str, storage_like, *, quality: str = "exact"):
+    """Weights-only restore for serving: never materializes (and
+    immediately discards) a momentum tree the size of the model.
+    Returns ``(storage, step)``. ``quality="wire"`` reads only the
+    width-priced tiers — the transport-truncated view a serving replica
+    would receive over the wire."""
+    loc, sharded = _resolve(path)
+    if not sharded:
+        return _legacy_storage(loc, storage_like)
+    storage, _, step, _ = load_sharded(
+        loc, storage_like, None, None, quality=quality
+    )
+    return storage, step
 
 
 def load_plan(path: str) -> PrecisionPlan | None:
     """The PrecisionPlan persisted with the checkpoint (None for
     checkpoints written without one)."""
-    data = np.load(_npz_path(path), allow_pickle=False)
-    meta = json.loads(str(data["__meta__"]))
-    if "plan" not in meta:
-        return None
-    return PrecisionPlan.from_json_dict(meta["plan"])
+    loc, sharded = _resolve(path)
+    if sharded:
+        meta = read_meta(loc)
+        plan = meta.get("plan")
+    else:
+        _, meta = _legacy_load(loc)
+        plan = meta.get("plan")
+    return PrecisionPlan.from_json_dict(plan) if plan is not None else None
+
+
+def load_extra(path: str) -> dict:
+    """Free-form ``extra`` state stored with a sharded checkpoint (e.g.
+    the data pipeline's resumable iterator position). Legacy ``.npz``
+    checkpoints have none — returns ``{}``."""
+    loc, sharded = _resolve(path)
+    if not sharded:
+        return {}
+    return read_meta(loc).get("extra") or {}

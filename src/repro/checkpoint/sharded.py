@@ -1,0 +1,450 @@
+"""Width-aware async sharded checkpointing.
+
+The old format gathered the whole tree into one blocking fp32 ``.npz`` —
+the second-largest unpriced byte stream in the system after ingest. This
+module replaces it with a per-leaf shard directory whose byte layout is
+owned by the same plane decomposition as the wire:
+
+  * **per-leaf shards** — every storage / optimizer leaf is its own
+    file, written via :mod:`repro.utils.planes` (MSB-first byte planes,
+    bit-compatible with ``kernels/ref.py``);
+  * **width-aware tiers** — a compressible (``DIST``) fp32 leaf in a
+    precision group currently at ``rt`` bytes is split at the AWP
+    controller's width: the *wire tier* (``leaf.w.bin``) holds planes
+    ``[0, rt)`` — exactly ``ceil(elems · rt)`` bytes on disk, so a rt=2
+    weight costs 2 bytes, not 4 — and the *residual tier*
+    (``leaf.r.bin``) holds planes ``[rt, 4)``. Reading both tiers is
+    bitwise fp32 (resume stays exact under any AWP trajectory); reading
+    the wire tier alone reproduces the transport's truncation — the
+    serving restore and ``residuals=False`` exports move/keep only the
+    width-priced bytes. This is the checkpoint twin of the data
+    pipeline's progressive record tiers;
+  * **async overlap** — :class:`AsyncCheckpointer` snapshots the
+    host-mutable AWP state synchronously (jax arrays are immutable, so
+    leaf references alone pin the device state) and runs the
+    device→host copies + plane splits + file writes on a worker thread
+    while the next train step executes. ``wait()`` joins and re-raises.
+
+``meta.json`` records the step, the :class:`~repro.plan.PrecisionPlan`,
+the AWP controller state, free-form ``extra`` state (the data pipeline's
+resumable iterator position rides here) and a per-leaf manifest (key
+path, dtype, shape, width, tier byte sizes) — the numbers
+:func:`repro.roofline.analysis.train_checkpoint_bytes` must reproduce
+analytically (measured == analytic is pinned by the train-I/O tests).
+
+Structure mismatches raise :class:`CheckpointError` naming the offending
+key path — never a bare ``assert`` (stripped under ``python -O``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+from repro.utils.planes import plane_join, plane_split
+
+META = "meta.json"
+FP32 = np.dtype(np.float32)
+VALID_QUALITIES = ("exact", "wire")
+
+
+class CheckpointError(Exception):
+    """Checkpoint structure / format mismatch (typed — survives -O)."""
+
+
+# ---------------------------------------------------------------------------
+# tree walking
+# ---------------------------------------------------------------------------
+
+
+def _key_str(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:  # pragma: no cover - future key types
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def leaf_entries(tree) -> list[tuple[str, object]]:
+    """Flatten a pytree to ``[(key_path, leaf), ...]`` in canonical
+    order — the manifest's leaf order and the structure-check unit."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_key_str(kp), leaf) for kp, leaf in flat]
+
+
+def assign_widths(storage_like, spec_tree, round_tos) -> dict[str, int]:
+    """Per-leaf on-disk width (bytes/element) at the controller's
+    current formats: compressible (``DIST``) fp32 leaves take their
+    precision group's ``round_to`` (group ``g`` for ``groups[g]``
+    subtrees, the last entry for top-level leaves — the same layout as
+    ``dist_elems_per_group``); everything else stays at full width.
+
+    Shared by the writer and the analytic byte model so the two cannot
+    drift."""
+    from repro.dist.spec import DIST, LeafSpec
+
+    rts = tuple(int(r) for r in round_tos)
+    widths: dict[str, int] = {}
+
+    def visit(prefix, sub_storage, sub_spec, rt):
+        for (path, leaf), (_, spec) in zip(
+            leaf_entries(sub_storage), leaf_entries(sub_spec)
+        ):
+            dt = np.dtype(leaf.dtype)
+            full = dt.itemsize
+            w = full
+            if (
+                isinstance(spec, LeafSpec)
+                and spec.kind == DIST
+                and dt == FP32
+            ):
+                w = min(rt, full)
+            # a bare-array subtree flattens to one leaf with an empty
+            # key path — the manifest key is then the prefix itself
+            key = "/".join(p for p in (prefix, path) if p)
+            widths[key] = w
+
+    for g, gs in enumerate(storage_like["groups"]):
+        visit(f"groups/{g}", gs, spec_tree["groups"][g], rts[g])
+    for k in storage_like:
+        if k != "groups":
+            visit(k, storage_like[k], spec_tree[k], rts[-1])
+    return widths
+
+
+# ---------------------------------------------------------------------------
+# AWP state <-> manifest meta
+# ---------------------------------------------------------------------------
+
+
+def awp_to_meta(awp) -> dict | None:
+    """Snapshot an AWPController's host-mutable state into plain JSON.
+
+    Called synchronously by the async path BEFORE the worker thread
+    starts: the controller mutates every step, so deferring the snapshot
+    would race with the next ``update``. Accepts a pre-snapshotted dict
+    (pass-through) or ``None``."""
+    if awp is None or isinstance(awp, dict):
+        return awp
+    return {
+        "bits": awp.state.bits.tolist(),
+        "counters": awp.state.counters.tolist(),
+        "prev_norms": (
+            awp.state.prev_norms.tolist()
+            if awp.state.prev_norms is not None
+            else None
+        ),
+        "step": awp.state.step,
+        "history": [[s, list(b)] for s, b in awp.history],
+    }
+
+
+def awp_from_meta(awp, meta: dict | None) -> None:
+    if awp is None or not meta:
+        return
+    awp.state.bits = np.asarray(meta["bits"], np.int64)
+    awp.state.counters = np.asarray(meta["counters"], np.int64)
+    awp.state.prev_norms = (
+        np.asarray(meta["prev_norms"])
+        if meta["prev_norms"] is not None
+        else None
+    )
+    awp.state.step = meta["step"]
+    awp.history = [(s, tuple(b)) for s, b in meta["history"]]
+
+
+# ---------------------------------------------------------------------------
+# save
+# ---------------------------------------------------------------------------
+
+
+def _write_leaf(arr: np.ndarray, width: int, base: str, residuals: bool):
+    """One leaf -> wire tier (+ optional residual tier) on disk.
+
+    Returns the manifest entry fields. The wire tier of a tiered fp32
+    leaf is planes ``[0, width)`` plane-major — exactly
+    ``elems * width`` bytes."""
+    dt = arr.dtype
+    tiered = dt == FP32 and width < FP32.itemsize
+    if tiered:
+        planes = plane_split(arr)
+        wire = planes[:width].tobytes()
+        res = planes[width:].tobytes() if residuals else None
+    else:
+        width = dt.itemsize
+        wire = arr.tobytes()
+        res = None
+    with open(base + ".w.bin", "wb") as f:
+        f.write(wire)
+    if res is not None:
+        with open(base + ".r.bin", "wb") as f:
+            f.write(res)
+    return {
+        "dtype": dt.str,
+        "shape": list(arr.shape),
+        "width": int(width),
+        "bytes": len(wire),
+        "residual_bytes": len(res) if res is not None else 0,
+        "tiered": bool(tiered),
+    }
+
+
+def save_sharded(
+    path: str,
+    storage,
+    opt_state,
+    awp,
+    step: int,
+    *,
+    plan=None,
+    spec_tree=None,
+    round_tos=None,
+    extra: dict | None = None,
+    residuals: bool = True,
+) -> dict:
+    """Write the sharded checkpoint directory at ``path`` (atomically:
+    a tmp sibling is renamed over the target). ``round_tos`` +
+    ``spec_tree`` enable width-aware tiers (pass the controller's
+    *current* formats); without them every leaf is full width.
+    ``residuals=False`` drops the residual tiers — a width-priced
+    export (serving hand-off) that restores only at ``quality="wire"``.
+
+    ``awp`` may be an ``AWPController`` or a pre-snapshotted meta dict
+    (the async path). Returns the manifest."""
+    awp_meta = awp_to_meta(awp)
+    widths: dict[str, int] = {}
+    if round_tos is not None:
+        if spec_tree is None:
+            raise CheckpointError(
+                "width-aware save needs spec_tree alongside round_tos"
+            )
+        widths = assign_widths(storage, spec_tree, round_tos)
+
+    tmp = path + f".tmp.{os.getpid()}"
+    shutil.rmtree(tmp, ignore_errors=True)
+    os.makedirs(tmp)
+    trees = {}
+    for tree_name, tree in (("storage", storage), ("opt", opt_state)):
+        entries = []
+        if tree is not None:
+            for i, (kpath, leaf) in enumerate(leaf_entries(tree)):
+                arr = np.asarray(leaf)  # device->host copy happens HERE
+                width = (
+                    widths.get(kpath, arr.dtype.itemsize)
+                    if tree_name == "storage"
+                    else arr.dtype.itemsize
+                )
+                base = os.path.join(tmp, f"{tree_name}_{i:05d}")
+                info = _write_leaf(arr, width, base, residuals)
+                info["path"] = kpath
+                info["file"] = f"{tree_name}_{i:05d}"
+                entries.append(info)
+        trees[tree_name] = entries
+    meta = {
+        "version": 1,
+        "format": "sharded-v1",
+        "step": int(step),
+        "plan": plan.to_json_dict() if plan is not None else None,
+        "awp": awp_meta,
+        "extra": extra or {},
+        "residuals": bool(residuals),
+        "trees": trees,
+    }
+    with open(os.path.join(tmp, META), "w") as f:
+        json.dump(meta, f)
+    shutil.rmtree(path, ignore_errors=True)
+    os.replace(tmp, path)
+    return meta
+
+
+# ---------------------------------------------------------------------------
+# load
+# ---------------------------------------------------------------------------
+
+
+def read_meta(path: str) -> dict:
+    mp = os.path.join(path, META)
+    if not os.path.isfile(mp):
+        raise CheckpointError(f"no sharded checkpoint at {path!r}")
+    with open(mp) as f:
+        return json.load(f)
+
+
+def _check_structure(entries: list[dict], like, tree_name: str):
+    """Manifest vs restore-target structure; CheckpointError names the
+    first mismatching key path."""
+    want = leaf_entries(like)
+    if len(entries) != len(want):
+        extra_path = (
+            want[len(entries)][0]
+            if len(want) > len(entries)
+            else entries[len(want)]["path"]
+        )
+        raise CheckpointError(
+            f"checkpoint {tree_name} tree holds {len(entries)} leaves, "
+            f"restore target has {len(want)} (first unmatched: "
+            f"{tree_name}/{extra_path})"
+        )
+    for e, (kpath, leaf) in zip(entries, want):
+        if e["path"] != kpath:
+            raise CheckpointError(
+                f"checkpoint structure mismatch at {tree_name}/{kpath}: "
+                f"checkpoint has {tree_name}/{e['path']}"
+            )
+        if tuple(e["shape"]) != tuple(leaf.shape):
+            raise CheckpointError(
+                f"checkpoint shape mismatch at {tree_name}/{kpath}: "
+                f"checkpoint {tuple(e['shape'])} vs target "
+                f"{tuple(leaf.shape)}"
+            )
+        if np.dtype(e["dtype"]) != np.dtype(leaf.dtype):
+            raise CheckpointError(
+                f"checkpoint dtype mismatch at {tree_name}/{kpath}: "
+                f"checkpoint {np.dtype(e['dtype'])} vs target "
+                f"{np.dtype(leaf.dtype)}"
+            )
+
+
+def _read_leaf(path: str, e: dict, quality: str) -> np.ndarray:
+    dtype = np.dtype(e["dtype"])
+    shape = tuple(e["shape"])
+    base = os.path.join(path, e["file"])
+    with open(base + ".w.bin", "rb") as f:
+        wire = np.frombuffer(f.read(), np.uint8)
+    if not e["tiered"]:
+        return wire.view(dtype).reshape(shape).copy()
+    n = int(np.prod(shape)) if shape else 1
+    planes = wire.reshape(e["width"], n)
+    if quality == "exact":
+        rpath = base + ".r.bin"
+        if not os.path.isfile(rpath):
+            raise CheckpointError(
+                f"exact restore of {e['path']} needs the residual tier, "
+                f"but this checkpoint was written residuals=False "
+                f"(width {e['width']}); use quality='wire'"
+            )
+        with open(rpath, "rb") as f:
+            res = np.frombuffer(f.read(), np.uint8)
+        planes = np.concatenate(
+            [planes, res.reshape(FP32.itemsize - e["width"], n)]
+        )
+    return plane_join(planes, dtype, shape)
+
+
+def _load_tree(path: str, entries: list[dict], like, quality: str):
+    arrs = [_read_leaf(path, e, quality) for e in entries]
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+def load_sharded(
+    path: str,
+    storage_like,
+    opt_like=None,
+    awp=None,
+    *,
+    quality: str = "exact",
+):
+    """Restore ``(storage, opt_state, step, meta)`` from a sharded dir.
+
+    ``quality="exact"`` reads wire + residual tiers (bitwise fp32 —
+    resume-grade); ``"wire"`` reads only the width-priced wire tiers
+    (the transport's truncation — serving-grade, and the only mode a
+    ``residuals=False`` export supports). ``opt_like=None`` skips the
+    optimizer tree entirely (weights-only restore: the serve path never
+    materializes a momentum tree)."""
+    if quality not in VALID_QUALITIES:
+        raise CheckpointError(f"quality must be in {VALID_QUALITIES}")
+    meta = read_meta(path)
+    _check_structure(meta["trees"]["storage"], storage_like, "storage")
+    storage = _load_tree(path, meta["trees"]["storage"], storage_like, quality)
+    opt_state = None
+    if opt_like is not None:
+        _check_structure(meta["trees"]["opt"], opt_like, "opt")
+        opt_state = _load_tree(path, meta["trees"]["opt"], opt_like, quality)
+    awp_from_meta(awp, meta.get("awp"))
+    return storage, opt_state, meta["step"], meta
+
+
+def manifest_bytes(meta: dict) -> dict:
+    """Measured on-disk byte totals of a sharded checkpoint, from its
+    manifest: ``wire`` (width-priced tiers), ``residual``, ``total``.
+    The analytic model ``train_checkpoint_bytes`` must equal this, and
+    the tests additionally pin these numbers to ``os.path.getsize``."""
+    wire = residual = 0
+    for entries in meta["trees"].values():
+        for e in entries:
+            wire += e["bytes"]
+            residual += e["residual_bytes"]
+    return {"wire": wire, "residual": residual, "total": wire + residual}
+
+
+# ---------------------------------------------------------------------------
+# async
+# ---------------------------------------------------------------------------
+
+
+class AsyncCheckpointer:
+    """Serialize checkpoints on a worker thread, overlapped with the
+    next train step.
+
+    One save in flight at a time: a new :meth:`save` first joins the
+    previous one (bounding host memory at ~one checkpoint). The
+    device→host copy happens *synchronously* in :meth:`save` — the train
+    steps donate their storage/opt buffers, so the old device arrays may
+    be deleted the moment the next step runs; holding references is not
+    a snapshot under donation. What overlaps the next step is everything
+    downstream of the copy: plane splits, tier writes, the manifest.
+    The host-mutable AWP controller state and the caller's ``extra``
+    dict are likewise snapshotted up front. Failures surface on the next
+    :meth:`save`/:meth:`wait` as :class:`CheckpointError`."""
+
+    def __init__(self):
+        self._thread: threading.Thread | None = None
+        self._exc: BaseException | None = None
+        self.saves = 0
+
+    @property
+    def in_flight(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def save(self, path, storage, opt_state, awp, step, **kw):
+        self.wait()
+        awp_meta = awp_to_meta(awp)
+        extra = dict(kw.pop("extra", None) or {})
+        # synchronous d2h snapshot (donation-safe, see class docstring)
+        host_storage = jax.tree_util.tree_map(np.asarray, storage)
+        host_opt = (
+            jax.tree_util.tree_map(np.asarray, opt_state)
+            if opt_state is not None
+            else None
+        )
+
+        def work():
+            try:
+                save_sharded(
+                    path, host_storage, host_opt, awp_meta, step,
+                    extra=extra, **kw,
+                )
+            except BaseException as e:  # re-raised by wait()
+                self._exc = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+        self.saves += 1
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._exc is not None:
+            exc, self._exc = self._exc, None
+            raise CheckpointError(f"async checkpoint failed: {exc}") from exc

@@ -71,7 +71,10 @@ def synthetic_lm_batch(
 ):
     """Deterministic k-gram stream: next = (a·t1 + b·t2 + c·t3) mod vocab,
     with per-sequence offsets — learnable but not trivial."""
-    rng = np.random.default_rng(seed * 7_777_777 + step)
+    # collision-free per-(seed, step) stream (the old ``seed·p + step``
+    # affine mix aliased pairs like (0, 7_777_777) and (1, 0) onto the
+    # same stream, repeating batches across runs with different seeds)
+    rng = _step_rng(seed, step)
     coef = np.array([3, 5, 7])
     toks = rng.integers(0, vocab, (batch, order + seq + 1))
     for t in range(order, order + seq + 1):
@@ -92,9 +95,15 @@ def synthetic_lm_batch(
 def synthetic_feature_batch(dim: int, vocab: int, batch: int, seq: int,
                             step: int, *, seed: int = 0):
     """Frame embeddings + frame labels for the audio (encoder) family."""
-    rng = np.random.default_rng(seed * 13 + step)
+    # same collision-free SeedSequence scheme as synthetic_lm_batch (the
+    # old ``seed·13 + step`` mix aliased e.g. (0, 13) and (1, 0)); the
+    # codebook depends on the seed alone, via the bijective uint64 view
+    # so negative seeds work
+    rng = _step_rng(seed, step)
     labels = rng.integers(0, vocab, (batch, seq))
-    codebook = np.random.default_rng(seed).normal(0, 1, (vocab, dim))
+    codebook = np.random.default_rng(
+        int(np.uint64(np.int64(seed)))
+    ).normal(0, 1, (vocab, dim))
     feats = codebook[labels] + 0.5 * rng.normal(0, 1, (batch, seq, dim))
     return (
         jnp.asarray(feats, jnp.float32),

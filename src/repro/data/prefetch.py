@@ -1,0 +1,187 @@
+"""Double-buffered host->device batch prefetcher.
+
+The heterogeneous-SGD line of work (Ma & Rusu, PAPERS.md) overlaps
+host-side ingest work with device steps; this module is that overlap for
+our training loop. A background thread walks the shard reader (disk
+reads + plane decode + staging pack) while the device runs the current
+step; the main thread only performs the device put + unpack, so with a
+``depth``-deep queue the ingest pipeline is hidden behind compute
+whenever a batch's host work is cheaper than a train step.
+
+Staged bytes ride the plan's ``host_device``
+:class:`~repro.transport.CompressionPolicy` entry, exactly like the
+serve engine's token staging:
+
+  * integer fields (token streams, labels) are packed into lossless
+    byte planes at ``CompressionPolicy.token_wire_width`` — an id of a
+    65k vocab crosses PCIe as 2 bytes, never truncated below its
+    lossless floor;
+  * float fields cross raw (fp32) — lossy staging of training inputs
+    would silently change the optimization problem, so the policy's
+    compressing widths only apply where they are free.
+
+Every yielded batch carries an ``io_log`` dict — ``shard_read`` (stored
+bytes the reader moved off disk), ``host_device`` (bytes staged across
+the boundary), ``data_state`` (reader state after this batch, the value
+a checkpoint written after the matching step persists). The trainer
+stores it per step as ``StepRecord.io_by_entry``, and
+:func:`repro.roofline.analysis.train_ingest_bytes` reproduces both byte
+terms analytically — measured == analytic is pinned by the train-I/O
+tests.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.transport import CompressionPolicy, pack_tokens_host, unpack_tokens
+
+
+def _resolve_policy(plan_or_policy) -> CompressionPolicy:
+    pol = plan_or_policy
+    if pol is None:
+        return CompressionPolicy()
+    if hasattr(pol, "host_device_policies"):  # a PrecisionPlan
+        return pol.host_device_policies()[0]
+    return pol
+
+
+def staged_ids_per_batch(kind: str, batch: int, seq: int) -> int:
+    """Integer ids staged h2d per batch — the geometry term the analytic
+    ingest model shares with the measured pack (LM stores the stream
+    once: ``seq+1`` ids per row covers tokens AND labels)."""
+    if kind == "lm":
+        return batch * (seq + 1)
+    if kind == "feature":
+        return batch * seq  # labels
+    raise ValueError(f"unknown shard kind {kind!r}")
+
+
+class Prefetcher:
+    """Iterate ``(device_batch, io_log)`` over a shard-batch iterator.
+
+    ``batch_iter`` yields ``(host_batch, stored_bytes, state_after)``
+    (see :func:`repro.data.shards.batches`). ``kind`` selects the
+    device-side batch adaptation: ``lm`` slices the staged stream into
+    ``tokens``/``labels`` views on device, ``feature`` passes
+    ``features``/``labels`` through.
+    """
+
+    def __init__(
+        self,
+        batch_iter,
+        *,
+        kind: str,
+        vocab: int,
+        plan=None,
+        depth: int = 2,
+    ):
+        if depth < 1:
+            raise ValueError("depth must be >= 1")
+        if kind not in ("lm", "feature"):
+            raise ValueError(f"unknown shard kind {kind!r}")
+        self.kind = kind
+        self.vocab = int(vocab)
+        self.policy = _resolve_policy(plan)
+        self.width = self.policy.token_wire_width(self.vocab)
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._err: BaseException | None = None
+        self._unpack_cache: dict = {}
+        self._thread = threading.Thread(
+            target=self._worker, args=(batch_iter,), daemon=True
+        )
+        self._thread.start()
+
+    # -- host side (worker thread) -------------------------------------
+    def _stage(self, host_batch: dict) -> tuple[dict, int]:
+        """Pack one host batch for the boundary crossing; returns the
+        staged arrays and their measured byte count."""
+        staged, nbytes = {}, 0
+        for name in sorted(host_batch):
+            arr = np.asarray(host_batch[name])
+            if arr.dtype.kind in ("i", "u"):
+                planes = pack_tokens_host(arr, self.width)
+                staged[name] = planes
+                nbytes += planes.nbytes
+            else:
+                arr = np.ascontiguousarray(arr)
+                staged[name] = arr
+                nbytes += arr.nbytes
+        return staged, nbytes
+
+    def _worker(self, batch_iter):
+        try:
+            for host_batch, stored_bytes, state in batch_iter:
+                if self._stop.is_set():
+                    return
+                staged, h2d = self._stage(host_batch)
+                log = {
+                    "shard_read": stored_bytes,
+                    "host_device": h2d,
+                    "data_state": state,
+                }
+                while not self._stop.is_set():
+                    try:
+                        self._q.put((staged, log), timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+            self._q.put(None)  # finite iterator exhausted
+        except BaseException as e:  # surfaced on the consumer side
+            self._err = e
+            self._q.put(None)
+
+    # -- device side (main thread) -------------------------------------
+    def _unpack_fn(self, shapes_key):
+        fn = self._unpack_cache.get(shapes_key)
+        if fn is None:
+            kind = self.kind
+
+            def unpack(staged):
+                out = {}
+                for name, v in staged.items():
+                    if v.dtype == jnp.uint8:
+                        out[name] = unpack_tokens(v)
+                    else:
+                        out[name] = v
+                if kind == "lm":
+                    stream = out.pop("stream")
+                    out["tokens"] = stream[:, :-1]
+                    out["labels"] = stream[:, 1:]
+                return out
+
+            fn = jax.jit(unpack)
+            self._unpack_cache[shapes_key] = fn
+        return fn
+
+    def next(self) -> tuple[dict, dict]:
+        item = self._q.get()
+        if item is None:
+            err = self._err
+            raise err if err is not None else StopIteration()
+        staged, log = item
+        shapes_key = tuple(
+            (k, v.shape, str(v.dtype)) for k, v in sorted(staged.items())
+        )
+        device = {k: jnp.asarray(v) for k, v in staged.items()}
+        batch = self._unpack_fn(shapes_key)(device)
+        return batch, log
+
+    def __iter__(self):
+        while True:
+            yield self.next()
+
+    def close(self):
+        self._stop.set()
+        # drain so a blocked worker put() can observe the stop flag
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5)

@@ -1,0 +1,61 @@
+"""Shard-writer CLI: tokenize the synthetic generators into a shard dir.
+
+Tests and CI need no downloads — the same deterministic generators the
+inline pipeline uses are materialized once into the tiered record format
+(:mod:`repro.data.shards`), after which training ingests *bytes from
+disk* like a production run:
+
+  PYTHONPATH=src python -m repro.data.write --kind lm \
+      --vocab 1024 --seq 64 --records 256 --out /tmp/shards
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b \
+      --reduced --data-dir /tmp/shards --steps 20
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.data.shards import write_feature_shards, write_lm_shards
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--kind", choices=["lm", "feature"], default="lm")
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--vocab", type=int, default=1024)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--dim", type=int, default=64,
+                    help="feature dim (kind=feature)")
+    ap.add_argument("--records", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--codec", choices=["zlib", "raw"], default="zlib")
+    ap.add_argument("--records-per-shard", type=int, default=64)
+    args = ap.parse_args()
+
+    kw = dict(
+        vocab=args.vocab, seq=args.seq, num_records=args.records,
+        seed=args.seed, codec=args.codec,
+        records_per_shard=args.records_per_shard,
+    )
+    if args.kind == "lm":
+        manifest = write_lm_shards(args.out, **kw)
+    else:
+        manifest = write_feature_shards(args.out, dim=args.dim, **kw)
+    stored = sum(
+        s for sh in manifest["shards"] for r in sh["records"]
+        for f in r["fields"].values() for s in f["plane_sizes"]
+    )
+    files = [sh["file"] for sh in manifest["shards"]]
+    on_disk = sum(
+        os.path.getsize(os.path.join(args.out, f)) for f in files
+    )
+    assert stored == on_disk, (stored, on_disk)
+    print(json.dumps({
+        "out": args.out, "kind": args.kind, "records": args.records,
+        "shards": len(files), "stored_bytes": stored,
+    }))
+
+
+if __name__ == "__main__":
+    main()

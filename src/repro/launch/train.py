@@ -21,19 +21,25 @@ count from the roofline sweep (``repro.plan.pick_chunks``).
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.ckpt import save_checkpoint
+from repro.checkpoint.ckpt import (
+    AsyncCheckpointer, load_checkpoint, load_extra, save_checkpoint,
+)
 from repro.configs.registry import ARCHS, get_config, reduced
 from repro.data.pipeline import synthetic_feature_batch, synthetic_lm_batch
+from repro.data.prefetch import Prefetcher
+from repro.data.shards import ShardReader, batches
 from repro.dist.spec import (
     DIST, LeafSpec, MeshCfg, build_spec_tree, dist_elems_per_group,
     tree_to_storage,
 )
+from repro.roofline.analysis import train_ingest_bytes
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.models.init import init_params
 from repro.optim.sgd import SGDConfig, init_momentum
@@ -132,6 +138,32 @@ def main():
                          "from the roofline sweep)")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--ckpt", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="also checkpoint every N steps (0 = only final); "
+                         "each save stores the data-pipeline iterator "
+                         "state so --resume replays the exact batch stream")
+    ap.add_argument("--async-ckpt", action="store_true",
+                    help="serialize checkpoints on a worker thread, "
+                         "overlapped with the next train step")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore storage/momentum/AWP/data state from "
+                         "--ckpt and continue to --steps")
+    ap.add_argument("--data-dir", default="",
+                    help="ingest from a tiered shard dir (repro.data.write) "
+                         "through the double-buffered prefetcher instead of "
+                         "generating batches inline")
+    ap.add_argument("--data-quality", type=int, default=4,
+                    help="progressive-record tier: float payloads read only "
+                         "their N most significant byte planes (ids are "
+                         "always lossless)")
+    ap.add_argument("--prefetch-depth", type=int, default=2)
+    ap.add_argument("--losses-out", default="",
+                    help="write the per-step loss stream as JSON (the "
+                         "artifact --check compares against)")
+    ap.add_argument("--check", default="",
+                    help="reference losses JSON: verify this run's losses "
+                         "are bit-exact on overlapping steps (resume "
+                         "determinism) and exit nonzero otherwise")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -187,12 +219,74 @@ def main():
     )
     mom = init_momentum(storage)
 
+    # -- resume: storage/momentum/AWP state + data iterator position ----
+    start_step = 0
+    data_state = None
+    if args.resume:
+        if not args.ckpt:
+            raise SystemExit("--resume needs --ckpt")
+        storage, mom, start_step = load_checkpoint(
+            args.ckpt, storage, mom, trainer.controller
+        )
+        data_state = load_extra(args.ckpt).get("data_state")
+        print(f"resumed {args.ckpt} at step {start_step}")
+    if start_step >= args.steps:
+        raise SystemExit(f"checkpoint step {start_step} >= --steps {args.steps}")
+
+    # -- data source: tiered shards through the prefetcher, or inline ---
+    reader = prefetcher = None
+    ingest_plan = None
+    if args.data_dir:
+        reader = ShardReader(
+            args.data_dir, quality=args.data_quality, seed=0
+        )
+        want_kind = "feature" if audio else "lm"
+        if reader.kind != want_kind:
+            raise SystemExit(
+                f"--data-dir holds {reader.kind!r} shards, arch needs "
+                f"{want_kind!r}"
+            )
+        for key, want in (("vocab", cfg.vocab_size), ("seq", S)):
+            got = reader.meta.get(key)
+            if got is not None and got != want:
+                raise SystemExit(
+                    f"--data-dir {key}={got} does not match run {key}={want}"
+                )
+        if data_state is not None:
+            reader.load_state(data_state)
+        # analytic ingest model from the reader's CURRENT position —
+        # must be priced before the prefetcher starts reading ahead
+        ingest_plan = train_ingest_bytes(
+            plan, cfg.vocab_size, kind=reader.kind, batch=B, seq=S,
+            steps=args.steps - start_step, dim=cfg.vision_dim,
+            reader=reader,
+        )
+        prefetcher = Prefetcher(
+            batches(reader, B), kind=reader.kind, vocab=cfg.vocab_size,
+            plan=plan, depth=args.prefetch_depth,
+        )
+
+    async_ckpt = AsyncCheckpointer() if args.async_ckpt else None
+
+    def checkpoint(step):
+        save_checkpoint(
+            args.ckpt, storage, mom, trainer.controller, step, plan=plan,
+            spec_tree=spec_tree, round_tos=trainer.current_round_tos(),
+            extra={"data_state": data_state} if data_state else None,
+            async_ckpt=async_ckpt,
+        )
+
     rngi = np.random.default_rng(0)
     ctx = mesh if mesh is not None else _null()
     t0 = time.time()
+    done = 0
     with ctx:
-        for step in range(args.steps):
-            if audio:
+        for step in range(start_step, args.steps):
+            io_log = None
+            if prefetcher is not None:
+                batch, io_log = prefetcher.next()
+                data_state = io_log["data_state"]
+            elif audio:
                 f, l = synthetic_feature_batch(
                     cfg.vision_dim, cfg.vocab_size, B, S, step
                 )
@@ -200,7 +294,7 @@ def main():
             else:
                 t, l = synthetic_lm_batch(cfg.vocab_size, B, S, step)
                 batch = {"tokens": t, "labels": l}
-            if cfg.num_image_tokens:
+            if cfg.num_image_tokens and "image_features" not in batch:
                 batch["image_features"] = jnp.asarray(
                     rngi.normal(0, 1, (B, cfg.num_image_tokens, cfg.vision_dim)),
                     jnp.float32,
@@ -209,13 +303,21 @@ def main():
                 (jax.random.PRNGKey(step),) if plan.needs_rng else ()
             )
             storage, mom, _ = trainer.run_step(
-                storage, mom, batch, args.lr, *extra
+                storage, mom, batch, args.lr, *extra, io_log=io_log
             )
-            if step % 20 == 19:
+            done += 1
+            if args.ckpt and args.ckpt_every and (
+                (step + 1) % args.ckpt_every == 0 and step + 1 < args.steps
+            ):
+                checkpoint(step + 1)
+            if done % 20 == 0:
                 r = trainer.records[-1]
                 print(f"step {step+1:4d}  loss {r.loss:.4f}  rts {r.round_tos}"
                       f"  wire {r.wire_bytes/1e6:.1f}MB"
-                      f"  {(time.time()-t0)/(step+1):.2f}s/step", flush=True)
+                      f"  {(time.time()-t0)/done:.2f}s/step", flush=True)
+    if prefetcher is not None:
+        prefetcher.close()
+        reader.close()
     s = trainer.summary()
     print(f"done: loss {s['final_loss']:.4f}  wire-reduction "
           f"{s['wire_reduction']*100:.1f}%  recompiles {s['recompiles']}")
@@ -224,11 +326,49 @@ def main():
             f"{k} {v/1e6:.1f}MB" for k, v in s["wire_by_entry"].items() if v
         )
         print(f"wire by plan entry: {entries}")
+    if ingest_plan is not None and "io_by_entry" in s:
+        io = s["io_by_entry"]
+        measured = {
+            "shard_read": io.get("shard_read", 0),
+            "ingest_h2d": io.get("host_device", 0),
+        }
+        analytic = {k: ingest_plan[k] for k in measured}
+        status = "OK" if measured == analytic else "MISMATCH"
+        print(f"ingest bytes measured {measured} analytic {analytic} "
+              f"[{status}]")
+        if measured != analytic:
+            raise SystemExit("measured ingest bytes != analytic model")
     print(f"AWP: {s['bits_history']}")
     if args.ckpt:
-        save_checkpoint(args.ckpt, storage, mom, trainer.controller,
-                        args.steps, plan=plan)
-        print(f"checkpoint -> {args.ckpt} (plan persisted)")
+        checkpoint(args.steps)
+        if async_ckpt is not None:
+            async_ckpt.wait()
+        print(f"checkpoint -> {args.ckpt} (plan + data state persisted)")
+
+    losses = [r.loss for r in trainer.records]
+    if args.losses_out:
+        with open(args.losses_out, "w") as f:
+            json.dump({"start_step": start_step, "losses": losses}, f)
+        print(f"losses -> {args.losses_out}")
+    if args.check:
+        with open(args.check) as f:
+            ref = json.load(f)
+        mism = [
+            (g, ref["losses"][g - ref["start_step"]], losses[g - start_step])
+            for g in range(
+                max(start_step, ref["start_step"]),
+                min(start_step + len(losses),
+                    ref["start_step"] + len(ref["losses"])),
+            )
+            if ref["losses"][g - ref["start_step"]] != losses[g - start_step]
+        ]
+        if mism:
+            for g, a, b in mism[:5]:
+                print(f"step {g}: ref {a!r} != run {b!r}")
+            raise SystemExit(
+                f"--check: {len(mism)} loss mismatches vs {args.check}"
+            )
+        print(f"--check OK: losses bit-exact vs {args.check}")
 
 
 class _null:

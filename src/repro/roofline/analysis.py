@@ -299,6 +299,105 @@ def serve_host_device_bytes(
     return table
 
 
+def train_ingest_bytes(
+    plan_or_policy,
+    vocab_size: int,
+    *,
+    kind: str,
+    batch: int,
+    seq: int,
+    steps: int,
+    dim: int = 0,
+    reader=None,
+) -> dict:
+    """Analytic training-ingest model: the byte cost of feeding ``steps``
+    batches from the tiered shard pipeline (the training twin of
+    :func:`serve_host_device_bytes`). Two terms, matching the measured
+    per-step ``StepRecord.io_by_entry``:
+
+      * ``shard_read`` — stored bytes the reader moves off disk. Pure
+        manifest arithmetic (:meth:`~repro.data.shards.ShardReader.planned_bytes`
+        from the reader's *current* position — order matters because
+        per-record compressed plane sizes differ), so it prices the
+        actual tier the reader's ``quality`` knob selects. 0 when no
+        ``reader`` is passed (inline synthetic data reads no shards).
+      * ``ingest_h2d`` — bytes staged across the host→device boundary at
+        the plan's ``host_device``
+        :class:`~repro.transport.CompressionPolicy`: integer ids packed
+        to ``token_wire_width`` planes
+        (:func:`~repro.data.prefetch.staged_ids_per_batch` ids per batch
+        — LM stages the ``seq+1`` stream once, not tokens+labels
+        separately) plus raw fp32 feature payloads
+        (``batch·seq·dim·4``; lossy staging of training inputs would
+        change the optimization problem).
+
+    ``tests/scenarios/scenario_train_io.py`` pins both terms equal to
+    the prefetcher's measured log."""
+    from repro.data.prefetch import staged_ids_per_batch
+
+    pol = plan_or_policy
+    if pol is None:
+        from repro.transport import CompressionPolicy
+
+        pol = CompressionPolicy()
+    elif hasattr(pol, "host_device_policies"):  # a PrecisionPlan
+        pol = pol.host_device_policies()[0]
+    steps = int(steps)
+    ids = staged_ids_per_batch(kind, batch, seq) * steps
+    float_bytes = 0
+    if kind == "feature":
+        float_bytes = 4 * batch * seq * int(dim) * steps
+    table = {
+        "shard_read": (
+            reader.planned_bytes(batch * steps) if reader is not None else 0
+        ),
+        "ingest_h2d": pol.token_host_bytes(ids, vocab_size) + float_bytes,
+        "token_width": pol.token_wire_width(vocab_size),
+    }
+    table["total"] = table["shard_read"] + table["ingest_h2d"]
+    return table
+
+
+def train_checkpoint_bytes(
+    storage_like,
+    opt_like=None,
+    *,
+    spec_tree=None,
+    round_tos=None,
+    residuals: bool = True,
+) -> dict:
+    """Analytic byte model of one width-aware sharded checkpoint — must
+    equal :func:`repro.checkpoint.sharded.manifest_bytes` of the written
+    directory (and the summed ``os.path.getsize`` of its ``.bin`` files;
+    the train-I/O tests pin all three equal).
+
+    Walks the same :func:`~repro.checkpoint.sharded.assign_widths` the
+    writer uses: a compressible fp32 leaf in a group at ``round_to=rt``
+    costs ``elems·rt`` wire bytes (+ ``elems·(4-rt)`` residual bytes
+    when ``residuals``); every other storage leaf and the whole
+    optimizer tree cost full width. No compression estimate is needed —
+    checkpoint shards store raw planes, so the model is exact."""
+    import numpy as np
+
+    from repro.checkpoint.sharded import assign_widths, leaf_entries
+
+    widths: dict[str, int] = {}
+    if round_tos is not None and spec_tree is not None:
+        widths = assign_widths(storage_like, spec_tree, round_tos)
+    wire = residual = 0
+    for tree, use_widths in ((storage_like, True), (opt_like, False)):
+        if tree is None:
+            continue
+        for kpath, leaf in leaf_entries(tree):
+            n = int(math.prod(leaf.shape)) if len(leaf.shape) else 1
+            full = np.dtype(leaf.dtype).itemsize
+            w = widths.get(kpath, full) if use_widths else full
+            wire += n * w
+            if residuals and w < full:
+                residual += n * (full - w)
+    return {"wire": wire, "residual": residual, "total": wire + residual}
+
+
 def serve_paged_kv_bytes(
     cfg,
     *,

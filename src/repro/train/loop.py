@@ -35,6 +35,13 @@ class StepRecord:
     wall_s: float
     # per-traffic-class split (plan-driven runs; None for legacy policies)
     wire_by_entry: dict | None = None
+    # training-I/O bytes of this step's batch (shard_read = stored bytes
+    # the reader moved off disk, host_device = bytes staged across the
+    # boundary at the plan's host_device policy) — populated by
+    # ingest-from-shards runs via ``run_step(..., io_log=...)``; None for
+    # inline synthetic batches. Same role as wire_by_entry: the measured
+    # numbers the analytic models (train_ingest_bytes) are pinned to.
+    io_by_entry: dict | None = None
 
 
 class Trainer:
@@ -118,7 +125,7 @@ class Trainer:
         return total
 
     # ------------------------------------------------------------------
-    def run_step(self, storage, opt_state, batch, lr, *extra):
+    def run_step(self, storage, opt_state, batch, lr, *extra, io_log=None):
         rts = self.current_round_tos()
         recompiled = rts not in self._cache
         fn = self._step_fn(rts)
@@ -141,6 +148,11 @@ class Trainer:
                 recompiled=recompiled,
                 wall_s=time.time() - t0,
                 wire_by_entry=entries,
+                io_by_entry=(
+                    {k: v for k, v in io_log.items() if isinstance(v, int)}
+                    if io_log is not None
+                    else None
+                ),
             )
         )
         return storage, opt_state, metrics
@@ -171,4 +183,10 @@ class Trainer:
                     if k != "total":
                         by_entry[k] = by_entry.get(k, 0) + v
             out["wire_by_entry"] = by_entry
+        if any(r.io_by_entry for r in self.records):
+            io: dict[str, int] = {}
+            for r in self.records:
+                for k, v in (r.io_by_entry or {}).items():
+                    io[k] = io.get(k, 0) + v
+            out["io_by_entry"] = io
         return out

@@ -1,0 +1,240 @@
+"""End-to-end training-I/O scenario: tiered shards -> prefetcher ->
+train loop -> width-aware async checkpoint -> resume.
+
+The paper's methodology needs interruptible runs whose byte streams are
+priced: this scenario pins
+
+  * **resume determinism** — train N steps uninterrupted vs train k,
+    checkpoint (data-iterator state included), restore into a FRESH
+    trainer, continue: the loss stream and the final storage tree are
+    bit-exact. Twice: a static plan, and an AWP plan whose controller
+    widens formats mid-run (the checkpoint carries bits / counters /
+    prev_norms / history across the boundary).
+  * **measured == analytic, ingest** — the prefetcher's per-step
+    ``shard_read`` / ``host_device`` log sums equal
+    ``train_ingest_bytes`` priced from the reader's start position
+    (manifest + CompressionPolicy arithmetic, no file I/O).
+  * **measured == analytic, checkpoint** — the width-aware save's
+    manifest totals equal ``train_checkpoint_bytes`` AND the summed
+    on-disk shard file sizes; the widths recorded are the AWP
+    controller's *current* formats.
+  * **tiered ingest trains** — a quality-2 feature run reads strictly
+    fewer shard bytes than quality-4 (priced exactly) and still
+    descends.
+"""
+import os
+import tempfile
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.ckpt import (
+    AsyncCheckpointer, ckpt_dir, load_checkpoint, load_extra,
+    save_checkpoint,
+)
+from repro.checkpoint.sharded import manifest_bytes, read_meta
+from repro.configs.registry import get_config, reduced
+from repro.data.prefetch import Prefetcher
+from repro.data.shards import ShardReader, batches, write_feature_shards, \
+    write_lm_shards
+from repro.dist.spec import (
+    MeshCfg, build_spec_tree, dist_elems_per_group, tree_to_storage,
+)
+from repro.models.init import init_params
+from repro.optim.sgd import SGDConfig, init_momentum
+from repro.plan import PrecisionPlan
+from repro.roofline.analysis import train_checkpoint_bytes, train_ingest_bytes
+from repro.train.loop import Trainer
+from repro.train.step import make_train_step
+
+B, S, STEPS, HALF = 2, 16, 6, 3
+
+
+def _setup(arch, plan):
+    cfg = reduced(get_config(arch))
+    mesh_cfg = MeshCfg()
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    nrt = cfg.num_groups + 1
+    plan = plan.broadcast(nrt)
+    opt = SGDConfig(lr=0.05, momentum=0.9, weight_decay=1e-4)
+    if cfg.embed_is_input_stub:
+        shapes = {
+            "features": jax.ShapeDtypeStruct((B, S, cfg.vision_dim), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    else:
+        shapes = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+
+    def builder(round_tos):
+        return make_train_step(
+            cfg, mesh_cfg, None, spec_tree, opt, shapes,
+            plan=plan.with_round_tos(round_tos),
+        )
+
+    def trainer():
+        return Trainer(
+            builder, nrt, plan=plan,
+            dist_elems_per_group=dist_elems_per_group(spec_tree, mesh_cfg, nrt),
+            gather_axis_size=1,
+        )
+
+    # host snapshot: the train steps donate their storage/opt buffers,
+    # so every run must start from a FRESH device tree
+    host = jax.tree_util.tree_map(np.asarray, storage)
+
+    def fresh_storage():
+        return jax.tree_util.tree_map(jnp.asarray, host)
+
+    return cfg, spec_tree, fresh_storage, trainer
+
+
+def _run(trainer, storage, mom, shard_dir, kind, vocab, plan, steps,
+         data_state=None, quality=4):
+    """Train ``steps`` batches off the shard pipeline; returns final
+    trees, losses, the last data_state, and the summed io log."""
+    reader = ShardReader(shard_dir, quality=quality, seed=0)
+    if data_state is not None:
+        reader.load_state(data_state)
+    pf = Prefetcher(batches(reader, B), kind=kind, vocab=vocab, plan=plan)
+    losses, io = [], {"shard_read": 0, "host_device": 0}
+    state = None
+    for _ in range(steps):
+        batch, log = pf.next()
+        storage, mom, m = trainer.run_step(storage, mom, batch, 0.05,
+                                           io_log=log)
+        losses.append(float(m["loss"]))
+        state = log["data_state"]
+        io = {k: io[k] + log[k] for k in io}
+    pf.close()
+    reader.close()
+    return storage, mom, losses, state, io
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _resume_roundtrip(tmp, plan, tag):
+    """Uninterrupted vs checkpoint-at-HALF + fresh-trainer resume."""
+    cfg, spec_tree, fresh_storage, mk_trainer = _setup("qwen3-1.7b", plan)
+    shard_dir = os.path.join(tmp, f"shards_{tag}")
+    write_lm_shards(shard_dir, vocab=cfg.vocab_size, seq=S, num_records=8)
+
+    # ingest pin: price before any reading, then compare measured sums
+    rd = ShardReader(shard_dir, seed=0)
+    ingest = train_ingest_bytes(plan, cfg.vocab_size, kind="lm", batch=B,
+                                seq=S, steps=STEPS, reader=rd)
+    rd.close()
+
+    tr_full = mk_trainer()
+    s0 = fresh_storage()
+    s_full, m_full, losses_full, _, io = _run(
+        tr_full, s0, init_momentum(s0), shard_dir, "lm", cfg.vocab_size,
+        plan, STEPS,
+    )
+    assert io["shard_read"] == ingest["shard_read"], (io, ingest)
+    assert io["host_device"] == ingest["ingest_h2d"], (io, ingest)
+    assert tr_full.summary()["io_by_entry"]["shard_read"] == io["shard_read"]
+
+    # interrupted half: async width-aware checkpoint at the boundary
+    tr_a = mk_trainer()
+    s1 = fresh_storage()
+    s_half, m_half, losses_a, state, _ = _run(
+        tr_a, s1, init_momentum(s1), shard_dir, "lm",
+        cfg.vocab_size, plan, HALF,
+    )
+    ck = os.path.join(tmp, f"ck_{tag}")
+    ac = AsyncCheckpointer()
+    rts = tr_a.current_round_tos()
+    save_checkpoint(ck, s_half, m_half, tr_a.controller, HALF, plan=plan,
+                    spec_tree=spec_tree, round_tos=rts,
+                    extra={"data_state": state}, async_ckpt=ac)
+    ac.wait()
+
+    # checkpoint byte pin: manifest == analytic == on-disk
+    meta = read_meta(ckpt_dir(ck))
+    mb = manifest_bytes(meta)
+    assert mb == train_checkpoint_bytes(s_half, m_half, spec_tree=spec_tree,
+                                        round_tos=rts)
+    d = ckpt_dir(ck)
+    assert mb["total"] == sum(
+        os.path.getsize(os.path.join(d, f))
+        for f in os.listdir(d) if f.endswith(".bin")
+    )
+    widths = {e["path"]: e["width"] for e in meta["trees"]["storage"]
+              if e["tiered"]}
+    assert widths, "expected width-tiered leaves in the manifest"
+    assert set(widths.values()) <= set(rts)
+
+    # fresh trainer + restored state: bit-exact continuation
+    tr_b = mk_trainer()
+    s_r, m_r, step = load_checkpoint(ck, s_half, m_half, tr_b.controller)
+    assert step == HALF
+    ds = load_extra(ck)["data_state"]
+    s_res, m_res, losses_b, _, _ = _run(
+        tr_b, s_r, m_r, shard_dir, "lm", cfg.vocab_size, plan,
+        STEPS - HALF, data_state=ds,
+    )
+    assert losses_a + losses_b == losses_full, (
+        tag, losses_a + losses_b, losses_full
+    )
+    _assert_trees_equal(s_res, s_full)
+    _assert_trees_equal(m_res, m_full)
+    return tr_full, tr_b
+
+
+def test_resume_bit_exact_static_plan(tmp_path):
+    plan = PrecisionPlan.build(3, round_to=2, schedule="static")
+    _resume_roundtrip(str(tmp_path), plan, "static")
+
+
+def test_resume_bit_exact_awp_plan(tmp_path):
+    """AWP plan whose controller is forced to widen every 2 steps
+    (threshold so high every norm delta hits): the widths change across
+    the checkpoint boundary and the resumed trajectory — losses, bits
+    history, final trees — is still bit-exact."""
+    plan = PrecisionPlan.build(3, schedule="awp", awp_threshold=1e9,
+                               awp_interval=2)
+    tr_full, tr_res = _resume_roundtrip(str(tmp_path), plan, "awp")
+    assert len(tr_full.controller.history) > 1, "controller never widened"
+    assert tr_res.controller.history == tr_full.controller.history
+    np.testing.assert_array_equal(tr_res.controller.state.bits,
+                                  tr_full.controller.state.bits)
+
+
+def test_quality_tier_trains_and_prices_exactly(tmp_path):
+    """Feature (audio) family at ingest quality 2: float payloads read
+    half their planes — strictly fewer shard bytes, priced exactly by
+    the analytic model — and the truncated stream still trains."""
+    plan = PrecisionPlan.build(3, round_to=2, schedule="static")
+    cfg, spec_tree, fresh_storage, mk_trainer = _setup("hubert-xlarge", plan)
+    shard_dir = str(tmp_path / "fshards")
+    write_feature_shards(shard_dir, dim=cfg.vision_dim,
+                         vocab=cfg.vocab_size, seq=S, num_records=8)
+    plans = {}
+    for q in (2, 4):
+        rd = ShardReader(shard_dir, quality=q, seed=0)
+        plans[q] = train_ingest_bytes(
+            plan, cfg.vocab_size, kind="feature", batch=B, seq=S,
+            steps=STEPS, dim=cfg.vision_dim, reader=rd,
+        )
+        rd.close()
+    assert plans[2]["shard_read"] < plans[4]["shard_read"]
+    assert plans[2]["ingest_h2d"] == plans[4]["ingest_h2d"]  # h2d is raw fp32
+
+    tr = mk_trainer()
+    s0 = fresh_storage()
+    _, _, losses, _, io = _run(
+        tr, s0, init_momentum(s0), shard_dir, "feature",
+        cfg.vocab_size, plan, STEPS, quality=2,
+    )
+    assert io["shard_read"] == plans[2]["shard_read"]
+    assert io["host_device"] == plans[2]["ingest_h2d"]
+    assert losses[-1] < losses[0], "quality-2 ingest failed to descend"

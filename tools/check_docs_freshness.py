@@ -35,6 +35,7 @@ SEARCH_EXTS = {".py", ".md", ".toml", ".yml"}
 REQUIRED_DOCS = (
     "architecture.md",
     "collectives.md",
+    "data.md",
     "plan.md",
     "serving.md",
     "transport.md",
