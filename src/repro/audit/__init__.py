@@ -1,0 +1,28 @@
+"""Static data-motion auditor (jaxpr layer).
+
+``audit_step`` traces any step-factory product with ``jax.make_jaxpr``
+under abstract inputs — no device execution — walks the jaxpr for
+communication equations, attributes each one to a
+:class:`~repro.plan.PrecisionPlan` traffic class via the transport's
+packing structure, and pins the jaxpr-derived wire bytes against the
+roofline's analytic model (``PrecisionPlan.wire_table`` geometry). The
+third independent byte pin alongside measured and analytic: the traced
+program itself. See docs/audit.md for the attribution catalog.
+"""
+from repro.audit.audit import (
+    AuditError,
+    AuditReport,
+    ClassTotal,
+    audit_step,
+)
+from repro.audit.jaxpr import CommEqn, JaxprWalkError, collect_comm_eqns
+
+__all__ = [
+    "AuditError",
+    "AuditReport",
+    "ClassTotal",
+    "CommEqn",
+    "JaxprWalkError",
+    "audit_step",
+    "collect_comm_eqns",
+]

@@ -1,0 +1,154 @@
+import os
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+)
+
+"""``python -m repro.audit`` — static data-motion sweep over the registry.
+
+Traces every (arch × plan × mesh × seq-layout) combo with abstract
+inputs, attributes each communication eqn to a plan traffic class, and
+fails unless the jaxpr-derived wire bytes exactly equal the analytic
+model with zero unattributed eqns. The two lines above MUST run before
+any other import (jax locks the device count on first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.audit                       # full sweep
+  PYTHONPATH=src python -m repro.audit --archs qwen3-1.7b \
+      --kinds train,prefill --meshes 1x2 --plans rt2 --json report.json
+"""
+import argparse
+import json
+import sys
+import time
+
+from repro.audit.audit import audit_step
+from repro.audit.cases import PLAN_NAMES, build_case, make_plan, parse_mesh
+from repro.configs.registry import ARCHS, get_config, reduced
+
+
+def _fmt_classes(report) -> str:
+    parts = []
+    for name, c in sorted(report.classes.items()):
+        parts.append(f"{name}={round(c.jaxpr_bytes)}")
+    return " ".join(parts) or "-"
+
+
+def run_sweep(archs, kinds, meshes, plans, *, seq_parallel="auto",
+              seq_len=32, global_batch=4, verbose=True):
+    """Returns (results, n_failed). Each result is a JSON-ready dict."""
+    results = []
+    n_failed = 0
+    for arch in archs:
+        cfg = reduced(get_config(arch))  # build_case audits reduced cfgs
+        num_entries = cfg.num_groups + 1
+        for mesh_spec in meshes:
+            mesh_cfg = parse_mesh(mesh_spec)
+            layouts = [False]
+            if seq_parallel == "on":
+                layouts = [True]
+            elif seq_parallel == "auto" and mesh_cfg.tp > 1:
+                layouts = [False, True]
+            for plan_name in plans:
+                for sp in layouts:
+                    for kind in kinds:
+                        if sp and kind == "decode":
+                            continue  # decode has no sequence dim to shard
+                        plan = make_plan(
+                            plan_name, num_entries, seq_parallel=sp
+                        )
+                        combo = dict(
+                            arch=arch, kind=kind, mesh=mesh_spec,
+                            plan=plan_name, seq_parallel=sp,
+                        )
+                        t0 = time.time()
+                        case = build_case(
+                            arch, kind, mesh_cfg, plan,
+                            seq_len=seq_len, global_batch=global_batch,
+                        )
+                        if case is None:
+                            combo["skipped"] = "not applicable"
+                            results.append(combo)
+                            continue
+                        try:
+                            report = audit_step(
+                                case.step, case.args, case.plan,
+                                mesh_cfg=mesh_cfg,
+                                spec_tree=case.spec_tree,
+                                kind=kind, mesh=case.mesh,
+                            )
+                        except Exception as exc:  # trace-time failure
+                            combo["error"] = f"{type(exc).__name__}: {exc}"
+                            results.append(combo)
+                            n_failed += 1
+                            if verbose:
+                                print(f"ERROR {combo['arch']} {kind} "
+                                      f"{mesh_spec} {plan_name}: "
+                                      f"{combo['error']}")
+                            continue
+                        combo["report"] = report.to_json_dict()
+                        combo["trace_s"] = round(time.time() - t0, 2)
+                        results.append(combo)
+                        if not report.ok:
+                            n_failed += 1
+                        if verbose:
+                            status = "ok" if report.ok else "FAIL"
+                            sp_tag = " sp" if sp else ""
+                            print(
+                                f"{status:4s} {arch:20s} {kind:8s} "
+                                f"{mesh_spec}{sp_tag:3s} {plan_name:11s} "
+                                f"eqns={report.n_comm_eqns:3d} "
+                                f"{_fmt_classes(report)}"
+                            )
+                            for v in report.violations:
+                                print(f"       ! {v}")
+    return results, n_failed
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.audit",
+        description="static jaxpr data-motion audit over the registry",
+    )
+    ap.add_argument("--archs", default="all",
+                    help="comma-separated arch names, or 'all'")
+    ap.add_argument("--kinds", default="train",
+                    help="train,prefill,decode,place")
+    ap.add_argument("--meshes", default="1x2,2x1",
+                    help="comma-separated dpxtp specs")
+    ap.add_argument("--plans", default=",".join(PLAN_NAMES))
+    ap.add_argument("--seq-parallel", choices=("auto", "on", "off"),
+                    default="auto",
+                    help="auto: audit both layouts wherever tp > 1")
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--global-batch", type=int, default=4)
+    ap.add_argument("--json", default=None,
+                    help="write the per-config attribution report here")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCHS) if args.archs == "all" else args.archs.split(",")
+    results, n_failed = run_sweep(
+        archs,
+        args.kinds.split(","),
+        args.meshes.split(","),
+        args.plans.split(","),
+        seq_parallel=args.seq_parallel,
+        seq_len=args.seq_len,
+        global_batch=args.global_batch,
+    )
+    audited = [r for r in results if "report" in r]
+    print(
+        f"\naudited {len(audited)} combos "
+        f"({len(results) - len(audited)} skipped/errored), "
+        f"{n_failed} failed"
+    )
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(
+                {"results": results, "failed": n_failed}, f, indent=1
+            )
+        print(f"report -> {args.json}")
+    return 1 if n_failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,596 @@
+"""Attribute traced collectives to PrecisionPlan traffic classes and pin
+the jaxpr-derived wire bytes against the analytic byte model.
+
+The attribution works from the transport's packing structure: a
+compressed pipeline always moves ``uint8`` planes whose *leading dim is
+the wire width* (bytes/element), so the jaxpr alone reveals the format
+every collective used. The verifier then checks three things:
+
+(a) **format** — every collective inside a compressing plan region moves
+    uint8 planes at one of the plan's declared widths, never raw fp32;
+(b) **inventory** — the collective multiset matches what the plan +
+    parameter spec tree say must move (per-leaf weight gathers, gradient
+    reduce-scatters, grad-sync psums, metric psums), with zero
+    unattributed communication eqns left over;
+(c) **bytes** — per traffic class, the jaxpr-derived ring wire bytes
+    equal ``PrecisionPlan.wire_table``'s analytic bytes (the same
+    numbers ``roofline.analysis`` charges), closing the
+    measured/analytic/traced triangle.
+
+Classes ``weights`` / ``gradients`` / ``grad_sync`` / ``metrics`` are
+pinned against *independent* expectations derived from the spec tree —
+a wrong wire dtype (e.g. fp32 where rt=2 planes were promised) diverges
+by ``4/rt`` and fails. ``activations`` / ``seq_boundary`` eqn payloads
+are only discoverable from the trace, so their pin is the width
+contract: detected plane widths must be plan widths, raw psums are legal
+only where the transport's own fallback rule (no tp-divisible dim, or an
+uncompressed policy) permits them. ``relayout`` (lossless re-layout:
+``seq_split`` / ``seq_merge``, EP-MoE token exchange) and
+``host_device`` (no jaxpr carrier — the staging happens outside jit)
+are accounting-only.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import math
+from collections import Counter
+
+import jax
+
+from repro.audit.jaxpr import CommEqn, collect_comm_eqns
+from repro.dist.spec import DIST, LeafSpec, MeshCfg, REPL, TP_SMALL
+from repro.plan import PrecisionPlan
+from repro.transport.policy import FP32_BYTES, ring_wire_bytes
+from repro.transport.transport import pick_split_axis
+
+_RING_KIND = {
+    "all_gather": "all-gather",
+    "all_to_all": "all-to-all",
+    "reduce_scatter": "reduce-scatter",
+    "psum": "all-reduce",
+    "pmax": "all-reduce",
+    "pmin": "all-reduce",
+    "ppermute": "collective-permute",
+}
+
+# Verifiable step kinds; "place" runs the gathers once over whole leaves
+TRAIN_KINDS = ("train", "cnn_train")
+KINDS = ("train", "cnn_train", "prefill", "decode", "place")
+
+
+class AuditError(Exception):
+    """The traced program's data motion violates its plan. Carries the
+    failing :class:`AuditReport` for inspection."""
+
+    def __init__(self, report: "AuditReport"):
+        self.report = report
+        lines = "\n  ".join(report.violations)
+        super().__init__(
+            f"audit failed ({len(report.violations)} violation(s)):\n  {lines}"
+        )
+
+
+@dataclasses.dataclass
+class ClassTotal:
+    """Per-traffic-class byte tallies. ``structural=True`` marks classes
+    whose analytic side is derived from the traced structure (payload
+    geometry is unknowable without the trace); their verification
+    content is the format/legality contract, not byte independence."""
+
+    eqns: int = 0
+    jaxpr_bytes: float = 0.0
+    analytic_bytes: float = 0.0
+    structural: bool = False
+
+    def to_json_dict(self) -> dict:
+        return {
+            "eqns": self.eqns,
+            "jaxpr_bytes": round(self.jaxpr_bytes),
+            "analytic_bytes": round(self.analytic_bytes),
+            "structural": self.structural,
+        }
+
+
+@dataclasses.dataclass
+class AuditReport:
+    kind: str
+    mesh: str
+    classes: dict
+    violations: list
+    n_comm_eqns: int
+    notes: list
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def raise_if_failed(self) -> "AuditReport":
+        if not self.ok:
+            raise AuditError(self)
+        return self
+
+    @property
+    def total_jaxpr_bytes(self) -> int:
+        return round(sum(c.jaxpr_bytes for c in self.classes.values()))
+
+    @property
+    def total_analytic_bytes(self) -> int:
+        return round(sum(c.analytic_bytes for c in self.classes.values()))
+
+    def to_json_dict(self) -> dict:
+        return {
+            "kind": self.kind,
+            "mesh": self.mesh,
+            "ok": self.ok,
+            "n_comm_eqns": self.n_comm_eqns,
+            "classes": {
+                k: v.to_json_dict() for k, v in sorted(self.classes.items())
+            },
+            "violations": list(self.violations),
+            "notes": list(self.notes),
+        }
+
+
+def _eqn_ring_bytes(e: CommEqn) -> float:
+    kind = _RING_KIND[e.prim]
+    payload = e.out_bytes if kind in ("all-gather", "all-to-all") else e.in_bytes
+    return ring_wire_bytes(kind, payload, e.group_size) * e.mult
+
+
+def _itemwidth(dtype_name: str) -> int:
+    import numpy as np
+
+    return int(np.dtype(dtype_name).itemsize)
+
+
+# ---------------------------------------------------------------------------
+# expected inventories (the spec-tree / plan side — independent of the trace)
+# ---------------------------------------------------------------------------
+
+
+def _iter_leaf_groups(spec_tree, num_entries, groups_info=None):
+    """Yield ``(group_index, LeafSpec)`` for both parameter layouts:
+    the LLM ``{"groups": [...], <top>}`` tree (top leaves ride the last
+    entry) and the CNN ``{"layers": {name: ...}}`` tree (``groups_info``
+    maps layer name -> group)."""
+    is_leaf = lambda x: isinstance(x, LeafSpec)  # noqa: E731
+
+    def leaves(sub):
+        return [
+            s for s in jax.tree_util.tree_leaves(sub, is_leaf=is_leaf)
+            if isinstance(s, LeafSpec)
+        ]
+
+    if "groups" in spec_tree:
+        for g, sub in enumerate(spec_tree["groups"]):
+            for s in leaves(sub):
+                yield g, s
+        top = {k: v for k, v in spec_tree.items() if k != "groups"}
+        for s in leaves(top):
+            yield num_entries - 1, s
+    elif "layers" in spec_tree and groups_info is not None:
+        name_to_group = groups_info[0]
+        for name, sub in spec_tree["layers"].items():
+            for s in leaves(sub):
+                yield name_to_group[name], s
+    else:
+        raise ValueError(
+            "unrecognized spec tree layout (need 'groups', or 'layers' "
+            "with groups_info)"
+        )
+
+
+def _local_psum_shape(s: LeafSpec, mesh_cfg: MeshCfg) -> tuple[int, ...]:
+    """Per-device shape of a storage leaf inside the shard_map body —
+    the operand shape of its grad-sync psum."""
+    lead = (s.reps,) if s.stacked else ()
+    if mesh_cfg.trivial or s.kind == REPL:
+        return lead + tuple(s.logical)
+    if s.kind == TP_SMALL:
+        return lead + (1,) + tuple(s.local_logical)
+    if s.meta.tp_dim is not None:
+        return lead + (1, s.s_loc)
+    return lead + (s.s_loc,)
+
+
+@dataclasses.dataclass
+class _Expected:
+    """Multiset expectations keyed by observable jaxpr features."""
+
+    # (payload_elems, wire_width) -> count
+    weight_gathers: Counter
+    grad_scatters: Counter
+    # (shape, dtype) -> Counter of class tags ("grad_sync" | "metrics")
+    dp_psums: dict
+    model_psums: dict
+    dist_elems: list
+
+
+def _expected_inventory(
+    plan: PrecisionPlan, mesh_cfg: MeshCfg, spec_tree, kind: str,
+    groups_info=None,
+) -> _Expected:
+    policies = plan.weight_policies()
+    num_entries = len(policies)
+    n = mesh_cfg.dshards
+    tp = mesh_cfg.tp
+    train = kind in TRAIN_KINDS
+    accum = plan.accum_steps if kind == "train" else 1
+
+    weights: Counter = Counter()
+    grads: Counter = Counter()
+    dp_psums: dict = {}
+    model_psums: dict = {}
+    dist_elems = [0] * num_entries
+
+    def add_psum(table, shape, dtype, tag, count=1):
+        table.setdefault((tuple(shape), dtype), Counter())[tag] += count
+
+    for g, s in _iter_leaf_groups(spec_tree, num_entries, groups_info):
+        pol = policies[g]
+        # model-axis grad sync is orthogonal to the storage kind:
+        # _sync_grads applies it to every flagged leaf, DIST included
+        # (compute-replicated leaves whose storage shards over the
+        # model axis, e.g. mlstm wq/wk)
+        if (
+            kind == "train"
+            and tp > 1
+            and (
+                s.meta.grad_sync_model
+                or (plan.seq_parallel and s.meta.grad_sync_seq)
+            )
+        ):
+            add_psum(
+                model_psums, _local_psum_shape(s, mesh_cfg), "float32",
+                "grad_sync",
+            )
+        if s.kind == DIST:
+            s_pad = s.s_loc * max(n, 1)
+            dist_elems[g] += s_pad
+            if n <= 1:
+                continue  # no gather axis: weights stage host->device
+            width = pol.round_to if pol.compresses else FP32_BYTES
+            chunked = (
+                pol.compresses
+                and pol.chunks > 1
+                and s.s_loc % pol.chunks == 0
+            )
+            if kind == "place":
+                if s.stacked:
+                    weights[(s.reps * s_pad, width)] += 1
+                elif chunked:
+                    weights[(s_pad // pol.chunks, width)] += pol.chunks
+                else:
+                    weights[(s_pad, width)] += 1
+                continue
+            if chunked:
+                weights[(s_pad // pol.chunks, width)] += (
+                    s.reps * pol.chunks * accum
+                )
+            else:
+                weights[(s_pad, width)] += s.reps * accum
+            if train:
+                gw = (
+                    pol.grad_round_to
+                    if pol.compresses_grads else FP32_BYTES
+                )
+                grads[(s_pad, gw)] += s.reps * accum
+        else:
+            if train and n > 1:
+                add_psum(
+                    dp_psums, _local_psum_shape(s, mesh_cfg), "float32",
+                    "grad_sync",
+                )
+
+    if kind == "train":
+        if n > 1:
+            add_psum(dp_psums, (), "float32", "metrics", 2)  # loss + count
+            add_psum(dp_psums, (num_entries,), "float32", "metrics")
+        if tp > 1:
+            add_psum(model_psums, (num_entries,), "float32", "metrics")
+    elif kind == "cnn_train" and n > 1:
+        add_psum(dp_psums, (), "float32", "metrics")  # loss
+        add_psum(dp_psums, (num_entries,), "float32", "metrics")
+
+    return _Expected(weights, grads, dp_psums, model_psums, dist_elems)
+
+
+# ---------------------------------------------------------------------------
+# attribution + verification
+# ---------------------------------------------------------------------------
+
+
+def _take_psum(table, e: CommEqn) -> str | None:
+    """Consume one expected psum matching this eqn; returns its class."""
+    tags = table.get((e.in_shape, e.in_dtype))
+    if not tags:
+        return None
+    for tag in ("grad_sync", "metrics"):
+        if tags.get(tag, 0) > 0:
+            tags[tag] -= 1
+            return tag
+    return None
+
+
+def _act_widths(plan: PrecisionPlan) -> set[int]:
+    """Plane widths the activation / seq-boundary policies may put on
+    the wire (forward and cotangent directions)."""
+    widths = set()
+    for pol in (plan.activations, plan.seq_policy()):
+        if pol is None:
+            continue
+        if pol.round_to < FP32_BYTES:
+            widths.add(pol.round_to)
+        if pol.grad_round_to < FP32_BYTES:
+            widths.add(pol.grad_round_to)
+    return widths
+
+
+def audit_step(
+    step_fn,
+    abstract_args,
+    plan: PrecisionPlan,
+    *,
+    mesh_cfg: MeshCfg,
+    spec_tree,
+    kind: str = "train",
+    groups_info=None,
+    mesh=None,
+) -> AuditReport:
+    """Trace ``step_fn`` under abstract inputs and verify its data
+    motion against ``plan``. Returns an :class:`AuditReport`; call
+    ``report.raise_if_failed()`` (or check ``report.ok``) to enforce.
+
+    ``step_fn`` is any step-factory product (train / cnn_train /
+    prefill / decode / place — pass the matching ``kind``);
+    ``abstract_args`` the ShapeDtypeStruct argument tuple it lowers
+    against; ``spec_tree`` the parameter spec tree the step was built
+    from (``groups_info`` additionally for the CNN layout). ``mesh``
+    is entered during tracing when given (shard_map steps carry their
+    mesh, so this is only needed for sharding-annotated callables).
+    """
+    if kind not in KINDS:
+        raise ValueError(f"kind must be one of {KINDS}, got {kind!r}")
+    n = mesh_cfg.dshards
+    tp = mesh_cfg.tp
+    num_entries = (
+        len(spec_tree["groups"]) + 1
+        if "groups" in spec_tree
+        else groups_info[1]
+    )
+    plan = plan.broadcast(num_entries)
+    policies = plan.weight_policies()
+
+    ctx = mesh if mesh is not None else contextlib.nullcontext()
+    with ctx:
+        closed = jax.make_jaxpr(step_fn)(*abstract_args)
+    eqns = collect_comm_eqns(closed)
+
+    exp = _expected_inventory(plan, mesh_cfg, spec_tree, kind, groups_info)
+    fsdp = frozenset(mesh_cfg.fsdp_axes)
+    model = frozenset((mesh_cfg.model_axis,))
+    act_widths = _act_widths(plan)
+    act_pol = plan.seq_policy() if plan.seq_parallel else plan.activations
+    boundary_class = "seq_boundary" if plan.seq_parallel else "activations"
+
+    classes: dict[str, ClassTotal] = {}
+    violations: list[str] = []
+    notes: list[str] = []
+
+    def tally(name, e, analytic, structural=False):
+        c = classes.setdefault(name, ClassTotal())
+        c.eqns += e.mult
+        c.jaxpr_bytes += _eqn_ring_bytes(e)
+        c.analytic_bytes += analytic
+        c.structural = c.structural or structural
+
+    got_weights: Counter = Counter()
+    got_grads: Counter = Counter()
+
+    for e in eqns:
+        if e.in_ctrl:
+            violations.append(
+                "collective under data-dependent control flow "
+                f"(unpriceable trip count): {e.describe()}"
+            )
+            continue
+        if e.prim == "device_put":
+            violations.append(
+                f"device transfer inside the traced step: {e.describe()} "
+                "(host/device staging must live outside jit, priced by "
+                "the plan's host_device entry)"
+            )
+            continue
+        if e.axis_index_groups:
+            violations.append(
+                f"axis_index_groups collective (unattributable to one "
+                f"mesh axis): {e.describe()}"
+            )
+            continue
+        axes = frozenset(e.axes)
+
+        if axes == fsdp:
+            width = e.plane_width or _itemwidth(e.in_dtype)
+            if e.prim == "all_gather":
+                key = (e.payload_elems, width)
+                got_weights[key] += e.mult
+                pol_w = e.payload_elems * width
+                tally(
+                    "weights", e,
+                    ring_wire_bytes("all-gather", pol_w, n) * e.mult,
+                )
+            elif e.prim in ("all_to_all", "reduce_scatter"):
+                key = (e.payload_elems, width)
+                got_grads[key] += e.mult
+                tally(
+                    "gradients", e,
+                    ring_wire_bytes(
+                        "reduce-scatter", e.payload_elems * width, n
+                    ) * e.mult,
+                )
+            elif e.prim == "psum":
+                tag = _take_psum(exp.dp_psums, e)
+                if tag is None:
+                    violations.append(
+                        f"unattributed data-axis psum: {e.describe()}"
+                    )
+                else:
+                    tally(tag, e, _eqn_ring_bytes(e))
+            else:
+                violations.append(
+                    f"unattributed data-axis collective: {e.describe()}"
+                )
+        elif axes == model:
+            if e.prim in ("pmax", "pmin"):
+                # min/max all-reduces (vocab-parallel softmax max) are
+                # exempt from the plane-compression contract: the uint8
+                # pipeline relies on sums being ring-splittable, which
+                # max/min are not — raw dtype IS their wire format
+                tally(
+                    boundary_class, e, _eqn_ring_bytes(e), structural=True
+                )
+                continue
+            if e.prim == "psum":
+                tag = _take_psum(exp.model_psums, e)
+                if tag is not None:
+                    tally(tag, e, _eqn_ring_bytes(e))
+                    continue
+                if len(e.in_shape) == 0:
+                    # per-layer scalar reductions (MoE aux loss, shard
+                    # diagnostics): metrics by construction
+                    tally("metrics", e, _eqn_ring_bytes(e), structural=True)
+                    continue
+                # raw all-reduce on the activation path: legal only where
+                # the transport's own fallback rule would emit one
+                compressing = act_pol is not None and (
+                    act_pol.round_to < FP32_BYTES
+                    or act_pol.grad_round_to < FP32_BYTES
+                )
+                if compressing and pick_split_axis(e.in_shape, tp) is not None:
+                    violations.append(
+                        "raw psum inside a compressing activation region "
+                        f"(expected uint8 planes): {e.describe()}"
+                    )
+                    continue
+                pol = act_pol
+                elems = math.prod(e.in_shape)
+                if pol is None:
+                    analytic = _eqn_ring_bytes(e)
+                else:
+                    analytic = pol.all_reduce_wire_bytes(
+                        elems, tp,
+                        uncompressed_bytes=_itemwidth(e.in_dtype),
+                    ) * e.mult
+                tally(boundary_class, e, analytic, structural=True)
+            elif e.is_packed:
+                width = e.plane_width
+                if width not in act_widths:
+                    violations.append(
+                        f"plane width {width} not declared by the plan's "
+                        f"activation/seq policies {sorted(act_widths)}: "
+                        f"{e.describe()}"
+                    )
+                    continue
+                pol = act_pol
+                grad = (
+                    pol is not None
+                    and width == pol.grad_round_to
+                    and width != pol.round_to
+                )
+                elems = e.payload_elems
+                if e.prim == "all_gather":
+                    analytic = pol.seq_gather_wire_bytes(elems, tp, grad=grad)
+                else:
+                    analytic = pol.seq_scatter_wire_bytes(elems, tp, grad=grad)
+                tally(boundary_class, e, analytic * e.mult, structural=True)
+            elif e.prim in ("all_gather", "all_to_all", "reduce_scatter"):
+                # raw-dtype re-layout: seq_split/seq_merge, EP-MoE token
+                # exchange, uncompressed boundary legs — lossless, priced
+                # at the aval's own width
+                tally("relayout", e, _eqn_ring_bytes(e), structural=True)
+            else:
+                violations.append(
+                    f"unattributed model-axis collective: {e.describe()}"
+                )
+        else:
+            violations.append(
+                f"collective over unrecognized axis set {sorted(axes)} "
+                f"(fsdp={sorted(fsdp)}, model={sorted(model)}): "
+                f"{e.describe()}"
+            )
+
+    # -- inventory diffs ---------------------------------------------------
+    def diff(name, got: Counter, want: Counter):
+        for key in sorted(set(got) | set(want)):
+            elems, width = key
+            d = got[key] - want[key]
+            if d > 0:
+                violations.append(
+                    f"{name}: {d} unexpected collective(s) of {elems} "
+                    f"elems at {width} B/elem (plan promised widths "
+                    f"{sorted({w for _, w in want})})"
+                )
+            elif d < 0:
+                violations.append(
+                    f"{name}: {-d} missing collective(s) of {elems} "
+                    f"elems at {width} B/elem"
+                )
+
+    diff("weights", got_weights, exp.weight_gathers)
+    diff("gradients", got_grads, exp.grad_scatters)
+    for table, where in ((exp.dp_psums, "data"), (exp.model_psums, "model")):
+        for (shape, dtype), tags in table.items():
+            for tag, cnt in tags.items():
+                if cnt > 0:
+                    violations.append(
+                        f"{tag}: missing {cnt} {where}-axis psum(s) of "
+                        f"{dtype}{list(shape)}"
+                    )
+
+    # -- analytic totals for the independent classes -----------------------
+    accum = plan.accum_steps if kind == "train" else 1
+    table = plan.wire_table(
+        exp.dist_elems, n, training=kind in TRAIN_KINDS, tp=tp
+    )
+    for name, scale in (("weights", accum), ("gradients", accum)):
+        want = table[name] * scale
+        c = classes.get(name)
+        have = round(c.analytic_bytes) if c else 0
+        if round(have) != round(want):
+            violations.append(
+                f"{name}: analytic bytes {have} != wire_table {want} "
+                "(per-eqn policy pricing drifted from the plan table)"
+            )
+        elif c is not None:
+            c.analytic_bytes = float(want)
+    if n <= 1 and table["host_device"]:
+        classes["host_device"] = ClassTotal(
+            eqns=0, jaxpr_bytes=0.0,
+            analytic_bytes=float(table["host_device"]), structural=True,
+        )
+        notes.append(
+            "host_device is accounting-only: staging happens outside jit "
+            "(no jaxpr carrier); bytes from the plan's host_device entry"
+        )
+
+    # -- the byte pin ------------------------------------------------------
+    for name, c in sorted(classes.items()):
+        if name == "host_device":
+            continue
+        if round(c.jaxpr_bytes) != round(c.analytic_bytes):
+            violations.append(
+                f"{name}: jaxpr wire bytes {round(c.jaxpr_bytes)} != "
+                f"analytic {round(c.analytic_bytes)}"
+            )
+
+    mesh_str = f"{mesh_cfg.pods}x{mesh_cfg.dp}x{mesh_cfg.tp}" \
+        if mesh_cfg.pods > 1 else f"{mesh_cfg.dp}x{mesh_cfg.tp}"
+    return AuditReport(
+        kind=kind,
+        mesh=mesh_str,
+        classes=classes,
+        violations=violations,
+        n_comm_eqns=sum(e.mult for e in eqns),
+        notes=notes,
+    )

@@ -1,0 +1,161 @@
+"""Build auditable (step, abstract args) combos from the registry.
+
+Mirrors ``launch/dryrun.py``'s combo builder but at audit scale: reduced
+configs, tiny shapes, and a mesh sized from the MeshCfg (no 512-device
+host flag). Tracing is abstract — no arrays are ever materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.configs.registry import get_config, reduced
+from repro.configs.shapes import applicable, input_specs
+from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
+from repro.launch.mesh import make_mesh_from_cfg
+from repro.models.init import param_shapes
+from repro.optim.sgd import SGDConfig
+from repro.plan import PrecisionPlan
+from repro.serve.step import (
+    global_cache_shapes,
+    make_decode_step,
+    make_place_step,
+    make_prefill_step,
+)
+from repro.train.step import make_train_step
+
+#: the plan points the acceptance sweep pins (AWP twice: the initial
+#: 8-bit widths and a heterogeneous mid-run widening — per-group rt
+#: 1/2/4 exercises mixed-format inventories in one trace)
+PLAN_NAMES = ("rt4", "rt2", "awp", "awp_widened")
+
+
+def parse_mesh(spec: str) -> MeshCfg:
+    """``"dpxtp"`` (launcher convention: ``2x1`` = fsdp-2, ``1x2`` =
+    tp-2) or ``"podsxdpxtp"`` for the multi-pod hierarchy."""
+    parts = [int(p) for p in spec.split("x")]
+    if len(parts) == 2:
+        return MeshCfg(dp=parts[0], tp=parts[1])
+    if len(parts) == 3:
+        return MeshCfg(pods=parts[0], dp=parts[1], tp=parts[2])
+    raise ValueError(f"mesh spec {spec!r} (want dpxtp or podsxdpxtp)")
+
+
+def make_plan(name: str, num_entries: int, *,
+              seq_parallel: bool = False) -> PrecisionPlan:
+    if name == "rt4":
+        plan = PrecisionPlan.build(1, round_to=4, seq_parallel=seq_parallel)
+    elif name == "rt2":
+        plan = PrecisionPlan.build(
+            1, round_to=2, grad_round_to=2, act_round_to=2,
+            seq_parallel=seq_parallel,
+        )
+    elif name in ("awp", "awp_widened"):
+        # awp_initial_bits=8 -> every group starts at rt=1; the widened
+        # variant is a mid-run controller step materialized via
+        # with_round_tos (how the trainer rebuilds the step)
+        plan = PrecisionPlan.build(
+            1, round_to=1, grad_round_to=2, act_round_to=2,
+            schedule="awp", seq_parallel=seq_parallel,
+        )
+        if name == "awp_widened":
+            plan = plan.broadcast(num_entries).with_round_tos(
+                tuple(itertools.islice(
+                    itertools.cycle((1, 2, 4)), num_entries
+                ))
+            )
+    else:
+        raise ValueError(f"unknown plan name {name!r} (want {PLAN_NAMES})")
+    return plan.broadcast(num_entries)
+
+
+@dataclasses.dataclass
+class AuditCase:
+    """Everything ``audit_step`` needs for one registry combo."""
+
+    arch: str
+    kind: str
+    mesh_cfg: MeshCfg
+    mesh: object
+    plan: PrecisionPlan
+    spec_tree: dict
+    step: object
+    args: tuple
+
+
+def _sds_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree
+    )
+
+
+def build_case(
+    arch: str,
+    kind: str,
+    mesh_cfg: MeshCfg,
+    plan: PrecisionPlan,
+    *,
+    seq_len: int = 32,
+    global_batch: int = 4,
+    cfg: ModelConfig | None = None,
+) -> AuditCase | None:
+    """One auditable combo, or None when the combo does not apply
+    (e.g. decode on an encoder-only arch)."""
+    cfg = reduced(get_config(arch)) if cfg is None else cfg
+    shape = InputShape(f"audit_{kind}", seq_len, global_batch,
+                       "train" if kind == "place" else kind)
+    if kind != "place":
+        ok, _ = applicable(cfg, shape)
+        if not ok:
+            return None
+    plan = plan.broadcast(cfg.num_groups + 1)
+    mesh = make_mesh_from_cfg(mesh_cfg)
+    storage_abs, metas = param_shapes(cfg, tp=mesh_cfg.tp)
+    spec_tree = build_spec_tree(storage_abs, metas, mesh_cfg)
+    storage = tree_to_storage(storage_abs, spec_tree, mesh_cfg)
+    shard_batch = shape.global_batch >= mesh_cfg.dshards
+
+    if kind == "place":
+        step, _ = make_place_step(cfg, mesh_cfg, mesh, spec_tree, plan=plan)
+        return AuditCase(arch, kind, mesh_cfg, mesh, plan, spec_tree,
+                         step, (storage,))
+
+    batch = input_specs(cfg, shape)
+    if kind == "train":
+        step = make_train_step(
+            cfg, mesh_cfg, mesh, spec_tree, SGDConfig(), batch, plan=plan
+        )
+        args = (storage, _sds_tree(storage), batch,
+                jax.ShapeDtypeStruct((), jnp.float32))
+        if plan.needs_rng:
+            args = args + (jax.ShapeDtypeStruct((2,), jnp.uint32),)
+        return AuditCase(arch, kind, mesh_cfg, mesh, plan, spec_tree,
+                         step, args)
+
+    if kind == "prefill":
+        step = make_prefill_step(
+            cfg, mesh_cfg, mesh, spec_tree, batch, plan=plan,
+            cache_capacity=shape.seq_len, shard_batch=shard_batch,
+        )
+        return AuditCase(arch, kind, mesh_cfg, mesh, plan, spec_tree,
+                         step, (storage, batch))
+
+    if kind == "decode":
+        capacity = min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+        cache_dtype = jnp.int8 if plan.int8_kv else jnp.bfloat16
+        caches = global_cache_shapes(
+            cfg, mesh_cfg, shape.global_batch, capacity, cache_dtype,
+            shard_batch=shard_batch,
+        )
+        step = make_decode_step(
+            cfg, mesh_cfg, mesh, spec_tree, batch, plan=plan,
+            shard_batch=shard_batch,
+        )
+        return AuditCase(arch, kind, mesh_cfg, mesh, plan, spec_tree,
+                         step, (storage, caches, batch))
+
+    raise ValueError(f"unknown kind {kind!r}")

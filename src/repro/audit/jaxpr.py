@@ -1,0 +1,240 @@
+"""jaxpr communication walker: find every wire-moving equation statically.
+
+``collect_comm_eqns`` descends a traced (closed) jaxpr through every
+sub-jaxpr carrier — ``pjit`` bodies, ``shard_map`` (which also binds the
+mesh axis sizes), ``scan`` (whose ``length`` multiplies everything
+inside), ``while``/``cond`` (data-dependent control flow: collectives
+under either are recorded and later rejected — their static trip/branch
+counts are unknowable, so their wire bytes are unpriceable), ``remat``
+replays and custom-derivative bodies — and returns one :class:`CommEqn`
+per communication primitive it finds. No device is touched; this is
+pure metadata over the trace.
+
+The walker is deliberately dumb: it records *what the program does*
+(primitive, axes, operand/result avals, static trip multiplier) and
+nothing about what the plan *intended*. Attribution and byte pinning
+live in :mod:`repro.audit.audit`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+# Primitives that move bytes between devices (or across the host/device
+# boundary, for device_put). ``psum2`` is the rep-checking spelling of
+# ``psum``; ``reduce_scatter`` is what ``lax.psum_scatter`` traces to.
+COMM_PRIMS = frozenset({
+    "all_gather",
+    "all_to_all",
+    "psum",
+    "psum2",
+    "pmax",
+    "pmin",
+    "reduce_scatter",
+    "ppermute",
+    "device_put",
+})
+# Zero-wire replication bookkeeping emitted by rep-checking shard_map.
+_IGNORED = frozenset({"pbroadcast", "pvary"})
+
+
+class JaxprWalkError(ValueError):
+    """The jaxpr contains a communication eqn the walker cannot price
+    (unknown axis name, positional psum axis, ...)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class CommEqn:
+    """One communication equation found in the trace.
+
+    ``mult`` is the static execution multiplier (product of enclosing
+    ``scan`` lengths); ``in_ctrl`` marks eqns under ``while``/``cond``
+    bodies whose trip count is not static. Shapes/dtypes are the
+    operand → result avals of the primitive itself: for packed-plane
+    pipelines the leading dim of a ``uint8`` aval is the plane count
+    (the wire width the transport chose).
+    """
+
+    prim: str
+    axes: tuple[str, ...]
+    group_size: int
+    in_shape: tuple[int, ...]
+    in_dtype: str
+    out_shape: tuple[int, ...]
+    out_dtype: str
+    mult: int
+    path: str
+    in_ctrl: bool = False
+    axis_index_groups: bool = False
+
+    # -- aval-derived byte views (per execution, before ``mult``) -------
+    @property
+    def in_bytes(self) -> int:
+        return math.prod(self.in_shape) * _itemsize(self.in_dtype)
+
+    @property
+    def out_bytes(self) -> int:
+        return math.prod(self.out_shape) * _itemsize(self.out_dtype)
+
+    @property
+    def is_packed(self) -> bool:
+        """A uint8 plane pipeline (the transport's compressed format):
+        planes are packed with the width as the leading dim."""
+        return (
+            self.in_dtype == "uint8"
+            and len(self.in_shape) >= 1
+            and self.prim in ("all_gather", "all_to_all", "reduce_scatter")
+        )
+
+    @property
+    def plane_width(self) -> int | None:
+        """Wire bytes/element the packed pipeline actually used."""
+        return self.in_shape[0] if self.is_packed else None
+
+    @property
+    def payload_elems(self) -> int:
+        """Logical (pre-packing) element count of the collective's
+        payload: *output* elements for gather-like ops, *input* elements
+        for reduce-like ops — matching the ring formula's payload
+        convention (:func:`repro.transport.ring_wire_bytes`)."""
+        if self.prim in ("all_gather",):
+            total, shape = math.prod(self.out_shape), self.out_shape
+        else:
+            total, shape = math.prod(self.in_shape), self.in_shape
+        if self.is_packed:
+            return total // shape[0]
+        return total
+
+    def describe(self) -> str:
+        ax = ",".join(self.axes) or "-"
+        mult = f" x{self.mult}" if self.mult != 1 else ""
+        return (
+            f"{self.prim}[{ax}|n={self.group_size}] "
+            f"{self.in_dtype}{list(self.in_shape)} -> "
+            f"{self.out_dtype}{list(self.out_shape)}{mult} @{self.path}"
+        )
+
+
+_ITEMSIZE = {
+    "uint8": 1, "int8": 1, "bool": 1,
+    "bfloat16": 2, "float16": 2, "uint16": 2, "int16": 2,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "float64": 8, "int64": 8, "uint64": 8,
+}
+
+
+def _itemsize(dtype_name: str) -> int:
+    try:
+        return _ITEMSIZE[dtype_name]
+    except KeyError as e:
+        raise JaxprWalkError(f"unknown dtype {dtype_name!r}") from e
+
+
+def _axis_names(eqn) -> tuple[str, ...]:
+    p = eqn.params
+    raw: Any
+    if eqn.primitive.name in ("psum", "psum2", "pmax", "pmin"):
+        raw = p.get("axes")
+    else:
+        raw = p.get("axis_name")
+    if raw is None:
+        raise JaxprWalkError(
+            f"{eqn.primitive.name}: no axis parameter in {sorted(p)}"
+        )
+    if not isinstance(raw, (tuple, list)):
+        raw = (raw,)
+    names = []
+    for a in raw:
+        if not isinstance(a, str):
+            raise JaxprWalkError(
+                f"{eqn.primitive.name}: positional axis {a!r} in a "
+                "shard_map body (only named mesh axes are priceable)"
+            )
+        names.append(a)
+    return tuple(names)
+
+
+def _sub_jaxprs(params):
+    """Yield every jaxpr-valued entry of an eqn's params (open or
+    closed, scalar or sequence) — the generic recursion surface that
+    covers pjit / scan / while / cond / remat / custom-vjp bodies."""
+    for key, v in params.items():
+        items = v if isinstance(v, (list, tuple)) else (v,)
+        for item in items:
+            if hasattr(item, "eqns"):
+                yield key, item
+            elif hasattr(item, "jaxpr") and hasattr(item.jaxpr, "eqns"):
+                yield key, item.jaxpr
+
+
+def _record(eqn, axis_sizes, mult, in_ctrl, path, out):
+    name = eqn.primitive.name
+    if name == "device_put":
+        for iv, ov in zip(eqn.invars, eqn.outvars):
+            out.append(CommEqn(
+                prim=name, axes=(), group_size=1,
+                in_shape=tuple(iv.aval.shape), in_dtype=iv.aval.dtype.name,
+                out_shape=tuple(ov.aval.shape), out_dtype=ov.aval.dtype.name,
+                mult=mult, path=path, in_ctrl=in_ctrl,
+            ))
+        return
+    axes = _axis_names(eqn)
+    group = 1
+    for a in axes:
+        if a not in axis_sizes:
+            raise JaxprWalkError(
+                f"{name}: axis {a!r} not bound by any enclosing "
+                f"shard_map mesh (known: {sorted(axis_sizes)})"
+            )
+        group *= int(axis_sizes[a])
+    aig = eqn.params.get("axis_index_groups") is not None
+    # psum is multiple-results: one CommEqn per operand/result pair so
+    # attribution can match shapes leaf-by-leaf
+    for iv, ov in zip(eqn.invars, eqn.outvars):
+        if not hasattr(iv.aval, "shape"):  # pragma: no cover - tokens
+            continue
+        out.append(CommEqn(
+            prim="psum" if name == "psum2" else name,
+            axes=axes, group_size=group,
+            in_shape=tuple(iv.aval.shape), in_dtype=iv.aval.dtype.name,
+            out_shape=tuple(ov.aval.shape), out_dtype=ov.aval.dtype.name,
+            mult=mult, path=path, in_ctrl=in_ctrl,
+            axis_index_groups=aig,
+        ))
+
+
+def _walk(jaxpr, axis_sizes, mult, in_ctrl, path, out):
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name in _IGNORED:
+            continue
+        if name == "shard_map":
+            mesh = eqn.params["mesh"]
+            inner = dict(axis_sizes)
+            inner.update(
+                (str(k), int(v)) for k, v in dict(mesh.shape).items()
+            )
+            for key, sub in _sub_jaxprs(eqn.params):
+                _walk(sub, inner, mult, in_ctrl, f"{path}/shard_map", out)
+            continue
+        if name in COMM_PRIMS:
+            _record(eqn, axis_sizes, mult, in_ctrl, path, out)
+            continue
+        child_mult = mult
+        child_ctrl = in_ctrl
+        if name == "scan":
+            child_mult = mult * int(eqn.params.get("length", 1))
+        elif name in ("while", "cond"):
+            child_ctrl = True
+        for key, sub in _sub_jaxprs(eqn.params):
+            _walk(sub, axis_sizes, child_mult, child_ctrl,
+                  f"{path}/{name}", out)
+
+
+def collect_comm_eqns(jaxpr_like) -> list[CommEqn]:
+    """All communication eqns of a (closed) jaxpr, in trace order."""
+    jaxpr = getattr(jaxpr_like, "jaxpr", jaxpr_like)
+    out: list[CommEqn] = []
+    _walk(jaxpr, {}, 1, False, "", out)
+    return out

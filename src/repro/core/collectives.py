@@ -90,6 +90,7 @@ def _enter_bwd(axis_names, policy, marker, g):
     # cancelling the down-cast against the CPU backend's f32 promotion —
     # on TPU the collective runs natively in the compute dtype.
     g = lax.optimization_barrier(g.astype(marker.dtype))
+    # lint: allow(RAW-COLLECTIVE): psum_enter's uncompressed bwd leg — one of the two pinned TP-region psum sites the auditor prices
     return (lax.psum(g, axis_names),)
 
 
@@ -100,6 +101,7 @@ def _exit_impl(x, axis_names, policy):
     pol = _act_policy(policy)
     if pol is not None and pol.compresses:
         return _compressed_psum(x, axis_names, pol, use_grad_format=False)
+    # lint: allow(RAW-COLLECTIVE): psum_exit's uncompressed fwd leg — the other pinned TP-region psum site the auditor prices
     return lax.psum(lax.optimization_barrier(x), axis_names)
 
 
@@ -160,6 +162,7 @@ def _split_fwd(x, axis_name, axis):
 
 
 def _split_bwd(axis_name, axis, _, g):
+    # lint: allow(RAW-COLLECTIVE): seq_split's lossless re-layout transpose — raw dtype is the wire format (audited as relayout)
     return (lax.all_gather(g, axis_name, axis=axis, tiled=True),)
 
 
@@ -178,6 +181,7 @@ def seq_merge(x, axis_name: Hashable, axis: int = 1):
     cotangent is a *partial* sum (TP-sharded weights downstream); after
     replicated compute every rank holds the identical full cotangent and
     a reduce-scatter would double-count by the axis size."""
+    # lint: allow(RAW-COLLECTIVE): seq_merge's lossless re-layout — raw dtype is the wire format (audited as relayout)
     return lax.all_gather(x, axis_name, axis=axis, tiled=True)
 
 

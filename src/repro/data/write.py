@@ -50,7 +50,11 @@ def main():
     on_disk = sum(
         os.path.getsize(os.path.join(args.out, f)) for f in files
     )
-    assert stored == on_disk, (stored, on_disk)
+    if stored != on_disk:
+        raise RuntimeError(
+            f"manifest/shard byte mismatch: manifest says {stored}, "
+            f"files hold {on_disk}"
+        )
     print(json.dumps({
         "out": args.out, "kind": args.kind, "records": args.records,
         "shards": len(files), "stored_bytes": stored,

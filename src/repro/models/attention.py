@@ -278,6 +278,16 @@ def attend_tiled(
     cq = min(chunk, Sq)
     if Sq % cq:
         raise ValueError(f"Sq={Sq} not divisible by chunk={cq}")
+    # kv ranges are tiled in cq-sized blocks: pad kv up to a multiple and
+    # mask the tail, otherwise a short kv (cross-attn image tokens with
+    # Sk < cq, or Sk % cq != 0) is silently truncated to floor(Sk/cq)
+    # whole blocks — zero attention output for Sk < cq
+    sk_pad = ((Sk + cq - 1) // cq) * cq if Sk else 0
+    if sk_pad != Sk:
+        padw = [(0, 0)] * k.ndim
+        padw[1] = (0, sk_pad - Sk)
+        k = jnp.pad(k, padw)
+        v = jnp.pad(v, padw)
     nq = Sq // cq
     outs = []
     for i in range(nq):
@@ -290,7 +300,7 @@ def attend_tiled(
             k_lo = max(0, q_pos_lo - window + 1)
         # align to chunk for tidy inner tiling
         k_lo = (k_lo // cq) * cq
-        k_hi = min(Sk, ((k_hi + cq - 1) // cq) * cq)
+        k_hi = min(sk_pad, ((k_hi + cq - 1) // cq) * cq)
         nk = (k_hi - k_lo) // cq if k_hi > k_lo else 0
         if nk == 0:
             outs.append(jnp.zeros((B, cq, Kv, G, hd), q.dtype))
@@ -304,6 +314,8 @@ def attend_tiled(
             vc = lax.dynamic_slice_in_dim(v, lo, cq, axis=1)
             k_pos = lo + jnp.arange(cq)
             mask = jnp.ones((cq, cq), bool)
+            if sk_pad != Sk:
+                mask &= k_pos[None, :] < Sk
             if causal:
                 mask &= q_pos[:, None] >= k_pos[None, :]
             if window is not None:
@@ -561,7 +573,12 @@ def mha(
             "caches and the serve engine scatters them into pages"
         )
     if mode == "decode" and paged:
-        assert page_table is not None and S == 1
+        if page_table is None or S != 1:
+            raise ValueError(
+                f"paged decode needs a page_table and a single token "
+                f"(got page_table={'set' if page_table is not None else None}, "
+                f"S={S})"
+            )
         if window is not None:
             raise ValueError(
                 "paged KV keeps the full context: sliding-window decode "
@@ -570,7 +587,11 @@ def mha(
         new_cache = _paged_write(cache, k, v, page_table)
         out = attend_decode_paged(qg, new_cache, page_table)
     elif mode == "decode" and not is_cross:
-        assert cache is not None and S == 1
+        if cache is None or S != 1:
+            raise ValueError(
+                f"decode needs a KV cache and a single token (got "
+                f"cache={'set' if cache is not None else None}, S={S})"
+            )
         C = cache.capacity
         ring = window is not None and C <= window
         per_slot = jnp.ndim(cache.pos) > 0
@@ -636,7 +657,8 @@ def mha(
             if is_cross:
                 new_cache = KVCache(k, v, jnp.asarray(k.shape[1], jnp.int32))
             else:
-                assert cache is not None
+                if cache is None:
+                    raise ValueError("prefill needs a pre-allocated KV cache")
                 C = cache.capacity
                 pos = jnp.asarray(S, jnp.int32)
                 # C < S keeps the trailing window, ROLLED so absolute

@@ -24,6 +24,7 @@ def lm_loss(
 
     m_loc = lax.stop_gradient(jnp.max(logits_local, axis=-1))
     if env.model_axis is not None:
+        # lint: allow(RAW-COLLECTIVE): softmax-stability max — not a sum, so the uint8 plane pipeline cannot carry it; raw fp32 is its wire format (audited)
         m = lax.pmax(m_loc, env.model_axis)
     else:
         m = m_loc

@@ -71,7 +71,8 @@ def rglru_block(x, w, cfg, env: Env, *, mode="train", state=None):
     gated_x = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i_gate * xb)
 
     if mode == "decode":
-        assert S == 1
+        if S != 1:
+            raise ValueError(f"decode expects a single token, got S={S}")
         if h_prev is None:
             h_prev = jnp.zeros((B, a.shape[-1]), x.dtype)
         h = a[:, 0] * h_prev + gated_x[:, 0]

@@ -109,7 +109,11 @@ def mlstm_chunkwise(q, k, v, i_t, f_t, state: MLSTMState, chunk: int):
     """
     B, S, H, dk = q.shape
     dv = v.shape[-1]
-    assert S % chunk == 0, (S, chunk)
+    if S % chunk:
+        raise ValueError(
+            f"chunkwise mLSTM needs S divisible by chunk, got S={S} "
+            f"chunk={chunk}"
+        )
     n_chunks = S // chunk
     rs = lambda a: a.reshape(B, n_chunks, chunk, *a.shape[2:]).swapaxes(0, 1)
     qc, kc, vc = rs(q), rs(k), rs(v)
@@ -209,7 +213,8 @@ def mlstm_block(x, w, cfg, env: Env, *, mode="train", state=None):
         state = init_mlstm_state(B, H, dkh, dv_l // H, x.dtype)
 
     if mode == "decode":
-        assert S == 1
+        if S != 1:
+            raise ValueError(f"decode expects a single token, got S={S}")
         state, h = _mlstm_step(
             state, (q[:, 0], k[:, 0], v[:, 0], i_t[:, 0], f_t[:, 0])
         )
@@ -282,7 +287,8 @@ def slstm_block(x, w, cfg, env: Env, *, mode="train", state=None):
         state = init_slstm_state(B, d, x.dtype)
 
     if mode == "decode":
-        assert S == 1
+        if S != 1:
+            raise ValueError(f"decode expects a single token, got S={S}")
         state, h = _slstm_step(state, wx[:, 0], w["r"], w["b"], cfg.num_heads)
         hs = h[:, None]
     else:

@@ -375,7 +375,8 @@ class HloModule:
         return eff if found else in_b
 
     def entry_cost(self) -> Cost:
-        assert self.entry is not None
+        if self.entry is None:
+            raise ValueError("HLO module has no entry computation")
         # memo shared so fusion computations are cached, but note: while
         # bodies reached from different whiles are distinct computations in
         # HLO, so memoization over names is safe.

@@ -73,6 +73,7 @@ from repro.serve.step import (
 from repro.transport.hostdev import (
     pack_tokens,
     pack_tokens_host,
+    stage,
     unpack_tokens,
     unpack_tokens_host,
 )
@@ -126,6 +127,31 @@ class _ReqState:
 
 
 # ---------------------------------------------------------------------------
+# typed failures
+# ---------------------------------------------------------------------------
+
+
+class CapacityError(RuntimeError):
+    """A resource pool is exhausted: no free slot, not enough free
+    pages, or the drain loop hit its step budget with requests still
+    unfinished. Retryable in principle — the request, not the engine,
+    is at fault."""
+
+
+class AllocatorError(RuntimeError):
+    """Allocator API misuse: double allocation, release of an unowned
+    slot, retain/release of a dead page. The caller's bookkeeping is
+    wrong; the pool itself is still consistent."""
+
+
+class InvariantError(AssertionError):
+    """An internal conservation audit failed (slot/page leak, counter
+    imbalance): engine state is corrupt and the instance should be
+    discarded. Subclasses :class:`AssertionError` because these are
+    self-checks on the engine's own bookkeeping, not caller errors."""
+
+
+# ---------------------------------------------------------------------------
 # slot manager
 # ---------------------------------------------------------------------------
 
@@ -159,17 +185,17 @@ class SlotManager:
 
     def alloc(self, rid: int) -> int:
         if not self._free:
-            raise RuntimeError("no free slot")
+            raise CapacityError("no free slot")
         slot = self._free.pop()
         if slot in self._owner:
-            raise RuntimeError(f"slot {slot} double-allocated")
+            raise AllocatorError(f"slot {slot} double-allocated")
         self._owner[slot] = rid
         self.alloc_count += 1
         return slot
 
     def release(self, slot: int) -> None:
         if slot not in self._owner:
-            raise RuntimeError(f"release of unowned slot {slot}")
+            raise AllocatorError(f"release of unowned slot {slot}")
         del self._owner[slot]
         self._free.append(slot)
         self.release_count += 1
@@ -177,13 +203,13 @@ class SlotManager:
     def audit(self) -> dict:
         free, owned = set(self._free), set(self._owner)
         if free & owned:
-            raise AssertionError(f"slots both free and owned: {free & owned}")
+            raise InvariantError(f"slots both free and owned: {free & owned}")
         if len(self._free) != len(free):
-            raise AssertionError("duplicate entries in the free list")
+            raise InvariantError("duplicate entries in the free list")
         if free | owned != set(range(self.n_slots)):
-            raise AssertionError("slot leak: free ∪ owned != all slots")
+            raise InvariantError("slot leak: free ∪ owned != all slots")
         if self.alloc_count != self.release_count + len(owned):
-            raise AssertionError("alloc/release counters out of balance")
+            raise InvariantError("alloc/release counters out of balance")
         return {
             "free": len(free),
             "active": len(owned),
@@ -228,11 +254,11 @@ class PageAllocator:
 
     def alloc(self, n: int) -> list[int]:
         if n > len(self._free):
-            raise RuntimeError(f"need {n} pages, {len(self._free)} free")
+            raise CapacityError(f"need {n} pages, {len(self._free)} free")
         pages = [self._free.pop() for _ in range(n)]
         for p in pages:
             if p in self._refs:
-                raise RuntimeError(f"page {p} double-allocated")
+                raise AllocatorError(f"page {p} double-allocated")
             self._refs[p] = 1
         self.alloc_count += n
         self.peak = max(self.peak, len(self._refs))
@@ -240,13 +266,13 @@ class PageAllocator:
 
     def retain(self, page: int) -> None:
         if page not in self._refs:
-            raise RuntimeError(f"retain of dead page {page}")
+            raise AllocatorError(f"retain of dead page {page}")
         self._refs[page] += 1
 
     def release(self, page: int) -> bool:
         """Drop one reference; True when the page was actually freed."""
         if page not in self._refs:
-            raise RuntimeError(f"release of dead page {page}")
+            raise AllocatorError(f"release of dead page {page}")
         self._refs[page] -= 1
         if self._refs[page] > 0:
             return False
@@ -258,15 +284,15 @@ class PageAllocator:
     def audit(self) -> dict:
         free, live = set(self._free), set(self._refs)
         if free & live:
-            raise AssertionError(f"pages both free and live: {free & live}")
+            raise InvariantError(f"pages both free and live: {free & live}")
         if len(self._free) != len(free):
-            raise AssertionError("duplicate entries in the free page list")
+            raise InvariantError("duplicate entries in the free page list")
         if free | live != set(range(self.num_pages)):
-            raise AssertionError("page leak: free ∪ live != all pages")
+            raise InvariantError("page leak: free ∪ live != all pages")
         if any(c < 1 for c in self._refs.values()):
-            raise AssertionError("live page with refcount < 1")
+            raise InvariantError("live page with refcount < 1")
         if self.alloc_count != self.release_count + len(live):
-            raise AssertionError("page alloc/release counters out of balance")
+            raise InvariantError("page alloc/release counters out of balance")
         return {
             "free": len(free),
             "live": len(live),
@@ -639,7 +665,7 @@ class ServeEngine:
                     np.asarray(req.prompt, np.int32)[None, :], w
                 )  # (w, 1, S) — h2d prompt staging (true length, no pads)
                 rec["host_device"] += planes.nbytes
-                tokens_dev = self._unpack(jax.device_put(planes))
+                tokens_dev = self._unpack(stage(planes))
                 if self.paged:
                     Spad = -(-S // page) * page if self._bucket else S
                     rec["prefill_hits" if Spad in self._prefill_cache
@@ -689,14 +715,14 @@ class ServeEngine:
             # -- one decode step over the full slot batch ------------------
             feed_planes = pack_tokens_host(next_tok[:, None], w)  # (w, B, 1)
             rec["host_device"] += feed_planes.nbytes  # h2d token staging
-            tokens_dev = self._unpack(jax.device_put(feed_planes))
-            batch = {"tokens": tokens_dev, "pos": jax.device_put(pos_host)}
+            tokens_dev = self._unpack(stage(feed_planes))
+            batch = {"tokens": tokens_dev, "pos": stage(pos_host)}
             if self.paged:
                 # the page table is scheduler state staged fresh each step
                 # (retires/admissions edit the host copy between steps)
                 rec["host_device"] += self._table.nbytes
                 rec["page_table"] += self._table.nbytes
-                batch["page_table"] = jax.device_put(self._table)
+                batch["page_table"] = stage(self._table)
             logits, caches = self._decode(self._weights, caches, batch)
             _, out_planes = self._sample(logits)
             out_planes = np.asarray(out_planes)  # (w, B) — d2h sampled ids
@@ -715,13 +741,13 @@ class ServeEngine:
             step += 1
 
         if queue or active:
-            raise RuntimeError(f"engine stopped at max_steps={max_steps} "
+            raise CapacityError(f"engine stopped at max_steps={max_steps} "
                                f"with {len(queue) + len(active)} unfinished")
         self.slots.audit()
         if self.paged:
             audit = self.pages.audit()
             if audit["live"] or self._intern or self._slot_pages:
-                raise AssertionError("page leak after drain")
+                raise InvariantError("page leak after drain")
         return results
 
     def _retire(self, st: _ReqState, step: int) -> GenResult:
@@ -773,7 +799,7 @@ class ServeEngine:
         ``bytes_per_page`` sums every paged pool's per-page footprint
         across layers (int8 KV includes the scale planes)."""
         if not self.paged:
-            raise RuntimeError("kv_residency is defined for the paged "
+            raise ValueError("kv_residency is defined for the paged "
                                "engine (paged=True)")
         live, peak = self.pages.live_pages, self.pages.peak
         return {

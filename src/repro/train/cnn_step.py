@@ -164,6 +164,7 @@ def make_cnn_train_step(
 
         def fix(g, s: LeafSpec):
             if s.kind != DIST and dp is not None:
+                # lint: allow(RAW-COLLECTIVE): grad-sync psum for replicated CNN leaves — fp32 contract, audited as grad_sync
                 g = lax.psum(g, dp)
             return g
 
@@ -187,7 +188,9 @@ def make_cnn_train_step(
                     vf = v.astype(jnp.float32)
                     sums = sums.at[g].add(jnp.sum(vf * vf))
         if dp is not None:
+            # lint: allow(RAW-COLLECTIVE): AWP Σw² + scalar loss reductions — metrics traffic, audited as metrics
             sums = lax.psum(sums, dp)
+            # lint: allow(RAW-COLLECTIVE): AWP Σw² + scalar loss reductions — metrics traffic, audited as metrics
             loss = lax.psum(loss, dp)
         return new_storage, new_momentum, {"loss": loss, "group_norms_sq": sums}
 

@@ -76,6 +76,7 @@ def resolve_plan(
             round_tos = legacy.pop("round_tos", None)
         if round_tos is None:
             raise TypeError(f"{caller}: needs plan= (or legacy round_tos)")
+        # lint: allow(DEPRECATED-SHIM): this IS the legacy-kwarg acceptance path the shim exists for; it dies with the shim
         plan = PrecisionPlan.from_legacy(
             round_tos, caller=caller, **legacy
         )
@@ -169,10 +170,12 @@ def _sync_grads(grads, spec_tree, mesh_cfg: MeshCfg, seq_parallel: bool = False)
 
     def fix(g, s: LeafSpec):
         if s.kind != DIST and dp is not None:
+            # lint: allow(RAW-COLLECTIVE): grad-sync psum for replicated leaves — fp32 by the paper's accuracy contract, audited as grad_sync
             g = lax.psum(g, dp)
         if tp is not None and (
             s.meta.grad_sync_model or (seq_parallel and s.meta.grad_sync_seq)
         ):
+            # lint: allow(RAW-COLLECTIVE): model-axis grad sync (grad_sync_model leaves) — fp32 contract, audited as grad_sync
             g = lax.psum(g, tp)
         return g
 
@@ -217,8 +220,10 @@ def awp_group_norms(storage, spec_tree, mesh_cfg: MeshCfg):
     )
     out = jnp.stack([jnp.asarray(n, jnp.float32) for n in norms])
     if dp is not None:
+        # lint: allow(RAW-COLLECTIVE): AWP per-group norm reduction — (G+1,) metrics vector, audited as metrics
         out = lax.psum(out, dp)
     if tp is not None:
+        # lint: allow(RAW-COLLECTIVE): AWP norm reduction over the model axis — metrics vector, audited as metrics
         out = lax.psum(out, tp)
     return out  # (num_groups + 1,)
 
@@ -359,8 +364,10 @@ def make_train_step(
         )
         norms = awp_group_norms(new_storage, spec_tree, mesh_cfg)
 
+        # lint: allow(RAW-COLLECTIVE): scalar loss/token-count reductions — metrics traffic, audited as metrics
         loss_global = lax.psum(loss, dp) if dp is not None else loss
         count_global = (
+            # lint: allow(RAW-COLLECTIVE): scalar loss/token-count reductions — metrics traffic, audited as metrics
             lax.psum(metrics["token_count"], dp)
             if dp is not None
             else metrics["token_count"]

@@ -19,6 +19,7 @@ Public surface:
 from repro.transport.hostdev import (
     pack_tokens,
     pack_tokens_host,
+    stage,
     unpack_tokens,
     unpack_tokens_host,
 )
@@ -53,6 +54,7 @@ __all__ = [
     "pack_planes",
     "pack_tokens",
     "pack_tokens_host",
+    "stage",
     "pick_split_axis",
     "policy_for",
     "quantize",

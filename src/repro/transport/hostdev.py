@@ -25,6 +25,7 @@ Two symmetric implementations:
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -33,7 +34,21 @@ __all__ = [
     "unpack_tokens",
     "pack_tokens_host",
     "unpack_tokens_host",
+    "stage",
 ]
+
+
+def stage(x):
+    """The one host->device staging entry (the priced h2d boundary).
+
+    Every array the serve engine moves onto the device crosses here, so
+    the engine's per-step wire log (``rec["host_device"] += x.nbytes``
+    at each call site), the roofline's analytic serve model, and the
+    lint rule UNPRICED-TRANSFER all agree on where h2d bytes originate.
+    Functionally ``jax.device_put``; the indirection is the audit
+    surface, not a behavior change.
+    """
+    return jax.device_put(x)
 
 
 def _shifts(width: int):

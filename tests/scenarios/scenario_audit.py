@@ -1,0 +1,188 @@
+"""Static data-motion auditor scenarios (multi-device).
+
+Run with XLA_FLAGS=--xla_force_host_platform_device_count=8 (the test
+driver sets it): the jaxpr walker and ``audit_step`` trace real
+shard_map programs, so the mesh axes must exist even though nothing
+executes.
+
+Covers the two layers the auditor is made of:
+
+  * walker unit checks — ``collect_comm_eqns`` on hand-built shard_map
+    programs: axis resolution, group sizes, scan multipliers, pmax,
+    packed-plane detection, control-flow poisoning.
+  * end-to-end pins — registry combos must audit green with jaxpr
+    bytes == analytic bytes per non-structural class, and a
+    deliberately wrong plan must be *rejected*.
+"""
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS", "--xla_force_host_platform_device_count=8"
+)
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.audit import AuditError, audit_step, collect_comm_eqns
+from repro.audit.cases import build_case, make_plan, parse_mesh
+from repro.configs.registry import get_config, reduced
+from repro.dist.shard import shard_map
+from repro.dist.spec import MeshCfg
+from repro.launch.mesh import make_mesh_from_cfg
+
+
+# ---------------------------------------------------------------------------
+# walker unit checks
+# ---------------------------------------------------------------------------
+
+
+def _traced_eqns(inner, *args, mesh_cfg=MeshCfg(dp=2, tp=2),
+                 in_specs=P("data"), out_specs=P("data")):
+    mesh = make_mesh_from_cfg(mesh_cfg)
+    f = shard_map(inner, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    return collect_comm_eqns(jax.make_jaxpr(f)(*args))
+
+
+def test_walker_psum_axes_group_and_scan_mult():
+    def inner(x):
+        def body(c, _):
+            return c + lax.psum(x, "model"), None
+        out, _ = lax.scan(body, jnp.zeros_like(x), None, length=3)
+        return out
+
+    eqns = _traced_eqns(inner, jnp.zeros((8, 4), jnp.float32))
+    psums = [e for e in eqns if e.prim == "psum"]
+    assert len(psums) == 1, [e.describe() for e in eqns]
+    e = psums[0]
+    assert e.axes == ("model",)
+    assert e.group_size == 2
+    assert e.mult == 3  # scan length multiplies the wire bytes
+    assert not e.in_ctrl
+    assert e.in_dtype == "float32" and e.in_bytes == 4 * 4 * 4
+
+
+def test_walker_records_pmax():
+    def inner(x):
+        return lax.pmax(x, "model")
+
+    eqns = _traced_eqns(inner, jnp.zeros((8, 4), jnp.float32))
+    assert [e.prim for e in eqns] == ["pmax"]
+    assert eqns[0].axes == ("model",) and eqns[0].group_size == 2
+
+
+def test_walker_packed_plane_detection():
+    def inner(x):
+        return lax.all_gather(x, "model", axis=1, tiled=True)
+
+    # uint8 with the plane count as the leading dim = the transport's
+    # packed wire format
+    eqns = _traced_eqns(inner, jnp.zeros((2, 8, 4), jnp.uint8),
+                        out_specs=P(None, "data"),
+                        in_specs=P(None, "data"))
+    (e,) = eqns
+    assert e.prim == "all_gather"
+    assert e.is_packed and e.plane_width == 2
+    # logical (pre-packing) payload: gathered elements without planes
+    assert e.payload_elems == e.out_bytes // 2
+
+
+def test_walker_poisons_data_dependent_control_flow():
+    def inner(x):
+        return lax.while_loop(
+            lambda c: jnp.sum(c) < 10.0,
+            lambda c: lax.psum(c, "model"),
+            x,
+        )
+
+    eqns = _traced_eqns(inner, jnp.zeros((8, 4), jnp.float32))
+    psums = [e for e in eqns if e.prim == "psum"]
+    assert psums and all(e.in_ctrl for e in psums)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end audit pins
+# ---------------------------------------------------------------------------
+
+
+def _audit(arch, kind, mesh_spec, plan_name, *, seq_parallel=False,
+           plan_override=None):
+    mesh_cfg = parse_mesh(mesh_spec)
+    n = reduced(get_config(arch)).num_groups + 1
+    plan = make_plan(plan_name, n, seq_parallel=seq_parallel)
+    case = build_case(arch, kind, mesh_cfg, plan)
+    assert case is not None, (arch, kind, "not applicable")
+    return audit_step(
+        case.step, case.args,
+        plan_override if plan_override is not None else case.plan,
+        mesh_cfg=mesh_cfg, spec_tree=case.spec_tree, kind=kind,
+        mesh=case.mesh,
+    )
+
+
+GREEN_COMBOS = [
+    # (arch, kind, mesh, plan, seq_parallel)
+    ("qwen3-1.7b", "train", "2x1", "rt4", False),
+    ("qwen3-1.7b", "train", "1x2", "rt2", False),
+    ("qwen3-1.7b", "train", "1x2", "awp_widened", False),
+    ("qwen3-1.7b", "train", "1x2", "rt2", True),
+    ("qwen3-1.7b", "prefill", "1x2", "rt2", False),
+    ("qwen3-1.7b", "decode", "1x2", "rt2", False),
+    ("qwen3-1.7b", "place", "2x1", "rt4", False),
+    # DIST leaves with grad_sync_model (mlstm wq/wk) must have their
+    # model-axis grad-sync psums in the expected inventory
+    ("xlstm-1.3b", "train", "1x2", "rt4", False),
+    # cross-attention must stay symbolically connected to the loss
+    # (the attend_tiled short-kv truncation regression)
+    ("llama-3.2-vision-90b", "train", "1x2", "rt4", False),
+]
+
+
+def test_registry_combos_audit_green():
+    for arch, kind, mesh_spec, plan_name, sp in GREEN_COMBOS:
+        report = _audit(arch, kind, mesh_spec, plan_name, seq_parallel=sp)
+        assert report.ok, (arch, kind, mesh_spec, plan_name,
+                           report.violations)
+        assert report.n_comm_eqns > 0, (arch, kind, mesh_spec, plan_name)
+        # the tentpole pin: traced wire bytes EQUAL the analytic model,
+        # class by class (structural classes derive their analytic side
+        # from the trace, so equality there is vacuous — skip them)
+        for name, c in report.classes.items():
+            if c.structural:
+                continue
+            assert round(c.jaxpr_bytes) == round(c.analytic_bytes), (
+                arch, kind, mesh_spec, plan_name, name,
+                c.jaxpr_bytes, c.analytic_bytes,
+            )
+
+
+def test_wrong_plan_is_rejected():
+    # trace under rt4 (4-byte planes) but audit against rt2: the traced
+    # weight traffic no longer matches the plan's inventory
+    mesh_cfg = parse_mesh("2x1")
+    n = reduced(get_config("qwen3-1.7b")).num_groups + 1
+    report = _audit(
+        "qwen3-1.7b", "train", "2x1", "rt4",
+        plan_override=make_plan("rt2", n),
+    )
+    assert not report.ok
+    try:
+        report.raise_if_failed()
+    except AuditError as e:
+        assert e.report is report
+    else:
+        raise SystemExit("raise_if_failed did not raise")
+
+
+def _main():
+    tests = [(k, v) for k, v in sorted(globals().items())
+             if k.startswith("test_")]
+    for name, fn in tests:
+        fn()
+        print(f"ok {name}")
+    print(f"{len(tests)} audit scenarios passed")
+
+
+if __name__ == "__main__":
+    _main()

@@ -7,6 +7,7 @@ import sys
 import pytest
 
 SCENARIOS = [
+    "scenario_audit.py",
     "scenario_compressed_collectives.py",
     "scenario_dist_train.py",
     "scenario_paged_serve.py",

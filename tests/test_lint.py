@@ -1,0 +1,210 @@
+"""Repo invariant linter: rule engine + rule semantics + repo cleanliness.
+
+Fixture files are written under a tmp repo root mirroring the real
+layout (``src/repro/...``), so the path-scoped rules (allowed-prefix
+exemptions) behave exactly as they do in-tree.
+"""
+import pathlib
+import sys
+import textwrap
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT))
+
+from tools.lint import Finding, parse_suppressions, run_lint  # noqa: E402
+from tools.lint.rules import (  # noqa: E402
+    ALL_RULES,
+    BareAssert,
+    DeprecatedShim,
+    HardcodedInterpret,
+    RawCollective,
+    UnpricedTransfer,
+    UnseededRng,
+)
+
+
+def _lint(tmp_path, rel, source, rules):
+    """Write one fixture file at ``rel`` under a tmp repo root and lint
+    it with ``rules``."""
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(source))
+    return run_lint(rules, root=tmp_path, paths=[p])
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+def test_suppression_with_reason_silences_the_finding(tmp_path):
+    src = """\
+    from jax import lax
+
+    def f(x):
+        # lint: allow(RAW-COLLECTIVE): pinned site, priced by hand
+        return lax.psum(x, "model")
+    """
+    assert _lint(tmp_path, "src/repro/x.py", src, [RawCollective()]) == []
+
+
+def test_suppression_on_code_line_binds_to_that_line(tmp_path):
+    src = """\
+    from jax import lax
+
+    def f(x):
+        return lax.psum(x, "model")  # lint: allow(RAW-COLLECTIVE): pinned
+    """
+    assert _lint(tmp_path, "src/repro/x.py", src, [RawCollective()]) == []
+
+
+def test_reasonless_suppression_is_itself_a_finding(tmp_path):
+    src = """\
+    from jax import lax
+
+    def f(x):
+        # lint: allow(RAW-COLLECTIVE)
+        return lax.psum(x, "model")
+    """
+    got = _lint(tmp_path, "src/repro/x.py", src, [RawCollective()])
+    rules = sorted(f.rule for f in got)
+    # the allow is malformed AND does not suppress
+    assert rules == ["LINT-SUPPRESS", "RAW-COLLECTIVE"]
+
+
+def test_suppressing_the_wrong_rule_does_not_silence(tmp_path):
+    src = """\
+    from jax import lax
+
+    def f(x):
+        # lint: allow(BARE-ASSERT): wrong rule name
+        return lax.psum(x, "model")
+    """
+    got = _lint(tmp_path, "src/repro/x.py", src, [RawCollective()])
+    assert [f.rule for f in got] == ["RAW-COLLECTIVE"]
+
+
+def test_syntax_error_becomes_parse_finding(tmp_path):
+    got = _lint(tmp_path, "src/repro/x.py", "def f(:\n", [RawCollective()])
+    assert [f.rule for f in got] == ["PARSE"]
+
+
+def test_finding_str_is_path_line_rule():
+    f = Finding("RULE-X", "src/repro/x.py", 7, "msg")
+    assert str(f) == "src/repro/x.py:7: RULE-X: msg"
+
+
+def test_parse_suppressions_comment_line_covers_next_line():
+    by_line, bad = parse_suppressions(
+        ["x = 1",
+         "# lint: allow(R-A): reason one",
+         "y = 2  # lint: allow(R-B): reason two"],
+        "f.py",
+    )
+    assert bad == []
+    assert by_line == {3: {"R-A": "reason one", "R-B": "reason two"}}
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+
+def test_raw_collective_flags_lax_and_jax_lax_spellings(tmp_path):
+    src = """\
+    import jax
+    from jax import lax
+
+    def f(x):
+        a = lax.psum(x, "model")
+        b = jax.lax.all_gather(x, "data")
+        c = lax.pmax(x, "model")
+        return a, b, c
+    """
+    got = _lint(tmp_path, "src/repro/x.py", src, [RawCollective()])
+    assert [f.line for f in got] == [5, 6, 7]
+
+
+def test_raw_collective_exempts_the_transport(tmp_path):
+    src = """\
+    from jax import lax
+
+    def f(x):
+        return lax.psum(x, "model")
+    """
+    assert _lint(
+        tmp_path, "src/repro/transport/x.py", src, [RawCollective()]
+    ) == []
+
+
+def test_unpriced_transfer_flags_device_put_outside_metered_dirs(tmp_path):
+    src = """\
+    import jax
+
+    def f(x):
+        return jax.device_put(x)
+    """
+    got = _lint(tmp_path, "src/repro/serve/x.py", src, [UnpricedTransfer()])
+    assert [f.rule for f in got] == ["UNPRICED-TRANSFER"]
+    assert _lint(
+        tmp_path, "src/repro/transport/x.py", src, [UnpricedTransfer()]
+    ) == []
+
+
+def test_unseeded_rng_flags_global_state_not_generators(tmp_path):
+    src = """\
+    import numpy as np
+
+    def f():
+        bad = np.random.rand(3)
+        np.random.seed(0)
+        rng = np.random.default_rng(np.random.SeedSequence(7))
+        return bad, rng
+    """
+    got = _lint(tmp_path, "src/repro/x.py", src, [UnseededRng()])
+    assert [f.line for f in got] == [4, 5]
+
+
+def test_bare_assert_flags_library_code_only(tmp_path):
+    src = """\
+    def f(x):
+        assert x > 0
+        return x
+    """
+    got = _lint(tmp_path, "src/repro/x.py", src, [BareAssert()])
+    assert [f.rule for f in got] == ["BARE-ASSERT"]
+    # tests/tooling are exempt: asserts are their idiom
+    assert _lint(tmp_path, "tools/x.py", src, [BareAssert()]) == []
+
+
+def test_hardcoded_interpret_flags_bool_literals_only(tmp_path):
+    src = """\
+    def f(kernel, mode):
+        a = kernel(interpret=True)
+        b = kernel(interpret=mode)
+        return a, b
+    """
+    got = _lint(tmp_path, "src/repro/x.py", src, [HardcodedInterpret()])
+    assert [f.line for f in got] == [2]
+
+
+def test_deprecated_shim_flags_callers_but_not_the_definer(tmp_path):
+    src = """\
+    def f(plan_cls, kw):
+        return plan_cls.from_legacy(**kw)
+    """
+    got = _lint(tmp_path, "src/repro/x.py", src, [DeprecatedShim()])
+    assert [f.rule for f in got] == ["DEPRECATED-SHIM"]
+    assert _lint(
+        tmp_path, "src/repro/plan/plan.py", src, [DeprecatedShim()]
+    ) == []
+
+
+# ---------------------------------------------------------------------------
+# the repo itself
+# ---------------------------------------------------------------------------
+
+
+def test_repo_lints_clean():
+    got = run_lint(ALL_RULES)
+    assert got == [], "\n".join(str(f) for f in got)

@@ -26,7 +26,10 @@ from repro.models.init import init_params
 from repro.plan import PrecisionPlan
 from repro.roofline.analysis import serve_host_device_bytes
 from repro.serve.engine import (
+    AllocatorError,
+    CapacityError,
     GenResult,
+    InvariantError,
     Request,
     ServeEngine,
     SlotManager,
@@ -110,10 +113,10 @@ def test_slot_manager_alloc_release_audit():
 def test_slot_manager_rejects_double_free_and_exhaustion():
     sm = SlotManager(1)
     s = sm.alloc(1)
-    with pytest.raises(RuntimeError):
+    with pytest.raises(CapacityError):
         sm.alloc(2)
     sm.release(s)
-    with pytest.raises(RuntimeError):
+    with pytest.raises(AllocatorError):
         sm.release(s)
 
 
@@ -121,7 +124,7 @@ def test_slot_manager_audit_catches_leak():
     sm = SlotManager(2)
     sm.alloc(1)
     sm._owner.pop(0)  # simulate a lost slot (neither free nor owned)
-    with pytest.raises(AssertionError):
+    with pytest.raises(InvariantError):
         sm.audit()
 
 
@@ -398,12 +401,12 @@ def test_page_allocator_refcount_and_audit():
     audit = pa.audit()
     assert audit["live"] == 0 and audit["free"] == 4
     assert audit["allocs"] == audit["releases"] + audit["live"]
-    with pytest.raises(RuntimeError):
+    with pytest.raises(AllocatorError):
         pa.release(a)  # double free
-    with pytest.raises(RuntimeError):
+    with pytest.raises(CapacityError):
         pa.alloc(5)  # exhaustion
     pa._refs[9] = 1  # simulate a leaked page
-    with pytest.raises(AssertionError):
+    with pytest.raises(InvariantError):
         pa.audit()
 
 

@@ -34,6 +34,7 @@ SEARCH_EXTS = {".py", ".md", ".toml", ".yml"}
 # it here fails CI the same way a stale symbol reference does
 REQUIRED_DOCS = (
     "architecture.md",
+    "audit.md",
     "collectives.md",
     "data.md",
     "plan.md",

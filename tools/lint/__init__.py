@@ -1,0 +1,145 @@
+"""Repo invariant linter — a small AST rule engine.
+
+The auditor (:mod:`repro.audit`) proves the *traced programs* move the
+bytes the plan promised; this linter pins the *source-level* invariants
+that keep that proof meaningful: collectives and host<->device staging
+only happen inside the priced modules, kernels dispatch through the one
+interpret-mode resolver, library error paths raise typed exceptions,
+and nothing in-repo calls its own deprecation shims.
+
+Rules are small classes with a ``check(file)`` hook (see
+:mod:`tools.lint.rules`); repo-level rules (docs freshness) implement
+``check_repo(root)`` instead. Findings are suppressed per line with
+
+    # lint: allow(RULE-NAME): reason why the raw form is the contract
+
+The reason is mandatory: a bare ``allow`` is itself reported. The
+suppression binds to its own line or, on a comment-only line, to the
+line below.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import pathlib
+import re
+from typing import Iterable
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent.parent
+#: directories whose .py files the AST rules walk (library + tooling;
+#: tests are exempt: raw collectives / asserts are their idiom)
+LINT_DIRS = ("src", "tools")
+
+SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*allow\(([A-Z0-9-]+)\)\s*(?::\s*(\S.*))?"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at a source location."""
+
+    rule: str
+    path: str  # repo-relative
+    line: int
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}"
+
+
+@dataclasses.dataclass
+class SourceFile:
+    """Parsed view of one file handed to every AST rule."""
+
+    path: pathlib.Path
+    rel: str
+    text: str
+    tree: ast.AST
+    lines: list[str]
+
+
+class Rule:
+    """Base rule. AST rules override ``check``; repo-level rules
+    override ``check_repo`` (called once, not per file)."""
+
+    name: str = ""
+    description: str = ""
+
+    def check(self, f: SourceFile) -> Iterable[Finding]:
+        return ()
+
+    def check_repo(self, root: pathlib.Path) -> Iterable[Finding]:
+        return ()
+
+
+def _iter_files(root: pathlib.Path, paths=None):
+    if paths:
+        cand = [pathlib.Path(p) for p in paths]
+    else:
+        cand = []
+        for d in LINT_DIRS:
+            base = root / d
+            if base.is_dir():
+                cand.extend(sorted(base.rglob("*.py")))
+    for p in cand:
+        if p.is_file() and p.suffix == ".py":
+            yield p
+
+
+def parse_suppressions(lines: list[str], rel: str):
+    """(line -> {rule: reason}) plus findings for reason-less allows.
+
+    A suppression on a comment-only line covers the next line; on a
+    code line it covers that line.
+    """
+    by_line: dict[int, dict[str, str]] = {}
+    bad: list[Finding] = []
+    for i, raw in enumerate(lines, start=1):
+        m = SUPPRESS_RE.search(raw)
+        if not m:
+            continue
+        rule, reason = m.group(1), (m.group(2) or "").strip()
+        if not reason:
+            bad.append(Finding(
+                "LINT-SUPPRESS", rel, i,
+                f"allow({rule}) has no reason — suppressions must say "
+                "why the flagged form is the contract",
+            ))
+            continue
+        target = i + 1 if raw.split("#", 1)[0].strip() == "" else i
+        by_line.setdefault(target, {})[rule] = reason
+    return by_line, bad
+
+
+def run_lint(rules, *, root: pathlib.Path = ROOT, paths=None):
+    """Run every rule; returns surviving findings (suppressed removed,
+    malformed suppressions added)."""
+    findings: list[Finding] = []
+    files: list[SourceFile] = []
+    for p in _iter_files(root, paths):
+        rel = str(p.relative_to(root)) if p.is_relative_to(root) else str(p)
+        text = p.read_text()
+        try:
+            tree = ast.parse(text, filename=rel)
+        except SyntaxError as e:
+            findings.append(Finding(
+                "PARSE", rel, e.lineno or 0, f"syntax error: {e.msg}"
+            ))
+            continue
+        files.append(SourceFile(p, rel, text, tree, text.splitlines()))
+
+    per_file: dict[str, list[Finding]] = {f.rel: [] for f in files}
+    for rule in rules:
+        for f in files:
+            per_file[f.rel].extend(rule.check(f))
+        findings.extend(rule.check_repo(root))
+
+    for f in files:
+        allows, bad = parse_suppressions(f.lines, f.rel)
+        findings.extend(bad)
+        for fd in per_file[f.rel]:
+            if fd.rule in allows.get(fd.line, {}):
+                continue
+            findings.append(fd)
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))

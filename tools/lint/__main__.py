@@ -1,0 +1,56 @@
+"""``python -m tools.lint`` — run every repo invariant rule.
+
+Exit 1 when any finding survives suppression. Run from the repo root
+(or anywhere: paths resolve against the repo that contains this file).
+
+  python -m tools.lint                 # whole repo
+  python -m tools.lint src/repro/models/moe.py   # specific files
+  python -m tools.lint --rules RAW-COLLECTIVE,BARE-ASSERT
+  python -m tools.lint --list
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from tools.lint import ROOT, run_lint
+from tools.lint.rules import ALL_RULES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m tools.lint")
+    ap.add_argument("paths", nargs="*", help="files to lint (default: repo)")
+    ap.add_argument("--rules", default=None,
+                    help="comma-separated rule names (default: all)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered rules and exit")
+    args = ap.parse_args(argv)
+
+    rules = ALL_RULES
+    if args.rules:
+        wanted = set(args.rules.split(","))
+        known = {r.name for r in ALL_RULES}
+        unknown = wanted - known
+        if unknown:
+            print(f"unknown rules: {sorted(unknown)} (have {sorted(known)})")
+            return 2
+        rules = tuple(r for r in ALL_RULES if r.name in wanted)
+
+    if args.list:
+        for r in ALL_RULES:
+            print(f"{r.name:20s} {r.description}")
+        return 0
+
+    findings = run_lint(rules, root=ROOT, paths=args.paths or None)
+    for f in findings:
+        print(f)
+    n_rules = len(rules)
+    if findings:
+        print(f"\n{len(findings)} finding(s) across {n_rules} rule(s)")
+        return 1
+    print(f"lint OK ({n_rules} rules)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,203 @@
+"""The registered rules. Each encodes one repo invariant the static
+auditor's guarantees rest on (see docs/audit.md for the catalog and the
+rationale per rule)."""
+from __future__ import annotations
+
+import ast
+import pathlib
+from typing import Iterable
+
+from tools.lint import Finding, Rule, SourceFile
+
+
+def _attr_chain(node: ast.AST) -> str:
+    """Dotted name of an attribute/name chain, '' when not a chain."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _calls(tree: ast.AST):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            yield node, _attr_chain(node.func)
+
+
+class RawCollective(Rule):
+    """Collectives move wire bytes; only the transport (which prices and
+    packs them) and explicitly suppressed pinned sites may issue raw
+    ``lax`` collectives — anywhere else they bypass the plan's byte
+    accounting and the auditor's attribution."""
+
+    name = "RAW-COLLECTIVE"
+    description = "raw lax collective outside repro.transport"
+    COLLECTIVES = frozenset({
+        "psum", "all_gather", "ppermute", "all_to_all", "psum_scatter",
+        "pmean", "pmax", "pmin",
+    })
+    ALLOWED_PREFIXES = ("src/repro/transport/",)
+
+    def check(self, f: SourceFile) -> Iterable[Finding]:
+        if f.rel.startswith(self.ALLOWED_PREFIXES):
+            return
+        for node, chain in _calls(f.tree):
+            head, _, attr = chain.rpartition(".")
+            if attr in self.COLLECTIVES and head in ("lax", "jax.lax"):
+                yield Finding(
+                    self.name, f.rel, node.lineno,
+                    f"raw {chain} outside repro.transport — route through "
+                    "the transport (priced) or suppress the pinned site",
+                )
+
+
+class UnpricedTransfer(Rule):
+    """Host<->device staging is a paper traffic class: every
+    ``device_put`` must run inside the modules that meter it
+    (transport.hostdev staging, the data pipeline's prefetch)."""
+
+    name = "UNPRICED-TRANSFER"
+    description = "device_put outside transport/hostdev or data"
+    ALLOWED_PREFIXES = ("src/repro/transport/", "src/repro/data/")
+
+    def check(self, f: SourceFile) -> Iterable[Finding]:
+        if f.rel.startswith(self.ALLOWED_PREFIXES):
+            return
+        for node, chain in _calls(f.tree):
+            if chain in ("jax.device_put", "device_put"):
+                yield Finding(
+                    self.name, f.rel, node.lineno,
+                    "unpriced host->device transfer — stage through "
+                    "repro.transport.hostdev (metered) instead",
+                )
+
+
+class UnseededRng(Rule):
+    """Global numpy RNG state breaks run reproducibility (and the data
+    pipeline's shard-deterministic seeding contract): randomness comes
+    from ``np.random.Generator``s seeded by ``SeedSequence`` words."""
+
+    name = "UNSEEDED-RNG"
+    description = "np.random global-state call"
+    ALLOWED_ATTRS = frozenset({
+        "default_rng", "Generator", "SeedSequence", "PCG64", "Philox",
+        "BitGenerator",
+    })
+
+    def check(self, f: SourceFile) -> Iterable[Finding]:
+        for node, chain in _calls(f.tree):
+            head, _, attr = chain.rpartition(".")
+            if head in ("np.random", "numpy.random") and (
+                attr not in self.ALLOWED_ATTRS
+            ):
+                yield Finding(
+                    self.name, f.rel, node.lineno,
+                    f"{chain} mutates/reads global RNG state — use a "
+                    "Generator seeded from SeedSequence words",
+                )
+
+
+class BareAssert(Rule):
+    """``assert`` vanishes under ``python -O`` and raises an untyped
+    ``AssertionError`` callers cannot catch specifically: library error
+    paths raise typed exceptions instead. (Tests are exempt — the rule
+    only walks library/tooling dirs.)"""
+
+    name = "BARE-ASSERT"
+    description = "bare assert in library code"
+
+    def check(self, f: SourceFile) -> Iterable[Finding]:
+        if not f.rel.startswith("src/"):
+            return
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Assert):
+                yield Finding(
+                    self.name, f.rel, node.lineno,
+                    "bare assert in library code — raise a typed "
+                    "exception (stripped under -O, uncatchable by type)",
+                )
+
+
+class HardcodedInterpret(Rule):
+    """Pallas kernel dispatch mode is decided once, by
+    ``repro.kernels.bitpack.resolve_interpret`` (compiled on TPU,
+    interpret elsewhere); a literal ``interpret=True/False`` pins one
+    backend and silently breaks the other."""
+
+    name = "HARDCODED-INTERPRET"
+    description = "literal interpret= instead of resolve_interpret"
+
+    def check(self, f: SourceFile) -> Iterable[Finding]:
+        if not f.rel.startswith("src/"):
+            return
+        for node, _chain in _calls(f.tree):
+            for kw in node.keywords:
+                if kw.arg == "interpret" and isinstance(
+                    kw.value, ast.Constant
+                ) and isinstance(kw.value.value, bool):
+                    yield Finding(
+                        self.name, f.rel, node.lineno,
+                        "hardcoded interpret= literal — dispatch through "
+                        "repro.kernels.bitpack.resolve_interpret",
+                    )
+
+
+class DeprecatedShim(Rule):
+    """The deprecation shims exist for *external* callers mid-release;
+    in-repo code calling its own shims means the migration never
+    finishes (and the DeprecationWarning noise hides real ones)."""
+
+    name = "DEPRECATED-SHIM"
+    description = "in-repo call of an own deprecation shim"
+    #: shim entry points and the module that defines each (the definer
+    #: may reference itself)
+    SHIMS = {
+        "compressed_all_gather": "src/repro/core/compressed.py",
+        "compressed_psum_scatter": "src/repro/core/compressed.py",
+        "quantize_ste": "src/repro/core/compressed.py",
+        "from_legacy": "src/repro/plan/plan.py",
+    }
+
+    def check(self, f: SourceFile) -> Iterable[Finding]:
+        if not f.rel.startswith("src/"):
+            return
+        for node, chain in _calls(f.tree):
+            attr = chain.rpartition(".")[2]
+            definer = self.SHIMS.get(attr)
+            if definer is not None and f.rel != definer:
+                yield Finding(
+                    self.name, f.rel, node.lineno,
+                    f"{attr} is a deprecation shim (defined in {definer})"
+                    " — call the replacement API",
+                )
+
+
+class DocsFreshness(Rule):
+    """docs/*.md backtick references must resolve against the live
+    source tree — the pre-existing checker registered as a rule so one
+    driver runs everything."""
+
+    name = "DOCS-FRESHNESS"
+    description = "docs reference dead symbols/files"
+
+    def check_repo(self, root: pathlib.Path) -> Iterable[Finding]:
+        from tools import check_docs_freshness as cdf
+
+        for msg in cdf.check():
+            doc, _, rest = msg.partition(":")
+            yield Finding(self.name, f"docs/{doc}", 0, rest.strip())
+
+
+ALL_RULES = (
+    RawCollective(),
+    UnpricedTransfer(),
+    UnseededRng(),
+    BareAssert(),
+    HardcodedInterpret(),
+    DeprecatedShim(),
+    DocsFreshness(),
+)
