@@ -247,6 +247,116 @@ def serve_engine_bench(out_path="BENCH_serve.json"):
     row("serve.bench_json", 0.0, f"wrote={out_path}")
 
 
+def fleet_bench(out_path="BENCH_fleet.json"):
+    """Fleet-tier benchmark: a 2-replica disaggregated fleet (1 prefill
+    worker, paged engines) on a mixed request set, fp32 and int8 KV
+    pools. Emits ``BENCH_fleet.json`` with tokens/sec and fabric
+    migration bytes per token per plan point, asserting the measured
+    hop log equals ``fleet_migration_bytes`` — the committed snapshot
+    CI regenerates and uploads as an artifact."""
+    import dataclasses
+
+    from repro.configs.registry import get_config, reduced
+    from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
+    from repro.fleet import (
+        DecodeReplica,
+        FleetRouter,
+        PrefillWorker,
+        WeightPublisher,
+    )
+    from repro.models.init import init_params
+    from repro.plan import PrecisionPlan
+    from repro.roofline.analysis import fleet_migration_bytes
+    from repro.serve.engine import Request, ServeEngine
+    from repro.transport import CompressionPolicy
+
+    page = 8
+    cfg = reduced(get_config("qwen3-1.7b"))
+    mesh_cfg = MeshCfg(tp=1, dp=1, compress_min_size=4096)
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    base_plan = PrecisionPlan(
+        weights=(CompressionPolicy(round_to=2),) * (cfg.num_groups + 1),
+        host_device=CompressionPolicy(round_to=2),
+    )
+    rng = np.random.default_rng(0)
+    shared = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, page))
+    reqs = [
+        Request(rid=i, prompt=shared + tuple(
+            int(t) for t in rng.integers(0, cfg.vocab_size, tail)),
+            max_new_tokens=8)
+        for i, tail in enumerate((8, 4, 12, 6, 10, 5))
+    ]
+    report = {"arch": cfg.name, "page_size": page, "replicas": 2,
+              "workers": 1, "requests": len(reqs), "plans": {}}
+    for point in ("fp32_kv", "int8_kv"):
+        plan = (dataclasses.replace(base_plan, int8_kv=True)
+                if point == "int8_kv" else base_plan)
+        engines = [
+            ServeEngine(
+                cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+                max_slots=2, cache_capacity=28, paged=True, page_size=page,
+            )
+            for _ in range(2)
+        ]
+        worker = PrefillWorker(
+            "w0", cfg, mesh_cfg, None, spec_tree, plan=plan,
+            cache_capacity=28, page_size=page,
+        )
+        publisher = WeightPublisher(cfg, spec_tree, plan=plan)
+        parcel = publisher.publish(storage)
+
+        def fleet_run():
+            router = FleetRouter(
+                [DecodeReplica(f"r{i}", e) for i, e in enumerate(engines)],
+                [worker],
+            )
+            router.publish(publisher.publish(storage))
+            return router, router.run(reqs)
+
+        fleet_run()  # warm the compile caches
+        t0 = time.perf_counter()
+        router, results = fleet_run()
+        wall = time.perf_counter() - t0
+        new_tokens = sum(len(r.tokens) for r in results.values())
+        ws = router.wire_summary()
+        analytic = fleet_migration_bytes(
+            plan, cfg, page_size=page,
+            migrated_pages=ws["migrated_pages"],
+            int8_kv=plan.int8_kv, publish_wire_bytes=parcel.nbytes,
+            publish_installs=ws["publish_installs"],
+        )
+        for cls in ("kv_migration", "weight_publish"):
+            assert ws[cls] == analytic[cls], (point, cls, ws, analytic)
+        entry = {
+            "wall_s": round(wall, 4),
+            "new_tokens": new_tokens,
+            "tokens_per_s": round(new_tokens / wall, 2),
+            "ticks": ws["ticks"],
+            "migrated_pages": ws["migrated_pages"],
+            "page_wire_bytes": analytic["page_wire_bytes"],
+            "kv_wire_width": analytic["kv_width"],
+            "kv_migration_bytes": ws["kv_migration"],
+            "kv_migration_bytes_per_token": round(
+                ws["kv_migration"] / new_tokens, 2
+            ),
+            "weight_publish_bytes": ws["weight_publish"],
+            "publish_installs": ws["publish_installs"],
+            "analytic_match": True,
+        }
+        report["plans"][point] = entry
+        row(
+            f"fleet.{point}_tokens_per_s", 1e6 * wall / max(ws["ticks"], 1),
+            f"tok_per_s={entry['tokens_per_s']}"
+            f"_migB_per_tok={entry['kv_migration_bytes_per_token']}",
+        )
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    row("fleet.bench_json", 0.0, f"wrote={out_path}")
+
+
 def train_io_bench(out_path="BENCH_train.json"):
     """Training-I/O benchmark: tiered shard ingest through the
     prefetcher + width-aware sync/async checkpointing on the reduced
@@ -436,6 +546,7 @@ def main() -> None:
             steps=int(os.environ.get("BENCH_FIG3_STEPS", "140"))
         )),
         ("serve_engine_bench", serve_engine_bench),
+        ("fleet_bench", fleet_bench),
         ("train_io_bench", train_io_bench),
         ("roofline_table", roofline_table),
     ]

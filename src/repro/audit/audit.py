@@ -27,7 +27,12 @@ only where the transport's own fallback rule (no tp-divisible dim, or an
 uncompressed policy) permits them. ``relayout`` (lossless re-layout:
 ``seq_split`` / ``seq_merge``, EP-MoE token exchange) and
 ``host_device`` (no jaxpr carrier — the staging happens outside jit)
-are accounting-only.
+are accounting-only, and so are the fleet-fabric classes
+``kv_migration`` / ``weight_publish``: their parcels cross *between*
+processes (prefill worker -> decode replica, trainer -> replica), so no
+jaxpr ever carries them — the measured side is the
+``FabricChannel`` hop log, pinned EQUAL to
+``roofline.analysis.fleet_migration_bytes`` by the fleet scenario.
 """
 from __future__ import annotations
 
@@ -573,10 +578,24 @@ def audit_step(
             "host_device is accounting-only: staging happens outside jit "
             "(no jaxpr carrier); bytes from the plan's host_device entry"
         )
+    for name in ("kv_migration", "weight_publish"):
+        if table[name]:
+            classes[name] = ClassTotal(
+                eqns=0, jaxpr_bytes=0.0,
+                analytic_bytes=float(table[name]), structural=True,
+            )
+        if getattr(plan, name, None) is not None:
+            notes.append(
+                f"{name} is accounting-only: fleet fabric parcels cross "
+                "between processes (no jaxpr carrier); measured bytes "
+                "live in the FabricChannel hop log, pinned against "
+                "roofline.fleet_migration_bytes"
+            )
 
     # -- the byte pin ------------------------------------------------------
+    _OFF_DEVICE = ("host_device", "kv_migration", "weight_publish")
     for name, c in sorted(classes.items()):
-        if name == "host_device":
+        if name in _OFF_DEVICE:
             continue
         if round(c.jaxpr_bytes) != round(c.analytic_bytes):
             violations.append(

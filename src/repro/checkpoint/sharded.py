@@ -166,12 +166,16 @@ def awp_from_meta(awp, meta: dict | None) -> None:
 # ---------------------------------------------------------------------------
 
 
-def _write_leaf(arr: np.ndarray, width: int, base: str, residuals: bool):
-    """One leaf -> wire tier (+ optional residual tier) on disk.
+def encode_leaf(arr: np.ndarray, width: int, residuals: bool):
+    """One leaf -> ``(wire, res, info)`` tier byte strings + manifest
+    entry fields. The wire tier of a tiered fp32 leaf is planes
+    ``[0, width)`` plane-major — exactly ``elems * width`` bytes;
+    ``res`` is ``None`` for untiered leaves or ``residuals=False``.
 
-    Returns the manifest entry fields. The wire tier of a tiered fp32
-    leaf is planes ``[0, width)`` plane-major — exactly
-    ``elems * width`` bytes."""
+    This is the one tier codec: the on-disk writer (:func:`save_sharded`)
+    and the fleet fabric's weight parcels
+    (:func:`repro.transport.fabric.pack_weight_parcel`) both call it, so
+    a published checkpoint is byte-identical to a saved one."""
     dt = arr.dtype
     tiered = dt == FP32 and width < FP32.itemsize
     if tiered:
@@ -182,12 +186,7 @@ def _write_leaf(arr: np.ndarray, width: int, base: str, residuals: bool):
         width = dt.itemsize
         wire = arr.tobytes()
         res = None
-    with open(base + ".w.bin", "wb") as f:
-        f.write(wire)
-    if res is not None:
-        with open(base + ".r.bin", "wb") as f:
-            f.write(res)
-    return {
+    info = {
         "dtype": dt.str,
         "shape": list(arr.shape),
         "width": int(width),
@@ -195,6 +194,50 @@ def _write_leaf(arr: np.ndarray, width: int, base: str, residuals: bool):
         "residual_bytes": len(res) if res is not None else 0,
         "tiered": bool(tiered),
     }
+    return wire, res, info
+
+
+def decode_leaf(
+    wire: bytes, e: dict, quality: str, res: bytes | None = None,
+    *, where: str = "checkpoint",
+) -> np.ndarray:
+    """Inverse of :func:`encode_leaf`: tier bytes + manifest entry ->
+    leaf array. ``quality="exact"`` needs the residual tier for tiered
+    leaves; ``"wire"`` zero-fills the dropped planes (the transport's
+    truncation)."""
+    dtype = np.dtype(e["dtype"])
+    shape = tuple(e["shape"])
+    wire_u8 = np.frombuffer(wire, np.uint8)
+    if not e["tiered"]:
+        return wire_u8.view(dtype).reshape(shape).copy()
+    n = int(np.prod(shape)) if shape else 1
+    planes = wire_u8.reshape(e["width"], n)
+    if quality == "exact":
+        if res is None:
+            raise CheckpointError(
+                f"exact restore of {e['path']} needs the residual tier, "
+                f"but this {where} was written residuals=False "
+                f"(width {e['width']}); use quality='wire'"
+            )
+        planes = np.concatenate([
+            planes,
+            np.frombuffer(res, np.uint8).reshape(
+                FP32.itemsize - e["width"], n
+            ),
+        ])
+    return plane_join(planes, dtype, shape)
+
+
+def _write_leaf(arr: np.ndarray, width: int, base: str, residuals: bool):
+    """One leaf -> wire tier (+ optional residual tier) on disk; returns
+    the manifest entry fields."""
+    wire, res, info = encode_leaf(arr, width, residuals)
+    with open(base + ".w.bin", "wb") as f:
+        f.write(wire)
+    if res is not None:
+        with open(base + ".r.bin", "wb") as f:
+            f.write(res)
+    return info
 
 
 def save_sharded(
@@ -314,29 +357,16 @@ def _check_structure(entries: list[dict], like, tree_name: str):
 
 
 def _read_leaf(path: str, e: dict, quality: str) -> np.ndarray:
-    dtype = np.dtype(e["dtype"])
-    shape = tuple(e["shape"])
     base = os.path.join(path, e["file"])
     with open(base + ".w.bin", "rb") as f:
-        wire = np.frombuffer(f.read(), np.uint8)
-    if not e["tiered"]:
-        return wire.view(dtype).reshape(shape).copy()
-    n = int(np.prod(shape)) if shape else 1
-    planes = wire.reshape(e["width"], n)
-    if quality == "exact":
+        wire = f.read()
+    res = None
+    if e["tiered"] and quality == "exact":
         rpath = base + ".r.bin"
-        if not os.path.isfile(rpath):
-            raise CheckpointError(
-                f"exact restore of {e['path']} needs the residual tier, "
-                f"but this checkpoint was written residuals=False "
-                f"(width {e['width']}); use quality='wire'"
-            )
-        with open(rpath, "rb") as f:
-            res = np.frombuffer(f.read(), np.uint8)
-        planes = np.concatenate(
-            [planes, res.reshape(FP32.itemsize - e["width"], n)]
-        )
-    return plane_join(planes, dtype, shape)
+        if os.path.isfile(rpath):
+            with open(rpath, "rb") as f:
+                res = f.read()
+    return decode_leaf(wire, e, quality, res)
 
 
 def _load_tree(path: str, entries: list[dict], like, quality: str):

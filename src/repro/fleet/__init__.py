@@ -1,0 +1,32 @@
+"""Disaggregated multi-replica serving tier (`repro.fleet`).
+
+The serve engine scaled out (see docs/fleet.md): a host-side
+:class:`FleetRouter` load-balances an admission queue over several
+paged :class:`~repro.serve.engine.ServeEngine` replicas
+(:class:`DecodeReplica`), with prefill disaggregated onto dedicated
+:class:`PrefillWorker` roles whose KV pages migrate to the decode
+fleet as compressed byte-plane parcels through the priced
+:class:`~repro.transport.FabricChannel` (``kv_migration`` traffic
+class), and live weight refresh fed by a trainer-side
+:class:`WeightPublisher` (``weight_publish`` class, versioned-at-
+admission rolling installs).
+
+Everything is deterministic and lossless by construction: router-level
+token streams are bit-exact against a single engine and against
+``generate_static``; the fabric hop log is pinned EQUAL to the
+analytic :func:`repro.roofline.analysis.fleet_migration_bytes`.
+"""
+from repro.fleet.errors import ReplicaError, RouterError
+from repro.fleet.publish import WeightPublisher
+from repro.fleet.replica import DecodeReplica, PrefillWorker, check_fleet_arch
+from repro.fleet.router import FleetRouter
+
+__all__ = [
+    "DecodeReplica",
+    "FleetRouter",
+    "PrefillWorker",
+    "ReplicaError",
+    "RouterError",
+    "WeightPublisher",
+    "check_fleet_arch",
+]

@@ -1,0 +1,25 @@
+"""Typed failures for the serving fleet (`repro.fleet`).
+
+Follows the serve engine's error taxonomy (:class:`CapacityError` /
+:class:`AllocatorError` / :class:`InvariantError`): fleet code raises
+typed exceptions, never bare asserts — they survive ``-O`` and callers
+can catch by kind. Engine-level failures (slot/page exhaustion,
+allocator misuse) keep their serve types and propagate through.
+"""
+from __future__ import annotations
+
+
+class RouterError(RuntimeError):
+    """Fleet-router contract violation: no replicas/workers, duplicate
+    request ids, submission before any weight publish, mismatched
+    replica geometry, or a drain loop that exceeded its tick budget.
+    The fleet topology or the caller's protocol is wrong; individual
+    replicas are still consistent."""
+
+
+class ReplicaError(RuntimeError):
+    """Replica/worker contract violation: an engine the fleet cannot
+    serve (contiguous layout, MoE or non-attention pattern, vision
+    payloads) or a parcel that does not match the replica's geometry.
+    The replica refuses the work; the router and its peers are
+    unaffected."""

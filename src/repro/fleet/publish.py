@@ -1,0 +1,51 @@
+"""Trainer-side weight publishing (`repro.fleet.publish`).
+
+The live-refresh producer: snapshot the trainer's sharded ``storage``
+tree as a :class:`~repro.transport.WeightParcel` at the width
+controller's *current* ``round_tos`` (the same
+:func:`repro.checkpoint.sharded.assign_widths` walk the on-disk
+checkpointer uses), optionally mirroring the parcel to a real
+``save_sharded`` directory — parcel bytes and directory bytes are
+identical by construction, which is what lets the fleet scenario pin
+``parcel.nbytes == manifest_bytes(...) == train_checkpoint_bytes(...)``
+three ways.
+"""
+from __future__ import annotations
+
+from repro.transport import pack_weight_parcel
+
+
+class WeightPublisher:
+    """Versioned publisher over one model's ``spec_tree``. Each
+    :meth:`publish` stamps the next version number; the router's
+    rolling refresh keys replica installs on it."""
+
+    def __init__(self, cfg, spec_tree, *, plan):
+        self.spec_tree = spec_tree
+        self.plan = plan.broadcast(cfg.num_groups + 1)
+        self.policy = self.plan.weight_publish_policy()
+        self.next_version = 0
+
+    def publish(self, storage, *, round_tos=None, step: int = 0,
+                save_dir=None, awp=None):
+        """Pack ``storage`` into a weight parcel (and optionally write
+        the matching sharded checkpoint to ``save_dir``).
+
+        ``round_tos`` defaults to the plan's static widths; pass the
+        AWP controller's current widths (``trainer.current_round_tos()``
+        style) for width-aware publishes."""
+        rts = tuple(round_tos) if round_tos is not None else self.plan.round_tos
+        parcel = pack_weight_parcel(
+            storage, spec_tree=self.spec_tree, round_tos=rts,
+            policy=self.policy, version=self.next_version, step=step,
+        )
+        if save_dir is not None:
+            from repro.checkpoint.sharded import save_sharded
+
+            save_sharded(
+                save_dir, storage, None, awp, step, plan=self.plan,
+                spec_tree=self.spec_tree, round_tos=rts,
+                residuals=parcel.residuals,
+            )
+        self.next_version += 1
+        return parcel

@@ -1,0 +1,255 @@
+"""Fleet workers: dedicated prefill and decode roles (`repro.fleet`).
+
+Prefill/decode disaggregation splits the serve engine's two compiled
+programs across processes: a :class:`PrefillWorker` owns the prefill
+programs (one per page-bucketed prompt length), computes a request's KV
+pages and first greedy token, and exports the freshly written pool
+pages as host arrays; a :class:`DecodeReplica` wraps one paged
+:class:`~repro.serve.engine.ServeEngine` driven through its streaming
+surface (``admit_pages`` / ``decode_tick``), installing migrated pages
+shipped through the :class:`~repro.transport.FabricChannel`.
+
+Bit-exactness: the worker compiles the *same* prefill parametrization
+as the engine's local path (page-rounded capacity, replicated layout,
+true-last-token gather), and its page export replicates the engine's
+``pool_write`` slicing math, so a migrated admission is
+indistinguishable — bit for bit — from a local one. The fleet is
+restricted to pure-attention causal archs (the same family where the
+engine's prompt bucketing and prefix sharing are causal-safe); anything
+else is rejected with a typed :class:`~repro.fleet.errors.ReplicaError`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fleet.errors import ReplicaError
+from repro.models import model as M
+from repro.serve.step import global_cache_shapes, make_prefill_step
+from repro.transport import (
+    pack_tokens,
+    pack_tokens_host,
+    stage,
+    unpack_kv_pages,
+    unpack_tokens,
+    unpack_tokens_host,
+)
+
+
+def check_fleet_arch(cfg) -> None:
+    """The fleet serves pure-attention causal token models only — the
+    family where paged prompt bucketing, prefix sharing and therefore
+    migrated prefill are causal-safe and slot-independent."""
+    if not cfg.causal:
+        raise ReplicaError(f"{cfg.name} is encoder-only: nothing to serve")
+    if cfg.num_image_tokens or cfg.embed_is_input_stub:
+        raise ReplicaError(
+            f"{cfg.name}: fleet serving stages token payloads only"
+        )
+    if cfg.num_experts or any(k != "attn" for k in cfg.pattern):
+        raise ReplicaError(
+            f"{cfg.name}: fleet serving needs a pure-attention pattern "
+            "(MoE capacity dispatch and recurrent state couple "
+            "positions, breaking migrated-prefill equivalence)"
+        )
+    if cfg.sliding_window:
+        raise ReplicaError(
+            f"{cfg.name}: paged fleet serving keeps the full context "
+            "resident — sliding-window archs stay on the static path"
+        )
+
+
+class PrefillWorker:
+    """Dedicated prefill role: compiles the engine's paged prefill
+    parametrization once per page bucket and exports prompt KV pages
+    ready for migration.
+
+    ``cache_capacity`` / ``page_size`` must match the decode fleet's
+    geometry — the exported segment uses the same page-rounded prefill
+    capacity and the same ``pool_write`` slicing as the engine's local
+    insert, which is what makes migrated admission bit-exact.
+    ``step_log`` records the worker's own host<->device staging (prompt
+    h2d + first-token d2h), one record per prefill.
+    """
+
+    def __init__(self, name, cfg, mesh_cfg, mesh, spec_tree, *,
+                 plan, cache_capacity: int, page_size: int = 64):
+        check_fleet_arch(cfg)
+        self.name = str(name)
+        self.cfg = cfg
+        self.mesh_cfg = mesh_cfg
+        self.mesh = mesh
+        self.spec_tree = spec_tree
+        self.plan = plan.broadcast(cfg.num_groups + 1)
+        self.cache_capacity = int(cache_capacity)
+        self.page_size = int(page_size)
+        if self.page_size < 1:
+            raise ReplicaError(f"worker {self.name}: page_size must be >= 1")
+        self._table_width = -(-self.cache_capacity // self.page_size)
+        # page-rounded prefill capacity, the engine's paged parametrization
+        self._cap_pre = self._table_width * self.page_size
+        self.host_policy = self.plan.host_device_policies()[0]
+        self.token_width = self.host_policy.token_wire_width(cfg.vocab_size)
+        self._prefill_cache: dict[int, object] = {}
+        self._unpack = jax.jit(unpack_tokens)
+        vocab, width = cfg.vocab_size, self.token_width
+
+        def sample_pack(logits):
+            tok = jnp.argmax(
+                logits[:, -1, :vocab], axis=-1
+            ).astype(jnp.int32)
+            return tok, pack_tokens(tok, width)
+
+        self._sample = jax.jit(sample_pack)
+        # minimal pool-shape tree (batch 1, one page): per-leaf dtypes
+        # the export must land in — identical to the decode pool's
+        self._pool_shapes = global_cache_shapes(
+            cfg, mesh_cfg, 1, self.cache_capacity, self.plan.compute_dtype,
+            shard_batch=False, per_slot=True, int8_kv=self.plan.int8_kv,
+            paged_pages=1, page_size=self.page_size,
+        )
+        self.step_log: list[dict] = []
+
+    def _prefill(self, prompt_len: int):
+        if prompt_len not in self._prefill_cache:
+            # batch["last"] (true last-token gather for padded prompts)
+            # needs the replicated layout — same fallback as the engine
+            wplan = dataclasses.replace(self.plan, seq_parallel=False)
+            bshapes = {
+                "tokens": jax.ShapeDtypeStruct((1, prompt_len), jnp.int32),
+                "last": jax.ShapeDtypeStruct((), jnp.int32),
+            }
+            self._prefill_cache[prompt_len] = make_prefill_step(
+                self.cfg, self.mesh_cfg, self.mesh, self.spec_tree, bshapes,
+                plan=wplan, cache_capacity=self._cap_pre, shard_batch=False,
+            )
+        return self._prefill_cache[prompt_len]
+
+    def prefill(self, storage, req, *, n_hits: int = 0):
+        """Run one request's prefill under ``storage`` and export its
+        new prompt pages.
+
+        ``n_hits`` whole-prompt prefix pages are already resident at
+        the destination (shared-prefix interning) and are skipped —
+        the parcel only ships pages ``[n_hits:prompt_pages)``. Returns
+        ``(pages, first)``: the export pytree (per group, per cache
+        node, ``{"k", "v"(, scales)}`` arrays shaped
+        ``(R, n_new, page, ...)`` in pool dtype) and the prompt's
+        greedy first token id.
+        """
+        S = len(req.prompt)
+        page = self.page_size
+        prompt_pages = -(-S // page)
+        if not 0 <= int(n_hits) <= S // page:
+            raise ReplicaError(
+                f"worker {self.name}: n_hits={n_hits} outside the "
+                f"whole-prompt page range [0, {S // page}]"
+            )
+        if S + req.max_new_tokens > self.cache_capacity:
+            raise ReplicaError(
+                f"worker {self.name}: request {req.rid} needs "
+                f"{S + req.max_new_tokens} positions, capacity is "
+                f"{self.cache_capacity}"
+            )
+        rec = {"rid": req.rid, "prompt_len": S, "host_device": 0}
+        planes = pack_tokens_host(
+            np.asarray(req.prompt, np.int32)[None, :], self.token_width
+        )  # (w, 1, S) — h2d prompt staging (true length, no pads)
+        rec["host_device"] += planes.nbytes
+        tokens_dev = self._unpack(stage(planes))
+        Spad = prompt_pages * page  # pure-attn: always page-bucketed
+        if Spad > S:
+            tokens_dev = jnp.pad(tokens_dev, ((0, 0), (0, Spad - S)))
+        pbatch = {"tokens": tokens_dev,
+                  "last": jnp.asarray(S - 1, jnp.int32)}
+        logits, pcaches = self._prefill(Spad)(storage, pbatch)
+        _, tok_planes = self._sample(logits)
+        tok_planes = np.asarray(tok_planes)  # (w, 1) — d2h first id
+        rec["host_device"] += tok_planes.nbytes
+        first = int(unpack_tokens_host(tok_planes)[0])
+        pages = self._export(pcaches, int(n_hits), prompt_pages - int(n_hits))
+        self.step_log.append(rec)
+        return pages, first
+
+    def _export(self, pcaches, n_hits: int, n_new: int):
+        """Slice the prefill cache's freshly written positions into pool
+        pages — the host-side twin of the engine's ``pool_write``
+        (``dynamic_slice_in_dim(s[:, 0], start, n_new*page, axis=1)``
+        then reshape to ``(R, n_new, page, ...)`` at pool dtype)."""
+        page = self.page_size
+        start, stop = n_hits * page, (n_hits + n_new) * page
+
+        def leaf(src, like):
+            arr = np.asarray(src)[:, 0]  # (R, cap_pre, ...)
+            seg = arr[:, start:stop]
+            seg = seg.reshape(arr.shape[0], n_new, page, *arr.shape[2:])
+            return seg.astype(like.dtype)
+
+        out = []
+        for pg, sg in zip(self._pool_shapes, pcaches):
+            gd = {}
+            for key, pn in pg.items():
+                attrs = ("k", "v")
+                if isinstance(pn, M.PagedQuantKVCache):
+                    attrs = ("k", "v", "k_scale", "v_scale")
+                elif not isinstance(pn, M.PagedKVCache):
+                    raise ReplicaError(
+                        f"worker {self.name}: cache node {key!r} is not "
+                        "a paged pool — fleet archs are pure-attention"
+                    )
+                sn = sg[key]
+                gd[key] = {a: leaf(getattr(sn, a), getattr(pn, a))
+                           for a in attrs}
+            out.append(gd)
+        return out
+
+
+class DecodeReplica:
+    """Decode role: one paged engine driven through its streaming
+    surface. ``version`` is the installed weight-publish sequence
+    number (``None`` until the router's first install)."""
+
+    def __init__(self, name, engine):
+        check_fleet_arch(engine.cfg)
+        if not engine.paged:
+            raise ReplicaError(
+                f"replica {name}: fleet serving needs the paged engine "
+                "(paged=True)"
+            )
+        self.name = str(name)
+        self.engine = engine
+        self.version: int | None = None
+        self.draining = False
+        engine.begin_stream()
+
+    def probe(self, req):
+        """Admission probe: ``(ok, resident prefix-page hits)``."""
+        return self.engine.can_admit(req)
+
+    def admit_parcel(self, req, parcel) -> None:
+        """Install a migration parcel (routing metadata rides in
+        ``parcel.meta``: skipped prefix pages + the worker's first
+        token)."""
+        self.engine.admit_pages(
+            req, unpack_kv_pages(parcel),
+            n_hits=parcel.meta["n_hits"], first_tok=parcel.meta["first"],
+            wire_bytes=parcel.nbytes,
+        )
+
+    def tick(self) -> None:
+        self.engine.decode_tick()
+
+    def install(self, storage, version: int) -> None:
+        """Hot-swap to a published weight version. The router only
+        installs while the replica is idle (versioned-at-admission);
+        this guard keeps that contract typed."""
+        if self.engine.active_slots:
+            raise ReplicaError(
+                f"replica {self.name}: weight install with "
+                f"{self.engine.active_slots} slots in flight"
+            )
+        self.engine.swap_weights(storage)
+        self.version = int(version)

@@ -1,0 +1,270 @@
+"""Fleet request router (`repro.fleet.router`).
+
+The host-side control plane of the disaggregated serving tier: an
+admission queue drained in strict FIFO order onto a fleet of
+:class:`~repro.fleet.replica.DecodeReplica` engines, with prefill
+delegated to :class:`~repro.fleet.replica.PrefillWorker` round-robin
+and the resulting KV pages migrated through the priced
+:class:`~repro.transport.FabricChannel` (``kv_migration`` class).
+
+Determinism contract (pinned by ``tests/scenarios/scenario_fleet.py``):
+greedy sampling over independent slots makes every request's stream a
+pure function of ``(prompt, weight version)``, and every fleet hop is
+lossless — worker prefill is bit-identical to local prefill, parcels
+round-trip exactly, replicas only swap weights while idle. So router
+streams are BIT-EXACT against a single engine and against
+``generate_static`` for the same request set, under arrival-order
+permutations, any replica count, replica join/leave, fp32 or int8 KV
+pools, and across a mid-run weight refresh boundary.
+
+Live weight refresh is **versioned-at-admission**: ``submit`` pins each
+request to the latest published version; a replica installs a newer
+version only when idle AND no queued request still pins its current
+one (rolling refresh — in-flight requests never pause, new-version
+requests steer to already-swapped replicas). Weight parcels cross the
+fabric once per install (``weight_publish`` class).
+"""
+from __future__ import annotations
+
+import collections
+
+from repro.fleet.errors import RouterError
+from repro.transport import FabricChannel, pack_kv_pages, unpack_weight_parcel
+
+
+class FleetRouter:
+    """Route requests across ``replicas`` using ``workers`` for
+    prefill. All replicas must share the engine geometry the parcels
+    assume (page size, capacity, slots); workers must match it too."""
+
+    def __init__(self, replicas, workers, *, fabric: FabricChannel | None = None):
+        replicas, workers = list(replicas), list(workers)
+        if not replicas:
+            raise RouterError("a fleet needs at least one decode replica")
+        if not workers:
+            raise RouterError("a fleet needs at least one prefill worker")
+        names = [r.name for r in replicas] + [w.name for w in workers]
+        if len(set(names)) != len(names):
+            raise RouterError(f"duplicate fleet member names in {names}")
+        e0 = replicas[0].engine
+        for r in replicas[1:]:
+            e = r.engine
+            if (e.page_size, e.cache_capacity, e.max_slots) != (
+                    e0.page_size, e0.cache_capacity, e0.max_slots):
+                raise RouterError(
+                    f"replica {r.name}: geometry "
+                    f"{(e.page_size, e.cache_capacity, e.max_slots)} != "
+                    f"{(e0.page_size, e0.cache_capacity, e0.max_slots)}"
+                )
+        for w in workers:
+            if (w.page_size, w.cache_capacity) != (
+                    e0.page_size, e0.cache_capacity):
+                raise RouterError(
+                    f"worker {w.name}: geometry "
+                    f"{(w.page_size, w.cache_capacity)} != "
+                    f"{(e0.page_size, e0.cache_capacity)}"
+                )
+        self.replicas = replicas
+        self.workers = workers
+        self.fabric = fabric if fabric is not None else FabricChannel()
+        self.plan = e0.plan
+        self._kv_policy = self.plan.kv_migration_policy()
+        self.versions: dict[int, object] = {}
+        self._parcels: dict[int, object] = {}
+        self.latest: int | None = None
+        self.queue: collections.deque = collections.deque()
+        self._rids: set[int] = set()
+        self.results: dict[int, object] = {}
+        self.placements: dict[int, dict] = {}
+        self.migrated_pages = 0
+        self._rr = 0
+        self.ticks = 0
+
+    # -- weight publishing -------------------------------------------------
+    def publish(self, parcel) -> None:
+        """Register a trainer weight parcel. Replicas install it on
+        their next idle tick (rolling refresh); requests submitted from
+        now on pin this version."""
+        if self.latest is not None and parcel.version <= self.latest:
+            raise RouterError(
+                f"publish version {parcel.version} is not newer than "
+                f"{self.latest}"
+            )
+        storage_like = self.replicas[0].engine.storage
+        self.versions[parcel.version] = unpack_weight_parcel(
+            parcel, storage_like
+        )
+        self._parcels[parcel.version] = parcel
+        self.latest = parcel.version
+
+    def _install(self, replica, version: int) -> None:
+        self.fabric.send(
+            self._parcels[version], cls="weight_publish",
+            src="trainer", dst=replica.name,
+        )
+        replica.install(self.versions[version], version)
+
+    # -- membership --------------------------------------------------------
+    def add_replica(self, replica) -> None:
+        """Join: the new replica installs the latest published version
+        through the fabric before taking traffic."""
+        if self.latest is None:
+            raise RouterError("publish weights before adding a replica")
+        if replica.name in {r.name for r in self.replicas}:
+            raise RouterError(f"duplicate replica name {replica.name!r}")
+        e, e0 = replica.engine, self.replicas[0].engine
+        if (e.page_size, e.cache_capacity, e.max_slots) != (
+                e0.page_size, e0.cache_capacity, e0.max_slots):
+            raise RouterError(
+                f"replica {replica.name}: geometry mismatch on join"
+            )
+        self.replicas.append(replica)
+        self._install(replica, self.latest)
+
+    def remove_replica(self, name: str) -> None:
+        """Leave: mark the replica draining — no new admissions; it is
+        dropped (with its conservation audits run) once its in-flight
+        requests finish."""
+        match = [r for r in self.replicas if r.name == name]
+        if not match:
+            raise RouterError(f"unknown replica {name!r}")
+        if all(r.draining or r.name == name for r in self.replicas):
+            raise RouterError("cannot drain the last replica")
+        match[0].draining = True
+
+    # -- admission ---------------------------------------------------------
+    def submit(self, req) -> None:
+        """Queue one request, pinned to the latest published version."""
+        if self.latest is None:
+            raise RouterError("no weights published: submit after publish")
+        if req.rid in self._rids:
+            raise RouterError(f"duplicate request id {req.rid}")
+        self.replicas[0].engine.validate_request(req)
+        self._rids.add(req.rid)
+        self.queue.append((req, self.latest))
+
+    def _pick(self, req, version: int):
+        """Deterministic placement: among non-draining replicas at the
+        request's version with admission capacity, least-loaded first,
+        lowest index breaking ties."""
+        best, best_key = None, None
+        for i, r in enumerate(self.replicas):
+            if r.draining or r.version != version:
+                continue
+            ok, _ = r.probe(req)
+            if not ok:
+                continue
+            key = (r.engine.active_slots, i)
+            if best is None or key < best_key:
+                best, best_key = r, key
+        return best
+
+    def _dispatch(self, req, version: int, replica) -> None:
+        ok, hits = replica.probe(req)
+        if not ok:
+            raise RouterError(
+                f"request {req.rid}: placement picked a full replica"
+            )
+        n_hits = len(hits)
+        worker = self.workers[self._rr % len(self.workers)]
+        self._rr += 1
+        pages, first = worker.prefill(
+            self.versions[version], req, n_hits=n_hits
+        )
+        S = len(req.prompt)
+        n_new = -(-S // replica.engine.page_size) - n_hits
+        parcel = pack_kv_pages(pages, self._kv_policy, meta={
+            "rid": req.rid, "version": version, "prompt_len": S,
+            "n_hits": n_hits, "pages": n_new, "first": first,
+        })
+        self.fabric.send(
+            parcel, cls="kv_migration", src=worker.name, dst=replica.name
+        )
+        self.migrated_pages += n_new
+        replica.admit_parcel(req, parcel)
+        self.placements[req.rid] = {
+            "replica": replica.name, "worker": worker.name,
+            "version": version,
+        }
+
+    def _collect(self, replica) -> None:
+        for rid, res in replica.engine.take_completed().items():
+            self.results[rid] = res
+
+    # -- the scheduling loop -----------------------------------------------
+    def tick(self) -> None:
+        """One fleet step: rolling refresh, drained-leaver cleanup,
+        FIFO admissions, then one decode tick per busy replica."""
+        self.ticks += 1
+        # rolling refresh: an idle replica moves to the latest version
+        # unless a queued request still pins its current one
+        if self.latest is not None:
+            pinned = {v for _, v in self.queue}
+            for r in self.replicas:
+                if (not r.draining and r.version != self.latest
+                        and r.engine.active_slots == 0
+                        and (r.version is None or r.version not in pinned)):
+                    self._install(r, self.latest)
+        # drop drained leavers (conservation audits included)
+        keep = []
+        for r in self.replicas:
+            if (r.draining and not r.engine.has_work
+                    and not r.engine.pending_record):
+                self._collect(r)
+                r.engine.finish()
+            else:
+                keep.append(r)
+        self.replicas = keep
+        # strict FIFO admission: the head of line waits for a replica
+        # at its version with free residency
+        while self.queue:
+            req, version = self.queue[0]
+            replica = self._pick(req, version)
+            if replica is None:
+                break
+            self.queue.popleft()
+            self._dispatch(req, version, replica)
+        # decode: one engine step per replica with pending work
+        for r in self.replicas:
+            if r.engine.has_work or r.engine.pending_record:
+                r.tick()
+            self._collect(r)
+
+    def run(self, requests, *, max_ticks: int = 1_000_000, on_tick=None):
+        """Submit ``requests`` and tick the fleet until drained.
+
+        ``on_tick(router)`` runs before every tick — the hook the
+        launch driver uses to publish a mid-run weight refresh or
+        submit follow-up traffic. Returns ``{rid: GenResult}``.
+        """
+        for req in requests:
+            self.submit(req)
+        while self.queue or any(
+            r.engine.has_work or r.engine.pending_record or r.draining
+            for r in self.replicas
+        ):
+            if self.ticks >= max_ticks:
+                raise RouterError(
+                    f"fleet stopped at max_ticks={max_ticks} with "
+                    f"{len(self.queue)} queued and "
+                    f"{sum(r.engine.active_slots for r in self.replicas)} "
+                    "in flight"
+                )
+            if on_tick is not None:
+                on_tick(self)
+            self.tick()
+        for r in self.replicas:
+            self._collect(r)
+            r.engine.finish()
+        return dict(self.results)
+
+    # -- accounting --------------------------------------------------------
+    def wire_summary(self) -> dict:
+        """Fabric per-class totals + the observed quantities the
+        analytic :func:`repro.roofline.analysis.fleet_migration_bytes`
+        model takes as inputs."""
+        out = self.fabric.wire_summary()
+        out["migrated_pages"] = self.migrated_pages
+        out["publish_installs"] = out["hops"]["weight_publish"]
+        out["ticks"] = self.ticks
+        return out

@@ -5,12 +5,11 @@ path kept as the bit-exact reference (``--static`` / ``--check-static``).
 One :class:`~repro.plan.PrecisionPlan` drives the weight wire format,
 activation compression, sequence-parallel prefill, chunked gathers, the
 int8 KV cache AND the host<->device token staging (the plan's
-``host_device`` entry): pass ``--plan plan.json``. The individual
-precision flags are the pre-plan legacy sprawl — they still work as
-plan-builder sugar but emit a ``DeprecationWarning`` (and are ignored
-outright when ``--plan`` is set); the layout flags (``--int8-kv``,
-``--seq-parallel``, ``--chunks``, ``--weight-stationary``) stay
-first-class and override the loaded plan.
+``host_device`` entry): pass ``--plan plan.json``. ``--round-to`` /
+``--act-round-to`` are plain plan-builder sugar (routed through
+:meth:`PrecisionPlan.build`, ignored when a plan is loaded); the layout
+flags (``--int8-kv``, ``--seq-parallel``, ``--chunks``,
+``--weight-stationary``) stay first-class and override the loaded plan.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --reduced \
       --prompt-lens 64,48,64,32 --gen 32 --max-slots 2 [--int8-kv] \
@@ -41,19 +40,11 @@ from repro.models.init import init_params
 from repro.plan import PrecisionPlan
 from repro.serve.engine import Request, ServeEngine, generate_static
 
-_LEGACY_PRECISION_FLAGS = ("round_to", "act_round_to")
-
-
 def plan_from_args(args, nrt: int) -> PrecisionPlan:
     """Serve-launcher plan resolution: ``--plan`` (or the checkpointed
-    plan) wins; legacy precision flags are deprecated sugar routed
+    plan) wins; the precision flags are plan-builder sugar routed
     through the same :meth:`PrecisionPlan.build` the train launcher
     uses; layout flags override either source."""
-    legacy = {
-        k: getattr(args, k)
-        for k in _LEGACY_PRECISION_FLAGS
-        if getattr(args, k) is not None
-    }
     plan = None
     if args.plan:
         plan = PrecisionPlan.from_file(args.plan).broadcast(nrt)
@@ -69,24 +60,7 @@ def plan_from_args(args, nrt: int) -> PrecisionPlan:
                 "run actually used",
                 stacklevel=2,
             )
-    if plan is not None:
-        if legacy:
-            warnings.warn(
-                f"--{'/--'.join(k.replace('_', '-') for k in legacy)} are "
-                "ignored when a plan is loaded; encode precision in the "
-                "plan JSON",
-                DeprecationWarning,
-                stacklevel=2,
-            )
-    else:
-        if legacy:
-            warnings.warn(
-                "the individual precision flags are pre-plan legacy sugar; "
-                "prefer --plan plan.json (they build the same "
-                "PrecisionPlan)",
-                DeprecationWarning,
-                stacklevel=2,
-            )
+    if plan is None:
         plan = PrecisionPlan.build(
             nrt,
             round_to=args.round_to if args.round_to is not None else 2,
@@ -177,12 +151,13 @@ def main():
     ap.add_argument("--ckpt", default="",
                     help="restore served weights (+ plan, unless --plan "
                          "overrides) from a training checkpoint")
-    # pre-plan legacy precision sprawl: deprecated plan-builder sugar
+    # precision sugar: builds the same plan --plan would declare
     ap.add_argument("--round-to", type=int, default=None,
-                    help="(deprecated sugar) ADT weight wire format")
+                    help="ADT weight wire format (plan-builder sugar; "
+                         "ignored when a plan is loaded)")
     ap.add_argument("--act-round-to", type=int, default=None,
-                    help="(deprecated sugar) activation wire format on "
-                         "the TP axis")
+                    help="activation wire format on the TP axis "
+                         "(plan-builder sugar)")
     # layout flags: first-class, override a loaded plan
     ap.add_argument("--seq-parallel", action="store_true",
                     help="sequence-parallel prefill activations (decode is "

@@ -20,6 +20,13 @@ serializable value:
       | ``activations`` | TP-region psums / activation cotangents |
       | ``seq_boundary``| the sequence-parallel ``seq_gather``/``seq_scatter`` pair |
       | ``host_device`` | paper §III host→device staging (accounting entry) |
+      | ``kv_migration``| fleet fabric: prefill→decode KV page parcels |
+      | ``weight_publish`` | fleet fabric: trainer→replica checkpoint parcels |
+
+    ``kv_migration`` defaults to the ``host_device`` chain (it is the
+    same class of traffic crossing a replica boundary instead of the
+    PCIe bus); ``weight_publish`` defaults to the first weights entry
+    (published planes reuse the checkpoint wire tiers).
 
     ``gradients`` is described by its *forward* fields (``round_to``,
     ``mode``) and folded into the weight policies' grad fields when the
@@ -51,7 +58,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import warnings
 from typing import Any, Mapping
 
 import jax.numpy as jnp
@@ -61,7 +67,8 @@ from repro.transport import CompressionPolicy, policy_for
 from repro.transport.policy import FP32_BYTES
 
 TRAFFIC_CLASSES = (
-    "weights", "gradients", "activations", "seq_boundary", "host_device"
+    "weights", "gradients", "activations", "seq_boundary", "host_device",
+    "kv_migration", "weight_publish",
 )
 VALID_SCHEDULES = ("static", "awp")
 VALID_DTYPES = ("f32", "bf16")
@@ -142,6 +149,8 @@ class PrecisionPlan:
     activations: CompressionPolicy | None = None
     seq_boundary: CompressionPolicy | None = None
     host_device: CompressionPolicy | None = None
+    kv_migration: CompressionPolicy | None = None
+    weight_publish: CompressionPolicy | None = None
     schedule: Schedule = dataclasses.field(default_factory=Schedule)
     # --- execution layout ------------------------------------------------
     seq_parallel: bool = False
@@ -161,7 +170,7 @@ class PrecisionPlan:
             raise ValueError("plan needs at least one weights entry")
         object.__setattr__(self, "weights", ws)
         for name in ("gradients", "activations", "seq_boundary",
-                     "host_device"):
+                     "host_device", "kv_migration", "weight_publish"):
             object.__setattr__(
                 self, name, _coerce_policy(getattr(self, name))
             )
@@ -195,6 +204,17 @@ class PrecisionPlan:
                     f"{name} policy cannot use stochastic rounding "
                     "(no PRNG path through the activation collectives); "
                     "use mode='nearest'"
+                )
+        # fleet fabric parcels are deterministic byte movements (KV
+        # migration is lossless, weight publish reuses checkpoint
+        # tiers): stochastic rounding has no PRNG path there either
+        for name in ("kv_migration", "weight_publish"):
+            p = getattr(self, name)
+            if p is not None and _pol_configured_rng(p):
+                raise ValueError(
+                    f"{name} policy cannot use stochastic rounding "
+                    "(fabric parcels are deterministic byte planes); "
+                    "use mode='truncate' or 'nearest'"
                 )
 
     # -- resolution ------------------------------------------------------
@@ -265,6 +285,22 @@ class PrecisionPlan:
         if self.host_device is not None:
             return (self.host_device,) * len(self.weights)
         return self.weights
+
+    def kv_migration_policy(self) -> CompressionPolicy:
+        """Policy pricing prefill→decode KV page parcels on the fleet
+        fabric. Defaults to the ``host_device`` chain: migrated pages
+        are the same staged-bytes class crossing a replica boundary."""
+        if self.kv_migration is not None:
+            return self.kv_migration
+        return self.host_device_policies()[0]
+
+    def weight_publish_policy(self) -> CompressionPolicy:
+        """Policy pricing trainer→replica weight parcels. Defaults to
+        the first weights entry (published planes ride the checkpoint
+        wire tiers at the same widths the gathers use)."""
+        if self.weight_publish is not None:
+            return self.weight_publish
+        return self.weights[0]
 
     @property
     def compute_dtype(self):
@@ -381,6 +417,8 @@ class PrecisionPlan:
             "activations": pol(self.activations),
             "seq_boundary": pol(self.seq_boundary),
             "host_device": pol(self.host_device),
+            "kv_migration": pol(self.kv_migration),
+            "weight_publish": pol(self.weight_publish),
             "schedule": dataclasses.asdict(self.schedule),
             "seq_parallel": self.seq_parallel,
             "chunks": self.chunks,
@@ -483,57 +521,4 @@ class PrecisionPlan:
             int8_kv=int8_kv,
             accum_steps=accum_steps,
             env_overrides=env_overrides,
-        )
-
-    @classmethod
-    def from_legacy(
-        cls,
-        round_tos,
-        *,
-        grad_round_to=None,
-        act_policy=None,
-        seq_parallel=False,
-        env_kw=None,
-        dtype=jnp.float32,
-        accum_steps=1,
-        chunks=None,
-        caller="step factory",
-    ) -> "PrecisionPlan":
-        """Deprecation shim: the pre-plan kwarg sprawl → one plan.
-
-        Emits a :class:`DeprecationWarning`; the legacy signature is
-        kept for one release.
-        """
-        warnings.warn(
-            f"passing round_tos/grad_round_to/act_policy/seq_parallel/"
-            f"env_kw to {caller} is deprecated; build a "
-            f"repro.plan.PrecisionPlan and pass plan=",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-        kw = dict(env_kw or {})
-        int8_kv = bool(kw.pop("int8_kv", False))
-        if "act_policy" in kw and act_policy is None:
-            act_policy = kw.pop("act_policy")
-        kw.pop("act_policy", None)
-        seq_parallel = bool(kw.pop("seq_parallel", False)) or seq_parallel
-        weights = tuple(policy_for(rt) for rt in round_tos)
-        gradients = None
-        if grad_round_to is not None:
-            gradients = CompressionPolicy(
-                round_to=int(grad_round_to),
-                mode=weights[0].grad_mode if weights else "nearest",
-            )
-        if chunks is None:
-            chunks = max((w.chunks for w in weights), default=1)
-        return cls(
-            weights=weights,
-            gradients=gradients,
-            activations=_coerce_policy(act_policy),
-            seq_parallel=seq_parallel,
-            chunks=chunks,
-            dtype="bf16" if dtype == jnp.bfloat16 else "f32",
-            int8_kv=int8_kv,
-            accum_steps=accum_steps,
-            env_overrides=tuple(sorted(kw.items())),
         )

@@ -443,6 +443,62 @@ def serve_paged_kv_bytes(
     }
 
 
+def fleet_migration_bytes(
+    plan_or_policy,
+    cfg,
+    *,
+    page_size: int,
+    migrated_pages: int,
+    int8_kv: bool = False,
+    dtype_bytes: int = 4,
+    publish_wire_bytes: int = 0,
+    publish_installs: int = 0,
+) -> dict:
+    """Analytic fleet-fabric model: inter-replica parcel bytes of a
+    disaggregated serving run — the third measured==analytic pin after
+    the serve staging log and the checkpoint manifest. Must equal the
+    :class:`~repro.transport.FabricChannel` hop log EXACTLY
+    (``tests/scenarios/scenario_fleet.py`` pins both classes).
+
+      * ``kv_migration`` — every migrated page ships each attention
+        layer's K + V plane-packed at the ``kv_migration`` policy's
+        :meth:`~repro.transport.CompressionPolicy.kv_wire_width` —
+        the same :func:`serve_paged_kv_bytes` geometry, priced at wire
+        width instead of resident width (int8 pools ship 1
+        byte/element under a compressing policy, their fp32 scale
+        planes always 4; an uncompressed policy pads everything to
+        raw fp32 words). ``migrated_pages`` is the run's total new
+        (non-shared-prefix) prompt pages — the router counts them.
+      * ``weight_publish`` — each rolling-refresh install moves one
+        checkpoint-tier parcel (``publish_wire_bytes``, already exact
+        via :func:`train_checkpoint_bytes` /
+        ``WeightParcel.manifest_meta``) across the fabric;
+        ``publish_installs`` counts replica installs (join + refresh).
+    """
+    pol = plan_or_policy
+    if hasattr(pol, "kv_migration_policy"):  # a PrecisionPlan
+        pol = pol.kv_migration_policy()
+    layers = cfg.num_groups * cfg.layers_per_group
+    attn_frac = sum(1 for k in cfg.pattern if k == "attn") / len(cfg.pattern)
+    attn_layers = int(layers * attn_frac)
+    kv_elems = page_size * cfg.num_kv_heads * cfg.head_dim
+    kv_width = pol.kv_wire_width(1 if int8_kv else dtype_bytes)
+    per_layer = 2 * kv_elems * kv_width
+    if int8_kv:
+        # fp32 scale planes ride at full width under every policy
+        per_layer += 2 * page_size * cfg.num_kv_heads * pol.kv_wire_width(4)
+    page_wire_bytes = per_layer * attn_layers
+    table = {
+        "page_wire_bytes": page_wire_bytes,
+        "kv_width": kv_width,
+        "migrated_pages": int(migrated_pages),
+        "kv_migration": page_wire_bytes * int(migrated_pages),
+        "weight_publish": int(publish_wire_bytes) * int(publish_installs),
+    }
+    table["total"] = table["kv_migration"] + table["weight_publish"]
+    return table
+
+
 def model_flops_estimate(cfg, shape, chips: int) -> float:
     """6·N_active·D per device (decode: D = new tokens = batch)."""
     n_active = cfg.active_params()

@@ -437,12 +437,14 @@ class ServeEngine:
             weight_stationary=weight_stationary, slot_caches=True,
             paged=self.paged,
         )
-        self._weights = storage
+        self._place = None
         if weight_stationary:
-            place, _ = make_place_step(
+            self._place, _ = make_place_step(
                 cfg, mesh_cfg, mesh, spec_tree, plan=self.plan
             )
-            self._weights = place(storage)
+        self._weights = (
+            self._place(storage) if self._place is not None else storage
+        )
         self._prefill_cache: dict[int, object] = {}
         self._cache_dtype = self.plan.compute_dtype
         self._unpack = jax.jit(unpack_tokens)
@@ -515,9 +517,52 @@ class ServeEngine:
             ]
 
         self._insert_paged = jax.jit(insert_paged, donate_argnums=(0,))
+
+        def install_pages(big, pages, slot, phys, pos_val):
+            # migrated pool pages (already pool dtype, exported by a
+            # prefill worker with the same slicing math as pool_write
+            # above) scattered into place; position stamped exactly like
+            # the local prefill insert
+            def one_node(bn, pn):
+                if isinstance(bn, M.PagedQuantKVCache):
+                    return M.PagedQuantKVCache(
+                        bn.k.at[:, phys].set(pn["k"]),
+                        bn.v.at[:, phys].set(pn["v"]),
+                        bn.k_scale.at[:, phys].set(pn["k_scale"]),
+                        bn.v_scale.at[:, phys].set(pn["v_scale"]),
+                        bn.pos.at[:, slot].set(pos_val),
+                    )
+                if isinstance(bn, M.PagedKVCache):
+                    return M.PagedKVCache(
+                        bn.k.at[:, phys].set(pn["k"]),
+                        bn.v.at[:, phys].set(pn["v"]),
+                        bn.pos.at[:, slot].set(pos_val),
+                    )
+                raise TypeError(
+                    "migrated admission covers paged pools only "
+                    f"(got {type(bn).__name__})"
+                )
+
+            return [
+                {key: one_node(bn, pg[key]) for key, bn in bg.items()}
+                for bg, pg in zip(big, pages)
+            ]
+
+        self._install_pages = (
+            jax.jit(install_pages, donate_argnums=(0,)) if self.paged
+            else None
+        )
         self._page_bytes = (
             _page_pool_bytes(self._cache_shapes()) if self.paged else 0
         )
+        # streaming state (populated by begin_stream; run() wraps it)
+        self._caches = None
+        self._next_tok = np.zeros((B,), np.int32)
+        self._pos_host = np.zeros((B,), np.int32)
+        self._active: dict[int, _ReqState] = {}
+        self._results: dict[int, GenResult] = {}
+        self._step = 0
+        self._rec: dict | None = None
 
     # -- compiled-program plumbing ---------------------------------------
     def _prefill(self, prompt_len: int):
@@ -588,6 +633,282 @@ class ServeEngine:
                     f"{self.page_size}, the pool has {self.num_pages}"
                 )
 
+    def validate_request(self, req: Request) -> None:
+        """Public admission-geometry validation (the fleet router's
+        submit path — same checks :meth:`run` applies up front)."""
+        self._validate(req)
+
+    # -- the streaming surface (the fleet router drives these) ------------
+    def begin_stream(self) -> None:
+        """Reset allocators, caches and accounting for a fresh stream.
+
+        An aborted previous stream (exception mid-decode) leaves its
+        slots owned; every stream starts from a fresh allocator — the
+        engine cache is rebuilt here, so stale residency means nothing.
+        :meth:`run` calls this internally; the fleet router calls it
+        once, then drives :meth:`admit` / :meth:`admit_pages` /
+        :meth:`decode_tick` step by step.
+        """
+        self.slots = SlotManager(self.max_slots)
+        B = self.max_slots
+        if self.paged:
+            self.pages = PageAllocator(self.num_pages)
+            self._intern, self._page_key, self._slot_pages = {}, {}, {}
+            # host-side page table; index num_pages = the pool's trash row
+            # (unused entries and retired slots' ballast writes land there)
+            self._table = np.full(
+                (B, self._table_width), self.num_pages, np.int32
+            )
+        self._caches = self._init_caches()
+        self._next_tok = np.zeros((B,), np.int32)  # per-slot feed tokens
+        self._pos_host = np.zeros((B,), np.int32)  # absorbed-token counts
+        self._active = {}
+        self._results = {}
+        self._step = 0
+        self._rec = None
+        self.step_log = []
+
+    def _ensure_rec(self) -> dict:
+        """The current step's record — admissions accumulate into it,
+        :meth:`decode_tick` finalizes and appends it."""
+        if self._rec is None:
+            self._rec = {"step": self._step, "admitted": 0, "active": 0,
+                         "decoded": 0, "host_device": 0}
+            if self.paged:
+                self._rec.update(page_table=0, prefill_hits=0,
+                                 prefill_misses=0, kv_migration=0)
+        return self._rec
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._active)
+
+    @property
+    def active_slots(self) -> int:
+        return len(self._active)
+
+    @property
+    def pending_record(self) -> bool:
+        """True when admissions accumulated into a step record that no
+        :meth:`decode_tick` has finalized yet."""
+        return self._rec is not None
+
+    def _prompt_hits(self, req: Request) -> list[int]:
+        """Resident shared-prefix pages for this prompt (longest run of
+        interned whole-prompt pages)."""
+        hits: list[int] = []
+        if self.paged and self.share_prefix:
+            page = self.page_size
+            for i in range(len(req.prompt) // page):
+                pid = self._intern.get(req.prompt[:(i + 1) * page])
+                if pid is None:
+                    break
+                hits.append(pid)
+        return hits
+
+    def can_admit(self, req: Request) -> tuple[bool, list[int]]:
+        """Admission probe: a free slot and (paged) enough free pages
+        once shared-prefix hits are discounted. Returns ``(ok, hits)``
+        — the hit page ids let a fleet prefill worker skip resident
+        prefix pages when building a migration parcel."""
+        hits = self._prompt_hits(req)
+        if not self.slots.free_slots:
+            return False, hits
+        if self.paged:
+            need = -(-(len(req.prompt) + req.max_new_tokens)
+                     // self.page_size)
+            if need - len(hits) > self.pages.free_pages:
+                return False, hits
+        return True, hits
+
+    def _alloc_residency(self, req: Request, hits: list[int]):
+        """Allocate the request's slot + page row, intern its new
+        whole-prompt pages and stamp the page table. Shared logic
+        between local and migrated admission."""
+        S = len(req.prompt)
+        slot = self.slots.alloc(req.rid)
+        row: list[int] = []
+        if self.paged:
+            page = self.page_size
+            need = -(-(S + req.max_new_tokens) // page)
+            full_pages = S // page  # whole-prompt pages, internable
+            for pid in hits:
+                self.pages.retain(pid)
+            row = hits + self.pages.alloc(need - len(hits))
+            for i in range(len(hits), full_pages):
+                key = req.prompt[:(i + 1) * page]
+                self._intern[key] = row[i]
+                self._page_key[row[i]] = key
+            self._slot_pages[slot] = list(row)
+            self._table[slot, :] = self.num_pages  # trash
+            self._table[slot, :len(row)] = row
+        return slot, row
+
+    def _finish_admission(self, req: Request, slot: int, first: int,
+                          rec: dict) -> None:
+        st = _ReqState(req, slot, self._step)
+        self._next_tok[slot] = first
+        self._pos_host[slot] = len(req.prompt)
+        rec["admitted"] += 1
+        if st.emit(first):
+            self._results[req.rid] = self._retire(st, self._step)
+        else:
+            self._active[slot] = st
+
+    def admit(self, req: Request) -> None:
+        """Local-prefill admission of one request (between decode
+        steps). Raises :class:`CapacityError` when :meth:`can_admit`
+        says no — callers probe first."""
+        ok, hits = self.can_admit(req)
+        if not ok:
+            raise CapacityError(
+                f"request {req.rid}: no free slot/pages for admission"
+            )
+        self._validate(req)
+        rec = self._ensure_rec()
+        S, w, page = len(req.prompt), self.token_width, self.page_size
+        slot, row = self._alloc_residency(req, hits)
+        planes = pack_tokens_host(
+            np.asarray(req.prompt, np.int32)[None, :], w
+        )  # (w, 1, S) — h2d prompt staging (true length, no pads)
+        rec["host_device"] += planes.nbytes
+        tokens_dev = self._unpack(stage(planes))
+        if self.paged:
+            Spad = -(-S // page) * page if self._bucket else S
+            rec["prefill_hits" if Spad in self._prefill_cache
+                else "prefill_misses"] += 1
+            if Spad > S:
+                tokens_dev = jnp.pad(tokens_dev, ((0, 0), (0, Spad - S)))
+            pbatch = {"tokens": tokens_dev,
+                      "last": jnp.asarray(S - 1, jnp.int32)}
+            logits, pcaches = self._prefill(Spad)(self.storage, pbatch)
+            n_hits = len(hits)
+            prompt_pages = -(-S // page)
+            phys = jnp.asarray(row[n_hits:prompt_pages], jnp.int32)
+            self._caches = self._insert_paged(
+                self._caches, pcaches, np.int32(slot), phys,
+                np.int32(n_hits * page), np.int32(S),
+            )
+        else:
+            logits, pcaches = self._prefill(S)(
+                self.storage, {"tokens": tokens_dev}
+            )
+            self._caches = self._insert(self._caches, pcaches, np.int32(slot))
+        _, tok_planes = self._sample(logits)
+        tok_planes = np.asarray(tok_planes)  # (w, 1) — d2h first id
+        rec["host_device"] += tok_planes.nbytes
+        first = int(unpack_tokens_host(tok_planes)[0])
+        self._finish_admission(req, slot, first, rec)
+
+    def admit_pages(self, req: Request, pages, *, n_hits: int,
+                    first_tok: int, wire_bytes: int = 0) -> None:
+        """Migration admission: install prefill-worker KV pages shipped
+        through the fleet fabric instead of running a local prefill.
+
+        ``pages`` is the unpacked parcel pytree — per group, per cache
+        node, ``{"k", "v"(, "k_scale", "v_scale")}`` arrays shaped
+        ``(R, n_new, page, ...)`` in pool dtype covering prompt pages
+        ``[n_hits:prompt_pages)`` — and ``first_tok`` the worker's
+        greedy first id (the worker runs the same compiled prefill, so
+        both are bit-identical to what :meth:`admit` would produce).
+        The parcel's wire size lands in the step record's
+        ``kv_migration`` field, NOT ``host_device``: the serve staging
+        pin covers token/table traffic only, and the fabric hop log is
+        the measured side of the fleet migration pin.
+        """
+        if not self.paged:
+            raise ValueError("admit_pages needs the paged engine "
+                             "(paged=True)")
+        ok, hits = self.can_admit(req)
+        if not ok:
+            raise CapacityError(
+                f"request {req.rid}: no free slot/pages for migration "
+                "admission"
+            )
+        if len(hits) != int(n_hits):
+            raise AllocatorError(
+                f"request {req.rid}: parcel skipped {n_hits} prefix "
+                f"pages but {len(hits)} are resident — probe and admit "
+                "must see the same intern table"
+            )
+        self._validate(req)
+        rec = self._ensure_rec()
+        S, page = len(req.prompt), self.page_size
+        slot, row = self._alloc_residency(req, hits)
+        prompt_pages = -(-S // page)
+        phys = jnp.asarray(row[len(hits):prompt_pages], jnp.int32)
+        staged = jax.tree_util.tree_map(stage, pages)
+        rec["kv_migration"] += int(wire_bytes)
+        self._caches = self._install_pages(
+            self._caches, staged, np.int32(slot), phys, np.int32(S)
+        )
+        self._finish_admission(req, slot, int(first_tok), rec)
+
+    def decode_tick(self) -> None:
+        """One engine step: run one batched decode when any slot is
+        active, then finalize the step record (idle steps append a
+        zero-decode record, exactly like the drain loop)."""
+        rec = self._ensure_rec()
+        rec["active"] = len(self._active)
+        if self._active:
+            w = self.token_width
+            feed_planes = pack_tokens_host(
+                self._next_tok[:, None], w
+            )  # (w, B, 1)
+            rec["host_device"] += feed_planes.nbytes  # h2d token staging
+            tokens_dev = self._unpack(stage(feed_planes))
+            batch = {"tokens": tokens_dev, "pos": stage(self._pos_host)}
+            if self.paged:
+                # the page table is scheduler state staged fresh each step
+                # (retires/admissions edit the host copy between steps)
+                rec["host_device"] += self._table.nbytes
+                rec["page_table"] += self._table.nbytes
+                batch["page_table"] = stage(self._table)
+            logits, self._caches = self._decode(
+                self._weights, self._caches, batch
+            )
+            _, out_planes = self._sample(logits)
+            out_planes = np.asarray(out_planes)  # (w, B) — d2h sampled ids
+            rec["host_device"] += out_planes.nbytes
+            sampled = unpack_tokens_host(out_planes)
+            self._pos_host += 1  # mirrors cache.pos + 1 (ballast too)
+            rec["decoded"] = len(self._active)
+            for slot, st in list(self._active.items()):
+                tok = int(sampled[slot])
+                self._next_tok[slot] = tok
+                if st.emit(tok):
+                    self._results[st.req.rid] = self._retire(st, self._step)
+                    del self._active[slot]
+        self.step_log.append(rec)
+        self._step += 1
+        self._rec = None
+
+    def take_completed(self) -> dict[int, GenResult]:
+        """Drain finished results (the router's stream-reassembly feed)."""
+        out, self._results = self._results, {}
+        return out
+
+    def swap_weights(self, storage) -> None:
+        """Hot-swap the weight tree between steps (the fleet's
+        ``weight_publish`` install). The swap is unconditional at the
+        engine level — in-flight slots continue decoding under the new
+        weights. Fleet-level versioned-at-admission semantics (a
+        replica swaps only while idle, so no in-flight request ever
+        changes weights mid-stream) live in the router."""
+        self.storage = storage
+        self._weights = (
+            self._place(storage) if self._place is not None else storage
+        )
+
+    def finish(self) -> dict[int, GenResult]:
+        """End-of-stream conservation audits; returns completed results."""
+        self.slots.audit()
+        if self.paged:
+            audit = self.pages.audit()
+            if audit["live"] or self._intern or self._slot_pages:
+                raise InvariantError("page leak after drain")
+        return self._results
+
     # -- the serving loop -------------------------------------------------
     def run(self, requests, *, max_steps: int = 1_000_000) -> dict[int, GenResult]:
         """Drain ``requests`` (admission in list order) to completion.
@@ -603,152 +924,22 @@ class ServeEngine:
             raise ValueError("duplicate request ids")
         for r in requests:
             self._validate(r)
-        # an aborted previous run (exception mid-decode) leaves its slots
-        # owned; every run starts from a fresh allocator — the engine
-        # cache is rebuilt below, so stale residency means nothing
-        self.slots = SlotManager(self.max_slots)
-        B, w = self.max_slots, self.token_width
-        page = self.page_size
-        if self.paged:
-            self.pages = PageAllocator(self.num_pages)
-            self._intern, self._page_key, self._slot_pages = {}, {}, {}
-            # host-side page table; index num_pages = the pool's trash row
-            # (unused entries and retired slots' ballast writes land there)
-            self._table = np.full(
-                (B, self._table_width), self.num_pages, np.int32
-            )
+        self.begin_stream()
         queue = collections.deque(requests)
-        active: dict[int, _ReqState] = {}
-        results: dict[int, GenResult] = {}
-        caches = self._init_caches()
-        next_tok = np.zeros((B,), np.int32)  # host-side per-slot feed tokens
-        pos_host = np.zeros((B,), np.int32)  # per-slot absorbed-token counts
-        self.step_log = []
-
-        step = 0
-        while (queue or active) and step < max_steps:
-            rec = {"step": step, "admitted": 0, "active": 0,
-                   "decoded": 0, "host_device": 0}
-            if self.paged:
-                rec.update(page_table=0, prefill_hits=0, prefill_misses=0)
-
-            # -- admission: fill free slots between decode steps ----------
-            while queue and self.slots.free_slots:
-                req = queue[0]
-                S = len(req.prompt)
-                hits: list[int] = []
-                if self.paged:
-                    need = -(-(S + req.max_new_tokens) // page)
-                    full_pages = S // page  # whole-prompt pages, internable
-                    if self.share_prefix:
-                        for i in range(full_pages):
-                            pid = self._intern.get(req.prompt[:(i + 1) * page])
-                            if pid is None:
-                                break
-                            hits.append(pid)
-                    if need - len(hits) > self.pages.free_pages:
-                        break  # FIFO: head of line waits for pages to free
-                queue.popleft()
-                slot = self.slots.alloc(req.rid)
-                if self.paged:
-                    for pid in hits:
-                        self.pages.retain(pid)
-                    row = hits + self.pages.alloc(need - len(hits))
-                    for i in range(len(hits), full_pages):
-                        key = req.prompt[:(i + 1) * page]
-                        self._intern[key] = row[i]
-                        self._page_key[row[i]] = key
-                    self._slot_pages[slot] = list(row)
-                    self._table[slot, :] = self.num_pages  # trash
-                    self._table[slot, :len(row)] = row
-                planes = pack_tokens_host(
-                    np.asarray(req.prompt, np.int32)[None, :], w
-                )  # (w, 1, S) — h2d prompt staging (true length, no pads)
-                rec["host_device"] += planes.nbytes
-                tokens_dev = self._unpack(stage(planes))
-                if self.paged:
-                    Spad = -(-S // page) * page if self._bucket else S
-                    rec["prefill_hits" if Spad in self._prefill_cache
-                        else "prefill_misses"] += 1
-                    if Spad > S:
-                        tokens_dev = jnp.pad(
-                            tokens_dev, ((0, 0), (0, Spad - S))
-                        )
-                    pbatch = {"tokens": tokens_dev,
-                              "last": jnp.asarray(S - 1, jnp.int32)}
-                    logits, pcaches = self._prefill(Spad)(
-                        self.storage, pbatch
-                    )
-                    n_hits = len(hits)
-                    prompt_pages = -(-S // page)
-                    phys = jnp.asarray(
-                        row[n_hits:prompt_pages], jnp.int32
-                    )
-                    caches = self._insert_paged(
-                        caches, pcaches, np.int32(slot), phys,
-                        np.int32(n_hits * page), np.int32(S),
-                    )
-                else:
-                    logits, pcaches = self._prefill(S)(
-                        self.storage, {"tokens": tokens_dev}
-                    )
-                    caches = self._insert(caches, pcaches, np.int32(slot))
-                _, tok_planes = self._sample(logits)
-                tok_planes = np.asarray(tok_planes)  # (w, 1) — d2h first id
-                rec["host_device"] += tok_planes.nbytes
-                first = int(unpack_tokens_host(tok_planes)[0])
-                st = _ReqState(req, slot, step)
-                next_tok[slot] = first
-                pos_host[slot] = S
-                rec["admitted"] += 1
-                if st.emit(first):
-                    results[req.rid] = self._retire(st, step)
-                else:
-                    active[slot] = st
-
-            rec["active"] = len(active)
-            if not active:
-                self.step_log.append(rec)
-                step += 1
-                continue
-
-            # -- one decode step over the full slot batch ------------------
-            feed_planes = pack_tokens_host(next_tok[:, None], w)  # (w, B, 1)
-            rec["host_device"] += feed_planes.nbytes  # h2d token staging
-            tokens_dev = self._unpack(stage(feed_planes))
-            batch = {"tokens": tokens_dev, "pos": stage(pos_host)}
-            if self.paged:
-                # the page table is scheduler state staged fresh each step
-                # (retires/admissions edit the host copy between steps)
-                rec["host_device"] += self._table.nbytes
-                rec["page_table"] += self._table.nbytes
-                batch["page_table"] = stage(self._table)
-            logits, caches = self._decode(self._weights, caches, batch)
-            _, out_planes = self._sample(logits)
-            out_planes = np.asarray(out_planes)  # (w, B) — d2h sampled ids
-            rec["host_device"] += out_planes.nbytes
-            sampled = unpack_tokens_host(out_planes)
-            pos_host += 1  # mirrors cache.pos + 1 (every slot, ballast too)
-            rec["decoded"] = len(active)
-            for slot, st in list(active.items()):
-                tok = int(sampled[slot])
-                next_tok[slot] = tok
-                if st.emit(tok):
-                    results[st.req.rid] = self._retire(st, step)
-                    del active[slot]
-
-            self.step_log.append(rec)
-            step += 1
-
-        if queue or active:
+        while (queue or self._active) and self._step < max_steps:
+            # admission: fill free slots between decode steps (FIFO —
+            # the head of line waits for slots/pages to free)
+            while queue:
+                ok, _ = self.can_admit(queue[0])
+                if not ok:
+                    break
+                self.admit(queue.popleft())
+            self.decode_tick()
+        if queue or self._active:
             raise CapacityError(f"engine stopped at max_steps={max_steps} "
-                               f"with {len(queue) + len(active)} unfinished")
-        self.slots.audit()
-        if self.paged:
-            audit = self.pages.audit()
-            if audit["live"] or self._intern or self._slot_pages:
-                raise InvariantError("page leak after drain")
-        return results
+                               f"with {len(queue) + len(self._active)} "
+                               "unfinished")
+        return self.finish()
 
     def _retire(self, st: _ReqState, step: int) -> GenResult:
         self.slots.release(st.slot)

@@ -12,8 +12,9 @@ Serving is deterministic: a plan whose *forward* weight path uses
 stochastic rounding is rejected here (there is no per-request PRNG key);
 its gradient fields are simply unused.
 
-Legacy ``(round_tos, batch_shapes, act_policy=, seq_parallel=, env_kw=)``
-signatures are shimmed for one release with a ``DeprecationWarning``.
+``plan=`` is the only configuration entry point; the pre-plan
+``round_tos``/``env_kw`` legacy signatures (and their deprecation
+shims) are gone.
 """
 from __future__ import annotations
 
@@ -40,29 +41,10 @@ from repro.train.step import (
 )
 from repro.transport.policy import FP32_BYTES
 
-_LEGACY_SERVE_KW = (
-    "round_tos", "act_policy", "seq_parallel", "env_kw", "dtype",
-)
-
-
-def _serve_plan(cfg, args, plan, legacy, *, caller, n_positional):
-    """Shared legacy/plan dispatch for the serve factories:
-    ``args`` may be ``(round_tos, *rest)`` (legacy) or ``rest`` (new)."""
-    round_tos = None
-    rest = args
-    if len(args) == n_positional + 1:
-        round_tos, rest = args[0], args[1:]
-    elif len(args) != n_positional:
-        raise TypeError(f"{caller}: unexpected positional args {args}")
-    for k in list(legacy):
-        if legacy[k] is None:
-            legacy.pop(k)
-    unknown = set(legacy) - set(_LEGACY_SERVE_KW)
-    if unknown:
-        raise TypeError(f"{caller}: unknown kwargs {sorted(unknown)}")
-    plan = resolve_plan(
-        cfg, plan=plan, round_tos=round_tos, legacy=legacy, caller=caller
-    )
+def _serve_plan(cfg, plan, *, caller):
+    """Shared plan validation for the serve factories: required plan=,
+    group broadcast, and the deterministic-forward constraint."""
+    plan = resolve_plan(cfg, plan=plan, caller=caller)
     for pol in plan.weight_policies():
         if pol.mode == "stochastic" and pol.round_to < FP32_BYTES:
             raise ValueError(
@@ -70,7 +52,7 @@ def _serve_plan(cfg, args, plan, legacy, *, caller, n_positional):
                 "in serving steps (deterministic, no PRNG key); use "
                 "mode='nearest'"
             )
-    return plan, rest
+    return plan
 
 
 def cache_pspecs(cfg: ModelConfig, mesh_cfg: MeshCfg, shard_batch: bool,
@@ -221,20 +203,16 @@ def make_prefill_step(
     mesh_cfg: MeshCfg,
     mesh,
     spec_tree,
-    *args,
-    plan: PrecisionPlan | None = None,
     batch_shapes: dict | None = None,
+    *,
+    plan: PrecisionPlan | None = None,
     cache_capacity: int,
     shard_batch: bool = True,
     window_override=None,
-    **legacy,
 ):
-    plan, rest = _serve_plan(
-        cfg, args, plan, legacy, caller="make_prefill_step",
-        n_positional=0 if batch_shapes is not None else 1,
-    )
+    plan = _serve_plan(cfg, plan, caller="make_prefill_step")
     if batch_shapes is None:
-        (batch_shapes,) = rest
+        raise TypeError("make_prefill_step: batch_shapes required")
     env = plan.make_env(mesh_cfg)
     if env.seq_parallel and mesh_cfg.tp > 1:
         check_seq_parallel(batch_shapes, mesh_cfg)
@@ -270,20 +248,16 @@ def make_place_step(
     mesh_cfg: MeshCfg,
     mesh,
     spec_tree,
-    *args,
+    *,
     plan: PrecisionPlan | None = None,
     resident_dtype=None,
-    **legacy,
 ):
     """Weight-stationary serving (§Perf): run every ADT-compressed gather
     ONCE, emitting per-TP-rank resident weights. Decode steps built with
     ``weight_stationary=True`` then contain no weight collectives at all.
 
     Returns (place_fn, placed_pspecs): ``placed = place_fn(storage)``."""
-    legacy.pop("dtype", None)  # legacy signature took (unused here) dtype
-    plan, _ = _serve_plan(
-        cfg, args, plan, legacy, caller="make_place_step", n_positional=0
-    )
+    plan = _serve_plan(cfg, plan, caller="make_place_step")
     policies = plan.weight_policies()
 
     def _walk(storage_sub, spec_sub, g):
@@ -328,22 +302,18 @@ def make_decode_step(
     mesh_cfg: MeshCfg,
     mesh,
     spec_tree,
-    *args,
-    plan: PrecisionPlan | None = None,
     batch_shapes: dict | None = None,
+    *,
+    plan: PrecisionPlan | None = None,
     shard_batch: bool = True,
     window_override=None,
     weight_stationary: bool = False,
     slot_caches: bool = False,
     paged: bool = False,
-    **legacy,
 ):
-    plan, rest = _serve_plan(
-        cfg, args, plan, legacy, caller="make_decode_step",
-        n_positional=0 if batch_shapes is not None else 1,
-    )
+    plan = _serve_plan(cfg, plan, caller="make_decode_step")
     if batch_shapes is None:
-        (batch_shapes,) = rest
+        raise TypeError("make_decode_step: batch_shapes required")
     # seq_parallel is part of the plan for launcher symmetry but decode
     # has no sequence dim to shard: forward_decode drops the flag (model.py)
     env = plan.make_env(mesh_cfg)

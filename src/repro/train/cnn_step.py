@@ -36,9 +36,6 @@ from repro.train.step import resolve_plan
 from repro.transport import policy_for
 from repro.transport import transport as _T
 
-_LEGACY_CNN_KW = ("round_tos", "act_policy")
-
-
 def _act_quant_fn(act_policy):
     """Activation policy -> straight-through stage-boundary truncation
     (None when the policy keeps fp32: zero-cost identity)."""
@@ -92,56 +89,31 @@ def _mat(storage, spec_tree, mesh_cfg, groups, policies, rng=None):
     return out
 
 
-def _cnn_plan(cfg, groups_info, args, plan, legacy, *, caller, n_rest):
-    _, num_groups = groups_info
-    round_tos = None
-    rest = args
-    if len(args) == n_rest + 1:
-        round_tos, rest = args[0], args[1:]
-    elif len(args) != n_rest:
-        raise TypeError(f"{caller}: unexpected positional args {args}")
-    for k in list(legacy):
-        if legacy[k] is None:
-            legacy.pop(k)
-    unknown = set(legacy) - set(_LEGACY_CNN_KW)
-    if unknown:
-        raise TypeError(f"{caller}: unknown kwargs {sorted(unknown)}")
-    plan = resolve_plan(
-        cfg, plan=plan, round_tos=round_tos, legacy=legacy,
-        caller=caller, num_groups=num_groups,
-    )
-    return plan, rest
-
-
 def make_cnn_train_step(
     cfg: CNNConfig,
     mesh_cfg: MeshCfg,
     mesh,
     spec_tree,
     groups_info,
-    *args,
-    plan: PrecisionPlan | None = None,
     opt_cfg: SGDConfig | None = None,
     batch_shapes: dict | None = None,
-    **legacy,
+    *,
+    plan: PrecisionPlan | None = None,
 ):
     """Returns jit-able ``step(storage, momentum, batch, lr, key)``.
 
-    Preferred: ``make_cnn_train_step(cfg, mesh_cfg, mesh, spec_tree,
+    Call: ``make_cnn_train_step(cfg, mesh_cfg, mesh, spec_tree,
     groups_info, opt_cfg, batch_shapes, plan=plan)`` — the plan has
-    ``num_groups`` weight entries (per layer/block). Legacy
-    ``(round_tos, opt_cfg, batch_shapes, act_policy=)`` is shimmed."""
-    n_rest = 2 - (opt_cfg is not None) - (batch_shapes is not None)
-    plan, rest = _cnn_plan(
-        cfg, groups_info, args, plan, legacy,
-        caller="make_cnn_train_step", n_rest=n_rest,
-    )
-    rest = list(rest)
-    if opt_cfg is None:
-        opt_cfg = rest.pop(0)
-    if batch_shapes is None:
-        batch_shapes = rest.pop(0)
+    ``num_groups`` weight entries (per layer/block)."""
     groups, num_groups = groups_info
+    plan = resolve_plan(
+        cfg, plan=plan, caller="make_cnn_train_step",
+        num_groups=num_groups,
+    )
+    if opt_cfg is None or batch_shapes is None:
+        raise TypeError(
+            "make_cnn_train_step: opt_cfg and batch_shapes required"
+        )
     policies = plan.weight_policies()
     needs_rng = plan.needs_rng
     dp = mesh_cfg.fsdp_axes[0] if mesh_cfg.dshards > 1 else None
@@ -214,14 +186,15 @@ def make_cnn_train_step(
 
 
 def make_cnn_eval(
-    cfg, mesh_cfg, mesh, spec_tree, groups_info, *args,
-    plan: PrecisionPlan | None = None, **legacy,
+    cfg, mesh_cfg, mesh, spec_tree, groups_info, *,
+    plan: PrecisionPlan | None = None,
 ):
-    plan, _ = _cnn_plan(
-        cfg, groups_info, args, plan, legacy,
-        caller="make_cnn_eval", n_rest=0,
+    """Returns jit-able ``evaluate(storage, images, labels)`` (top-5
+    error) at the plan's weight widths."""
+    groups, num_groups = groups_info
+    plan = resolve_plan(
+        cfg, plan=plan, caller="make_cnn_eval", num_groups=num_groups,
     )
-    groups, _ = groups_info
     # evaluation is deterministic: stochastic forward rounding falls back
     # to nearest (same kept bytes, no PRNG dependence)
     policies = tuple(

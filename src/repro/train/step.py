@@ -16,10 +16,10 @@ repetitions share one noise realization per step (the scan body is one
 traced materialization site); keys differ across steps, groups, leaves
 and fwd/bwd directions.
 
-The legacy ``(round_tos, opt_cfg, batch_shapes, grad_round_to=,
-act_policy=, seq_parallel=, env_kw=, dtype=, accum_steps=)`` signature
-still works for one release and emits a ``DeprecationWarning`` pointing
-at ``plan=``.
+``plan=`` is the only configuration entry point: the pre-plan
+``round_tos``/``env_kw`` kwarg sprawl (and its deprecation shims) is
+gone. Build a plan with :meth:`~repro.plan.PrecisionPlan.build` or load
+one from JSON.
 """
 from __future__ import annotations
 
@@ -45,41 +45,23 @@ from repro.models import model as M
 from repro.optim.sgd import SGDConfig, sgd_update
 from repro.transport import policy_for
 
-_LEGACY_TRAIN_KW = (
-    "round_tos", "grad_round_to", "act_policy", "seq_parallel", "env_kw",
-    "dtype", "accum_steps",
-)
-
-
 def resolve_plan(
     cfg: ModelConfig,
     *,
     plan: PrecisionPlan | None,
-    round_tos=None,
-    legacy: dict | None = None,
     caller: str = "step factory",
     num_groups: int | None = None,
 ) -> PrecisionPlan:
-    """One dispatch point for the plan= / legacy-kwarg split shared by
-    the train, serve and cnn step factories."""
-    legacy = dict(legacy or {})
-    if plan is not None:
-        if round_tos is not None or legacy:
-            raise TypeError(
-                f"{caller}: pass either plan= or the legacy "
-                f"round_tos/{sorted(legacy)} arguments, not both"
-            )
-        if not isinstance(plan, PrecisionPlan):
-            raise TypeError(f"{caller}: plan must be a PrecisionPlan")
-    else:
-        if round_tos is None:
-            round_tos = legacy.pop("round_tos", None)
-        if round_tos is None:
-            raise TypeError(f"{caller}: needs plan= (or legacy round_tos)")
-        # lint: allow(DEPRECATED-SHIM): this IS the legacy-kwarg acceptance path the shim exists for; it dies with the shim
-        plan = PrecisionPlan.from_legacy(
-            round_tos, caller=caller, **legacy
+    """One validation point for the required ``plan=`` argument shared
+    by the train, serve and cnn step factories: type-check and broadcast
+    to the architecture's group count."""
+    if plan is None:
+        raise TypeError(
+            f"{caller}: needs plan= (a repro.plan.PrecisionPlan; the "
+            "legacy round_tos/env_kw kwargs were removed)"
         )
+    if not isinstance(plan, PrecisionPlan):
+        raise TypeError(f"{caller}: plan must be a PrecisionPlan")
     n = num_groups if num_groups is not None else cfg.num_groups + 1
     return plan.broadcast(n)
 
@@ -253,19 +235,18 @@ def make_train_step(
     mesh_cfg: MeshCfg,
     mesh,
     spec_tree,
-    *args,
-    plan: PrecisionPlan | None = None,
     opt_cfg: SGDConfig | None = None,
     batch_shapes: dict | None = None,
+    *,
+    plan: PrecisionPlan | None = None,
     aux_coef: float = 1e-2,
-    **legacy,
 ):
     """Returns jit-able ``step(storage, momentum, batch, lr[, key]) ->
     (storage', momentum', metrics)``. metrics: loss, token_count, group
     norms (for AWP). The trailing ``key`` argument exists exactly when
     ``plan.needs_rng`` (stochastic rounding on the weight/grad path).
 
-    Preferred call::
+    Call::
 
         make_train_step(cfg, mesh_cfg, mesh, spec_tree, opt_cfg,
                         batch_shapes, plan=plan)
@@ -273,28 +254,11 @@ def make_train_step(
     The plan owns every precision + layout lever: per-group weight
     formats, the gradient reduce-scatter entry, the activation /
     seq-boundary policies, compute dtype, ``accum_steps``, ``chunks``
-    and ``seq_parallel``. Legacy ``round_tos`` calls are shimmed with a
-    ``DeprecationWarning``.
+    and ``seq_parallel``.
     """
-    round_tos = None
-    if len(args) == 3:
-        round_tos, opt_cfg, batch_shapes = args
-    elif len(args) == 2:
-        opt_cfg, batch_shapes = args
-    elif args:
-        raise TypeError(f"make_train_step: unexpected positional args {args}")
-    for k in _LEGACY_TRAIN_KW:
-        if k in legacy and legacy[k] is None:
-            legacy.pop(k)
-    unknown = set(legacy) - set(_LEGACY_TRAIN_KW)
-    if unknown:
-        raise TypeError(f"make_train_step: unknown kwargs {sorted(unknown)}")
     if opt_cfg is None or batch_shapes is None:
         raise TypeError("make_train_step: opt_cfg and batch_shapes required")
-    plan = resolve_plan(
-        cfg, plan=plan, round_tos=round_tos, legacy=legacy,
-        caller="make_train_step",
-    )
+    plan = resolve_plan(cfg, plan=plan, caller="make_train_step")
 
     env = plan.make_env(mesh_cfg)
     if env.seq_parallel and mesh_cfg.tp > 1:

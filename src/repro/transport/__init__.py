@@ -15,7 +15,21 @@ Public surface:
   * :func:`pack_tokens` / :func:`unpack_tokens` (+ ``_host`` twins) —
     lossless byte-plane staging of token ids across the host<->device
     boundary (the serve engine's ``host_device`` traffic class).
+  * :class:`FabricChannel` + the KV-page / weight parcel codecs — the
+    metered inter-replica channel behind the fleet's ``kv_migration``
+    and ``weight_publish`` traffic classes (docs/fleet.md).
 """
+from repro.transport.fabric import (
+    FABRIC_CLASSES,
+    FabricChannel,
+    FabricError,
+    KVPageParcel,
+    WeightParcel,
+    pack_kv_pages,
+    pack_weight_parcel,
+    unpack_kv_pages,
+    unpack_weight_parcel,
+)
 from repro.transport.hostdev import (
     pack_tokens,
     pack_tokens_host,
@@ -46,7 +60,16 @@ from repro.transport.transport import (
 
 __all__ = [
     "CompressionPolicy",
+    "FABRIC_CLASSES",
+    "FabricChannel",
+    "FabricError",
+    "KVPageParcel",
     "Transport",
+    "WeightParcel",
+    "pack_kv_pages",
+    "pack_weight_parcel",
+    "unpack_kv_pages",
+    "unpack_weight_parcel",
     "act_policy_for",
     "all_gather",
     "all_reduce",

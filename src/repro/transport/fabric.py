@@ -1,0 +1,277 @@
+"""Inter-replica fabric: the metered channel for fleet parcel traffic.
+
+The serving fleet (``repro.fleet``) moves two new classes of bytes
+between replicas, and both ride the same adaptive byte-plane
+representation as every other wire class:
+
+  * ``kv_migration`` — prefill→decode hand-off of paged KV. A prefill
+    worker's freshly written pool pages are plane-split
+    (:mod:`repro.utils.planes`, MSB-first) and shipped at
+    :meth:`~repro.transport.CompressionPolicy.kv_wire_width` bytes per
+    element: an uncompressed policy pads every element to raw fp32-width
+    words (the staging analogue of raw int32 token ids), a compressing
+    policy drops exactly the pad planes — never a resident byte, so the
+    destination pool is BIT-EXACT vs local prefill (int8 pools ship 1
+    byte/element, bf16 pools 2, fp32 leaves — including int8-KV scale
+    rows — always 4).
+  * ``weight_publish`` — trainer→replica checkpoint parcels. Leaves are
+    encoded with the *same* tier codec as the on-disk sharded
+    checkpointer (:func:`repro.checkpoint.sharded.encode_leaf` at the
+    AWP controller's current widths), so a published parcel is
+    byte-identical to a ``save_sharded`` directory: wire tiers only when
+    the publish policy compresses (replicas restore at the transport's
+    truncation), wire + residual when uncompressed (bitwise fp32).
+
+:class:`FabricChannel` is the accounting boundary: every parcel crosses
+via :meth:`FabricChannel.send`, which appends one per-hop log record —
+the measured side of the ``fleet_migration_bytes`` analytic pin (the
+third measured==analytic instance after the serve engine's staging pin
+and the checkpoint manifest pin). Like ``hostdev.stage``, the channel
+exists so fleet code has exactly one priced way to move replica-boundary
+bytes (the UNPRICED-TRANSFER lint names this module for that reason).
+
+This module is host-side numpy only (parcels are host byte strings;
+staging a parcel's pages onto a device goes through the engine's normal
+metered paths).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.transport.policy import CompressionPolicy
+from repro.utils.planes import plane_join, plane_split
+
+#: the two PrecisionPlan traffic classes priced on the fabric
+FABRIC_CLASSES = ("kv_migration", "weight_publish")
+
+
+class FabricError(Exception):
+    """Fabric parcel / channel misuse (typed — survives ``-O``)."""
+
+
+# ---------------------------------------------------------------------------
+# KV page parcels (prefill -> decode migration)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class KVPageParcel:
+    """Plane-packed paged-KV payload: one ``(wire, info)`` entry per
+    cache pool leaf, plus free-form routing ``meta`` (request id, page
+    count, prompt position — metadata, not priced wire bytes)."""
+
+    entries: tuple[tuple[bytes, dict], ...]
+    treedef: object
+    meta: dict
+
+    @property
+    def nbytes(self) -> int:
+        return sum(len(wire) for wire, _ in self.entries)
+
+
+def pack_kv_pages(
+    pages, policy: CompressionPolicy, *, meta: dict | None = None
+) -> KVPageParcel:
+    """Pack a pytree of extracted KV pages into a parcel.
+
+    Every leaf is plane-split and shipped at
+    ``policy.kv_wire_width(itemsize)`` bytes per element: widths above
+    the leaf's own itemsize prepend all-zero MSB pad planes (the
+    uncompressed fp32-word framing), widths never go below it — the
+    parcel is lossless by construction.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(pages)
+    entries = []
+    for leaf in leaves:
+        arr = np.asarray(leaf)
+        it = arr.dtype.itemsize
+        width = policy.kv_wire_width(it)
+        planes = plane_split(arr)
+        if width > it:
+            planes = np.concatenate(
+                [np.zeros((width - it, planes.shape[1]), np.uint8), planes]
+            )
+        entries.append((
+            planes.tobytes(),
+            # str(dtype) (not .str) so extension dtypes such as the
+            # KV pool's bfloat16 survive the trip — ml_dtypes registers
+            # the names with numpy
+            {"dtype": str(arr.dtype), "shape": list(arr.shape),
+             "width": int(width)},
+        ))
+    return KVPageParcel(
+        entries=tuple(entries), treedef=treedef, meta=dict(meta or {})
+    )
+
+
+def unpack_kv_pages(parcel: KVPageParcel):
+    """Inverse of :func:`pack_kv_pages` — bitwise lossless: drop the pad
+    planes, rejoin the leaf's own planes."""
+    leaves = []
+    for wire, e in parcel.entries:
+        dtype = np.dtype(e["dtype"])
+        shape = tuple(e["shape"])
+        n = int(np.prod(shape)) if shape else 1
+        width = int(e["width"])
+        if len(wire) != width * n:
+            raise FabricError(
+                f"KV parcel leaf carries {len(wire)} bytes, expected "
+                f"{width}x{n} (width x elements)"
+            )
+        planes = np.frombuffer(wire, np.uint8).reshape(width, n)
+        leaves.append(plane_join(planes[width - dtype.itemsize:], dtype, shape))
+    return jax.tree_util.tree_unflatten(parcel.treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# weight parcels (trainer -> replica publish)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WeightParcel:
+    """Tier-encoded storage tree: ``(wire, res, info)`` per leaf in
+    canonical ``leaf_entries`` order, the in-memory twin of a
+    ``save_sharded`` directory. ``version`` is the publish sequence
+    number replicas key their hot-swap on."""
+
+    entries: tuple[tuple[bytes, bytes | None, dict], ...]
+    treedef: object
+    version: int
+    step: int
+    residuals: bool
+
+    @property
+    def nbytes(self) -> int:
+        return sum(
+            len(wire) + (len(res) if res is not None else 0)
+            for wire, res, _ in self.entries
+        )
+
+    def manifest_meta(self) -> dict:
+        """Manifest-shaped view so ``checkpoint.sharded.manifest_bytes``
+        prices a parcel exactly like an on-disk checkpoint."""
+        return {"trees": {"storage": [info for _, _, info in self.entries]}}
+
+
+def pack_weight_parcel(
+    storage,
+    *,
+    spec_tree,
+    round_tos,
+    policy: CompressionPolicy,
+    version: int,
+    step: int = 0,
+) -> WeightParcel:
+    """Encode ``storage`` at the controller's current ``round_tos``
+    widths using the checkpoint tier codec.
+
+    A compressing ``weight_publish`` policy ships wire tiers only
+    (replicas restore at the transport's truncation — the width-priced
+    serving hand-off); an uncompressed policy ships wire + residual
+    (bitwise fp32).
+    """
+    from repro.checkpoint.sharded import assign_widths, encode_leaf, leaf_entries
+
+    widths = assign_widths(storage, spec_tree, round_tos)
+    residuals = not policy.compresses
+    leaves, treedef = jax.tree_util.tree_flatten(storage)
+    entries = []
+    for kpath, leaf in leaf_entries(storage):
+        arr = np.asarray(leaf)
+        wire, res, info = encode_leaf(
+            arr, widths.get(kpath, arr.dtype.itemsize), residuals
+        )
+        info["path"] = kpath
+        entries.append((wire, res, info))
+    if len(entries) != len(leaves):
+        raise FabricError(
+            f"weight parcel leaf walk disagrees with tree_flatten "
+            f"({len(entries)} vs {len(leaves)} leaves)"
+        )
+    return WeightParcel(
+        entries=tuple(entries), treedef=treedef,
+        version=int(version), step=int(step), residuals=residuals,
+    )
+
+
+def unpack_weight_parcel(parcel: WeightParcel, storage_like):
+    """Decode a parcel against a structure-matching target tree.
+
+    Residual-bearing parcels restore bitwise; wire-only parcels restore
+    at the transport's truncation (quality="wire"), exactly like loading
+    a ``residuals=False`` checkpoint export."""
+    from repro.checkpoint.sharded import decode_leaf, leaf_entries
+
+    want = leaf_entries(storage_like)
+    if len(want) != len(parcel.entries):
+        raise FabricError(
+            f"weight parcel holds {len(parcel.entries)} leaves, restore "
+            f"target has {len(want)}"
+        )
+    quality = "exact" if parcel.residuals else "wire"
+    arrs = []
+    for (wire, res, info), (kpath, leaf) in zip(parcel.entries, want):
+        if info["path"] != kpath:
+            raise FabricError(
+                f"weight parcel structure mismatch at {kpath}: parcel "
+                f"has {info['path']}"
+            )
+        if tuple(info["shape"]) != tuple(np.shape(leaf)):
+            raise FabricError(
+                f"weight parcel shape mismatch at {kpath}: parcel "
+                f"{tuple(info['shape'])} vs target {tuple(np.shape(leaf))}"
+            )
+        arrs.append(decode_leaf(wire, info, quality, res, where="parcel"))
+    treedef = jax.tree_util.tree_structure(storage_like)
+    return jax.tree_util.tree_unflatten(treedef, arrs)
+
+
+# ---------------------------------------------------------------------------
+# the channel (per-hop measured log)
+# ---------------------------------------------------------------------------
+
+
+class FabricChannel:
+    """The one priced way to move a parcel between replicas.
+
+    Each :meth:`send` appends ``{"cls", "src", "dst", "bytes"}`` to the
+    hop log — the measured side that ``roofline.fleet_migration_bytes``
+    must equal EXACTLY (the fleet scenario pins it). The channel itself
+    is a host-side accounting boundary: parcels are byte strings, and
+    the caller hands the returned parcel to the destination replica.
+    """
+
+    def __init__(self):
+        self.hops: list[dict] = []
+
+    def send(self, parcel, *, cls: str, src: str, dst: str):
+        if cls not in FABRIC_CLASSES:
+            raise FabricError(
+                f"unknown fabric traffic class {cls!r} "
+                f"(valid: {FABRIC_CLASSES})"
+            )
+        nbytes = getattr(parcel, "nbytes", None)
+        if nbytes is None:
+            raise FabricError(
+                f"fabric parcels must expose .nbytes, got {type(parcel)}"
+            )
+        self.hops.append({
+            "cls": cls, "src": str(src), "dst": str(dst),
+            "bytes": int(nbytes),
+        })
+        return parcel
+
+    def wire_summary(self) -> dict:
+        """Per-class measured totals + hop counts."""
+        out = {cls: 0 for cls in FABRIC_CLASSES}
+        counts = {cls: 0 for cls in FABRIC_CLASSES}
+        for h in self.hops:
+            out[h["cls"]] += h["bytes"]
+            counts[h["cls"]] += 1
+        out["hops"] = dict(counts)
+        out["total"] = sum(out[cls] for cls in FABRIC_CLASSES)
+        return out

@@ -154,6 +154,23 @@ class CompressionPolicy:
             return FP32_BYTES
         return min(FP32_BYTES, max(needed, self.round_to))
 
+    def kv_wire_width(self, itemsize: int) -> int:
+        """Parcel bytes per KV pool element on the fleet fabric.
+
+        Migrated pages must land BIT-EXACT in the destination pool, so
+        the adapted representation is floored at the pool leaf's own
+        ``itemsize`` — an int8 pool ships 1 byte/element, a bf16 pool 2,
+        fp32 leaves (including int8-KV scale rows) always 4. An
+        uncompressed policy (``round_to == 4``) pads every element to
+        raw fp32-width words, the fleet analogue of staging raw int32
+        token ids; a compressing policy drops exactly the pad planes
+        and nothing else (same lossless-floor contract as
+        :meth:`token_wire_width`)."""
+        it = int(itemsize)
+        if self.round_to >= FP32_BYTES:
+            return FP32_BYTES
+        return min(FP32_BYTES, max(it, self.round_to))
+
     def token_host_bytes(self, n_tokens: int, vocab_size: int) -> int:
         """Bytes staged across the host<->device boundary for ``n_tokens``
         ids in one direction — the serve engine's ``host_device`` wire

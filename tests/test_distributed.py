@@ -10,6 +10,7 @@ SCENARIOS = [
     "scenario_audit.py",
     "scenario_compressed_collectives.py",
     "scenario_dist_train.py",
+    "scenario_fleet.py",
     "scenario_paged_serve.py",
     "scenario_perf_levers.py",
     "scenario_plan.py",

@@ -1,0 +1,405 @@
+"""Fleet tier unit tests: fabric parcels, typed errors, analytic pins.
+
+The contracts pinned here (see docs/fleet.md):
+
+  * KV page parcels are bitwise lossless for fp32, bf16 and int8 pool
+    leaves, priced at ``kv_wire_width`` bytes per element;
+  * weight parcels byte-match the sharded checkpointer three ways
+    (``parcel.nbytes == manifest_bytes == train_checkpoint_bytes``) and
+    restore bitwise when the publish policy is uncompressed;
+  * the engine's ``swap_weights`` hot-swap makes post-swap streams
+    equal a fresh run from the swapped storage;
+  * every misuse path raises a typed error (``FabricError`` /
+    ``RouterError`` / ``ReplicaError``), never a bare assert;
+  * a 2-replica fleet's streams are bit-exact vs a single engine, and
+    the fabric hop log equals ``fleet_migration_bytes`` (the full
+    topology matrix lives in ``tests/scenarios/scenario_fleet.py``).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, reduced
+from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
+from repro.fleet import (
+    DecodeReplica,
+    FleetRouter,
+    PrefillWorker,
+    ReplicaError,
+    RouterError,
+    WeightPublisher,
+    check_fleet_arch,
+)
+from repro.models.init import init_params
+from repro.plan import PrecisionPlan
+from repro.roofline.analysis import fleet_migration_bytes, train_checkpoint_bytes
+from repro.serve.engine import Request, ServeEngine
+from repro.transport import (
+    CompressionPolicy,
+    FabricChannel,
+    FabricError,
+    pack_kv_pages,
+    pack_weight_parcel,
+    unpack_kv_pages,
+    unpack_weight_parcel,
+)
+
+CAPACITY = 24
+SLOTS = 2
+PAGE = 8
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    mesh_cfg = MeshCfg(tp=1, dp=1, compress_min_size=4096)
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    plan = PrecisionPlan(
+        weights=(CompressionPolicy(round_to=2),) * (cfg.num_groups + 1),
+        host_device=CompressionPolicy(round_to=2),
+    )
+    return cfg, mesh_cfg, spec_tree, storage, plan
+
+
+def _requests(cfg, spec=((16, 6), (12, 8), (16, 4), (8, 8))):
+    rng = np.random.default_rng(7)
+    return [
+        Request(
+            rid=i,
+            prompt=tuple(int(t) for t in rng.integers(0, cfg.vocab_size, S)),
+            max_new_tokens=gen,
+        )
+        for i, (S, gen) in enumerate(spec)
+    ]
+
+
+def _engine(setup, storage=None, **kw):
+    cfg, mesh_cfg, spec_tree, storage0, plan = setup
+    kw.setdefault("max_slots", SLOTS)
+    kw.setdefault("cache_capacity", CAPACITY)
+    kw.setdefault("paged", True)
+    kw.setdefault("page_size", PAGE)
+    return ServeEngine(
+        cfg, mesh_cfg, None, spec_tree,
+        storage if storage is not None else storage0, plan=plan, **kw,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fabric: KV page parcels
+# ---------------------------------------------------------------------------
+
+
+def test_kv_wire_width_pricing():
+    # compressing policies ship a pool leaf at max(itemsize, round_to),
+    # capped at raw fp32 words; uncompressed pads everything to 4
+    assert CompressionPolicy(round_to=4).kv_wire_width(1) == 4
+    assert CompressionPolicy(round_to=4).kv_wire_width(2) == 4
+    assert CompressionPolicy(round_to=1).kv_wire_width(1) == 1
+    assert CompressionPolicy(round_to=1).kv_wire_width(2) == 2
+    assert CompressionPolicy(round_to=2).kv_wire_width(1) == 2
+    assert CompressionPolicy(round_to=2).kv_wire_width(4) == 4
+    assert CompressionPolicy(round_to=3).kv_wire_width(4) == 4
+
+
+@pytest.mark.parametrize("dtype,rt", [
+    ("float32", 4), ("float32", 2), ("bfloat16", 2), ("bfloat16", 4),
+    ("int8", 1), ("int8", 4),
+])
+def test_kv_parcel_lossless_roundtrip(dtype, rt):
+    rng = np.random.default_rng(11)
+    dt = np.dtype(dtype)
+    if dt.kind == "f":
+        leaves = {
+            "k": rng.standard_normal((2, 3, PAGE, 4)).astype(dt),
+            "v": rng.standard_normal((2, 3, PAGE, 4)).astype(dt),
+        }
+    else:
+        leaves = {
+            "k": rng.integers(-128, 128, (2, 3, PAGE, 4)).astype(dt),
+            "scale": rng.standard_normal((2, 3, PAGE)).astype(np.float32),
+        }
+    pol = CompressionPolicy(round_to=rt)
+    parcel = pack_kv_pages(leaves, pol, meta={"rid": 5})
+    out = unpack_kv_pages(parcel)
+    for key in leaves:
+        assert out[key].dtype == leaves[key].dtype
+        np.testing.assert_array_equal(
+            np.asarray(out[key]), leaves[key],
+        )
+    # priced exactly at kv_wire_width bytes per element, per leaf
+    want = sum(
+        arr.size * pol.kv_wire_width(arr.dtype.itemsize)
+        for arr in leaves.values()
+    )
+    assert parcel.nbytes == want
+    assert parcel.meta == {"rid": 5}
+
+
+def test_kv_parcel_truncated_wire_raises():
+    leaves = {"k": np.ones((2, PAGE), np.float32)}
+    parcel = pack_kv_pages(leaves, CompressionPolicy(round_to=2))
+    wire, info = parcel.entries[0]
+    bad = dataclasses.replace(parcel, entries=((wire[:-1], info),))
+    with pytest.raises(FabricError):
+        unpack_kv_pages(bad)
+
+
+def test_fabric_channel_typed_errors_and_summary():
+    ch = FabricChannel()
+    parcel = pack_kv_pages(
+        {"k": np.zeros((1, PAGE), np.float32)}, CompressionPolicy(round_to=4)
+    )
+    with pytest.raises(FabricError):
+        ch.send(parcel, cls="gradients", src="a", dst="b")
+    with pytest.raises(FabricError):
+        ch.send(object(), cls="kv_migration", src="a", dst="b")
+    ch.send(parcel, cls="kv_migration", src="w0", dst="r0")
+    ch.send(parcel, cls="kv_migration", src="w0", dst="r1")
+    ws = ch.wire_summary()
+    assert ws["kv_migration"] == 2 * parcel.nbytes
+    assert ws["weight_publish"] == 0
+    assert ws["hops"] == {"kv_migration": 2, "weight_publish": 0}
+    assert ws["total"] == 2 * parcel.nbytes
+
+
+# ---------------------------------------------------------------------------
+# fabric: weight parcels
+# ---------------------------------------------------------------------------
+
+
+def test_weight_parcel_three_way_byte_pin(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    nrt = cfg.num_groups + 1
+    for rt in (4, 2):
+        pol = CompressionPolicy(round_to=rt)
+        parcel = pack_weight_parcel(
+            storage, spec_tree=spec_tree, round_tos=(rt,) * nrt,
+            policy=pol, version=0,
+        )
+        # parcel bytes == manifest pricing == analytic checkpoint model
+        from repro.checkpoint.sharded import manifest_bytes
+
+        measured = manifest_bytes(parcel.manifest_meta())
+        analytic = train_checkpoint_bytes(
+            storage, spec_tree=spec_tree, round_tos=(rt,) * nrt,
+            residuals=parcel.residuals,
+        )
+        assert parcel.nbytes == measured["total"] == analytic["total"], rt
+        restored = unpack_weight_parcel(parcel, storage)
+        if rt == 4:
+            # uncompressed publish ships residuals: bitwise restore
+            assert parcel.residuals
+            for a, b in zip(
+                jax.tree_util.tree_leaves(restored),
+                jax.tree_util.tree_leaves(storage),
+            ):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            assert not parcel.residuals
+
+
+def test_weight_parcel_structure_mismatch_raises(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    nrt = cfg.num_groups + 1
+    parcel = pack_weight_parcel(
+        storage, spec_tree=spec_tree, round_tos=(2,) * nrt,
+        policy=CompressionPolicy(round_to=2), version=0,
+    )
+    bad = dataclasses.replace(parcel, entries=parcel.entries[:-1])
+    with pytest.raises(FabricError):
+        unpack_weight_parcel(bad, storage)
+
+
+# ---------------------------------------------------------------------------
+# analytic model arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_migration_bytes_arithmetic(setup):
+    cfg, _, _, _, plan = setup
+    out = fleet_migration_bytes(
+        plan, cfg, page_size=PAGE, migrated_pages=9,
+        publish_wire_bytes=1000, publish_installs=2,
+    )
+    # fp32 pool at a compressing policy still ships raw words: K + V
+    # per attention layer at 4 B/elem
+    layers = cfg.num_groups * cfg.layers_per_group
+    per_page = 2 * PAGE * cfg.num_kv_heads * cfg.head_dim * 4 * layers
+    assert out["kv_width"] == 4
+    assert out["page_wire_bytes"] == per_page
+    assert out["kv_migration"] == 9 * per_page
+    assert out["weight_publish"] == 2000
+    assert out["total"] == out["kv_migration"] + 2000
+    # int8 pools: payload at 1 B/elem under a 1-byte policy, fp32
+    # scale rows always at raw width
+    pol = CompressionPolicy(round_to=1)
+    out8 = fleet_migration_bytes(
+        pol, cfg, page_size=PAGE, migrated_pages=1, int8_kv=True,
+    )
+    per_page8 = (
+        2 * PAGE * cfg.num_kv_heads * cfg.head_dim * 1
+        + 2 * PAGE * cfg.num_kv_heads * 4
+    ) * layers
+    assert out8["kv_width"] == 1
+    assert out8["kv_migration"] == per_page8
+
+
+# ---------------------------------------------------------------------------
+# typed errors: arch gate, replica, router
+# ---------------------------------------------------------------------------
+
+
+def test_check_fleet_arch_rejects_non_fleet_families():
+    for name in ("hubert-xlarge", "mixtral-8x7b", "llama-3.2-vision-90b",
+                 "xlstm-1.3b"):
+        with pytest.raises(ReplicaError):
+            check_fleet_arch(reduced(get_config(name)))
+    check_fleet_arch(reduced(get_config("qwen3-1.7b")))
+
+
+def test_replica_requires_paged_engine(setup):
+    contiguous = _engine(setup, paged=False)
+    with pytest.raises(ReplicaError):
+        DecodeReplica("r0", contiguous)
+
+
+def test_router_constructor_validation(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    replica = DecodeReplica("r0", _engine(setup))
+
+    def worker(name, page_size=PAGE):
+        return PrefillWorker(
+            name, cfg, mesh_cfg, None, spec_tree, plan=plan,
+            cache_capacity=CAPACITY, page_size=page_size,
+        )
+
+    with pytest.raises(RouterError):
+        FleetRouter([], [worker("w0")])
+    with pytest.raises(RouterError):
+        FleetRouter([replica], [])
+    with pytest.raises(RouterError):
+        FleetRouter([replica], [worker("r0")])  # name collision
+    with pytest.raises(RouterError):  # geometry mismatch
+        FleetRouter([replica], [worker("w1", page_size=PAGE // 2)])
+
+
+def test_router_lifecycle_errors(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    replica = DecodeReplica("r0", _engine(setup))
+    worker = PrefillWorker(
+        "w0", cfg, mesh_cfg, None, spec_tree, plan=plan,
+        cache_capacity=CAPACITY, page_size=PAGE,
+    )
+    router = FleetRouter([replica], [worker])
+    req = _requests(cfg)[0]
+    with pytest.raises(RouterError):  # submit before any publish
+        router.submit(req)
+    publisher = WeightPublisher(cfg, spec_tree, plan=plan)
+    p0 = publisher.publish(storage)
+    router.publish(p0)
+    with pytest.raises(RouterError):  # versions must be monotonic
+        router.publish(p0)
+    router.submit(req)
+    with pytest.raises(RouterError):  # duplicate rid
+        router.submit(req)
+    with pytest.raises(RouterError):  # cannot drain the last replica
+        router.remove_replica("r0")
+    with pytest.raises(RouterError):  # unknown replica
+        router.remove_replica("nope")
+    with pytest.raises(RouterError):  # join needs a distinct name
+        router.add_replica(DecodeReplica("r0", _engine(setup)))
+
+
+def test_worker_n_hits_range(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    worker = PrefillWorker(
+        "w0", cfg, mesh_cfg, None, spec_tree, plan=plan,
+        cache_capacity=CAPACITY, page_size=PAGE,
+    )
+    req = Request(rid=0, prompt=(1,) * 12, max_new_tokens=4)
+    with pytest.raises(ReplicaError):
+        worker.prefill(storage, req, n_hits=2)  # only 1 whole page
+    with pytest.raises(ReplicaError):  # capacity overflow
+        worker.prefill(
+            storage, Request(rid=1, prompt=(1,) * 20, max_new_tokens=8)
+        )
+
+
+# ---------------------------------------------------------------------------
+# determinism: fleet vs single engine, swap_weights
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_streams_match_single_engine(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    reqs = _requests(cfg)
+    single = _engine(setup).run(reqs)
+
+    replicas = [DecodeReplica(f"r{i}", _engine(setup)) for i in range(2)]
+    worker = PrefillWorker(
+        "w0", cfg, mesh_cfg, None, spec_tree, plan=plan,
+        cache_capacity=CAPACITY, page_size=PAGE,
+    )
+    router = FleetRouter(replicas, [worker])
+    publisher = WeightPublisher(cfg, spec_tree, plan=plan)
+    parcel = publisher.publish(storage)
+    router.publish(parcel)
+    results = router.run(reqs)
+    for r in reqs:
+        assert results[r.rid].tokens == single[r.rid].tokens, r.rid
+    # both replicas saw traffic and the fabric pin holds
+    assert len({m["replica"] for m in router.placements.values()}) == 2
+    ws = router.wire_summary()
+    analytic = fleet_migration_bytes(
+        plan, cfg, page_size=PAGE, migrated_pages=ws["migrated_pages"],
+        publish_wire_bytes=parcel.nbytes,
+        publish_installs=ws["publish_installs"],
+    )
+    assert ws["kv_migration"] == analytic["kv_migration"]
+    assert ws["weight_publish"] == analytic["weight_publish"]
+
+
+def test_swap_weights_equals_fresh_engine(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    params1, _ = init_params(cfg, jax.random.PRNGKey(1), tp=1)
+    storage1 = tree_to_storage(params1, spec_tree, mesh_cfg)
+    reqs = _requests(cfg, spec=((16, 5), (12, 6)))
+    eng = _engine(setup)
+    base = eng.run(reqs)
+    eng.swap_weights(storage1)
+    swapped = eng.run(reqs)
+    fresh = _engine(setup, storage=storage1).run(reqs)
+    for r in reqs:
+        assert swapped[r.rid].tokens == fresh[r.rid].tokens, r.rid
+    # different weights genuinely produce different streams
+    assert any(
+        swapped[r.rid].tokens != base[r.rid].tokens for r in reqs
+    )
+
+
+def test_install_refuses_busy_replica(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    replica = DecodeReplica("r0", _engine(setup))
+    worker = PrefillWorker(
+        "w0", cfg, mesh_cfg, None, spec_tree, plan=plan,
+        cache_capacity=CAPACITY, page_size=PAGE,
+    )
+    req = _requests(cfg)[0]
+    pages, first = worker.prefill(storage, req)
+    parcel = pack_kv_pages(
+        pages, plan.kv_migration_policy(),
+        meta={"rid": req.rid, "n_hits": 0, "first": first},
+    )
+    replica.admit_parcel(req, parcel)
+    with pytest.raises(ReplicaError):
+        replica.install(storage, 1)
+    # drain so the module fixture's engine state stays clean
+    while replica.engine.has_work or replica.engine.pending_record:
+        replica.tick()
+    replica.engine.take_completed()
+    replica.engine.finish()

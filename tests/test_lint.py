@@ -190,13 +190,13 @@ def test_hardcoded_interpret_flags_bool_literals_only(tmp_path):
 
 def test_deprecated_shim_flags_callers_but_not_the_definer(tmp_path):
     src = """\
-    def f(plan_cls, kw):
-        return plan_cls.from_legacy(**kw)
+    def f(x, axis):
+        return compressed_all_gather(x, axis)
     """
     got = _lint(tmp_path, "src/repro/x.py", src, [DeprecatedShim()])
     assert [f.rule for f in got] == ["DEPRECATED-SHIM"]
     assert _lint(
-        tmp_path, "src/repro/plan/plan.py", src, [DeprecatedShim()]
+        tmp_path, "src/repro/core/compressed.py", src, [DeprecatedShim()]
     ) == []
 
 

@@ -1,7 +1,7 @@
 """PrecisionPlan API: construction-time validation, JSON + checkpoint
 round-trips, the plan→Env constructor, per-entry wire accounting vs the
-CompressionPolicy formulas, the chunk sweep, and the one-release
-deprecation shim on every step factory."""
+CompressionPolicy formulas, the chunk sweep, and the plan-only step
+factory signatures (the legacy precision kwargs are gone)."""
 import dataclasses
 import json
 import warnings
@@ -333,7 +333,7 @@ def test_checkpoint_persists_plan_and_awp(tmp_path):
 
 
 # ---------------------------------------------------------------------------
-# deprecation shim: legacy signatures still work, once, with a warning
+# plan= is the only entry point: legacy signatures are hard errors
 # ---------------------------------------------------------------------------
 
 
@@ -345,60 +345,54 @@ def _tiny_lm():
     return cfg, spec, storage
 
 
-def test_legacy_train_signature_warns_and_matches_plan():
+def test_legacy_train_signature_removed():
     cfg, spec, storage = _tiny_lm()
     nrt = cfg.num_groups + 1
-    B, S = 2, 16
-    rng = np.random.default_rng(0)
-    batch = {
-        "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
-        "labels": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32),
-    }
-    bsh = {k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()}
+    bsh = {"tokens": jax.ShapeDtypeStruct((2, 16), jnp.int32),
+           "labels": jax.ShapeDtypeStruct((2, 16), jnp.int32)}
     opt = SGDConfig(lr=0.05, momentum=0.9, weight_decay=0.0)
     act2 = CompressionPolicy(round_to=2, grad_round_to=2, mode="nearest")
 
-    with pytest.warns(DeprecationWarning, match="plan="):
-        step_legacy = make_train_step(
-            cfg, SINGLE, None, spec, (2,) * nrt, opt, bsh,
-            grad_round_to=2, act_policy=act2,
-        )
-    s1, m1, met1 = step_legacy(storage, init_momentum(storage), batch, 0.05)
-
-    plan = PrecisionPlan(
-        weights=(CompressionPolicy(round_to=2),) * nrt,
-        gradients=CompressionPolicy(round_to=2),
-        activations=act2,
-    )
-    cfg2, spec2, storage2 = _tiny_lm()
-    step_plan = make_train_step(cfg, SINGLE, None, spec2, opt, bsh, plan=plan)
-    s2, m2, met2 = step_plan(storage2, init_momentum(storage2), batch, 0.05)
-    assert float(met1["loss"]) == float(met2["loss"])  # bit-identical
-
-    # mixing plan= with legacy kwargs is an error, not a silent merge
+    # the pre-plan kwarg sprawl is gone: round_tos / grad_round_to /
+    # act_policy are unknown kwargs, not a deprecation shim
     with pytest.raises(TypeError):
         make_train_step(
-            cfg, SINGLE, None, spec, (2,) * nrt, opt, bsh, plan=plan
+            cfg, SINGLE, None, spec, opt, bsh,
+            round_tos=(2,) * nrt, grad_round_to=2, act_policy=act2,
         )
+    # the old 3-positional (round_tos, opt_cfg, batch_shapes) form too
+    with pytest.raises(TypeError):
+        make_train_step(cfg, SINGLE, None, spec, (2,) * nrt, opt, bsh)
+    # and omitting plan= entirely names the required argument
+    with pytest.raises(TypeError, match="plan="):
+        make_train_step(cfg, SINGLE, None, spec, opt, bsh)
+    # PrecisionPlan.from_legacy went with the shims
+    assert not hasattr(PrecisionPlan, "from_legacy")
 
 
-def test_legacy_serve_signature_warns():
+def test_legacy_serve_signature_removed():
     cfg, spec, storage = _tiny_lm()
     nrt = cfg.num_groups + 1
     B, S = 2, 8
     bsh = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
-    with pytest.warns(DeprecationWarning, match="plan="):
-        pre = make_prefill_step(
+    with pytest.raises(TypeError):
+        make_prefill_step(
             cfg, SINGLE, None, spec, (4,) * nrt, bsh, cache_capacity=S + 1
         )
-    logits, caches = pre(storage, {"tokens": jnp.ones((B, S), jnp.int32)})
     dsh = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
            "pos": jax.ShapeDtypeStruct((), jnp.int32)}
-    with pytest.warns(DeprecationWarning, match="plan="):
-        dec = make_decode_step(
+    with pytest.raises(TypeError):
+        make_decode_step(
             cfg, SINGLE, None, spec, (4,) * nrt, dsh,
             env_kw={"int8_kv": False},
         )
+    # the plan path still serves: prefill + one decode step stay finite
+    plan = PrecisionPlan.build(nrt)
+    pre = make_prefill_step(
+        cfg, SINGLE, None, spec, bsh, plan=plan, cache_capacity=S + 1
+    )
+    logits, caches = pre(storage, {"tokens": jnp.ones((B, S), jnp.int32)})
+    dec = make_decode_step(cfg, SINGLE, None, spec, dsh, plan=plan)
     dl, _ = dec(storage, caches,
                 {"tokens": jnp.ones((B, 1), jnp.int32),
                  "pos": jnp.asarray(S, jnp.int32)})
@@ -417,7 +411,7 @@ def test_serve_rejects_stochastic_forward():
         )
 
 
-def test_legacy_cnn_signature_warns():
+def test_legacy_cnn_signature_removed():
     from repro.models.cnn import ALEXNET, init_cnn, reduced_cnn
     from repro.train.cnn_step import (
         build_cnn_spec_tree, cnn_to_storage, make_cnn_train_step,
@@ -430,10 +424,13 @@ def test_legacy_cnn_signature_warns():
     st = cnn_to_storage(p, spec, mesh)
     _, ng = gi
     opt = SGDConfig(lr=0.05, momentum=0.9, weight_decay=5e-4)
-    with pytest.warns(DeprecationWarning, match="plan="):
-        step = make_cnn_train_step(
-            ccfg, mesh, None, spec, gi, (2,) * ng, opt, {}
-        )
+    # legacy (round_tos, opt_cfg, batch_shapes) positional form is gone
+    with pytest.raises(TypeError):
+        make_cnn_train_step(ccfg, mesh, None, spec, gi, (2,) * ng, opt, {})
+    step = make_cnn_train_step(
+        ccfg, mesh, None, spec, gi, opt, {},
+        plan=PrecisionPlan.build(ng, round_to=2),
+    )
     imgs = jnp.zeros((4, 32, 32, 3))
     labels = jnp.zeros((4,), jnp.int32)
     st, mom, met = step(st, init_momentum(st),

@@ -37,6 +37,7 @@ REQUIRED_DOCS = (
     "audit.md",
     "collectives.md",
     "data.md",
+    "fleet.md",
     "plan.md",
     "serving.md",
     "transport.md",

@@ -58,10 +58,11 @@ class RawCollective(Rule):
 class UnpricedTransfer(Rule):
     """Host<->device staging is a paper traffic class: every
     ``device_put`` must run inside the modules that meter it
-    (transport.hostdev staging, the data pipeline's prefetch)."""
+    (transport.hostdev staging, the fleet fabric's parcel channel in
+    transport.fabric, the data pipeline's prefetch)."""
 
     name = "UNPRICED-TRANSFER"
-    description = "device_put outside transport/hostdev or data"
+    description = "device_put outside transport (hostdev/fabric) or data"
     ALLOWED_PREFIXES = ("src/repro/transport/", "src/repro/data/")
 
     def check(self, f: SourceFile) -> Iterable[Finding]:
@@ -159,7 +160,6 @@ class DeprecatedShim(Rule):
         "compressed_all_gather": "src/repro/core/compressed.py",
         "compressed_psum_scatter": "src/repro/core/compressed.py",
         "quantize_ste": "src/repro/core/compressed.py",
-        "from_legacy": "src/repro/plan/plan.py",
     }
 
     def check(self, f: SourceFile) -> Iterable[Finding]:
