@@ -192,9 +192,9 @@ def serve_engine_bench(out_path="BENCH_serve.json"):
     rng = np.random.default_rng(0)
     shared = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 2 * page))
     reqs = [
-        Request(rid=i, prompt=shared + tuple(
+        Request(rid=i, prompt_ids=shared + tuple(
             int(t) for t in rng.integers(0, cfg.vocab_size, tail)),
-            max_new_tokens=8)
+            max_new=8)
         for i, tail in enumerate((8, 4, 12, 6, 10, 5))
     ]
     report = {"arch": cfg.name, "page_size": page, "requests": len(reqs),
@@ -247,6 +247,102 @@ def serve_engine_bench(out_path="BENCH_serve.json"):
     row("serve.bench_json", 0.0, f"wrote={out_path}")
 
 
+def spec_decode_bench(out_path="BENCH_serve.json"):
+    """Speculative-decoding benchmark: sampled requests drained three
+    ways on the same engine geometry — non-speculative, spec with the
+    target as its own draft (acceptance pinned 1.0), and spec with the
+    auto-shrunk tiny draft. Asserts all three produce IDENTICAL token
+    streams (speculation moves wall-clock/wire shape, never content)
+    and the measured wire equals ``serve_spec_decode_bytes``. Merges a
+    ``spec_decode`` section into the committed ``BENCH_serve.json``."""
+    from repro.configs.registry import get_config, reduced
+    from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
+    from repro.models.init import init_params
+    from repro.plan import PrecisionPlan, SamplingParams
+    from repro.roofline.analysis import serve_spec_decode_bytes
+    from repro.serve.engine import Request, ServeEngine
+    from repro.serve.spec import DraftBundle, build_draft
+    from repro.transport import CompressionPolicy
+
+    spec_k = 3
+    cfg = reduced(get_config("qwen3-1.7b"))
+    mesh_cfg = MeshCfg(tp=1, dp=1, compress_min_size=4096)
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    plan = PrecisionPlan(
+        weights=(CompressionPolicy(round_to=2),) * (cfg.num_groups + 1),
+        host_device=CompressionPolicy(round_to=2),
+    )
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt_ids=tuple(
+            int(t) for t in rng.integers(0, cfg.vocab_size, s)),
+            max_new=12,
+            sampling=SamplingParams(temperature=0.8, top_p=0.95,
+                                    top_k=40, seed=100 + i))
+        for i, s in enumerate((16, 12, 16, 8))
+    ]
+    drafts = {
+        "none": None,
+        "self": DraftBundle(cfg, spec_tree, storage),
+        "tiny": build_draft(cfg, mesh_cfg, "tiny"),
+    }
+    section = {"spec_k": spec_k, "sampling": "temp=0.8,p=0.95,k=40",
+               "drafts": {}}
+    streams = {}
+    for name, draft in drafts.items():
+        eng = ServeEngine(
+            cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+            max_slots=2, cache_capacity=32,
+            draft=draft, spec_k=spec_k if draft is not None else None,
+        )
+        eng.run(reqs)  # warm the compile caches
+        t0 = time.perf_counter()
+        results = eng.run(reqs)
+        wall = time.perf_counter() - t0
+        streams[name] = {r.rid: results[r.rid].tokens for r in reqs}
+        assert streams[name] == streams["none"], name  # identical streams
+        new_tokens = sum(len(r.tokens) for r in results.values())
+        wire = eng.wire_summary()
+        entry = {
+            "wall_s": round(wall, 4),
+            "new_tokens": new_tokens,
+            "tokens_per_s": round(new_tokens / wall, 2),
+            "wire_bytes_per_token": round(
+                wire["host_device"] / new_tokens, 2),
+        }
+        if draft is not None:
+            analytic = serve_spec_decode_bytes(
+                plan, cfg.vocab_size, n_slots=2,
+                prompt_lens=[len(r.prompt_ids) for r in reqs],
+                spec_rounds=wire["spec_rounds"], spec_k=spec_k,
+            )
+            assert wire["host_device"] == analytic["total"], (wire, analytic)
+            entry["acceptance_rate"] = round(wire["acceptance_rate"], 4)
+            entry["tokens_per_target_step"] = round(
+                wire["tokens_per_target_step"], 4)
+            entry["spec_rounds"] = wire["spec_rounds"]
+            entry["analytic_match"] = True
+        section["drafts"][name] = entry
+        row(
+            f"spec.{name}_tokens_per_s", 1e6 * wall,
+            f"tok_per_s={entry['tokens_per_s']}"
+            + (f"_accept={entry['acceptance_rate']}"
+               f"_tps={entry['tokens_per_target_step']}"
+               if draft is not None else ""),
+        )
+    report = {}
+    if os.path.exists(out_path):
+        with open(out_path) as f:
+            report = json.load(f)
+    report["spec_decode"] = section
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    row("spec.bench_json", 0.0, f"wrote={out_path}")
+
+
 def fleet_bench(out_path="BENCH_fleet.json"):
     """Fleet-tier benchmark: a 2-replica disaggregated fleet (1 prefill
     worker, paged engines) on a mixed request set, fp32 and int8 KV
@@ -283,9 +379,9 @@ def fleet_bench(out_path="BENCH_fleet.json"):
     rng = np.random.default_rng(0)
     shared = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, page))
     reqs = [
-        Request(rid=i, prompt=shared + tuple(
+        Request(rid=i, prompt_ids=shared + tuple(
             int(t) for t in rng.integers(0, cfg.vocab_size, tail)),
-            max_new_tokens=8)
+            max_new=8)
         for i, tail in enumerate((8, 4, 12, 6, 10, 5))
     ]
     report = {"arch": cfg.name, "page_size": page, "replicas": 2,
@@ -546,6 +642,7 @@ def main() -> None:
             steps=int(os.environ.get("BENCH_FIG3_STEPS", "140"))
         )),
         ("serve_engine_bench", serve_engine_bench),
+        ("spec_decode_bench", spec_decode_bench),
         ("fleet_bench", fleet_bench),
         ("train_io_bench", train_io_bench),
         ("roofline_table", roofline_table),

@@ -62,8 +62,8 @@ def main():
     requests = [
         Request(
             rid=i,
-            prompt=tuple(int(t) for t in rng.integers(0, cfg.vocab_size, S)),
-            max_new_tokens=args.gen,
+            prompt_ids=tuple(int(t) for t in rng.integers(0, cfg.vocab_size, S)),
+            max_new=args.gen,
         )
         for i, S in enumerate(lens)
     ]

@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.fleet.errors import ReplicaError
 from repro.models import model as M
+from repro.serve.sampling import sample_tokens
 from repro.serve.step import global_cache_shapes, make_prefill_step
 from repro.transport import (
     pack_tokens,
@@ -104,6 +105,14 @@ class PrefillWorker:
             return tok, pack_tokens(tok, width)
 
         self._sample = jax.jit(sample_pack)
+
+        def sample_rng_pack(logits, temp, top_p, top_k, seed, step):
+            tok = sample_tokens(
+                logits[:, -1], vocab, temp, top_p, top_k, seed, step
+            )
+            return tok, pack_tokens(tok, width)
+
+        self._sample_rng = jax.jit(sample_rng_pack)
         # minimal pool-shape tree (batch 1, one page): per-leaf dtypes
         # the export must land in — identical to the decode pool's
         self._pool_shapes = global_cache_shapes(
@@ -137,10 +146,13 @@ class PrefillWorker:
         the parcel only ships pages ``[n_hits:prompt_pages)``. Returns
         ``(pages, first)``: the export pytree (per group, per cache
         node, ``{"k", "v"(, scales)}`` arrays shaped
-        ``(R, n_new, page, ...)`` in pool dtype) and the prompt's
-        greedy first token id.
+        ``(R, n_new, page, ...)`` in pool dtype) and the prompt's first
+        token id, sampled under the request's own
+        :class:`~repro.plan.SamplingParams` key fold (greedy requests
+        keep the argmax fast path) — migrated admissions stay bit-exact
+        against local ones.
         """
-        S = len(req.prompt)
+        S = len(req.prompt_ids)
         page = self.page_size
         prompt_pages = -(-S // page)
         if not 0 <= int(n_hits) <= S // page:
@@ -148,15 +160,15 @@ class PrefillWorker:
                 f"worker {self.name}: n_hits={n_hits} outside the "
                 f"whole-prompt page range [0, {S // page}]"
             )
-        if S + req.max_new_tokens > self.cache_capacity:
+        if S + req.max_new > self.cache_capacity:
             raise ReplicaError(
                 f"worker {self.name}: request {req.rid} needs "
-                f"{S + req.max_new_tokens} positions, capacity is "
+                f"{S + req.max_new} positions, capacity is "
                 f"{self.cache_capacity}"
             )
         rec = {"rid": req.rid, "prompt_len": S, "host_device": 0}
         planes = pack_tokens_host(
-            np.asarray(req.prompt, np.int32)[None, :], self.token_width
+            np.asarray(req.prompt_ids, np.int32)[None, :], self.token_width
         )  # (w, 1, S) — h2d prompt staging (true length, no pads)
         rec["host_device"] += planes.nbytes
         tokens_dev = self._unpack(stage(planes))
@@ -166,7 +178,20 @@ class PrefillWorker:
         pbatch = {"tokens": tokens_dev,
                   "last": jnp.asarray(S - 1, jnp.int32)}
         logits, pcaches = self._prefill(Spad)(storage, pbatch)
-        _, tok_planes = self._sample(logits)
+        s = req.sampling
+        if s.greedy:
+            _, tok_planes = self._sample(logits)  # byte-identical path
+        else:
+            # same key-fold the engine's local admission uses — migrated
+            # streams stay bit-exact against local ones
+            _, tok_planes = self._sample_rng(
+                logits,
+                np.asarray([s.temperature], np.float32),
+                np.asarray([s.top_p], np.float32),
+                np.asarray([s.top_k], np.int32),
+                np.asarray([s.seed], np.uint32),
+                np.zeros((1,), np.int32),
+            )
         tok_planes = np.asarray(tok_planes)  # (w, 1) — d2h first id
         rec["host_device"] += tok_planes.nbytes
         first = int(unpack_tokens_host(tok_planes)[0])

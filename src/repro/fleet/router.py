@@ -171,7 +171,7 @@ class FleetRouter:
         pages, first = worker.prefill(
             self.versions[version], req, n_hits=n_hits
         )
-        S = len(req.prompt)
+        S = len(req.prompt_ids)
         n_new = -(-S // replica.engine.page_size) - n_hits
         parcel = pack_kv_pages(pages, self._kv_policy, meta={
             "rid": req.rid, "version": version, "prompt_len": S,

@@ -37,6 +37,7 @@ from repro.fleet import DecodeReplica, FleetRouter, PrefillWorker, WeightPublish
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.launch.train import _null, parse_mesh
 from repro.models.init import init_params
+from repro.launch.serve import sampling_from_args
 from repro.plan import PrecisionPlan
 from repro.roofline.analysis import fleet_migration_bytes
 from repro.serve.engine import Request, ServeEngine, generate_static
@@ -70,10 +71,11 @@ def _build_requests(args, cfg, *, rid_base: int, seed: int) -> list[Request]:
     return [
         Request(
             rid=rid_base + i,
-            prompt=shared + tuple(
+            prompt_ids=shared + tuple(
                 int(t) for t in rng.integers(0, cfg.vocab_size, S)
             ),
-            max_new_tokens=args.gen,
+            max_new=args.gen,
+            sampling=sampling_from_args(args, rid_base + i),
         )
         for i, S in enumerate(lens)
     ]
@@ -109,6 +111,16 @@ def main():
     ap.add_argument("--act-round-to", type=int, default=None,
                     help="activation wire format (plan-builder sugar)")
     ap.add_argument("--int8-kv", action="store_true")
+    # per-request sampling (same contract as repro.launch.serve: request
+    # i samples under seed + i; 0 temperature = the greedy fast path)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus cutoff (with --temperature > 0)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k cutoff, 0 = all (with --temperature > 0)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed; request i uses seed + i")
     ap.add_argument("--refresh-at", type=int, default=0,
                     help="after this many completed requests, publish "
                          "refreshed weights (PRNGKey(1) init) and submit "
@@ -139,7 +151,7 @@ def main():
         wave_b = _build_requests(
             args, cfg, rid_base=len(wave_a), seed=1
         )
-    lens = [len(r.prompt) for r in wave_a]
+    lens = [len(r.prompt_ids) for r in wave_a]
     cap = max(lens) + args.gen
 
     ctx = mesh if mesh is not None else _null()

@@ -20,6 +20,14 @@ flags (``--int8-kv``, ``--seq-parallel``, ``--chunks``,
 N`` prepends N common tokens to every prompt so the refcounted prefix-
 page sharing is visible in the printed page stats. Streams stay
 bit-exact vs ``--contiguous`` and the static reference either way.
+
+``--temperature/--top-p/--top-k/--seed`` switch every request to seeded
+per-request sampling (request i gets ``seed + i``) under the key-fold
+contract of :mod:`repro.serve.sampling` — ``--check-static`` still
+holds bit-exactly. ``--spec-decode --draft tiny --spec-k 4`` adds
+speculative decoding (:mod:`repro.serve.spec`): token streams are
+IDENTICAL to the non-speculative run at the same seeds; only the
+acceptance rate and wire/step shape change.
 """
 from __future__ import annotations
 
@@ -37,8 +45,10 @@ from repro.dist.spec import build_spec_tree, tree_to_storage
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.launch.train import _null, parse_mesh
 from repro.models.init import init_params
-from repro.plan import PrecisionPlan
+from repro.plan import PrecisionPlan, SamplingParams
+from repro.roofline.analysis import serve_spec_decode_bytes
 from repro.serve.engine import Request, ServeEngine, generate_static
+from repro.serve.spec import build_draft
 
 def plan_from_args(args, nrt: int) -> PrecisionPlan:
     """Serve-launcher plan resolution: ``--plan`` (or the checkpointed
@@ -81,6 +91,18 @@ def plan_from_args(args, nrt: int) -> PrecisionPlan:
     return plan
 
 
+def sampling_from_args(args, rid: int) -> SamplingParams:
+    """Per-request SamplingParams from the launcher flags: one shared
+    temperature/top-p/top-k knob, a DISTINCT seed per request
+    (``--seed + rid``) so streams are independent yet reproducible."""
+    if args.temperature <= 0:
+        return SamplingParams()
+    return SamplingParams(
+        temperature=args.temperature, top_p=args.top_p,
+        top_k=args.top_k, seed=args.seed + rid,
+    )
+
+
 def build_requests(args, cfg) -> list[Request]:
     if args.prompt_lens:
         lens = [int(s) for s in args.prompt_lens.split(",")]
@@ -93,10 +115,11 @@ def build_requests(args, cfg) -> list[Request]:
     return [
         Request(
             rid=i,
-            prompt=shared + tuple(
+            prompt_ids=shared + tuple(
                 int(t) for t in rng.integers(0, cfg.vocab_size, S)
             ),
-            max_new_tokens=args.gen,
+            max_new=args.gen,
+            sampling=sampling_from_args(args, i),
         )
         for i, S in enumerate(lens)
     ]
@@ -168,6 +191,26 @@ def main():
     ap.add_argument("--int8-kv", action="store_true")
     ap.add_argument("--window", type=int, default=0,
                     help="sliding-window decode override (long-context)")
+    # per-request sampling (0 temperature = the greedy fast path)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy, the default; "
+                         ">0 switches every request to seeded sampling)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus cutoff (with --temperature > 0)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k cutoff, 0 = all (with --temperature > 0)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base sampling seed; request i uses seed + i")
+    # speculative decoding
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decoding: a draft model proposes "
+                         "--spec-k tokens/slot, the target verifies them "
+                         "in one batched step (streams stay identical)")
+    ap.add_argument("--draft", default="tiny",
+                    help="draft model: 'tiny' (auto-shrunk target, same "
+                         "vocab) or a registry arch name (--spec-decode)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft proposals per round (--spec-decode)")
     layout = ap.add_mutually_exclusive_group()
     layout.add_argument("--paged", action="store_true",
                         help="block-paged KV layout: page pool + per-slot "
@@ -209,7 +252,7 @@ def main():
               f"plan rts {plan.round_tos})")
 
     requests = build_requests(args, cfg)
-    lens = [len(r.prompt) for r in requests]
+    lens = [len(r.prompt_ids) for r in requests]
     window = args.window or None
     # windowed decode rings only when capacity <= window (the engine
     # validates this): cap at the window so long prompts wrap instead of
@@ -251,6 +294,11 @@ def main():
                           f"{static_streams[r.rid][:16]}")
                 return
 
+        draft = None
+        if args.spec_decode:
+            draft = build_draft(cfg, mesh_cfg, args.draft)
+            print(f"speculative decoding: draft {draft.cfg.name}, "
+                  f"k={args.spec_k}")
         engine = ServeEngine(
             cfg, mesh_cfg, mesh, spec_tree, storage, plan=plan,
             max_slots=slots, cache_capacity=cap, window=window,
@@ -258,6 +306,7 @@ def main():
             paged=args.paged, page_size=args.page_size,
             num_pages=args.num_pages or None,
             share_prefix=not args.no_share_prefix,
+            draft=draft, spec_k=args.spec_k if draft is not None else None,
         )
         t0 = time.time()
         results = engine.run(requests)
@@ -273,6 +322,28 @@ def main():
     print(f"host_device wire: {summary['host_device']} B staged at "
           f"{summary['token_width']} B/token "
           f"({4/summary['token_width']:.1f}x vs raw int32)")
+    if args.spec_decode:
+        print(f"spec decode: {summary['spec_rounds']} rounds, "
+              f"acceptance {summary['acceptance_rate']:.2f}, "
+              f"{summary['tokens_per_target_step']:.2f} emitted "
+              f"tokens/target step (k={summary['spec_k']})")
+        analytic = serve_spec_decode_bytes(
+            plan, cfg.vocab_size, n_slots=slots,
+            prompt_lens=[len(r.prompt_ids) for r in requests],
+            spec_rounds=summary["spec_rounds"], spec_k=args.spec_k,
+            page_table_entries=(
+                summary["page_table_entries"] if args.paged else 0
+            ),
+        )
+        if summary["host_device"] != analytic["total"]:
+            raise SystemExit(
+                f"spec-decode wire DIVERGED from the analytic model: "
+                f"measured {summary['host_device']} != analytic "
+                f"{analytic['total']} ({analytic})"
+            )
+        print(f"wire == serve_spec_decode_bytes: {analytic['total']} B "
+              f"at {analytic['token_width']} B/id — measured equals "
+              "analytic")
     if args.paged:
         res = engine.kv_residency()
         audit = engine.pages.audit()

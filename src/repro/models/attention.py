@@ -337,21 +337,59 @@ def attend_tiled(
     return jnp.concatenate(outs, axis=1)
 
 
+def _attend_decode_multi(q, cache, *, ring: bool, window: Optional[int]):
+    """T-token block attention (the speculative-decoding verify step)
+    over the already updated per-slot cache: block token j sits at
+    absolute position ``pos - T + j`` and attends exactly its own
+    prefix, including the block's earlier tokens. Every op reduces
+    along the slot axis only, mirroring :func:`attend_decode`, so a
+    T-block is bitwise the T successive single-token steps."""
+    B, T, Kv, G, hd = q.shape
+    if ring or window is not None or not jnp.ndim(cache.pos):
+        raise ValueError(
+            "multi-token decode (speculative verify) needs per-slot "
+            "linear caches (no ring/window)"
+        )
+    C = cache.capacity
+    slots = jnp.arange(C)
+    tpos = (cache.pos - T)[:, None] + jnp.arange(T)  # (B, T) abs positions
+    valid = slots[None, None, :] <= tpos[:, :, None]  # (B, T, C)
+    vmask = valid[:, None, None]  # (B, 1, 1, T, C)
+    scale = hd**-0.5
+    quant = isinstance(cache, QuantKVCache)
+    s = jnp.einsum(
+        "btkgh,bskh->bkgts", q, cache.k, preferred_element_type=jnp.float32
+    ) * scale
+    if quant:
+        s = s * cache.k_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    s = jnp.where(vmask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if quant:
+        p = p * cache.v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    return jnp.einsum(
+        "bkgts,bskh->btkgh", p, cache.v, preferred_element_type=jnp.float32
+    ).astype(q.dtype)
+
+
 def attend_decode(
-    q: jnp.ndarray,  # (B, 1, Kv, G, hd)
+    q: jnp.ndarray,  # (B, T, Kv, G, hd) — T=1 outside speculative verify
     cache,
     *,
     ring: bool,
     window: Optional[int],
 ) -> jnp.ndarray:
     """Single-token attention over the (already updated) cache; handles
-    both fp (KVCache) and int8 (QuantKVCache) layouts.
+    both fp (KVCache) and int8 (QuantKVCache) layouts. ``T > 1``
+    (the speculative verify block) dispatches to
+    :func:`_attend_decode_multi`; the T=1 path below is unchanged.
 
     ``cache.pos`` may be a scalar (uniform batch — the historical path,
     kept bit-for-bit) or a ``(B,)`` vector (per-slot positions from the
     continuous-batching serve engine): the validity mask then becomes
     per-request, so every slot attends exactly its own prefix."""
-    B, _, Kv, G, hd = q.shape
+    B, T, Kv, G, hd = q.shape
+    if T > 1:
+        return _attend_decode_multi(q, cache, ring=ring, window=window)
     C = cache.capacity
     pos = cache.pos - 1  # absolute position of the current token
     slots = jnp.arange(C)
@@ -415,7 +453,8 @@ def attend_decode_paged(
     if impl is None:
         impl = (
             "pallas"
-            if jax.default_backend() == "tpu" and not quant and window is None
+            if jax.default_backend() == "tpu" and not quant
+            and window is None and q.shape[1] == 1
             else "dense"
         )
     if impl == "pallas":
@@ -438,31 +477,56 @@ def attend_decode_paged(
 
 
 def _paged_write(cache, k, v, page_table):
-    """Scatter one decoded token per slot into its page-table slot.
+    """Scatter the decoded token block into each slot's pages.
 
-    ``k/v (B, 1, Kv, hd)``. Logical page ``pos // page`` is clamped to
-    the table width: retired-ballast slots (table all-trash, ``pos``
-    still advancing) then keep writing into the trash page."""
+    ``k/v (B, T, Kv, hd)`` — T=1 is the ordinary decode step (path kept
+    bit-for-bit), T=k+1 the speculative verify block. Logical page
+    ``pos // page`` is clamped to the table width: retired-ballast
+    slots (table all-trash, ``pos`` still advancing) then keep writing
+    into the trash page, and under speculative decoding the engine
+    widens the table so a verify block near end-of-capacity clamps
+    into unallocated (trash) entries, never a live page."""
     B = page_table.shape[0]
     page = cache.page_size
-    pos = cache.pos  # (B,) tokens absorbed BEFORE this one
-    pi = jnp.minimum(pos // page, page_table.shape[1] - 1)
-    phys = page_table[jnp.arange(B), pi]  # (B,)
-    off = jnp.mod(pos, page)
+    pos = cache.pos  # (B,) tokens absorbed BEFORE this block
+    T = k.shape[1]
+    if T == 1:
+        pi = jnp.minimum(pos // page, page_table.shape[1] - 1)
+        phys = page_table[jnp.arange(B), pi]  # (B,)
+        off = jnp.mod(pos, page)
+        if isinstance(cache, PagedQuantKVCache):
+            kq, ks = _quantize_kv(k)
+            vq, vs = _quantize_kv(v)
+            return PagedQuantKVCache(
+                cache.k.at[phys, off].set(kq[:, 0]),
+                cache.v.at[phys, off].set(vq[:, 0]),
+                cache.k_scale.at[phys, off].set(ks[:, 0]),
+                cache.v_scale.at[phys, off].set(vs[:, 0]),
+                pos + 1,
+            )
+        return PagedKVCache(
+            cache.k.at[phys, off].set(k[:, 0].astype(cache.k.dtype)),
+            cache.v.at[phys, off].set(v[:, 0].astype(cache.v.dtype)),
+            pos + 1,
+        )
+    tpos = pos[:, None] + jnp.arange(T)  # (B, T) absolute positions
+    pi = jnp.minimum(tpos // page, page_table.shape[1] - 1)
+    phys = page_table[jnp.arange(B)[:, None], pi]  # (B, T)
+    off = jnp.mod(tpos, page)
     if isinstance(cache, PagedQuantKVCache):
         kq, ks = _quantize_kv(k)
         vq, vs = _quantize_kv(v)
         return PagedQuantKVCache(
-            cache.k.at[phys, off].set(kq[:, 0]),
-            cache.v.at[phys, off].set(vq[:, 0]),
-            cache.k_scale.at[phys, off].set(ks[:, 0]),
-            cache.v_scale.at[phys, off].set(vs[:, 0]),
-            pos + 1,
+            cache.k.at[phys, off].set(kq),
+            cache.v.at[phys, off].set(vq),
+            cache.k_scale.at[phys, off].set(ks),
+            cache.v_scale.at[phys, off].set(vs),
+            pos + T,
         )
     return PagedKVCache(
-        cache.k.at[phys, off].set(k[:, 0].astype(cache.k.dtype)),
-        cache.v.at[phys, off].set(v[:, 0].astype(cache.v.dtype)),
-        pos + 1,
+        cache.k.at[phys, off].set(k.astype(cache.k.dtype)),
+        cache.v.at[phys, off].set(v.astype(cache.v.dtype)),
+        pos + T,
     )
 
 
@@ -573,11 +637,10 @@ def mha(
             "caches and the serve engine scatters them into pages"
         )
     if mode == "decode" and paged:
-        if page_table is None or S != 1:
+        if page_table is None:
             raise ValueError(
-                f"paged decode needs a page_table and a single token "
-                f"(got page_table={'set' if page_table is not None else None}, "
-                f"S={S})"
+                "paged decode needs a page_table (S=1 ordinary decode, "
+                "S=k+1 the speculative verify block)"
             )
         if window is not None:
             raise ValueError(
@@ -587,16 +650,45 @@ def mha(
         new_cache = _paged_write(cache, k, v, page_table)
         out = attend_decode_paged(qg, new_cache, page_table)
     elif mode == "decode" and not is_cross:
-        if cache is None or S != 1:
-            raise ValueError(
-                f"decode needs a KV cache and a single token (got "
-                f"cache={'set' if cache is not None else None}, S={S})"
-            )
+        if cache is None:
+            raise ValueError("decode needs a KV cache")
         C = cache.capacity
         ring = window is not None and C <= window
         per_slot = jnp.ndim(cache.pos) > 0
+        if S != 1 and (not per_slot or window is not None):
+            raise ValueError(
+                f"multi-token decode (S={S}) needs per-slot linear "
+                "caches (no ring/window)"
+            )
         idx = jnp.mod(cache.pos, C) if ring else cache.pos
-        if per_slot:
+        if per_slot and S > 1:
+            # speculative verify block: scatter all S tokens at
+            # (slot, pos + j); mode="drop" skips past-capacity writes
+            # (ballast slots and block tails past the stop position,
+            # both never attended)
+            bi2 = jnp.arange(B)[:, None]
+            idx2 = cache.pos[:, None] + jnp.arange(S)  # (B, S)
+            if isinstance(cache, QuantKVCache):
+                kq, ks = _quantize_kv(k)
+                vq, vs = _quantize_kv(v)
+                new_cache = QuantKVCache(
+                    cache.k.at[bi2, idx2].set(kq, mode="drop"),
+                    cache.v.at[bi2, idx2].set(vq, mode="drop"),
+                    cache.k_scale.at[bi2, idx2].set(ks, mode="drop"),
+                    cache.v_scale.at[bi2, idx2].set(vs, mode="drop"),
+                    cache.pos + S,
+                )
+            else:
+                new_cache = KVCache(
+                    cache.k.at[bi2, idx2].set(
+                        k.astype(cache.k.dtype), mode="drop"
+                    ),
+                    cache.v.at[bi2, idx2].set(
+                        v.astype(cache.v.dtype), mode="drop"
+                    ),
+                    cache.pos + S,
+                )
+        elif per_slot:
             # per-request write positions (continuous batching): a batched
             # scatter at (slot, idx[slot]); mode="drop" silently skips
             # requests whose linear cache is already full (a retired slot

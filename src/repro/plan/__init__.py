@@ -12,6 +12,7 @@ from repro.plan.plan import (
     ENV_OVERRIDE_KEYS,
     TRAFFIC_CLASSES,
     PrecisionPlan,
+    SamplingParams,
     Schedule,
     policy_uses_rng,
 )
@@ -26,6 +27,7 @@ __all__ = [
     "CHUNK_CANDIDATES",
     "ENV_OVERRIDE_KEYS",
     "PrecisionPlan",
+    "SamplingParams",
     "Schedule",
     "TRAFFIC_CLASSES",
     "modeled_gather_time",

@@ -141,6 +141,47 @@ def _coerce_policy(v) -> CompressionPolicy | None:
 
 
 @dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling contract (the serve engine's PRNG surface).
+
+    ``temperature == 0`` is greedy — the engine's fast path, byte-
+    identical to the pre-sampling argmax pack. A positive temperature
+    samples from the temperature-scaled softmax restricted to the
+    ``top_k`` highest-probability ids (0 = unrestricted) and the
+    smallest prefix of the sorted distribution whose *preceding*
+    cumulative mass stays below ``top_p``.
+
+    Determinism: the sampled id for the n-th emitted token of a request
+    (0-based; the prefill's first token is n=0) is a pure function of
+    ``(logits, seed, n)`` — the key is
+    ``jax.random.fold_in(jax.random.PRNGKey(seed), n)`` — so streams
+    are bit-reproducible under arrival-order permutations, slot reuse,
+    and any batch companions, exactly like the greedy contract.
+    """
+
+    temperature: float = 0.0
+    top_p: float = 1.0
+    top_k: int = 0
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "temperature", float(self.temperature))
+        object.__setattr__(self, "top_p", float(self.top_p))
+        if self.temperature < 0.0:
+            raise ValueError("temperature must be >= 0")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+        if not isinstance(self.top_k, int) or self.top_k < 0:
+            raise ValueError("top_k must be an int >= 0")
+        if not isinstance(self.seed, int) or self.seed < 0:
+            raise ValueError("seed must be a non-negative int")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+@dataclasses.dataclass(frozen=True)
 class PrecisionPlan:
     """Declarative precision + layout plan (see module docstring)."""
 
@@ -159,6 +200,12 @@ class PrecisionPlan:
     int8_kv: bool = False
     accum_steps: int = 1
     env_overrides: tuple[tuple[str, Any], ...] = ()
+    # --- serving ---------------------------------------------------------
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams
+    )
+    spec_draft: str = ""
+    spec_k: int = 4
 
     # ------------------------------------------------------------------
     def __post_init__(self):
@@ -195,6 +242,16 @@ class PrecisionPlan:
                     f"unknown env override {k!r} (allowed: "
                     f"{ENV_OVERRIDE_KEYS})"
                 )
+        if isinstance(self.sampling, Mapping):
+            object.__setattr__(
+                self, "sampling", SamplingParams(**self.sampling)
+            )
+        if not isinstance(self.sampling, SamplingParams):
+            raise ValueError("sampling must be a SamplingParams")
+        if not isinstance(self.spec_draft, str):
+            raise ValueError("spec_draft must be a draft name string")
+        if not isinstance(self.spec_k, int) or self.spec_k < 1:
+            raise ValueError("spec_k must be an int >= 1")
         # activation-path stochastic rounding has no PRNG plumbing (the
         # collectives sit inside TP-region custom VJPs): reject early
         for name in ("activations", "seq_boundary"):
@@ -426,6 +483,9 @@ class PrecisionPlan:
             "int8_kv": self.int8_kv,
             "accum_steps": self.accum_steps,
             "env_overrides": dict(self.env_overrides),
+            "sampling": dataclasses.asdict(self.sampling),
+            "spec_draft": self.spec_draft,
+            "spec_k": self.spec_k,
         }
 
     @classmethod

@@ -299,6 +299,63 @@ def serve_host_device_bytes(
     return table
 
 
+def serve_spec_decode_bytes(
+    plan_or_policy,
+    vocab_size: int,
+    *,
+    n_slots: int,
+    prompt_lens,
+    spec_rounds: int,
+    spec_k: int,
+    page_table_entries: int = 0,
+) -> dict:
+    """Analytic serve-wire model for the **speculative** engine — the
+    fourth measured==analytic pin (after the training collectives, the
+    plain serve model, and the fleet migration fabric). Same
+    ``token_host_bytes`` arithmetic as :func:`serve_host_device_bytes`,
+    reshaped by the draft/verify protocol (``T = spec_k + 1``):
+
+      * ``prompt_h2d``     — each admitted prompt staged once, h2d; the
+        draft model prefills from the SAME staged device tokens on the
+        local-admission path, so the prompt crosses the boundary once
+        (migration admissions re-stage it for the draft — callers add
+        one extra ``prompt_h2d``-shaped term per migrated prompt);
+      * ``first_token_d2h``— one sampled id per admission, d2h;
+      * ``draft_h2d``      — per round the draft runs ``T`` micro decode
+        steps, each feeding the full slot batch one token h2d
+        (``k`` sampled proposals + the absorb-only final step);
+      * ``draft_d2h``      — per round ``k`` proposal batches return d2h
+        (the absorb step samples nothing);
+      * ``verify_token_io``— per round the target stages the ``(B, T)``
+        verify block h2d and the ``T`` verified ids per slot d2h;
+      * ``page_table_h2d`` — paged engines re-stage the (spec-widened)
+        host table every verify step, raw int32.
+    """
+    pol = plan_or_policy
+    if hasattr(pol, "host_device_policies"):  # a PrecisionPlan
+        pol = pol.host_device_policies()[0]
+    prompt_lens = list(prompt_lens)
+    admissions = len(prompt_lens)
+    tok = pol.token_host_bytes
+    rounds, k = int(spec_rounds), int(spec_k)
+    T = k + 1
+    table = {
+        "prompt_h2d": tok(sum(prompt_lens), vocab_size),
+        "first_token_d2h": tok(admissions, vocab_size),
+        "draft_h2d": rounds * tok(n_slots * T, vocab_size),
+        "draft_d2h": rounds * tok(n_slots * k, vocab_size),
+        "verify_token_io": 2 * rounds * tok(n_slots * T, vocab_size),
+        "page_table_h2d": 4 * int(page_table_entries) * rounds,
+        "token_width": pol.token_wire_width(vocab_size),
+    }
+    table["total"] = (
+        table["prompt_h2d"] + table["first_token_d2h"]
+        + table["draft_h2d"] + table["draft_d2h"]
+        + table["verify_token_io"] + table["page_table_h2d"]
+    )
+    return table
+
+
 def train_ingest_bytes(
     plan_or_policy,
     vocab_size: int,

@@ -1,0 +1,108 @@
+"""The unified serving request API (`repro.serve.api`).
+
+One frozen :class:`Request` object is accepted by every submit surface
+— ``ServeEngine.submit``, :func:`repro.serve.engine.generate_static`,
+``FleetRouter.submit``, and both launchers — so ``--check-static``
+compares *identical* request objects end to end. A request carries its
+prompt ids, stop conditions, per-request
+:class:`~repro.plan.SamplingParams` (the PRNG contract lives there; see
+docs/serving.md §sampling), and optionally per-request image features
+for vision cross-attention archs on the static path.
+
+Deprecation shims (one release, the PR 4/PR 9 pattern): the pre-PR 10
+field names ``prompt=`` / ``max_new_tokens=`` still construct a
+``Request`` behind a :class:`DeprecationWarning`, read-only properties
+keep old call sites compiling, and :func:`legacy_request` adapts
+positional old-style construction (the ``tools/lint`` DEPRECATED-SHIM
+entry for this PR).
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+from repro.plan.plan import SamplingParams
+
+__all__ = ["Request", "SamplingParams", "legacy_request"]
+
+
+@dataclasses.dataclass(frozen=True, init=False)
+class Request:
+    """One generation request: prompt, stop conditions, sampling."""
+
+    rid: int
+    prompt_ids: tuple[int, ...]
+    max_new: int
+    eos_id: int | None = None
+    sampling: SamplingParams = SamplingParams()
+    image_features: Any = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
+
+    def __init__(
+        self,
+        rid: int,
+        prompt_ids=None,
+        max_new: int | None = None,
+        eos_id: int | None = None,
+        sampling: SamplingParams | None = None,
+        image_features=None,
+        *,
+        prompt=None,
+        max_new_tokens: int | None = None,
+    ):
+        if prompt is not None or max_new_tokens is not None:
+            warnings.warn(
+                "Request(prompt=..., max_new_tokens=...) is deprecated; "
+                "use Request(prompt_ids=..., max_new=...) — the legacy "
+                "field names go away next release",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+            if prompt_ids is None:
+                prompt_ids = prompt
+            if max_new is None:
+                max_new = max_new_tokens
+        if prompt_ids is None:
+            raise ValueError(f"request {rid}: no prompt ids")
+        prompt_ids = tuple(int(t) for t in prompt_ids)
+        if not prompt_ids:
+            raise ValueError(f"request {rid}: empty prompt")
+        if max_new is None or max_new < 1:
+            raise ValueError(f"request {rid}: max_new < 1")
+        if sampling is None:
+            sampling = SamplingParams()
+        if not isinstance(sampling, SamplingParams):
+            raise ValueError(f"request {rid}: sampling must be "
+                             "a SamplingParams")
+        object.__setattr__(self, "rid", rid)
+        object.__setattr__(self, "prompt_ids", prompt_ids)
+        object.__setattr__(self, "max_new", int(max_new))
+        object.__setattr__(self, "eos_id", eos_id)
+        object.__setattr__(self, "sampling", sampling)
+        object.__setattr__(self, "image_features", image_features)
+
+    # -- legacy read surface (no warning: cheap, unambiguous) ----------
+    @property
+    def prompt(self) -> tuple[int, ...]:
+        return self.prompt_ids
+
+    @property
+    def max_new_tokens(self) -> int:
+        return self.max_new
+
+
+def legacy_request(rid, prompt, max_new_tokens, eos_id=None) -> Request:
+    """DEPRECATED positional-tuple adapter for pre-PR 10 call sites.
+
+    Kept one release behind a warning so external drivers migrate at
+    their own pace; ``tools/lint`` forbids new in-repo callers.
+    """
+    warnings.warn(
+        "legacy_request() is deprecated; construct serve.api.Request "
+        "directly (prompt_ids=, max_new=)",
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    return Request(rid, tuple(prompt), int(max_new_tokens), eos_id)

@@ -63,12 +63,21 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.dist.spec import MeshCfg
 from repro.models import model as M
-from repro.plan import PrecisionPlan
+from repro.plan import PrecisionPlan, SamplingParams
+from repro.serve.api import Request
+from repro.serve.sampling import sample_tokens
+from repro.serve.spec import (
+    DraftBundle,
+    DraftRunner,
+    check_spec_arch,
+    rollback_caches,
+)
 from repro.serve.step import (
     global_cache_shapes,
     make_decode_step,
     make_place_step,
     make_prefill_step,
+    make_verify_step,
 )
 from repro.transport.hostdev import (
     pack_tokens,
@@ -78,26 +87,23 @@ from repro.transport.hostdev import (
     unpack_tokens_host,
 )
 
+__all__ = [
+    "AllocatorError",
+    "CapacityError",
+    "CapacityWarning",
+    "GenResult",
+    "InvariantError",
+    "Request",
+    "SamplingParams",
+    "ServeEngine",
+    "generate_static",
+]
+
 
 # ---------------------------------------------------------------------------
-# request / result types
+# request / result types (Request itself lives in repro.serve.api — the
+# unified submit surface — and is re-exported here for compatibility)
 # ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass(frozen=True)
-class Request:
-    """One generation request: a prompt and its stop conditions."""
-
-    rid: int
-    prompt: tuple[int, ...]
-    max_new_tokens: int
-    eos_id: int | None = None
-
-    def __post_init__(self):
-        if not self.prompt:
-            raise ValueError(f"request {self.rid}: empty prompt")
-        if self.max_new_tokens < 1:
-            raise ValueError(f"request {self.rid}: max_new_tokens < 1")
 
 
 @dataclasses.dataclass
@@ -123,12 +129,19 @@ class _ReqState:
         self.tokens.append(tok)
         if self.req.eos_id is not None and tok == self.req.eos_id:
             return True
-        return len(self.tokens) >= self.req.max_new_tokens
+        return len(self.tokens) >= self.req.max_new
 
 
 # ---------------------------------------------------------------------------
 # typed failures
 # ---------------------------------------------------------------------------
+
+
+class CapacityWarning(UserWarning):
+    """A configuration exceeds a soft capacity floor (currently: MoE
+    dispatch capacity at engine construction) — decode may couple slots
+    and break the per-request determinism contract. Typed so callers
+    and tests filter/assert it instead of string-matching."""
 
 
 class CapacityError(RuntimeError):
@@ -353,6 +366,8 @@ class ServeEngine:
         page_size: int = 64,
         num_pages: int | None = None,
         share_prefix: bool = True,
+        draft: DraftBundle | None = None,
+        spec_k: int | None = None,
     ):
         if not cfg.causal:
             raise ValueError(f"{cfg.name} is encoder-only: nothing to serve")
@@ -367,6 +382,7 @@ class ServeEngine:
                 "exceeds the MoE dispatch capacity floor (8) — congested "
                 "experts may drop ranked decode tokens, coupling slots "
                 "(see the determinism contract in repro.serve.engine)",
+                CapacityWarning,
                 stacklevel=2,
             )
         self.cfg = cfg
@@ -389,8 +405,25 @@ class ServeEngine:
                     "resident — sliding-window (ring) serving stays on the "
                     "contiguous layout"
                 )
-        # page-table width: capacity rounded up to whole pages
-        self._table_width = -(-self.cache_capacity // self.page_size)
+        self.spec_k = int(spec_k) if spec_k is not None else self.plan.spec_k
+        if draft is not None:
+            check_spec_arch(cfg, window=window)
+            if self.spec_k < 1:
+                raise ValueError("spec_k must be >= 1")
+            if draft.cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {draft.cfg.vocab_size} != target vocab "
+                    f"{cfg.vocab_size} — draft ids must be target ids"
+                )
+        # page-table width: capacity rounded up to whole pages; under
+        # speculative decoding the verify block can write up to spec_k
+        # positions past a finished stream, so widen the table enough
+        # that clamped block writes land in trash entries, never a
+        # live page
+        spec_pad = self.spec_k if draft is not None else 0
+        self._table_width = -(
+            -(self.cache_capacity + spec_pad) // self.page_size
+        )
         self.num_pages = (
             int(num_pages) if num_pages is not None
             else self.max_slots * self._table_width
@@ -458,6 +491,56 @@ class ServeEngine:
             return tok, pack_tokens(tok, width)
 
         self._sample = jax.jit(sample_pack)
+
+        def sample_rng_pack(logits, temp, top_p, top_k, seed, step):
+            # per-row sampling (docs/serving.md §sampling); temp<=0 rows
+            # reduce to the same argmax as sample_pack, so mixed batches
+            # keep greedy requests token-identical to the fast path
+            tok = sample_tokens(
+                logits[:, -1], vocab, temp, top_p, top_k, seed, step
+            )
+            return tok, pack_tokens(tok, width)
+
+        self._sample_rng = jax.jit(sample_rng_pack)
+
+        def verify_sample_pack(logits, temp, top_p, top_k, seed, step0):
+            # (B, T) target samples over the verify block: position j of
+            # the block is the candidate emitted index step0 + j, keyed
+            # accordingly — identical keys to T successive decode ticks
+            T = logits.shape[1]
+
+            def bt(a):
+                return jnp.broadcast_to(a[:, None], (a.shape[0], T))
+
+            steps = step0[:, None] + jnp.arange(T, dtype=jnp.int32)
+            tok = sample_tokens(
+                logits, vocab, bt(temp), bt(top_p), bt(top_k), bt(seed),
+                steps,
+            )
+            return tok, pack_tokens(tok, width)
+
+        self._verify_sample = jax.jit(verify_sample_pack)
+
+        self.draft = None
+        self._verify = None
+        self._rollback = None
+        if draft is not None:
+            self._verify = make_verify_step(
+                cfg, mesh_cfg, mesh, spec_tree, plan=self.plan,
+                n_slots=B, block=self.spec_k + 1,
+                shard_batch=self._shard_batch,
+                weight_stationary=weight_stationary, paged=self.paged,
+                table_width=self._table_width,
+            )
+            # the draft keeps contiguous per-slot caches with spec_k
+            # spare positions (its last micro step absorbs the final
+            # proposal before rollback)
+            self.draft = DraftRunner(
+                draft, mesh_cfg, mesh, plan=self.plan,
+                max_slots=B, capacity=self.cache_capacity + self.spec_k,
+                spec_k=self.spec_k, token_width=width,
+            )
+            self._rollback = jax.jit(rollback_caches, donate_argnums=(0,))
 
         def insert(big, small, slot):
             # prefill caches (batch of 1) -> slot `slot` of the engine
@@ -563,6 +646,29 @@ class ServeEngine:
         self._results: dict[int, GenResult] = {}
         self._step = 0
         self._rec: dict | None = None
+        self._reset_sampling_state()
+
+    def _reset_sampling_state(self) -> None:
+        """Per-slot SamplingParams mirrors fed to the jitted samplers.
+        Ballast rows (free/retired slots) are greedy with seed 0 —
+        their draws are discarded, and per-row sampling keeps them from
+        touching live rows."""
+        B = self.max_slots
+        self._temp = np.zeros((B,), np.float32)
+        self._top_p = np.ones((B,), np.float32)
+        self._top_k = np.zeros((B,), np.int32)
+        self._seed = np.zeros((B,), np.uint32)
+        self._nemit = np.zeros((B,), np.int32)  # emitted-token counts
+
+    def _set_sampling_slot(self, slot: int, s: SamplingParams) -> None:
+        self._temp[slot] = s.temperature
+        self._top_p[slot] = s.top_p
+        self._top_k[slot] = s.top_k
+        self._seed[slot] = s.seed
+        self._nemit[slot] = 0
+
+    def _clear_sampling_slot(self, slot: int) -> None:
+        self._set_sampling_slot(slot, SamplingParams())
 
     # -- compiled-program plumbing ---------------------------------------
     def _prefill(self, prompt_len: int):
@@ -615,9 +721,9 @@ class ServeEngine:
         )
 
     def _validate(self, req: Request):
-        if max(req.prompt) >= self.cfg.vocab_size or min(req.prompt) < 0:
+        if max(req.prompt_ids) >= self.cfg.vocab_size or min(req.prompt_ids) < 0:
             raise ValueError(f"request {req.rid}: prompt id out of vocab")
-        need = len(req.prompt) + req.max_new_tokens
+        need = len(req.prompt_ids) + req.max_new
         # the geometry rules (linear cache must hold the request; rings
         # only when capacity <= window; narrow rings evict live tokens)
         # live with the cache constructors — same guard, same wording
@@ -662,6 +768,9 @@ class ServeEngine:
         self._caches = self._init_caches()
         self._next_tok = np.zeros((B,), np.int32)  # per-slot feed tokens
         self._pos_host = np.zeros((B,), np.int32)  # absorbed-token counts
+        self._reset_sampling_state()
+        if self.draft is not None:
+            self.draft.reset()
         self._active = {}
         self._results = {}
         self._step = 0
@@ -677,6 +786,9 @@ class ServeEngine:
             if self.paged:
                 self._rec.update(page_table=0, prefill_hits=0,
                                  prefill_misses=0, kv_migration=0)
+            if self.draft is not None:
+                self._rec.update(spec_rounds=0, spec_proposed=0,
+                                 spec_accepted=0, spec_emitted=0)
         return self._rec
 
     @property
@@ -699,8 +811,8 @@ class ServeEngine:
         hits: list[int] = []
         if self.paged and self.share_prefix:
             page = self.page_size
-            for i in range(len(req.prompt) // page):
-                pid = self._intern.get(req.prompt[:(i + 1) * page])
+            for i in range(len(req.prompt_ids) // page):
+                pid = self._intern.get(req.prompt_ids[:(i + 1) * page])
                 if pid is None:
                     break
                 hits.append(pid)
@@ -715,7 +827,7 @@ class ServeEngine:
         if not self.slots.free_slots:
             return False, hits
         if self.paged:
-            need = -(-(len(req.prompt) + req.max_new_tokens)
+            need = -(-(len(req.prompt_ids) + req.max_new)
                      // self.page_size)
             if need - len(hits) > self.pages.free_pages:
                 return False, hits
@@ -725,18 +837,18 @@ class ServeEngine:
         """Allocate the request's slot + page row, intern its new
         whole-prompt pages and stamp the page table. Shared logic
         between local and migrated admission."""
-        S = len(req.prompt)
+        S = len(req.prompt_ids)
         slot = self.slots.alloc(req.rid)
         row: list[int] = []
         if self.paged:
             page = self.page_size
-            need = -(-(S + req.max_new_tokens) // page)
+            need = -(-(S + req.max_new) // page)
             full_pages = S // page  # whole-prompt pages, internable
             for pid in hits:
                 self.pages.retain(pid)
             row = hits + self.pages.alloc(need - len(hits))
             for i in range(len(hits), full_pages):
-                key = req.prompt[:(i + 1) * page]
+                key = req.prompt_ids[:(i + 1) * page]
                 self._intern[key] = row[i]
                 self._page_key[row[i]] = key
             self._slot_pages[slot] = list(row)
@@ -748,7 +860,9 @@ class ServeEngine:
                           rec: dict) -> None:
         st = _ReqState(req, slot, self._step)
         self._next_tok[slot] = first
-        self._pos_host[slot] = len(req.prompt)
+        self._pos_host[slot] = len(req.prompt_ids)
+        self._set_sampling_slot(slot, req.sampling)
+        self._nemit[slot] = 1  # prefill's id is emitted index 0
         rec["admitted"] += 1
         if st.emit(first):
             self._results[req.rid] = self._retire(st, self._step)
@@ -766,13 +880,17 @@ class ServeEngine:
             )
         self._validate(req)
         rec = self._ensure_rec()
-        S, w, page = len(req.prompt), self.token_width, self.page_size
+        S, w, page = len(req.prompt_ids), self.token_width, self.page_size
         slot, row = self._alloc_residency(req, hits)
         planes = pack_tokens_host(
-            np.asarray(req.prompt, np.int32)[None, :], w
+            np.asarray(req.prompt_ids, np.int32)[None, :], w
         )  # (w, 1, S) — h2d prompt staging (true length, no pads)
         rec["host_device"] += planes.nbytes
         tokens_dev = self._unpack(stage(planes))
+        if self.draft is not None:
+            # draft mirrors the target's residency from the same staged
+            # prompt — one priced h2d crossing covers both prefills
+            self.draft.prefill_insert(tokens_dev, slot)
         if self.paged:
             Spad = -(-S // page) * page if self._bucket else S
             rec["prefill_hits" if Spad in self._prefill_cache
@@ -794,7 +912,18 @@ class ServeEngine:
                 self.storage, {"tokens": tokens_dev}
             )
             self._caches = self._insert(self._caches, pcaches, np.int32(slot))
-        _, tok_planes = self._sample(logits)
+        s = req.sampling
+        if s.greedy:
+            _, tok_planes = self._sample(logits)  # byte-identical fast path
+        else:
+            _, tok_planes = self._sample_rng(
+                logits,
+                np.asarray([s.temperature], np.float32),
+                np.asarray([s.top_p], np.float32),
+                np.asarray([s.top_k], np.int32),
+                np.asarray([s.seed], np.uint32),
+                np.zeros((1,), np.int32),  # first token = emitted index 0
+            )
         tok_planes = np.asarray(tok_planes)  # (w, 1) — d2h first id
         rec["host_device"] += tok_planes.nbytes
         first = int(unpack_tokens_host(tok_planes)[0])
@@ -833,7 +962,7 @@ class ServeEngine:
             )
         self._validate(req)
         rec = self._ensure_rec()
-        S, page = len(req.prompt), self.page_size
+        S, page = len(req.prompt_ids), self.page_size
         slot, row = self._alloc_residency(req, hits)
         prompt_pages = -(-S // page)
         phys = jnp.asarray(row[len(hits):prompt_pages], jnp.int32)
@@ -842,6 +971,15 @@ class ServeEngine:
         self._caches = self._install_pages(
             self._caches, staged, np.int32(slot), phys, np.int32(S)
         )
+        if self.draft is not None:
+            # migration ships target KV, not tokens: the draft must
+            # prefill locally, so the prompt crosses h2d here (priced)
+            dplanes = pack_tokens_host(
+                np.asarray(req.prompt_ids, np.int32)[None, :],
+                self.token_width,
+            )
+            rec["host_device"] += dplanes.nbytes
+            self.draft.prefill_insert(self._unpack(stage(dplanes)), slot)
         self._finish_admission(req, slot, int(first_tok), rec)
 
     def decode_tick(self) -> None:
@@ -850,7 +988,9 @@ class ServeEngine:
         zero-decode record, exactly like the drain loop)."""
         rec = self._ensure_rec()
         rec["active"] = len(self._active)
-        if self._active:
+        if self._active and self.draft is not None:
+            self._spec_tick(rec)
+        elif self._active:
             w = self.token_width
             feed_planes = pack_tokens_host(
                 self._next_tok[:, None], w
@@ -867,7 +1007,14 @@ class ServeEngine:
             logits, self._caches = self._decode(
                 self._weights, self._caches, batch
             )
-            _, out_planes = self._sample(logits)
+            if any(not st.req.sampling.greedy
+                   for st in self._active.values()):
+                _, out_planes = self._sample_rng(
+                    logits, self._temp, self._top_p, self._top_k,
+                    self._seed, self._nemit,
+                )
+            else:
+                _, out_planes = self._sample(logits)  # byte-identical path
             out_planes = np.asarray(out_planes)  # (w, B) — d2h sampled ids
             rec["host_device"] += out_planes.nbytes
             sampled = unpack_tokens_host(out_planes)
@@ -876,12 +1023,85 @@ class ServeEngine:
             for slot, st in list(self._active.items()):
                 tok = int(sampled[slot])
                 self._next_tok[slot] = tok
+                self._nemit[slot] += 1
                 if st.emit(tok):
                     self._results[st.req.rid] = self._retire(st, self._step)
                     del self._active[slot]
         self.step_log.append(rec)
         self._step += 1
         self._rec = None
+
+    def _spec_tick(self, rec: dict) -> None:
+        """One speculative round: draft proposes ``spec_k`` ids per slot,
+        the target verifies all ``k+1`` block positions in ONE batched
+        decode, and the standard accept rule keeps the longest prefix the
+        draft reproduced (plus the target's own sample at the first
+        divergence). Every emitted id is the target's sample under its
+        per-request key fold, so streams are token-identical to the
+        non-speculative engine at the same seeds — speculation changes
+        wall-clock shape and wire traffic, never content.
+
+        Cache discipline: both target and draft advance ``pos`` by
+        ``k+1`` inside the jitted steps; rejected suffix entries are
+        rolled back by re-stamping ``pos`` downward (entries beyond pos
+        are mask-invisible and get overwritten bit-identically next
+        round). Ballast slots skip rollback entirely — their writes land
+        in trash (clamped pages / dropped scatters) or are masked.
+        """
+        w, k = self.token_width, self.spec_k
+        T = k + 1
+        drafts = self.draft.propose(
+            self._next_tok, self._pos_host, self._nemit,
+            self._temp, self._top_p, self._top_k, self._seed, rec,
+        )  # (B, k) host int32
+        feed = np.concatenate([self._next_tok[:, None], drafts], axis=1)
+        feed_planes = pack_tokens_host(feed, w)  # (w, B, T)
+        rec["host_device"] += feed_planes.nbytes  # h2d verify block
+        tokens_dev = self._unpack(stage(feed_planes))
+        batch = {"tokens": tokens_dev, "pos": stage(self._pos_host)}
+        if self.paged:
+            rec["host_device"] += self._table.nbytes
+            rec["page_table"] += self._table.nbytes
+            batch["page_table"] = stage(self._table)
+        logits, self._caches = self._verify(
+            self._weights, self._caches, batch
+        )
+        _, t_planes = self._verify_sample(
+            logits, self._temp, self._top_p, self._top_k,
+            self._seed, self._nemit,
+        )
+        t_planes = np.asarray(t_planes)  # (w, B, T) — d2h verified ids
+        rec["host_device"] += t_planes.nbytes
+        targets = unpack_tokens_host(t_planes)  # (B, T)
+        self._pos_host += T  # mirrors the jitted pos += T (ballast too)
+        rec["decoded"] = len(self._active)
+        rec["spec_rounds"] += 1
+        delta = np.zeros_like(self._pos_host)
+        for slot, st in list(self._active.items()):
+            accepted = considered = 0
+            for j in range(T):
+                tok = int(targets[slot, j])
+                accepted += 1
+                self._next_tok[slot] = tok
+                self._nemit[slot] += 1
+                rec["spec_emitted"] += 1
+                if st.emit(tok):
+                    self._results[st.req.rid] = self._retire(st, self._step)
+                    del self._active[slot]
+                    break
+                if j < k:
+                    # proposals past a finish are moot, not rejected —
+                    # only *examined* ones count toward the acceptance
+                    # rate (a perfect draft pins it at exactly 1.0)
+                    considered += 1
+                    if int(drafts[slot, j]) != tok:
+                        break  # divergence: target's sample replaces it
+            rec["spec_proposed"] += considered
+            rec["spec_accepted"] += accepted - 1
+            delta[slot] = T - accepted
+        self._pos_host -= delta
+        self._caches = self._rollback(self._caches, delta)
+        self.draft.rollback(delta)
 
     def take_completed(self) -> dict[int, GenResult]:
         """Drain finished results (the router's stream-reassembly feed)."""
@@ -943,6 +1163,7 @@ class ServeEngine:
 
     def _retire(self, st: _ReqState, step: int) -> GenResult:
         self.slots.release(st.slot)
+        self._clear_sampling_slot(st.slot)
         if self.paged:
             for pid in self._slot_pages.pop(st.slot):
                 if self.pages.release(pid):
@@ -953,7 +1174,7 @@ class ServeEngine:
             self._table[st.slot, :] = self.num_pages  # ballast -> trash
         return GenResult(
             rid=st.req.rid,
-            prompt_len=len(st.req.prompt),
+            prompt_len=len(st.req.prompt_ids),
             tokens=list(st.tokens),
             admitted_step=st.admitted_step,
             finished_step=step,
@@ -982,6 +1203,18 @@ class ServeEngine:
             out["prefill_misses"] = sum(
                 r.get("prefill_misses", 0) for r in self.step_log
             )
+        if self.draft is not None:
+            rounds = sum(r.get("spec_rounds", 0) for r in self.step_log)
+            proposed = sum(r.get("spec_proposed", 0) for r in self.step_log)
+            accepted = sum(r.get("spec_accepted", 0) for r in self.step_log)
+            emitted = sum(r.get("spec_emitted", 0) for r in self.step_log)
+            out["spec_rounds"] = rounds
+            out["spec_proposed"] = proposed
+            out["spec_accepted"] = accepted
+            out["spec_emitted"] = emitted
+            out["acceptance_rate"] = accepted / max(proposed, 1)
+            out["tokens_per_target_step"] = emitted / max(rounds, 1)
+            out["spec_k"] = self.spec_k
         return out
 
     def kv_residency(self) -> dict:
@@ -1026,29 +1259,49 @@ def generate_static(
     request stop conditions truncate the streams afterwards. The engine
     is pinned bit-exact against this for identical request sets.
 
-    ``image_features`` (``{rid: (num_image_tokens, vision_dim) array}``)
-    feeds causal vision cross-attn archs — the one serveable family the
-    engine rejects (its payloads are not token-stageable)."""
+    Sampling follows each request's :class:`SamplingParams`: all-greedy
+    groups keep the historical argmax loop (byte-identical to pre-
+    sampling releases), and any sampled request switches its group to
+    the shared per-row sampler (:func:`repro.serve.sampling.
+    sample_tokens`) under the key-fold contract, so sampled streams are
+    bit-exact against the engine at the same per-request seeds.
+
+    Vision features ride on ``Request.image_features``; the legacy
+    ``image_features={rid: array}`` kwarg still works one release behind
+    a :class:`DeprecationWarning`."""
     plan = plan.broadcast(cfg.num_groups + 1)
-    if cfg.num_image_tokens and image_features is None:
+    if image_features is not None:
+        warnings.warn(
+            "generate_static(image_features=...) is deprecated — set "
+            "Request.image_features per request instead",
+            DeprecationWarning, stacklevel=2,
+        )
+
+    def _feats(r):
+        if r.image_features is not None:
+            return r.image_features
+        return None if image_features is None else image_features.get(r.rid)
+
+    if cfg.num_image_tokens and any(_feats(r) is None for r in requests):
         raise ValueError(
-            f"{cfg.name} needs image_features per request (rid -> "
+            f"{cfg.name} needs image_features per request "
+            f"(Request.image_features, "
             f"({cfg.num_image_tokens}, {cfg.vision_dim}) array)"
         )
     groups: dict[int, list[Request]] = {}
     for r in requests:
-        groups.setdefault(len(r.prompt), []).append(r)
+        groups.setdefault(len(r.prompt_ids), []).append(r)
     out: dict[int, list[int]] = {}
     for S, reqs in groups.items():
         B = len(reqs)
-        gen = max(r.max_new_tokens for r in reqs)
+        gen = max(r.max_new for r in reqs)
         cap = S + gen
-        toks = jnp.asarray([r.prompt for r in reqs], jnp.int32)
+        toks = jnp.asarray([r.prompt_ids for r in reqs], jnp.int32)
         bshapes = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
         batch = {"tokens": toks}
         if cfg.num_image_tokens:
             batch["image_features"] = jnp.asarray(
-                np.stack([image_features[r.rid] for r in reqs]),
+                np.stack([_feats(r) for r in reqs]),
                 jnp.float32,
             )
             bshapes["image_features"] = jax.ShapeDtypeStruct(
@@ -1070,23 +1323,43 @@ def generate_static(
             cfg, mesh_cfg, mesh, spec_tree, dshapes, plan=gplan,
             shard_batch=shard_batch, window_override=window,
         )
+        all_greedy = all(r.sampling.greedy for r in reqs)
+        if not all_greedy:
+            temp = np.asarray(
+                [r.sampling.temperature for r in reqs], np.float32)
+            topp = np.asarray([r.sampling.top_p for r in reqs], np.float32)
+            topk = np.asarray([r.sampling.top_k for r in reqs], np.int32)
+            seed = np.asarray([r.sampling.seed for r in reqs], np.uint32)
+
+            @jax.jit
+            def samp(lg, step, temp=temp, topp=topp, topk=topk, seed=seed):
+                return sample_tokens(
+                    lg[:, -1], cfg.vocab_size, temp, topp, topk, seed, step
+                )[:, None]
+
         logits, caches = prefill(storage, batch)
-        tok = jnp.argmax(
-            logits[:, -1, : cfg.vocab_size], -1
-        )[:, None].astype(jnp.int32)
+        if all_greedy:
+            tok = jnp.argmax(
+                logits[:, -1, : cfg.vocab_size], -1
+            )[:, None].astype(jnp.int32)
+        else:
+            tok = samp(logits, np.zeros((B,), np.int32))
         streams = [np.asarray(tok)[:, 0]]
         for i in range(gen - 1):
             logits, caches = decode(
                 storage, caches,
                 {"tokens": tok, "pos": jnp.asarray(S + i, jnp.int32)},
             )
-            tok = jnp.argmax(
-                logits[:, 0, : cfg.vocab_size], -1
-            )[:, None].astype(jnp.int32)
+            if all_greedy:
+                tok = jnp.argmax(
+                    logits[:, 0, : cfg.vocab_size], -1
+                )[:, None].astype(jnp.int32)
+            else:
+                tok = samp(logits, np.full((B,), i + 1, np.int32))
             streams.append(np.asarray(tok)[:, 0])
         mat = np.stack(streams, axis=1)  # (B, gen)
         for b, r in enumerate(reqs):
-            ids = mat[b].tolist()[: r.max_new_tokens]
+            ids = mat[b].tolist()[: r.max_new]
             if r.eos_id is not None and r.eos_id in ids:
                 ids = ids[: ids.index(r.eos_id) + 1]
             out[r.rid] = ids

@@ -1,0 +1,89 @@
+"""Per-request sampling for the serve engine (see docs/serving.md).
+
+The determinism contract extends the engine's greedy pin to stochastic
+decoding: the id sampled for the n-th emitted token of a request
+(0-based — the token emitted from the prefill is n=0) depends only on
+``(logits_row, seed, n)``. The PRNG key is
+
+    ``jax.random.fold_in(jax.random.PRNGKey(seed), n)``
+
+and every tensor op in :func:`sample_tokens` is row-independent
+(argsort / softmax / cumsum / searchsorted all reduce along the vocab
+axis only), so a request's stream is bitwise identical whatever batch
+it shares a decode step with — engine (B = max_slots), static reference
+(B = group size), and the (B, k+1) speculative verify step all agree.
+
+``temperature == 0`` rows short-circuit to ``argmax`` — ballast slots
+and greedy requests inside a mixed batch cost nothing and match the
+dedicated greedy pack bit-for-bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.plan.plan import SamplingParams
+
+__all__ = ["SamplingParams", "fold_key", "sample_tokens", "uniform_for"]
+
+
+def fold_key(seed, step):
+    """The per-token key contract: fold the 0-based emitted-token index
+    into the request's seed key. Scalar version (tests / docs); the
+    samplers vmap the same construction."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), step)
+
+
+def _uniform_one(seed, step):
+    return jax.random.uniform(fold_key(seed, step), (), jnp.float32)
+
+
+def uniform_for(seed, step):
+    """One uniform draw per (seed, step) pair, any matching shape.
+
+    vmap over the folded keys produces exactly the per-key scalars, so
+    a row's draw never depends on its batch companions.
+    """
+    seed = jnp.asarray(seed, jnp.uint32)
+    step = jnp.asarray(step, jnp.int32)
+    shape = jnp.broadcast_shapes(seed.shape, step.shape)
+    seed = jnp.broadcast_to(seed, shape).reshape(-1)
+    step = jnp.broadcast_to(step, shape).reshape(-1)
+    return jax.vmap(_uniform_one)(seed, step).reshape(shape)
+
+
+def sample_tokens(logits, vocab, temperature, top_p, top_k, seed, step):
+    """Sample one id per row from ``logits (..., Vpad)``.
+
+    ``temperature`` / ``top_p`` / ``top_k`` / ``seed`` / ``step`` all
+    carry the row shape ``(...)`` (one entry per row). Rows with
+    ``temperature <= 0`` return ``argmax``. The sampler is inverse-CDF
+    over the descending-sorted temperature-softmax restricted to the
+    ``top_k`` best ids (0 = all) and to ids whose *preceding*
+    cumulative mass is below ``top_p`` (the best id always survives).
+    """
+    lg = logits[..., :vocab].astype(jnp.float32)
+    greedy_tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+
+    temp = jnp.asarray(temperature, jnp.float32)
+    scaled = lg / jnp.maximum(temp, 1e-6)[..., None]
+    order = jnp.argsort(-scaled, axis=-1)
+    ranked = jnp.take_along_axis(scaled, order, axis=-1)
+    probs = jax.nn.softmax(ranked, axis=-1)
+
+    ranks = jnp.arange(vocab, dtype=jnp.int32)
+    k = jnp.asarray(top_k, jnp.int32)[..., None]
+    keep = (k <= 0) | (ranks < k)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep &= (cum - probs) < jnp.asarray(top_p, jnp.float32)[..., None]
+
+    w = probs * keep
+    cw = jnp.cumsum(w, axis=-1)
+    u = uniform_for(seed, step)
+    target = u * cw[..., -1]
+    # first index with cw > target; zero-weight entries repeat their
+    # predecessor's cw, so the landing index always has weight > 0
+    idx = jnp.sum((cw <= target[..., None]).astype(jnp.int32), axis=-1)
+    idx = jnp.minimum(idx, vocab - 1)
+    tok = jnp.take_along_axis(order, idx[..., None], axis=-1)[..., 0]
+    return jnp.where(temp <= 0.0, greedy_tok, tok.astype(jnp.int32))

@@ -1,0 +1,323 @@
+"""Speculative decoding for the serve engine (`repro.serve.spec`).
+
+A small **draft** model (same registry family, shrunk config, same
+vocab) proposes ``k`` tokens per slot with the request's own
+:class:`~repro.plan.SamplingParams` keys; the target then scores the
+carried last-emitted token plus all k proposals in ONE ``(B, k+1)``
+verify decode step (:func:`repro.serve.step.make_verify_step`) and
+samples its own token at every block position with the same per-request
+keys. Acceptance is the deterministic rule: emit the target's token at
+position j, and keep consuming the block while the draft's next
+proposal equals it — so the emitted stream is *token-identical to
+non-speculative sampling by construction* (each emitted token is the
+target's sample given a prefix the draft reproduced exactly), and the
+draft model only moves the acceptance rate, never the stream.
+
+Data motion: draft feeds/proposals and the verify block all ride the
+lossless ``host_device`` byte planes at ``token_wire_width`` bytes per
+id — per round ``(k+1) + k`` draft crossings plus ``2·(k+1)`` verify
+crossings per slot. The analytic mirror is
+:func:`repro.roofline.analysis.serve_spec_decode_bytes`, pinned EQUAL
+to the engine's measured ``step_log``.
+
+Cache discipline: the verify step advances every slot's ``pos`` by
+``k+1`` and writes the whole block; :func:`rollback_caches` then
+re-stamps ``pos`` back by the per-slot count of rejected positions.
+Stale entries past the rolled-back ``pos`` are mask-invisible and are
+overwritten bit-identically by the next round's block (per-row
+determinism), so no data is ever copied back.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
+from repro.models import model as M
+from repro.models.init import init_params
+from repro.plan import PrecisionPlan
+from repro.serve.sampling import sample_tokens
+from repro.serve.step import (
+    global_cache_shapes,
+    make_decode_step,
+    make_prefill_step,
+)
+from repro.transport.hostdev import (
+    pack_tokens,
+    pack_tokens_host,
+    stage,
+    unpack_tokens,
+    unpack_tokens_host,
+)
+
+__all__ = [
+    "DraftBundle",
+    "DraftRunner",
+    "build_draft",
+    "check_spec_arch",
+    "make_draft_config",
+    "rollback_caches",
+]
+
+
+def check_spec_arch(cfg: ModelConfig, *, window=None) -> None:
+    """Speculative decoding serves pure-attention causal token models —
+    the family where a k-token block write + pos rollback is exact
+    (recurrent state and MoE capacity dispatch couple positions, and
+    ring caches physically overwrite on advance)."""
+    if not cfg.causal:
+        raise ValueError(f"{cfg.name} is encoder-only: nothing to serve")
+    if cfg.num_image_tokens or cfg.embed_is_input_stub:
+        raise ValueError(
+            f"{cfg.name}: speculative decoding stages token payloads only"
+        )
+    if cfg.num_experts or any(kind != "attn" for kind in cfg.pattern):
+        raise ValueError(
+            f"{cfg.name}: speculative decoding needs a pure-attention "
+            "pattern (MoE capacity dispatch and recurrent state make "
+            "block verify + rollback inexact)"
+        )
+    if cfg.sliding_window or window is not None:
+        raise ValueError(
+            f"{cfg.name}: speculative decoding keeps linear per-slot "
+            "caches — ring (sliding-window) layouts overwrite on "
+            "advance and cannot roll back"
+        )
+
+
+def make_draft_config(cfg: ModelConfig, name: str = "tiny") -> ModelConfig:
+    """The draft model's config. ``"tiny"`` auto-shrinks the target
+    (2 layers, narrow width) while PRESERVING ``vocab_size`` — the
+    registry's ``reduced()`` shrinks the vocab too, which would break
+    token exchange. Any other name resolves through the registry and
+    must match the target's vocab."""
+    if name != "tiny":
+        from repro.configs.registry import get_config
+
+        draft = get_config(name)
+        if draft.vocab_size != cfg.vocab_size:
+            raise ValueError(
+                f"draft {name}: vocab {draft.vocab_size} != target "
+                f"vocab {cfg.vocab_size} — draft ids must be target ids"
+            )
+        check_spec_arch(draft)
+        return draft
+    heads = max(1, min(cfg.num_heads, 2))
+    d_model = max(2 * heads, min(cfg.d_model, 128))
+    return dataclasses.replace(
+        cfg,
+        name=f"{cfg.name}-draft-tiny",
+        num_layers=2,
+        d_model=d_model,
+        num_heads=heads,
+        num_kv_heads=1,
+        head_dim=0,  # -> d_model // heads
+        d_ff=min(cfg.d_ff, 4 * d_model) if cfg.d_ff else 0,
+        block_pattern=(),
+        num_precision_groups=1,
+        remat=False,
+    )
+
+
+@dataclasses.dataclass
+class DraftBundle:
+    """A ready-to-serve draft model: config + sharded weight storage.
+    Build one with :func:`build_draft`, or construct directly (tests
+    pass the *target's* own tree to pin 100% acceptance)."""
+
+    cfg: ModelConfig
+    spec_tree: object
+    storage: object
+
+
+def build_draft(
+    cfg: ModelConfig, mesh_cfg: MeshCfg, name: str = "tiny", *, seed: int = 1
+) -> DraftBundle:
+    """Initialize a draft model on the same mesh as the target."""
+    dcfg = make_draft_config(cfg, name)
+    params, metas = init_params(dcfg, jax.random.PRNGKey(seed), tp=mesh_cfg.tp)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    return DraftBundle(dcfg, spec_tree, storage)
+
+
+def rollback_caches(caches, delta):
+    """Re-stamp every cache node's per-slot ``pos`` back by ``delta``
+    (the per-slot count of rejected verify positions). Data stays put:
+    positions past the new ``pos`` are mask-invisible and the next
+    block overwrites them. Engine caches are ``[group][node]`` with
+    ``pos (reps, slots)``; ``delta (slots,)``."""
+
+    def one_node(n):
+        if isinstance(n, M.PagedQuantKVCache):
+            return M.PagedQuantKVCache(
+                n.k, n.v, n.k_scale, n.v_scale, n.pos - delta[None, :]
+            )
+        if isinstance(n, M.PagedKVCache):
+            return M.PagedKVCache(n.k, n.v, n.pos - delta[None, :])
+        if isinstance(n, M.QuantKVCache):
+            return M.QuantKVCache(
+                n.k, n.v, n.k_scale, n.v_scale, n.pos - delta[None, :]
+            )
+        if isinstance(n, M.KVCache):
+            return M.KVCache(n.k, n.v, n.pos - delta[None, :])
+        raise TypeError(
+            f"speculative rollback covers attention caches only "
+            f"(got {type(n).__name__})"
+        )
+
+    return [
+        {key: one_node(n) for key, n in group.items()} for group in caches
+    ]
+
+
+class DraftRunner:
+    """The engine-side draft loop: per-slot contiguous caches kept in
+    lockstep with the target's emitted streams (same ``pos`` invariant,
+    same rollback deltas), one compiled ``(B, 1)`` decode program, one
+    prefill program per prompt length.
+
+    Per round, :meth:`propose` runs ``k+1`` micro decode steps: step j
+    feeds the previous token (the slot's last emitted id for j=0) and
+    samples proposal ``d_{j+1}`` with the request key at emitted index
+    ``n + j`` — the same key the target will use for that position, so
+    a draft that equals the target proposes exactly the target's
+    stream (100% acceptance). The final micro step only absorbs the
+    last proposal into the cache (its logits belong to the *next*
+    round); without it the draft would be one position short whenever
+    a full block is accepted.
+    """
+
+    def __init__(
+        self,
+        bundle: DraftBundle,
+        mesh_cfg: MeshCfg,
+        mesh,
+        *,
+        plan: PrecisionPlan,
+        max_slots: int,
+        capacity: int,
+        spec_k: int,
+        token_width: int,
+    ):
+        check_spec_arch(bundle.cfg)
+        cfg = bundle.cfg
+        self.cfg = cfg
+        self.mesh_cfg = mesh_cfg
+        self.mesh = mesh
+        self.spec_tree = bundle.spec_tree
+        self.storage = bundle.storage
+        self.max_slots = int(max_slots)
+        self.capacity = int(capacity)
+        self.spec_k = int(spec_k)
+        self.token_width = int(token_width)
+        # the draft reuses the serving plan under its own group count;
+        # the first weight entry governs all draft groups (drafts are
+        # accuracy-irrelevant: they only move the acceptance rate)
+        self.plan = dataclasses.replace(
+            plan,
+            weights=(plan.weights[0],) * (cfg.num_groups + 1),
+            seq_parallel=False,
+        )
+        B = self.max_slots
+        self._decode = make_decode_step(
+            cfg, mesh_cfg, mesh, self.spec_tree,
+            {
+                "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+                "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+            },
+            plan=self.plan, shard_batch=False, slot_caches=True,
+        )
+        self._prefill_cache: dict[int, object] = {}
+        self._unpack = jax.jit(unpack_tokens)
+        vocab = cfg.vocab_size
+        width = self.token_width
+
+        def sample_rng_pack(logits, temp, top_p, top_k, seed, step):
+            tok = sample_tokens(
+                logits[:, -1], vocab, temp, top_p, top_k, seed, step
+            )
+            return tok, pack_tokens(tok, width)
+
+        self._sample_rng = jax.jit(sample_rng_pack)
+
+        def insert(big, small, slot):
+            def one(b, s):
+                if b.ndim == s.ndim:
+                    return b.at[:, slot].set(s[:, 0])
+                return b.at[:, slot].set(s)
+
+            return jax.tree_util.tree_map(one, big, small)
+
+        self._insert = jax.jit(insert, donate_argnums=(0,))
+        self._rollback = jax.jit(rollback_caches, donate_argnums=(0,))
+        self.caches = None
+
+    def _prefill(self, prompt_len: int):
+        if prompt_len not in self._prefill_cache:
+            self._prefill_cache[prompt_len] = make_prefill_step(
+                self.cfg, self.mesh_cfg, self.mesh, self.spec_tree,
+                {"tokens": jax.ShapeDtypeStruct((1, prompt_len), jnp.int32)},
+                plan=self.plan, cache_capacity=self.capacity,
+                shard_batch=False,
+            )
+        return self._prefill_cache[prompt_len]
+
+    def reset(self) -> None:
+        shapes = global_cache_shapes(
+            self.cfg, self.mesh_cfg, self.max_slots, self.capacity,
+            self.plan.compute_dtype, shard_batch=False, per_slot=True,
+            int8_kv=self.plan.int8_kv,
+        )
+        self.caches = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), shapes,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        )
+
+    def prefill_insert(self, tokens_dev, slot: int) -> None:
+        """Absorb an admitted prompt into the draft's slot caches. The
+        prompt ids are already device-resident (the engine's priced
+        admission staging) — no second h2d crossing; migrated
+        admissions re-stage and price the prompt themselves."""
+        _, pcaches = self._prefill(tokens_dev.shape[1])(
+            self.storage, {"tokens": tokens_dev}
+        )
+        self.caches = self._insert(self.caches, pcaches, np.int32(slot))
+
+    def propose(self, next_tok, pos_host, nemit, temp, top_p, top_k,
+                seed, rec) -> np.ndarray:
+        """One draft round: propose ``(B, spec_k)`` ids, advancing the
+        draft caches by ``spec_k + 1`` positions (rolled back by the
+        engine after acceptance). Every feed/proposal crossing is
+        priced into ``rec["host_device"]`` as plane bytes."""
+        B, k, w = self.max_slots, self.spec_k, self.token_width
+        feed = np.asarray(next_tok, np.int32).copy()
+        drafts = np.zeros((B, k), np.int32)
+        for j in range(k + 1):
+            planes = pack_tokens_host(feed[:, None], w)  # (w, B, 1)
+            rec["host_device"] += planes.nbytes
+            batch = {
+                "tokens": self._unpack(stage(planes)),
+                "pos": stage(pos_host + j),
+            }
+            logits, self.caches = self._decode(
+                self.storage, self.caches, batch
+            )
+            if j == k:
+                break  # absorb the last proposal only; its logits
+                # belong to the next round
+            _, out_planes = self._sample_rng(
+                logits, temp, top_p, top_k, seed, nemit + j
+            )
+            out_planes = np.asarray(out_planes)  # (w, B) — d2h proposal
+            rec["host_device"] += out_planes.nbytes
+            feed = unpack_tokens_host(out_planes).astype(np.int32)
+            drafts[:, j] = feed
+        return drafts
+
+    def rollback(self, delta) -> None:
+        self.caches = self._rollback(self.caches, delta)

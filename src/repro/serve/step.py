@@ -350,3 +350,40 @@ def make_decode_step(
         out_specs=(logits_spec, cspecs),
     )
     return jax.jit(sharded, donate_argnums=(1,))
+
+
+def make_verify_step(
+    cfg: ModelConfig,
+    mesh_cfg: MeshCfg,
+    mesh,
+    spec_tree,
+    *,
+    plan: PrecisionPlan | None = None,
+    n_slots: int,
+    block: int,
+    shard_batch: bool = True,
+    weight_stationary: bool = False,
+    paged: bool = False,
+    table_width: int = 0,
+):
+    """The k-token verify variant of the decode step (speculative
+    decoding): the SAME program family as :func:`make_decode_step`,
+    compiled once at ``tokens (n_slots, block)`` with
+    ``block = spec_k + 1``, so one batched target forward scores the
+    carried last-emitted token plus all k draft proposals. The
+    multi-token cache branches (models/attention.py) scatter block
+    position j at ``pos + j``; the engine rolls back rejected positions
+    by re-stamping ``pos`` (:func:`repro.serve.spec.rollback_caches`)."""
+    dshapes = {
+        "tokens": jax.ShapeDtypeStruct((n_slots, block), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((n_slots,), jnp.int32),
+    }
+    if paged:
+        dshapes["page_table"] = jax.ShapeDtypeStruct(
+            (n_slots, table_width), jnp.int32
+        )
+    return make_decode_step(
+        cfg, mesh_cfg, mesh, spec_tree, dshapes, plan=plan,
+        shard_batch=shard_batch, weight_stationary=weight_stationary,
+        slot_caches=True, paged=paged,
+    )

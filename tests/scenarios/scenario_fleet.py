@@ -46,10 +46,10 @@ def _requests(cfg, *, rid_base=0, seed=3):
     return [
         Request(
             rid=rid_base + i,
-            prompt=shared + tuple(
+            prompt_ids=shared + tuple(
                 int(t) for t in rng.integers(0, cfg.vocab_size, tail)
             ),
-            max_new_tokens=GEN,
+            max_new=GEN,
         )
         for i, tail in enumerate((9, 4, 12, 7, 10))
     ]

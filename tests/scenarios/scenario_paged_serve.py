@@ -21,7 +21,7 @@ from repro.configs.registry import get_config, reduced
 from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
 from repro.launch.mesh import make_mesh_from_cfg
 from repro.models.init import init_params
-from repro.plan import PrecisionPlan
+from repro.plan import PrecisionPlan, SamplingParams
 from repro.roofline.analysis import serve_paged_kv_bytes
 from repro.serve.engine import Request, ServeEngine, generate_static
 from repro.transport import CompressionPolicy
@@ -32,15 +32,22 @@ GEN = 6
 
 
 def _requests(cfg):
+    # odd rids sample (per-request key fold), even rids stay greedy —
+    # the tp=2 engine must keep the mixed batch bit-exact vs static
     rng = np.random.default_rng(3)
     shared = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 2 * PAGE))
     return [
         Request(
             rid=i,
-            prompt=shared + tuple(
+            prompt_ids=shared + tuple(
                 int(t) for t in rng.integers(0, cfg.vocab_size, tail)
             ),
-            max_new_tokens=GEN,
+            max_new=GEN,
+            sampling=(
+                SamplingParams(temperature=0.9, top_p=0.95, top_k=40,
+                               seed=50 + i)
+                if i % 2 else SamplingParams()
+            ),
         )
         for i, tail in enumerate((4, 9, 12, 7))
     ]
@@ -84,9 +91,9 @@ def main():
             audit = paged.pages.audit()
             assert audit["live"] == 0
             assert audit["allocs"] == audit["releases"]
-            print(f"int8_kv={int8}: {len(reqs)} paged streams bit-exact "
-                  f"vs contiguous + static on tp=2 "
-                  f"(peak {audit['peak']} pages)")
+            print(f"int8_kv={int8}: {len(reqs)} paged streams (2 greedy "
+                  f"+ 2 sampled) bit-exact vs contiguous + static on "
+                  f"tp=2 (peak {audit['peak']} pages)")
 
         # all requests resident at once: measured peak == analytic
         # page-granular model with 2 shared pages stored once
@@ -98,7 +105,7 @@ def main():
         allres.run(reqs)
         analytic = serve_paged_kv_bytes(
             cfg, page_size=PAGE,
-            requests=[(len(r.prompt), GEN) for r in reqs],
+            requests=[(len(r.prompt_ids), GEN) for r in reqs],
             shared_prefix_len=2 * PAGE,
         )
         res = allres.kv_residency()

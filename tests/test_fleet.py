@@ -70,8 +70,8 @@ def _requests(cfg, spec=((16, 6), (12, 8), (16, 4), (8, 8))):
     return [
         Request(
             rid=i,
-            prompt=tuple(int(t) for t in rng.integers(0, cfg.vocab_size, S)),
-            max_new_tokens=gen,
+            prompt_ids=tuple(int(t) for t in rng.integers(0, cfg.vocab_size, S)),
+            max_new=gen,
         )
         for i, (S, gen) in enumerate(spec)
     ]
@@ -321,12 +321,12 @@ def test_worker_n_hits_range(setup):
         "w0", cfg, mesh_cfg, None, spec_tree, plan=plan,
         cache_capacity=CAPACITY, page_size=PAGE,
     )
-    req = Request(rid=0, prompt=(1,) * 12, max_new_tokens=4)
+    req = Request(rid=0, prompt_ids=(1,) * 12, max_new=4)
     with pytest.raises(ReplicaError):
         worker.prefill(storage, req, n_hits=2)  # only 1 whole page
     with pytest.raises(ReplicaError):  # capacity overflow
         worker.prefill(
-            storage, Request(rid=1, prompt=(1,) * 20, max_new_tokens=8)
+            storage, Request(rid=1, prompt_ids=(1,) * 20, max_new=8)
         )
 
 

@@ -1,0 +1,140 @@
+"""Per-request sampling primitives (`repro.serve.sampling`).
+
+The contract (docs/serving.md §sampling): the id sampled for the n-th
+emitted token of a request is a pure function of ``(logits_row, seed,
+n)`` under the key ``jax.random.fold_in(jax.random.PRNGKey(seed), n)``.
+Every op in :func:`sample_tokens` is row-independent, so a row samples
+the same id whatever batch shape it rides in — the property the serve
+engine, the static reference, and the speculative verify step all rely
+on for bit-exact streams.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.plan import SamplingParams
+from repro.serve.sampling import fold_key, sample_tokens, uniform_for
+
+VOCAB = 97
+
+
+def _logits(rows, key=0, pad=0):
+    lg = jax.random.normal(jax.random.PRNGKey(key), (rows, VOCAB + pad))
+    if pad:
+        lg = lg.at[:, VOCAB:].set(1e9)  # pad lanes must never win
+    return lg * 3.0
+
+
+def _params(rows, temp=0.8, top_p=1.0, top_k=0, seed0=11):
+    return (
+        np.full((rows,), temp, np.float32),
+        np.full((rows,), top_p, np.float32),
+        np.full((rows,), top_k, np.int32),
+        np.arange(seed0, seed0 + rows, dtype=np.uint32),
+        np.zeros((rows,), np.int32),
+    )
+
+
+def test_zero_temperature_is_argmax():
+    lg = _logits(5, pad=3)
+    temp, top_p, top_k, seed, step = _params(5, temp=0.0)
+    tok = sample_tokens(lg, VOCAB, temp, top_p, top_k, seed, step)
+    np.testing.assert_array_equal(
+        np.asarray(tok), np.asarray(jnp.argmax(lg[:, :VOCAB], axis=-1))
+    )
+
+
+def test_top_k_one_is_argmax_for_any_seed():
+    lg = _logits(4)
+    for seed0 in (0, 3, 1234):
+        temp, top_p, top_k, seed, step = _params(4, top_k=1, seed0=seed0)
+        tok = sample_tokens(lg, VOCAB, temp, top_p, top_k, seed, step)
+        np.testing.assert_array_equal(
+            np.asarray(tok), np.asarray(jnp.argmax(lg, axis=-1))
+        )
+
+
+def test_tiny_top_p_keeps_only_the_best_id():
+    # preceding-mass < top_p: the rank-0 id always survives (mass 0),
+    # and with top_p ~ 0 nothing else does
+    lg = _logits(6)
+    temp, top_p, top_k, seed, step = _params(6, top_p=1e-6)
+    tok = sample_tokens(lg, VOCAB, temp, top_p, top_k, seed, step)
+    np.testing.assert_array_equal(
+        np.asarray(tok), np.asarray(jnp.argmax(lg, axis=-1))
+    )
+
+
+def test_top_k_restricts_support():
+    lg = _logits(1)
+    best8 = set(np.asarray(jnp.argsort(-lg[0])[:8]).tolist())
+    for s in range(40):
+        temp, top_p, top_k, seed, step = _params(1, top_k=8, seed0=s)
+        tok = int(sample_tokens(lg, VOCAB, temp, top_p, top_k, seed, step)[0])
+        assert tok in best8
+
+
+def test_uniform_for_matches_scalar_fold():
+    seeds = np.asarray([1, 1, 7, 42], np.uint32)
+    steps = np.asarray([0, 5, 5, 2], np.int32)
+    got = np.asarray(uniform_for(seeds, steps))
+    want = np.asarray(
+        [jax.random.uniform(fold_key(int(s), int(n)), (), jnp.float32)
+         for s, n in zip(seeds, steps)]
+    )
+    np.testing.assert_array_equal(got, want)
+    # distinct steps under one seed give distinct draws (key folding)
+    assert got[0] != got[1]
+
+
+def test_batch_shape_invariance():
+    """The same (logits_row, seed, step) samples the same id at B=1,
+    embedded in a B=6 batch, and inside a (B, T) block — the property
+    spec-decode's verify step depends on."""
+    lg = _logits(6, key=9)
+    temp, top_p, top_k, seed, step = _params(6, top_p=0.9, top_k=12)
+    step = np.arange(6, dtype=np.int32)
+    full = np.asarray(sample_tokens(lg, VOCAB, temp, top_p, top_k, seed, step))
+    for r in range(6):
+        one = sample_tokens(
+            lg[r : r + 1], VOCAB, temp[r : r + 1], top_p[r : r + 1],
+            top_k[r : r + 1], seed[r : r + 1], step[r : r + 1],
+        )
+        assert int(one[0]) == full[r]
+    block = sample_tokens(
+        lg.reshape(2, 3, -1), VOCAB, temp.reshape(2, 3),
+        top_p.reshape(2, 3), top_k.reshape(2, 3), seed.reshape(2, 3),
+        step.reshape(2, 3),
+    )
+    np.testing.assert_array_equal(np.asarray(block).reshape(-1), full)
+
+
+def test_mixed_greedy_and_sampled_rows():
+    lg = _logits(4, key=3)
+    temp = np.asarray([0.0, 0.9, 0.0, 0.9], np.float32)
+    top_p = np.full((4,), 0.95, np.float32)
+    top_k = np.zeros((4,), np.int32)
+    seed = np.asarray([0, 5, 0, 6], np.uint32)
+    step = np.asarray([0, 3, 1, 3], np.int32)
+    tok = np.asarray(sample_tokens(lg, VOCAB, temp, top_p, top_k, seed, step))
+    arg = np.asarray(jnp.argmax(lg, axis=-1))
+    assert tok[0] == arg[0] and tok[2] == arg[2]
+    solo = sample_tokens(
+        lg[1:2], VOCAB, temp[1:2], top_p[1:2], top_k[1:2], seed[1:2],
+        step[1:2],
+    )
+    assert int(solo[0]) == tok[1]
+
+
+def test_sampling_params_validation():
+    assert SamplingParams().greedy
+    assert not SamplingParams(temperature=0.7).greedy
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(seed=-2)

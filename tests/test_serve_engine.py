@@ -66,8 +66,8 @@ def _requests(cfg, spec=((16, 6), (12, 8), (16, 4), (8, 8), (12, 5))):
     return [
         Request(
             rid=i,
-            prompt=tuple(int(t) for t in rng.integers(0, cfg.vocab_size, S)),
-            max_new_tokens=gen,
+            prompt_ids=tuple(int(t) for t in rng.integers(0, cfg.vocab_size, S)),
+            max_new=gen,
         )
         for i, (S, gen) in enumerate(spec)
     ]
@@ -201,14 +201,14 @@ def test_wire_log_pins_analytic_serve_model(engine, setup):
     measured = engine.wire_summary()
     analytic = serve_host_device_bytes(
         plan, cfg.vocab_size, n_slots=SLOTS,
-        prompt_lens=[len(r.prompt) for r in reqs],
+        prompt_lens=[len(r.prompt_ids) for r in reqs],
         decode_steps=measured["decode_steps"],
     )
     assert measured["host_device"] == analytic["total"]
     assert measured["token_width"] == analytic["token_width"]
     # per-step: admissions stage prompt+first token, decode the full batch
     w = measured["token_width"]
-    by_rid = {r.rid: len(r.prompt) for r in reqs}
+    by_rid = {r.rid: len(r.prompt_ids) for r in reqs}
     admit_order = [r.rid for r in reqs]  # engine admits in list order
     i = 0
     for rec in engine.step_log:
@@ -229,8 +229,8 @@ def test_stop_on_eos_truncates_and_matches_static(engine, setup):
     target = free_run[1].tokens[2]
     reqs = [
         base[0],
-        Request(rid=1, prompt=base[1].prompt,
-                max_new_tokens=base[1].max_new_tokens, eos_id=target),
+        Request(rid=1, prompt_ids=base[1].prompt_ids,
+                max_new=base[1].max_new, eos_id=target),
     ]
     results = engine.run(reqs)
     want = free_run[1].tokens[: free_run[1].tokens.index(target) + 1]
@@ -310,7 +310,7 @@ def test_non_ring_window_capacity_is_rejected(setup):
         max_slots=1, cache_capacity=20, window=12,
     )
     with pytest.raises(ValueError, match="does not ring"):
-        engine.run([Request(rid=0, prompt=(1,) * 16, max_new_tokens=8)])
+        engine.run([Request(rid=0, prompt_ids=(1,) * 16, max_new=8)])
     # ring narrower than the window: wrapping would evict tokens the
     # attention mask still wants — refused rather than silently diverging
     narrow = ServeEngine(
@@ -318,9 +318,9 @@ def test_non_ring_window_capacity_is_rejected(setup):
         max_slots=1, cache_capacity=10, window=16,
     )
     with pytest.raises(ValueError, match="live tokens would be evicted"):
-        narrow.run([Request(rid=0, prompt=(1,) * 8, max_new_tokens=8)])
+        narrow.run([Request(rid=0, prompt_ids=(1,) * 8, max_new=8)])
     # ...but a narrow ring the request never wraps is fine
-    narrow.run([Request(rid=1, prompt=(1, 2, 3), max_new_tokens=2)])
+    narrow.run([Request(rid=1, prompt_ids=(1, 2, 3), max_new=2)])
 
 
 def test_moe_engine_matches_per_request_static():
@@ -354,16 +354,16 @@ def test_moe_engine_matches_per_request_static():
 
 def test_request_validation(engine):
     with pytest.raises(ValueError):
-        Request(rid=0, prompt=(), max_new_tokens=4)
+        Request(rid=0, prompt_ids=(), max_new=4)
     with pytest.raises(ValueError):
-        Request(rid=0, prompt=(1,), max_new_tokens=0)
+        Request(rid=0, prompt_ids=(1,), max_new=0)
     with pytest.raises(ValueError):  # prompt + gen beyond cache capacity
-        engine.run([Request(rid=0, prompt=(1,) * 20,
-                            max_new_tokens=CAPACITY)])
+        engine.run([Request(rid=0, prompt_ids=(1,) * 20,
+                            max_new=CAPACITY)])
     with pytest.raises(ValueError):  # duplicate rid
         engine.run([
-            Request(rid=0, prompt=(1, 2), max_new_tokens=1),
-            Request(rid=0, prompt=(3, 4), max_new_tokens=1),
+            Request(rid=0, prompt_ids=(1, 2), max_new=1),
+            Request(rid=0, prompt_ids=(3, 4), max_new=1),
         ])
 
 
@@ -455,9 +455,9 @@ def test_paged_shared_prefix_refcount_and_residency(setup):
     shared = tuple(int(t) for t in rng.integers(0, cfg.vocab_size, 2 * PAGE))
     tails, gen = (4, 9, 12), 6
     reqs = [
-        Request(rid=i, prompt=shared + tuple(
+        Request(rid=i, prompt_ids=shared + tuple(
             int(t) for t in rng.integers(0, cfg.vocab_size, t)),
-            max_new_tokens=gen)
+            max_new=gen)
         for i, t in enumerate(tails)
     ]
     eng = _paged_engine(setup, max_slots=len(reqs), cache_capacity=40)
@@ -469,7 +469,7 @@ def test_paged_shared_prefix_refcount_and_residency(setup):
         assert results[r.rid].tokens == ref[r.rid], r.rid
     analytic = serve_paged_kv_bytes(
         cfg, page_size=PAGE,
-        requests=[(len(r.prompt), gen) for r in reqs],
+        requests=[(len(r.prompt_ids), gen) for r in reqs],
         shared_prefix_len=len(shared),
     )
     assert analytic["shared_pages"] == 2
@@ -483,7 +483,7 @@ def test_paged_shared_prefix_refcount_and_residency(setup):
     assert audit["live"] == 0 and audit["allocs"] == audit["releases"]
     # sharing actually deduped: without it every request would intern
     # its own copy of the 2 shared pages
-    no_share = sum(-(-(len(r.prompt) + gen) // PAGE) for r in reqs)
+    no_share = sum(-(-(len(r.prompt_ids) + gen) // PAGE) for r in reqs)
     assert analytic["pages"] == no_share - 2 * (len(reqs) - 1) < no_share
 
 
@@ -495,7 +495,7 @@ def test_paged_wire_log_pins_analytic_serve_model(setup):
     measured = eng.wire_summary()
     analytic = serve_host_device_bytes(
         plan, cfg.vocab_size, n_slots=SLOTS,
-        prompt_lens=[len(r.prompt) for r in reqs],
+        prompt_lens=[len(r.prompt_ids) for r in reqs],
         decode_steps=measured["decode_steps"],
         page_table_entries=measured["page_table_entries"],
     )
@@ -509,7 +509,7 @@ def test_paged_rejects_windows_and_oversized_requests(setup):
         _paged_engine(setup, window=12)
     eng = _paged_engine(setup, num_pages=2)
     with pytest.raises(ValueError, match="pages"):
-        eng.run([Request(rid=0, prompt=(1,) * 16, max_new_tokens=8)])
+        eng.run([Request(rid=0, prompt_ids=(1,) * 16, max_new=8)])
 
 
 def test_cache_constructor_geometry_guard():

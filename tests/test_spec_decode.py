@@ -1,0 +1,278 @@
+"""Speculative decoding + per-request sampling on the serve engine.
+
+The contracts pinned here (see docs/serving.md §sampling/§speculative):
+
+  * sampled streams follow the key-fold contract, so the engine is
+    BIT-exact vs the static reference and invariant under arrival-order
+    permutations, fp32 and int8 KV alike;
+  * speculative decoding is token-identical to non-speculative sampling
+    at the same per-request seeds — the draft moves only the acceptance
+    rate; a draft equal to the target pins ``acceptance_rate == 1.0``;
+  * the engine's measured ``host_device`` bytes under speculation equal
+    :func:`repro.roofline.analysis.serve_spec_decode_bytes` — the
+    fourth measured==analytic wire instance (contiguous AND paged);
+  * the unified :class:`repro.serve.api.Request` is the one submit
+    surface; the legacy kwargs/tuple/``image_features=`` shims still
+    work one release behind ``DeprecationWarning``;
+  * MoE over the dispatch capacity floor warns a typed
+    :class:`CapacityWarning`, and ``check_spec_arch`` refuses the archs
+    whose decode couples positions.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config, reduced
+from repro.dist.spec import MeshCfg, build_spec_tree, tree_to_storage
+from repro.models.init import init_params
+from repro.plan import PrecisionPlan, SamplingParams
+from repro.roofline.analysis import serve_spec_decode_bytes
+from repro.serve.api import legacy_request
+from repro.serve.engine import (
+    CapacityWarning,
+    Request,
+    ServeEngine,
+    generate_static,
+)
+from repro.serve.spec import DraftBundle, build_draft, check_spec_arch
+from repro.transport import CompressionPolicy
+
+SLOTS = 2
+CAPACITY = 32
+SPEC_K = 3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    mesh_cfg = MeshCfg(tp=1, dp=1, compress_min_size=4096)
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    plan = PrecisionPlan(
+        weights=(CompressionPolicy(round_to=2),) * (cfg.num_groups + 1),
+        host_device=CompressionPolicy(round_to=2),
+    )
+    return cfg, mesh_cfg, spec_tree, storage, plan
+
+
+def _sampled_requests(cfg, spec=((16, 8), (12, 8), (16, 8), (8, 8))):
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i, (S, gen) in enumerate(spec):
+        # request 2 stays greedy: mixed batches must keep both paths
+        samp = (SamplingParams() if i == 2 else SamplingParams(
+            temperature=0.8, top_p=0.95, top_k=40, seed=100 + i))
+        reqs.append(Request(
+            rid=i,
+            prompt_ids=tuple(int(t) for t in rng.integers(0, cfg.vocab_size, S)),
+            max_new=gen,
+            sampling=samp,
+        ))
+    return reqs
+
+
+@pytest.fixture(scope="module")
+def sampled_static(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    return generate_static(
+        cfg, mesh_cfg, None, spec_tree, storage, _sampled_requests(cfg),
+        plan=plan,
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-request sampling: engine == static, permutation-invariant
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_engine_matches_static(setup, sampled_static):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    reqs = _sampled_requests(cfg)
+    results = ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+        max_slots=SLOTS, cache_capacity=CAPACITY,
+    ).run(reqs)
+    for r in reqs:
+        assert results[r.rid].tokens == sampled_static[r.rid], r.rid
+
+
+def test_sampled_streams_invariant_under_arrival_permutation(
+    setup, sampled_static
+):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    reqs = _sampled_requests(cfg)
+    for order in (list(reversed(reqs)), [reqs[1], reqs[3], reqs[0], reqs[2]]):
+        results = ServeEngine(
+            cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+            max_slots=SLOTS, cache_capacity=CAPACITY,
+        ).run(order)
+        for r in reqs:
+            assert results[r.rid].tokens == sampled_static[r.rid], r.rid
+
+
+def test_sampled_int8_kv_matches_static(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    p = dataclasses.replace(plan, int8_kv=True)
+    reqs = _sampled_requests(cfg)
+    static = generate_static(
+        cfg, mesh_cfg, None, spec_tree, storage, reqs, plan=p
+    )
+    results = ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage, plan=p,
+        max_slots=SLOTS, cache_capacity=CAPACITY,
+    ).run(reqs)
+    for r in reqs:
+        assert results[r.rid].tokens == static[r.rid], r.rid
+
+
+# ---------------------------------------------------------------------------
+# speculative decoding: token-identical, counters, wire pin
+# ---------------------------------------------------------------------------
+
+
+def _wire_pin(eng, reqs, plan, cfg, *, paged=False):
+    w = eng.wire_summary()
+    analytic = serve_spec_decode_bytes(
+        plan, cfg.vocab_size, n_slots=eng.max_slots,
+        prompt_lens=[len(r.prompt_ids) for r in reqs],
+        spec_rounds=w["spec_rounds"], spec_k=eng.spec_k,
+        page_table_entries=w["page_table_entries"] if paged else 0,
+    )
+    assert w["host_device"] == analytic["total"], (w, analytic)
+    return w
+
+
+def test_self_draft_is_token_identical_with_full_acceptance(
+    setup, sampled_static
+):
+    # a draft that IS the target: every proposal matches the target's
+    # sample, so acceptance pins at exactly 1.0 and every round emits
+    # up to k+1 ids per slot
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    reqs = _sampled_requests(cfg)
+    eng = ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+        max_slots=SLOTS, cache_capacity=CAPACITY,
+        draft=DraftBundle(cfg, spec_tree, storage), spec_k=SPEC_K,
+    )
+    results = eng.run(reqs)
+    for r in reqs:
+        assert results[r.rid].tokens == sampled_static[r.rid], r.rid
+    w = _wire_pin(eng, reqs, plan, cfg)
+    assert w["acceptance_rate"] == 1.0
+    assert w["tokens_per_target_step"] > 1.0
+    assert w["spec_k"] == SPEC_K
+
+
+def test_tiny_draft_is_token_identical(setup, sampled_static):
+    # a *different* draft changes acceptance, never content
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    reqs = _sampled_requests(cfg)
+    eng = ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+        max_slots=SLOTS, cache_capacity=CAPACITY,
+        draft=build_draft(cfg, mesh_cfg, "tiny"), spec_k=SPEC_K,
+    )
+    results = eng.run(reqs)
+    for r in reqs:
+        assert results[r.rid].tokens == sampled_static[r.rid], r.rid
+    w = _wire_pin(eng, reqs, plan, cfg)
+    assert 0.0 <= w["acceptance_rate"] <= 1.0
+    assert w["tokens_per_target_step"] >= 1.0
+
+
+def test_paged_spec_decode_wire_pin(setup, sampled_static):
+    # paged + int8 KV + speculation: streams hold and the analytic model
+    # prices the widened page-table staging (4·entries·rounds)
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    p = dataclasses.replace(plan, int8_kv=True)
+    reqs = _sampled_requests(cfg)
+    static = generate_static(
+        cfg, mesh_cfg, None, spec_tree, storage, reqs, plan=p
+    )
+    eng = ServeEngine(
+        cfg, mesh_cfg, None, spec_tree, storage, plan=p,
+        max_slots=SLOTS, cache_capacity=CAPACITY, paged=True, page_size=8,
+        draft=DraftBundle(cfg, spec_tree, storage), spec_k=SPEC_K,
+    )
+    results = eng.run(reqs)
+    for r in reqs:
+        assert results[r.rid].tokens == static[r.rid], r.rid
+    w = _wire_pin(eng, reqs, p, cfg, paged=True)
+    assert w["acceptance_rate"] == 1.0
+    audit = eng.pages.audit()
+    assert audit["live"] == 0 and audit["allocs"] == audit["releases"]
+
+
+def test_spec_arch_gate():
+    check_spec_arch(reduced(get_config("qwen3-1.7b")))  # passes
+    with pytest.raises(ValueError, match="capacity dispatch|MoE|pattern"):
+        check_spec_arch(reduced(get_config("mixtral-8x7b")))
+    with pytest.raises(ValueError):
+        check_spec_arch(reduced(get_config("recurrentgemma-9b")))
+    with pytest.raises(ValueError):
+        check_spec_arch(reduced(get_config("qwen3-1.7b")), window=16)
+    with pytest.raises(ValueError):
+        check_spec_arch(reduced(get_config("hubert-xlarge")))
+
+
+def test_draft_vocab_must_match(setup):
+    cfg, mesh_cfg, *_ = setup
+    with pytest.raises(ValueError, match="vocab"):
+        build_draft(cfg, mesh_cfg, "qwen2.5-14b")
+
+
+# ---------------------------------------------------------------------------
+# unified Request API: deprecation shims + typed capacity warning
+# ---------------------------------------------------------------------------
+
+
+def test_request_legacy_kwargs_warn():
+    with pytest.warns(DeprecationWarning, match="prompt_ids"):
+        r = Request(rid=0, prompt=(1, 2, 3), max_new_tokens=4)
+    assert r.prompt_ids == (1, 2, 3) and r.max_new == 4
+    with pytest.warns(DeprecationWarning):
+        r2 = legacy_request(1, [5, 6], 2, eos_id=9)
+    assert r2 == Request(rid=1, prompt_ids=(5, 6), max_new=2, eos_id=9)
+
+
+def test_request_read_properties_do_not_warn(recwarn):
+    r = Request(rid=0, prompt_ids=(1, 2), max_new=3)
+    assert r.prompt == (1, 2)
+    assert r.max_new_tokens == 3
+    assert not [w for w in recwarn if w.category is DeprecationWarning]
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        r.max_new = 5
+
+
+def test_generate_static_image_features_kwarg_warns(setup):
+    cfg, mesh_cfg, spec_tree, storage, plan = setup
+    req = Request(rid=0, prompt_ids=(1, 2, 3, 4), max_new=1)
+    with pytest.warns(DeprecationWarning, match="image_features"):
+        out = generate_static(
+            cfg, mesh_cfg, None, spec_tree, storage, [req], plan=plan,
+            image_features={},
+        )
+    assert len(out[0]) == 1
+
+
+def test_moe_capacity_warning_is_typed():
+    cfg = reduced(get_config("mixtral-8x7b"))
+    assert cfg.num_experts
+    slots = 8 // cfg.top_k + 1  # first slot count over the floor
+    mesh_cfg = MeshCfg(tp=1, dp=1, compress_min_size=4096)
+    params, metas = init_params(cfg, jax.random.PRNGKey(0), tp=1)
+    spec_tree = build_spec_tree(params, metas, mesh_cfg)
+    storage = tree_to_storage(params, spec_tree, mesh_cfg)
+    plan = PrecisionPlan(
+        weights=(CompressionPolicy(round_to=2),) * (cfg.num_groups + 1),
+        host_device=CompressionPolicy(round_to=2),
+    )
+    with pytest.warns(CapacityWarning, match="capacity floor"):
+        ServeEngine(
+            cfg, mesh_cfg, None, spec_tree, storage, plan=plan,
+            max_slots=slots, cache_capacity=16,
+        )

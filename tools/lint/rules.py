@@ -160,6 +160,7 @@ class DeprecatedShim(Rule):
         "compressed_all_gather": "src/repro/core/compressed.py",
         "compressed_psum_scatter": "src/repro/core/compressed.py",
         "quantize_ste": "src/repro/core/compressed.py",
+        "legacy_request": "src/repro/serve/api.py",
     }
 
     def check(self, f: SourceFile) -> Iterable[Finding]:
